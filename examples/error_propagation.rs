@@ -1,0 +1,85 @@
+//! Fig. 2 reproduction as a runnable example: quantize the first half of
+//! tiny-m's blocks with RTN INT3 and plot (ASCII) how the block-output
+//! error Δ_m accumulates through the quantized prefix and keeps *growing*
+//! through the full-precision suffix — then show QEP damping it.
+//!
+//! Run: `cargo run --release --example error_propagation [-- --bits 2]`
+
+use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::eval::delta_per_block;
+use qep::model::Size;
+use qep::quant::{Method, QuantConfig};
+use qep::runtime::ArtifactRegistry;
+use qep::text::{Corpus, Flavor};
+use qep::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let bits = args.get_usize("bits", 3) as u32;
+    let reg = ArtifactRegistry::default_root();
+    let model = reg
+        .load_model(Size::TinyM.name())
+        .unwrap_or_else(|_| {
+            eprintln!("artifacts missing; using random weights (structure only)");
+            qep::model::Model::random(&Size::TinyM.config(), 0xBEEF)
+        });
+
+    let calib = reg
+        .load_corpus(Flavor::C4)
+        .unwrap_or_else(|_| Corpus::generate(Flavor::C4, 128 * 1024, 0));
+    let probe = reg
+        .load_corpus(Flavor::Wiki)
+        .unwrap_or_else(|_| Corpus::generate(Flavor::Wiki, 64 * 1024, 1));
+    let calib_tokens = &calib.tokens[..16 * model.cfg.seq_len];
+    let probe_tokens = &probe.tokens[..8 * model.cfg.seq_len];
+
+    let n = model.cfg.n_layers / 2;
+    println!(
+        "quantizing first {n} of {} blocks with RTN INT{bits} (Fig. 2 setup, paper: 10 of 32)\n",
+        model.cfg.n_layers
+    );
+
+    let mut curves = Vec::new();
+    for (label, qep) in [("BASE", None), ("+QEP", Some(0.5))] {
+        let out = Pipeline::new(PipelineConfig {
+            quant: QuantConfig::int(bits),
+            method: Method::Rtn,
+            qep_alpha: qep,
+            max_blocks: Some(n),
+            ..Default::default()
+        })
+        .run(&model, calib_tokens)?;
+        curves.push((label, delta_per_block(&model, &out.model, probe_tokens)));
+    }
+
+    // ASCII log-scale bar chart.
+    let max = curves
+        .iter()
+        .flat_map(|(_, c)| c.iter())
+        .cloned()
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let min = curves
+        .iter()
+        .flat_map(|(_, c)| c.iter())
+        .cloned()
+        .filter(|&v| v > 0.0)
+        .fold(f64::MAX, f64::min);
+    println!("Δ_m (squared Frobenius, Eq. 2); log-scaled bars; '|' marks end of quantized prefix\n");
+    for (label, curve) in &curves {
+        println!("{label}:");
+        for (m, &d) in curve.iter().enumerate() {
+            let frac = ((d.max(min).ln() - min.ln()) / (max.ln() - min.ln() + 1e-12)).max(0.02);
+            let bar = "#".repeat((frac * 48.0) as usize);
+            let marker = if m + 1 == n { " |<- last quantized" } else { "" };
+            println!("  block {:2}  {d:10.4e}  {bar}{marker}", m + 1);
+        }
+        println!();
+    }
+    let (_, base) = &curves[0];
+    let (_, qep) = &curves[1];
+    println!(
+        "final-block error ratio BASE/QEP = {:.2}x",
+        base.last().unwrap() / qep.last().unwrap().max(1e-30)
+    );
+    Ok(())
+}

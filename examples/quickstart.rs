@@ -1,0 +1,86 @@
+//! Quickstart: the end-to-end driver proving all layers compose.
+//!
+//! Loads the trained tiny-s model (JAX-trained at build time, QTZ format),
+//! quantizes it with GPTQ at INT3 — once plain, once QEP-enhanced —
+//! evaluates perplexity on the WikiText-analog corpus through BOTH the
+//! pure-Rust forward and the PJRT-compiled JAX artifact, and reports
+//! zero-shot accuracy. This is the workload recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::eval::{perplexity, TaskFamily, TaskSet};
+use qep::model::Size;
+use qep::quant::{Method, QuantConfig};
+use qep::runtime::{artifacts::PjrtModel, ArtifactRegistry, PjrtRuntime};
+use qep::text::Flavor;
+
+fn main() -> anyhow::Result<()> {
+    let reg = ArtifactRegistry::default_root();
+    let model = reg.load_model(Size::TinyS.name())?;
+    println!(
+        "loaded {} ({:.2}M params, stand-in for {})",
+        model.cfg.name,
+        model.cfg.n_params() as f64 / 1e6,
+        Size::TinyS.paper_analog()
+    );
+
+    let calib = reg.load_corpus(Flavor::C4)?;
+    let calib_tokens = &calib.tokens[..24 * model.cfg.seq_len];
+    let eval = reg.load_corpus(Flavor::Wiki)?;
+    let eval_tokens = &eval.tokens[eval.tokens.len() - 16 * 1024..];
+
+    let fp_ppl = perplexity(&model, eval_tokens);
+    println!("full-precision wiki ppl: {fp_ppl:.3}");
+
+    let mut quantized = Vec::new();
+    for (label, qep) in [("GPTQ INT2 (base)", None), ("GPTQ INT2 +QEP", Some(0.5))] {
+        let t = qep::util::Stopwatch::start();
+        let out = Pipeline::new(PipelineConfig {
+            quant: QuantConfig::int(2),
+            method: Method::Gptq,
+            qep_alpha: qep,
+            ..Default::default()
+        })
+        .run(&model, calib_tokens)?;
+        let ppl = perplexity(&out.model, eval_tokens);
+        println!(
+            "{label:18} ppl {ppl:8.3}   (quantized in {}, correction {})",
+            qep::util::fmt_duration(t.seconds()),
+            qep::util::fmt_duration(out.report.correction_s()),
+        );
+        quantized.push((label, out.model, ppl));
+    }
+
+    // Zero-shot snapshot on the QEP model.
+    let (_, qep_model, _) = &quantized[1];
+    for fam in TaskFamily::all() {
+        let ts = TaskSet::generate(fam, &eval, 40, 1234);
+        println!(
+            "zero-shot {:10} ({}): {:.3}",
+            fam.name(),
+            fam.paper_analog(),
+            ts.accuracy(qep_model)
+        );
+    }
+
+    // Same quantized model through the PJRT serving path (L1+L2 artifacts).
+    match PjrtRuntime::cpu() {
+        Ok(rt) => {
+            let pjrt = PjrtModel::bind(&rt, &reg, qep_model)?;
+            let ppl = pjrt.perplexity(&eval_tokens[..8 * model.cfg.seq_len])?;
+            println!("PJRT ({}) wiki ppl on 8 segments: {ppl:.3}", rt.platform());
+        }
+        Err(e) => println!("PJRT unavailable ({e}); pure-Rust path only"),
+    }
+
+    let base_ppl = quantized[0].2;
+    let qep_ppl = quantized[1].2;
+    println!(
+        "\nQEP improvement at INT2: {:.3} -> {:.3} ({:+.1}%)",
+        base_ppl,
+        qep_ppl,
+        (qep_ppl / base_ppl - 1.0) * 100.0
+    );
+    Ok(())
+}

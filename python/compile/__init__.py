@@ -1,0 +1,3 @@
+"""Build-time Python: JAX model (L2), Pallas kernels (L1), trainer, and AOT
+export to HLO-text artifacts. Never imported at runtime — the Rust binary
+only reads the files this package writes."""

@@ -1,0 +1,147 @@
+"""AOT export: lower the L2 JAX model and L1 Pallas kernels to HLO *text*
+artifacts for the Rust PJRT runtime.
+
+HLO text — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids that the image's xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md and aot_recipe).
+
+Artifacts per model size (parameter order = model.param_names, mirrored by
+rust/src/runtime/artifacts.rs):
+  <name>.fwd.hlo.txt     tokens[S] i32 + weights → (logits[S,V],)
+  <name>.block.hlo.txt   x[S,d] + block weights → (out, attn_in, attn_ctx,
+                          mlp_in, mlp_act)
+  <name>.hess.hlo.txt    Pallas: x[1024,d] → (XᵀX[d,d],)
+  <name>.qmm.hlo.txt     Pallas fused dequant×matmul [S,d]·[d,d codes]
+  <name>.qmm_up.hlo.txt  … [S,d]·[ffn,d codes]
+  <name>.qmm_down.hlo.txt… [S,ffn]·[d,ffn codes]
+
+Usage: python -m compile.aot [--sizes ...] [--out ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import hessian_accum, quant_matmul
+
+QMM_GROUP = 32
+HESS_TOKENS = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_fwd(cfg: model.Config, out: str):
+    names = model.param_names(cfg)
+    shapes = param_shapes(cfg)
+
+    def fn(tokens, *flat):
+        params = dict(zip(names, flat))
+        return (model.forward_segment(cfg, params, tokens),)
+
+    specs = [jax.ShapeDtypeStruct((cfg.seq_len,), jnp.int32)]
+    specs += [f32(shapes[n]) for n in names]
+    write(os.path.join(out, f"{cfg.name}.fwd.hlo.txt"),
+          to_hlo_text(jax.jit(fn).lower(*specs)))
+
+
+def export_block(cfg: model.Config, out: str):
+    def fn(x, attn_norm, wq, wk, wv, wo, mlp_norm, gate, up, down):
+        params = {
+            "blocks.0.attn_norm": attn_norm,
+            "blocks.0.attn.wq": wq,
+            "blocks.0.attn.wk": wk,
+            "blocks.0.attn.wv": wv,
+            "blocks.0.attn.wo": wo,
+            "blocks.0.mlp_norm": mlp_norm,
+            "blocks.0.mlp.gate": gate,
+            "blocks.0.mlp.up": up,
+            "blocks.0.mlp.down": down,
+        }
+        o, cap = model.block(cfg, params, 0, x)
+        return (o, cap["attn_in"], cap["attn_ctx"], cap["mlp_in"], cap["mlp_act"])
+
+    d, ffn, s = cfg.dim, cfg.ffn, cfg.seq_len
+    specs = [
+        f32((s, d)), f32((d,)), f32((d, d)), f32((d, d)), f32((d, d)),
+        f32((d, d)), f32((d,)), f32((ffn, d)), f32((ffn, d)), f32((d, ffn)),
+    ]
+    write(os.path.join(out, f"{cfg.name}.block.hlo.txt"),
+          to_hlo_text(jax.jit(fn).lower(*specs)))
+
+
+def export_hessian(cfg: model.Config, out: str):
+    def fn(x):
+        return (hessian_accum(x),)
+
+    write(os.path.join(out, f"{cfg.name}.hess.hlo.txt"),
+          to_hlo_text(jax.jit(fn).lower(f32((HESS_TOKENS, cfg.dim)))))
+
+
+def export_qmm(cfg: model.Config, out: str):
+    def make(n, k, suffix):
+        g = k // QMM_GROUP
+
+        def fn(x, codes, scales, zeros):
+            return (quant_matmul(x, codes, scales, zeros, group=QMM_GROUP),)
+
+        specs = [f32((cfg.seq_len, k)), f32((n, k)), f32((n, g)), f32((n, g))]
+        write(os.path.join(out, f"{cfg.name}.qmm{suffix}.hlo.txt"),
+              to_hlo_text(jax.jit(fn).lower(*specs)))
+
+    make(cfg.dim, cfg.dim, "")           # attention projections
+    make(cfg.ffn, cfg.dim, "_up")        # gate/up
+    make(cfg.dim, cfg.ffn, "_down")      # down
+
+
+def param_shapes(cfg: model.Config):
+    shapes = {"embed": (cfg.vocab, cfg.dim), "pos": (cfg.seq_len, cfg.dim),
+              "final_norm": (cfg.dim,)}
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}"
+        shapes[f"{p}.attn_norm"] = (cfg.dim,)
+        shapes[f"{p}.mlp_norm"] = (cfg.dim,)
+        for w in ("wq", "wk", "wv", "wo"):
+            shapes[f"{p}.attn.{w}"] = (cfg.dim, cfg.dim)
+        shapes[f"{p}.mlp.gate"] = (cfg.ffn, cfg.dim)
+        shapes[f"{p}.mlp.up"] = (cfg.ffn, cfg.dim)
+        shapes[f"{p}.mlp.down"] = (cfg.dim, cfg.ffn)
+    return shapes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="tiny-s,tiny-m,tiny-l")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.sizes.split(","):
+        cfg = model.SIZES[name]
+        export_fwd(cfg, args.out)
+        export_block(cfg, args.out)
+        export_hessian(cfg, args.out)
+        export_qmm(cfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Build-time data access: reads the corpora written by `repro gen-data`
+(the Rust generator is canonical — one implementation, no drift) and
+produces byte-token training batches."""
+
+import os
+
+import numpy as np
+
+FLAVORS = ("wiki", "ptb", "c4")
+
+
+def corpus_path(flavor: str, root: str = "../artifacts/data"):
+    return os.path.join(root, f"{flavor}.txt")
+
+
+def load_tokens(flavor: str, root: str = "../artifacts/data") -> np.ndarray:
+    path = corpus_path(flavor, root)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"{path} missing — run `cargo run --release -- gen-data` first"
+        )
+    with open(path, "rb") as f:
+        data = f.read()
+    return np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int = 0):
+    """Yield `steps` random [batch, seq] windows."""
+    rng = np.random.default_rng(seed)
+    max_start = len(tokens) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, max_start, size=batch)
+        yield np.stack([tokens[s : s + seq] for s in starts])

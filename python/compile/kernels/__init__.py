@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (interpret mode on CPU; see DESIGN.md
+§Hardware-Adaptation for the TPU BlockSpec reasoning)."""
+
+from .hessian import hessian_accum
+from .quant_matmul import quant_matmul
+
+__all__ = ["quant_matmul", "hessian_accum"]

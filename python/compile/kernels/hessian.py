@@ -1,0 +1,42 @@
+"""Hessian accumulation Pallas kernel (L1): H = XᵀX over calibration
+tokens — the dominant dense cost of layer-wise PTQ calibration.
+
+TPU mapping: the token axis is the reduction; the grid walks token tiles
+of BM = 128 rows while the (d × d) accumulator tile stays resident in
+VMEM (d ≤ 512 ⇒ ≤ 1 MiB f32). Each step computes an MXU-shaped
+(d × BM)·(BM × d) product and accumulates in f32 — the standard
+"stationary output" schedule for tall-skinny XᵀX on a systolic array.
+
+CPU execution uses interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hess_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bm, d]
+    o_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def hessian_accum(x, *, block_m: int = 128):
+    """H[d,d] = x[m,d]ᵀ · x[m,d], token-tiled accumulation."""
+    m, d = x.shape
+    bm = min(block_m, m)
+    assert m % bm == 0, f"m={m} not a multiple of block_m={bm}"
+    return pl.pallas_call(
+        _hess_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(x)

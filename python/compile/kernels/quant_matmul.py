@@ -1,0 +1,64 @@
+"""Fused dequantize × matmul Pallas kernel — the quantized serving
+hot-spot (L1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's baselines run
+GPU dequant kernels; on TPU the natural shape is an MXU-fed tile loop.
+BlockSpec tiles are (BM × K) activations and (BN × K) codes: the codes are
+dequantized in-register (VPU elementwise) and fed to `jnp.dot` (MXU). With
+BM = BN = 128 and K ≤ 1024, VMEM per instance is
+  128·K·4 (x) + 128·K·4 (codes) + small scales ≈ ≤ 1 MiB « 16 MiB VMEM,
+leaving room for double buffering; the dot is MXU-shaped (128×K·128).
+
+CPU execution uses interpret=True (Mosaic custom-calls cannot run on the
+CPU PJRT plugin); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, codes_ref, scales_ref, zeros_ref, o_ref, *, group: int):
+    x = x_ref[...]  # [bm, k]
+    codes = codes_ref[...]  # [bn, k]
+    scales = scales_ref[...]  # [bn, k // group]
+    zeros = zeros_ref[...]
+    bn, k = codes.shape
+    g = k // group
+    w = (codes.reshape(bn, g, group) - zeros[:, :, None]) * scales[:, :, None]
+    w = w.reshape(bn, k)
+    o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n"))
+def quant_matmul(x, codes, scales, zeros, *, group: int = 32,
+                 block_m: int = 128, block_n: int = 128):
+    """y[m,n] = x[m,k] @ dequant(codes[n,k], scales[n,k//group], zeros).T
+
+    codes are float32 holding b-bit integer values (storage packing is the
+    coordinator's concern; the kernel consumes the unpacked representation).
+    """
+    m, k = x.shape
+    n, k2 = codes.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert k % group == 0, f"k={k} not a multiple of group={group}"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, "grid must tile evenly"
+    g = k // group
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, zeros)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels. The pytest suite asserts the
+kernels match these to float tolerance; these are also the semantics the
+Rust runtime's pure-Rust fallback implements."""
+
+import jax.numpy as jnp
+
+
+def dequantize_ref(codes, scales, zeros, group: int):
+    """Dequantize group-wise codes: w[n,k] = (codes - zeros_g) * scales_g.
+
+    codes: [n, k] float32 holding integer values in [0, 2^b)
+    scales/zeros: [n, k // group]
+    """
+    n, k = codes.shape
+    g = k // group
+    c = codes.reshape(n, g, group)
+    w = (c - zeros[:, :, None]) * scales[:, :, None]
+    return w.reshape(n, k)
+
+
+def quant_matmul_ref(x, codes, scales, zeros, group: int):
+    """y[m,n] = x[m,k] @ dequantize(codes,scales,zeros).T"""
+    w = dequantize_ref(codes, scales, zeros, group)
+    return x @ w.T
+
+
+def hessian_ref(x):
+    """H[d,d] = X^T X for tokens-major activations x[m,d]."""
+    return x.T @ x

@@ -1,0 +1,151 @@
+"""L2: the JAX transformer, mirroring `rust/src/model/` op-for-op
+(RMSNorm eps, tied head, learned positions, SwiGLU, per-segment causal
+attention). Weights trained here load into the Rust forward and must agree
+numerically — `rust/tests/pjrt_crosscheck.rs` enforces it.
+
+Parameter pytree: dict with keys matching the Rust QTZ tensor names
+(`embed`, `pos`, `blocks.{i}.attn.wq`, ... `final_norm`). Canonical flat
+order is defined by `param_names` and mirrored by
+`rust/src/runtime/artifacts.rs::param_order`.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NORM_EPS = 1e-5
+VOCAB = 259
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    ffn: int
+    vocab: int = VOCAB
+    seq_len: int = 128
+
+    @property
+    def head_dim(self):
+        return self.dim // self.n_heads
+
+
+SIZES = {
+    "tiny-s": Config("tiny-s", 64, 4, 4, 128),
+    "tiny-m": Config("tiny-m", 128, 6, 4, 256),
+    "tiny-l": Config("tiny-l", 256, 8, 8, 512),
+}
+
+
+def param_names(cfg: Config):
+    """Canonical flat parameter order (matches the Rust runtime)."""
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}"
+        names += [
+            f"{p}.attn_norm", f"{p}.attn.wq", f"{p}.attn.wk", f"{p}.attn.wv",
+            f"{p}.attn.wo", f"{p}.mlp_norm", f"{p}.mlp.gate", f"{p}.mlp.up",
+            f"{p}.mlp.down",
+        ]
+    names.append("final_norm")
+    return names
+
+
+def init_params(cfg: Config, key):
+    """Init matching Rust `Model::random`: N(0, 0.02), residual projections
+    down-scaled by sqrt(2·L)."""
+    std = 0.02
+    resid = std / (2.0 * cfg.n_layers) ** 0.5
+    params = {}
+    key, k1, k2 = jax.random.split(key, 3)
+    params["embed"] = std * jax.random.normal(k1, (cfg.vocab, cfg.dim), jnp.float32)
+    params["pos"] = std * jax.random.normal(k2, (cfg.seq_len, cfg.dim), jnp.float32)
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}"
+        key, kq, kk, kv, ko, kg, ku, kd = jax.random.split(key, 8)
+        params[f"{p}.attn_norm"] = jnp.ones((cfg.dim,), jnp.float32)
+        params[f"{p}.attn.wq"] = std * jax.random.normal(kq, (cfg.dim, cfg.dim))
+        params[f"{p}.attn.wk"] = std * jax.random.normal(kk, (cfg.dim, cfg.dim))
+        params[f"{p}.attn.wv"] = std * jax.random.normal(kv, (cfg.dim, cfg.dim))
+        params[f"{p}.attn.wo"] = resid * jax.random.normal(ko, (cfg.dim, cfg.dim))
+        params[f"{p}.mlp_norm"] = jnp.ones((cfg.dim,), jnp.float32)
+        params[f"{p}.mlp.gate"] = std * jax.random.normal(kg, (cfg.ffn, cfg.dim))
+        params[f"{p}.mlp.up"] = std * jax.random.normal(ku, (cfg.ffn, cfg.dim))
+        params[f"{p}.mlp.down"] = resid * jax.random.normal(kd, (cfg.dim, cfg.ffn))
+    params["final_norm"] = jnp.ones((cfg.dim,), jnp.float32)
+    return params
+
+
+def rmsnorm(x, gain):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + NORM_EPS) * gain
+
+
+def linear(x, w):
+    """y = x · Wᵀ for weight [out, in] — matches the Rust convention."""
+    return x @ w.T
+
+
+def causal_attention(q, k, v, n_heads: int):
+    """Per-segment causal MHA. q/k/v: [S, d]."""
+    s, d = q.shape
+    hd = d // n_heads
+    qh = q.reshape(s, n_heads, hd).transpose(1, 0, 2)  # [h, s, hd]
+    kh = k.reshape(s, n_heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(s, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, vh)
+    return ctx.transpose(1, 0, 2).reshape(s, d)
+
+
+def block(cfg: Config, params, i: int, x):
+    """One transformer block on a single segment x[S, d]; returns
+    (out, captures) with the same capture points as the Rust pipeline."""
+    p = f"blocks.{i}"
+    attn_in = rmsnorm(x, params[f"{p}.attn_norm"])
+    q = linear(attn_in, params[f"{p}.attn.wq"])
+    k = linear(attn_in, params[f"{p}.attn.wk"])
+    v = linear(attn_in, params[f"{p}.attn.wv"])
+    attn_ctx = causal_attention(q, k, v, cfg.n_heads)
+    x1 = x + linear(attn_ctx, params[f"{p}.attn.wo"])
+    mlp_in = rmsnorm(x1, params[f"{p}.mlp_norm"])
+    g = linear(mlp_in, params[f"{p}.mlp.gate"])
+    u = linear(mlp_in, params[f"{p}.mlp.up"])
+    mlp_act = jax.nn.silu(g) * u
+    out = x1 + linear(mlp_act, params[f"{p}.mlp.down"])
+    return out, dict(attn_in=attn_in, attn_ctx=attn_ctx, mlp_in=mlp_in, mlp_act=mlp_act)
+
+
+def forward_segment(cfg: Config, params, tokens):
+    """tokens[S] int32 → logits[S, vocab]."""
+    x = params["embed"][tokens] + params["pos"]
+    for i in range(cfg.n_layers):
+        x, _ = block(cfg, params, i, x)
+    h = rmsnorm(x, params["final_norm"])
+    return linear(h, params["embed"])
+
+
+def forward_batch(cfg: Config, params, tokens):
+    """tokens[B, S] → logits[B, S, vocab] (training entrypoint)."""
+    return jax.vmap(lambda t: forward_segment(cfg, params, t))(tokens)
+
+
+def next_token_loss(cfg: Config, params, tokens):
+    """Mean next-token cross-entropy (nats) over a [B, S] batch."""
+    logits = forward_batch(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def perplexity(cfg: Config, params, tokens):
+    return jnp.exp(next_token_loss(cfg, params, tokens))

@@ -1,0 +1,64 @@
+"""Python side of the QTZ tensor container (mirrors rust/src/io/qtz.rs).
+
+Layout: b"QTZ1" | u64 LE header_len | JSON header | 64-byte-aligned blob.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"QTZ1"
+ALIGN = 64
+
+_DTYPES = {"f32": (np.float32, 4), "i8": (np.int8, 1)}
+
+
+def save(path: str, tensors: dict, meta: dict | None = None):
+    """tensors: name → np.ndarray (float32 or int8)."""
+    blob = bytearray()
+    entries = {}
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float32:
+            dt = "f32"
+        elif arr.dtype == np.int8:
+            dt = "i8"
+        else:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        while len(blob) % ALIGN != 0:
+            blob.append(0)
+        offset = len(blob)
+        raw = arr.tobytes()  # little-endian on all supported hosts
+        blob.extend(raw)
+        entries[name] = {
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        }
+    header = json.dumps({"meta": meta or {}, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        pos = 12 + len(header)
+        f.write(b" " * (-pos % ALIGN))
+        f.write(bytes(blob))
+
+
+def load(path: str):
+    """Returns (meta, {name: np.ndarray})."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "not a QTZ1 file"
+    (hlen,) = struct.unpack("<Q", data[4:12])
+    header = json.loads(data[12 : 12 + hlen])
+    blob_start = -(-(12 + hlen) // ALIGN) * ALIGN
+    blob = data[blob_start:]
+    tensors = {}
+    for name, e in header["tensors"].items():
+        np_dt, _ = _DTYPES[e["dtype"]]
+        raw = blob[e["offset"] : e["offset"] + e["nbytes"]]
+        tensors[name] = np.frombuffer(raw, dtype=np_dt).reshape(e["shape"]).copy()
+    return header.get("meta", {}), tensors

@@ -1,0 +1,123 @@
+"""Build-time trainer: fits the three tiny transformers on the synthetic
+corpus mix so the quantization experiments operate on *trained* weights
+(anisotropic Hessians, real perplexity structure). Runs once under
+`make artifacts`; Adam is implemented inline (no optax in this image).
+
+Usage: python -m compile.train [--sizes tiny-s,tiny-m,tiny-l] [--steps N]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model, qtz
+
+# Training mixes all three flavors so every eval corpus is in-distribution
+# (the paper's models likewise saw broad pretraining data; Table 4's shift
+# is about the *calibration* set, not the training set).
+DEFAULT_STEPS = {"tiny-s": 700, "tiny-m": 500, "tiny-l": 350}
+BATCH = 8
+LR = 3e-3
+WARMUP = 30
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+@jax.jit
+def adam_step(params, state, grads, lr):
+    t = state["t"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, total):
+    if step < WARMUP:
+        return LR * (step + 1) / WARMUP
+    frac = (step - WARMUP) / max(1, total - WARMUP)
+    return LR * 0.5 * (1.0 + np.cos(np.pi * frac))
+
+
+def train_size(name: str, steps: int, out_dir: str, data_root: str, seed: int = 0):
+    cfg = model.SIZES[name]
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    tokens = np.concatenate([data.load_tokens(f, data_root) for f in data.FLAVORS])
+    loss_fn = lambda p, batch: model.next_token_loss(cfg, p, batch)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    t0 = time.time()
+    losses = []
+    for step, batch in enumerate(data.batches(tokens, BATCH, cfg.seq_len, steps, seed)):
+        batch = jnp.asarray(batch)
+        loss, grads = grad_fn(params, batch)
+        params, opt = adam_step(params, opt, grads, lr_schedule(step, steps))
+        losses.append(float(loss))
+        if step % 50 == 0 or step == steps - 1:
+            print(
+                f"[train {name}] step {step:4d}/{steps} loss {loss:.4f} "
+                f"({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+
+    tensors = {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+    meta = {
+        "name": cfg.name,
+        "dim": cfg.dim,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "ffn": cfg.ffn,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "train_steps": steps,
+        "final_loss": losses[-1],
+    }
+    path = os.path.join(out_dir, f"{name}.qtz")
+    qtz.save(path, tensors, meta)
+    print(f"[train {name}] saved {path} (final loss {losses[-1]:.4f})")
+    # Append to the training log for EXPERIMENTS.md.
+    with open(os.path.join(out_dir, "train_log.txt"), "a") as f:
+        f.write(
+            f"{name}: steps={steps} batch={BATCH} lr={LR} "
+            f"loss_first={losses[0]:.4f} loss_last={losses[-1]:.4f} "
+            f"wall={time.time() - t0:.0f}s\n"
+        )
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="tiny-s,tiny-m,tiny-l")
+    ap.add_argument("--steps", type=int, default=0, help="override per-size defaults")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--data", default="../artifacts/data")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.sizes.split(","):
+        if name not in model.SIZES:
+            print(f"unknown size {name}", file=sys.stderr)
+            sys.exit(1)
+        steps = args.steps or DEFAULT_STEPS[name]
+        train_size(name, steps, args.out, args.data)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+Hypothesis sweeps shapes and block configurations; this is the CORE
+correctness signal for the quantized serving path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hessian_accum, quant_matmul
+from compile.kernels.ref import dequantize_ref, hessian_ref, quant_matmul_ref
+
+
+def rand_quant_problem(rng, m, n, k, group, bits=4):
+    x = rng.standard_normal((m, k), dtype=np.float32)
+    codes = rng.integers(0, 2**bits, size=(n, k)).astype(np.float32)
+    g = k // group
+    scales = (0.01 + rng.random((n, g))).astype(np.float32)
+    zeros = rng.integers(0, 2**bits, size=(n, g)).astype(np.float32)
+    return x, codes, scales, zeros
+
+
+class TestQuantMatmul:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        m=st.sampled_from([8, 32, 128]),
+        n=st.sampled_from([32, 64, 128]),
+        kg=st.sampled_from([(32, 32), (64, 32), (128, 64), (256, 32)]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_across_shapes(self, m, n, kg, seed):
+        k, group = kg
+        rng = np.random.default_rng(seed)
+        x, codes, scales, zeros = rand_quant_problem(rng, m, n, k, group)
+        got = quant_matmul(x, codes, scales, zeros, group=group,
+                           block_m=min(32, m), block_n=min(32, n))
+        want = quant_matmul_ref(x, codes, scales, zeros, group)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+    def test_blocking_is_invisible(self):
+        rng = np.random.default_rng(0)
+        x, codes, scales, zeros = rand_quant_problem(rng, 128, 128, 64, 32)
+        a = quant_matmul(x, codes, scales, zeros, group=32, block_m=128, block_n=128)
+        b = quant_matmul(x, codes, scales, zeros, group=32, block_m=32, block_n=64)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-5)
+
+    def test_zero_codes_give_negative_zero_point_rows(self):
+        # All-zero codes dequantize to (0 - zero) * scale exactly.
+        rng = np.random.default_rng(1)
+        x = np.eye(4, 32, dtype=np.float32)
+        codes = np.zeros((8, 32), dtype=np.float32)
+        scales = np.full((8, 1), 2.0, dtype=np.float32)
+        zeros = np.full((8, 1), 3.0, dtype=np.float32)
+        got = quant_matmul(x, codes, scales, zeros, group=32, block_m=4, block_n=8)
+        np.testing.assert_allclose(got, np.full((4, 8), -6.0), rtol=1e-6)
+
+    def test_group_structure_respected(self):
+        # Different scales per group must produce different columns.
+        x = np.ones((4, 64), dtype=np.float32)
+        codes = np.ones((4, 64), dtype=np.float32)
+        scales = np.array([[1.0, 10.0]] * 4, dtype=np.float32)
+        zeros = np.zeros((4, 2), dtype=np.float32)
+        got = quant_matmul(x, codes, scales, zeros, group=32, block_m=4, block_n=4)
+        want = np.full((4, 4), 32 * 1.0 + 32 * 10.0, dtype=np.float32)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_rejects_bad_group(self):
+        rng = np.random.default_rng(2)
+        x, codes, scales, zeros = rand_quant_problem(rng, 8, 8, 32, 32)
+        with pytest.raises(AssertionError):
+            quant_matmul(x, codes, scales, zeros, group=33)
+
+
+class TestDequantRef:
+    def test_roundtrip_against_manual(self):
+        codes = np.array([[0.0, 1.0, 2.0, 3.0]], dtype=np.float32)
+        scales = np.array([[0.5, 2.0]], dtype=np.float32)
+        zeros = np.array([[1.0, 2.0]], dtype=np.float32)
+        w = dequantize_ref(codes, scales, zeros, group=2)
+        np.testing.assert_allclose(w, [[-0.5, 0.0, 0.0, 2.0]])
+
+
+class TestHessian:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([64, 128, 256, 512]),
+        d=st.sampled_from([16, 64, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, m, d, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, d), dtype=np.float32)
+        got = hessian_accum(x, block_m=64)
+        np.testing.assert_allclose(got, hessian_ref(x), rtol=1e-4, atol=1e-3)
+
+    def test_accumulation_across_tiles(self):
+        # Splitting the token axis must not change the result.
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((256, 32), dtype=np.float32)
+        a = hessian_accum(x, block_m=256)
+        b = hessian_accum(x, block_m=32)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+    def test_result_is_symmetric_psd(self):
+        rng = np.random.default_rng(4)
+        x = rng.standard_normal((128, 24), dtype=np.float32)
+        h = np.asarray(hessian_accum(x))
+        np.testing.assert_allclose(h, h.T, rtol=1e-5, atol=1e-4)
+        eig = np.linalg.eigvalsh(h.astype(np.float64))
+        assert eig.min() > -1e-3

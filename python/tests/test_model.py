@@ -1,0 +1,79 @@
+"""L2 model tests: shapes, op semantics matching the Rust forward spec,
+and a smoke training step (loss must drop)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model.Config("unit", 32, 2, 2, 64, seq_len=16)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_param_names_cover_init(tiny):
+    cfg, params = tiny
+    names = model.param_names(cfg)
+    assert set(names) == set(params.keys())
+    assert names[0] == "embed" and names[-1] == "final_norm"
+
+
+def test_forward_shapes(tiny):
+    cfg, params = tiny
+    tokens = jnp.arange(cfg.seq_len, dtype=jnp.int32) % 200
+    logits = model.forward_segment(cfg, params, tokens)
+    assert logits.shape == (cfg.seq_len, cfg.vocab)
+    batch = jnp.stack([tokens, tokens + 1])
+    blogits = model.forward_batch(cfg, params, batch)
+    assert blogits.shape == (2, cfg.seq_len, cfg.vocab)
+
+
+def test_rmsnorm_matches_manual(tiny):
+    cfg, _ = tiny
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, cfg.dim))
+    g = jnp.ones((cfg.dim,)) * 2.0
+    y = model.rmsnorm(x, g)
+    ms = np.mean(np.asarray(x) ** 2, axis=-1, keepdims=True)
+    want = np.asarray(x) / np.sqrt(ms + model.NORM_EPS) * 2.0
+    np.testing.assert_allclose(y, want, rtol=1e-5)
+
+
+def test_attention_is_causal(tiny):
+    cfg, params = tiny
+    t1 = jnp.zeros((cfg.seq_len,), jnp.int32)
+    t2 = t1.at[-1].set(77)  # change only the last token
+    l1 = model.forward_segment(cfg, params, t1)
+    l2 = model.forward_segment(cfg, params, t2)
+    np.testing.assert_allclose(l1[:-1], l2[:-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(l1[-1], l2[-1])
+
+
+def test_untrained_ppl_near_uniform(tiny):
+    cfg, params = tiny
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, cfg.seq_len), 0, 256)
+    ppl = float(model.perplexity(cfg, params, tokens))
+    assert 0.5 * cfg.vocab < ppl < 2.0 * cfg.vocab
+
+
+def test_one_train_step_reduces_loss(tiny):
+    cfg, params = tiny
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (8, cfg.seq_len), 90, 110)
+    loss_fn = lambda p: model.next_token_loss(cfg, p, tokens)
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 0.5 * g, params, grads)
+    l1 = loss_fn(params2)
+    assert float(l1) < float(l0)
+
+
+def test_block_captures_present(tiny):
+    cfg, params = tiny
+    x = jax.random.normal(jax.random.PRNGKey(4), (cfg.seq_len, cfg.dim))
+    out, cap = model.block(cfg, params, 0, x)
+    assert out.shape == x.shape
+    assert set(cap) == {"attn_in", "attn_ctx", "mlp_in", "mlp_act"}
+    assert cap["mlp_act"].shape == (cfg.seq_len, cfg.ffn)

@@ -1,0 +1,52 @@
+"""QTZ container: python round-trip + header invariants that the Rust
+reader relies on (magic, alignment, dtype tags)."""
+
+import json
+import struct
+
+import numpy as np
+import pytest
+
+from compile import qtz
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.qtz")
+    tensors = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "codes": np.array([[-8, 7], [0, 1]], dtype=np.int8),
+        "bias": np.array([1.5, -2.5], dtype=np.float32),
+    }
+    qtz.save(path, tensors, {"name": "unit", "dim": 4})
+    meta, back = qtz.load(path)
+    assert meta == {"name": "unit", "dim": 4}
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_header_layout(tmp_path):
+    path = str(tmp_path / "t.qtz")
+    qtz.save(path, {"x": np.zeros(3, dtype=np.float32)}, {})
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"QTZ1"
+    (hlen,) = struct.unpack("<Q", raw[4:12])
+    header = json.loads(raw[12 : 12 + hlen])
+    entry = header["tensors"]["x"]
+    assert entry["dtype"] == "f32"
+    assert entry["shape"] == [3]
+    assert entry["offset"] % 64 == 0
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        qtz.save(str(tmp_path / "bad.qtz"), {"x": np.zeros(2, dtype=np.float64)})
+
+
+def test_rust_compatible_meta_types(tmp_path):
+    # Rust parses meta ints via as_usize on JSON numbers.
+    path = str(tmp_path / "t.qtz")
+    qtz.save(path, {"x": np.zeros(1, dtype=np.float32)},
+             {"dim": 64, "n_layers": 4})
+    meta, _ = qtz.load(path)
+    assert isinstance(meta["dim"], int)

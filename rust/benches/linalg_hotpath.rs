@@ -1,0 +1,70 @@
+//! L3 hot-path micro-benchmarks: GEMM variants, Cholesky/SPD solves, and
+//! the fast Walsh–Hadamard transform. These are the kernels the §Perf pass
+//! optimizes; the GFLOP/s numbers below are the before/after evidence in
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench linalg_hotpath`
+
+use qep::linalg::{
+    fwht_inplace, matmul, matmul_nt, matmul_tn, spd_inverse, upper_cholesky_of_inverse, Mat,
+    Mat64,
+};
+use qep::util::bench::{bench, black_box, fmt_time, BenchConfig};
+use qep::util::rng::Rng;
+
+fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rng = Rng::new(0);
+
+    println!("# linalg hot path\n");
+
+    for (m, k, n) in [(128, 256, 256), (256, 512, 512), (512, 512, 1024)] {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+
+        let r = bench(&format!("matmul    {m}x{k}x{n}"), cfg, || matmul(&a, &b));
+        println!("{:<28} {:>10}  {:6.2} GFLOP/s", r.name, fmt_time(r.mean_s), gflops(flops, r.mean_s));
+
+        let r = bench(&format!("matmul_nt {m}x{k}x{n}"), cfg, || matmul_nt(&a, &bt));
+        println!("{:<28} {:>10}  {:6.2} GFLOP/s", r.name, fmt_time(r.mean_s), gflops(flops, r.mean_s));
+    }
+
+    for (m, d) in [(1024, 128), (3072, 256)] {
+        let x = Mat::randn(m, d, 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * d as f64 * d as f64;
+        let r = bench(&format!("hessian XᵀX {m}x{d}"), cfg, || matmul_tn(&x, &x));
+        println!("{:<28} {:>10}  {:6.2} GFLOP/s", r.name, fmt_time(r.mean_s), gflops(flops, r.mean_s));
+    }
+
+    for d in [128usize, 256, 512] {
+        // Well-conditioned SPD.
+        let b = Mat::randn(d, d, 1.0, &mut rng);
+        let h32 = matmul_tn(&b, &b);
+        let mut h = Mat64::zeros(d, d);
+        for (dst, src) in h.data.iter_mut().zip(h32.data.iter()) {
+            *dst = *src as f64;
+        }
+        h.add_diag(d as f64);
+        let r = bench(&format!("spd_inverse {d}"), cfg, || spd_inverse(&h).unwrap());
+        println!("{:<28} {:>10}", r.name, fmt_time(r.mean_s));
+        let r = bench(&format!("chol_of_inv {d}"), cfg, || {
+            upper_cholesky_of_inverse(&h).unwrap()
+        });
+        println!("{:<28} {:>10}", r.name, fmt_time(r.mean_s));
+    }
+
+    for n in [256usize, 1024, 4096] {
+        let mut x = rng.normal_vec(n, 1.0);
+        let r = bench(&format!("fwht {n}"), cfg, || {
+            fwht_inplace(black_box(&mut x));
+            x[0]
+        });
+        println!("{:<28} {:>10}", r.name, fmt_time(r.mean_s));
+    }
+}

@@ -1,0 +1,52 @@
+//! End-to-end pipeline bench: full quantize-and-evaluate cycles per
+//! (method, ±QEP) on tiny-s — the number a user experiences, and the
+//! denominator for the §Perf optimization log.
+//!
+//! Run: `cargo bench --bench pipeline_e2e`
+
+use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::eval::perplexity;
+use qep::exp::ExpEnv;
+use qep::model::Size;
+use qep::quant::{Method, QuantConfig};
+use qep::text::Flavor;
+use qep::util::{fmt_duration, Stopwatch};
+
+fn main() {
+    let mut env = ExpEnv::new("artifacts");
+    let model = env.model(Size::TinyS);
+    let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
+    let eval = env.eval_tokens(Flavor::Wiki);
+
+    println!("# end-to-end pipeline (tiny-s, INT3, 24 calib segments, 16k eval tokens)\n");
+    println!("{:<22} {:>12} {:>12} {:>12} {:>10}", "config", "quantize", "eval ppl", "total", "ppl");
+    for method in Method::all() {
+        for qep in [None, Some(0.5)] {
+            let t_total = Stopwatch::start();
+            let out = Pipeline::new(PipelineConfig {
+                quant: QuantConfig::int(3),
+                method,
+                qep_alpha: qep,
+                ..Default::default()
+            })
+            .run(&model, &calib)
+            .unwrap();
+            let t_q = t_total.seconds();
+            let t_eval = Stopwatch::start();
+            let ppl = perplexity(&out.model, &eval);
+            let label = format!(
+                "{} {}",
+                method.name(),
+                if qep.is_some() { "+QEP" } else { "base" }
+            );
+            println!(
+                "{:<22} {:>12} {:>12} {:>12} {:>10.3}",
+                label,
+                fmt_duration(t_q),
+                fmt_duration(t_eval.seconds()),
+                fmt_duration(t_total.seconds()),
+                ppl
+            );
+        }
+    }
+}

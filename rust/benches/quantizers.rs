@@ -1,0 +1,52 @@
+//! Per-layer quantizer micro-benchmarks on realistic layer shapes
+//! (tiny-l's 256×256 attention and 512×256/256×512 MLP projections), plus
+//! the QEP correction itself. Breaks Table 3's totals down by component.
+//!
+//! Run: `cargo bench --bench quantizers`
+
+use qep::linalg::Mat;
+use qep::qep::corrected_weight;
+use qep::quant::{quantizer_for, LayerCtx, Method, QuantConfig};
+use qep::util::bench::{bench, fmt_time, BenchConfig};
+use qep::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig { measure_time: 2.0, ..Default::default() };
+    let mut rng = Rng::new(0);
+    let m_tokens = 1024;
+
+    println!("# quantizer cost per layer (INT3, {m_tokens} calibration tokens)\n");
+
+    for (n, d, label) in [(256usize, 256usize, "attn 256x256"), (512, 256, "mlp.up 512x256"), (256, 512, "mlp.down 256x512")] {
+        let x = Mat::randn(m_tokens, d, 1.0, &mut rng);
+        let ctx = LayerCtx::from_activations(&x, 0, label);
+        let w = Mat::randn(n, d, 0.05, &mut rng);
+        let qc = QuantConfig::int(3);
+
+        println!("## {label}");
+        for method in Method::all() {
+            let q = quantizer_for(method);
+            let r = bench(&format!("{} {label}", method.name()), cfg, || {
+                q.quantize(&w, &qc, &ctx).unwrap()
+            });
+            println!("  {:<8} {:>10}/layer", method.name(), fmt_time(r.mean_s));
+        }
+
+        // QEP correction on matching streams.
+        let mut x_hat = x.clone();
+        let mut nrng = Rng::new(1);
+        for v in x_hat.data.iter_mut() {
+            *v += 0.05 * nrng.normal_f32();
+        }
+        let r = bench(&format!("qep-correction {label}"), cfg, || {
+            corrected_weight(&w, &x, &x_hat, 0.5, 1.0).unwrap()
+        });
+        println!("  {:<8} {:>10}/layer  (α=0.5 correction)", "QEP", fmt_time(r.mean_s));
+
+        let r = bench(&format!("hessian-build {label}"), cfg, || {
+            LayerCtx::from_activations(&x, 0, label)
+        });
+        println!("  {:<8} {:>10}/layer  (XᵀX + stats)", "Hessian", fmt_time(r.mean_s));
+        println!();
+    }
+}

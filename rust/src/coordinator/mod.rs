@@ -1,0 +1,21 @@
+//! The layer-wise PTQ coordinator — the L3 system contribution.
+//!
+//! It owns the *dual calibration streams*: full-precision activations `X`
+//! propagated through the original weights, and quantized-stream
+//! activations `X̂` propagated through everything quantized so far
+//! (including earlier linears of the *same* block, in execution order
+//! q/k/v → o → gate/up → down). Per linear layer it:
+//!
+//! 1. captures `(X, X̂)` at the layer input,
+//! 2. applies the QEP correction `W*(α)` (when enabled),
+//! 3. builds the layer Hessian from the method's calibration stream,
+//! 4. dispatches to the configured base quantizer (RTN/GPTQ/AWQ/QuIP),
+//! 5. writes the quantized weights into the output model and advances `X̂`.
+//!
+//! Phase timings are recorded per layer — they regenerate Table 3.
+
+pub mod pipeline;
+pub mod report;
+
+pub use pipeline::{Pipeline, PipelineConfig, PipelineOutput};
+pub use report::{LayerReport, PipelineReport};

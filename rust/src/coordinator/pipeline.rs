@@ -1,0 +1,405 @@
+//! The quantization pipeline driver.
+
+use super::report::{LayerReport, PipelineReport};
+use crate::linalg::Mat;
+use crate::model::ops::{causal_attention, linear, rmsnorm, swiglu};
+use crate::model::{Forward, Model};
+use crate::qep::{AlphaPolicy, CorrectionStats};
+use crate::quant::{quantizer_for, LayerCtx, Method, QuantConfig, Quantizer};
+use crate::util::Stopwatch;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub quant: QuantConfig,
+    pub method: Method,
+    /// `Some(α)` enables QEP with uniform α; `None` is the BASE method.
+    pub qep_alpha: Option<f32>,
+    /// Fine-grained α policy; overrides `qep_alpha`'s uniform value when
+    /// set (both require `qep_alpha = Some(_)` to enable QEP at all).
+    pub alpha_policy: Option<AlphaPolicy>,
+    /// QEP correction damping relative to mean(diag Ĥ) (App. B.1 uses the
+    /// full mean diagonal ⇒ 1.0).
+    pub damp_rel: f64,
+    /// Quantize only the first `n` blocks, leaving the rest full precision
+    /// (the Fig. 2 error-accumulation setup).
+    pub max_blocks: Option<usize>,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            quant: QuantConfig::int(4),
+            method: Method::Rtn,
+            qep_alpha: None,
+            alpha_policy: None,
+            damp_rel: 1.0,
+            max_blocks: None,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} {}",
+            self.quant.label(),
+            self.method.name(),
+            if self.qep_alpha.is_some() { "+QEP" } else { "base" }
+        )
+    }
+
+    fn policy(&self) -> Option<AlphaPolicy> {
+        match (self.qep_alpha, &self.alpha_policy) {
+            (Some(_), Some(p)) => Some(p.clone()),
+            (Some(a), None) => Some(AlphaPolicy::uniform(a)),
+            (None, _) => None,
+        }
+    }
+}
+
+pub struct PipelineOutput {
+    pub model: Model,
+    pub report: PipelineReport,
+}
+
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    quantizer: Box<dyn Quantizer + Send + Sync>,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Pipeline {
+        let quantizer = quantizer_for(cfg.method);
+        Pipeline { cfg, quantizer }
+    }
+
+    /// Run layer-wise PTQ over the model using `calib_tokens` (length must
+    /// tile the model's seq_len).
+    pub fn run(&self, model: &Model, calib_tokens: &[u32]) -> Result<PipelineOutput> {
+        let total = Stopwatch::start();
+        let f = Forward::new(&model.cfg);
+        let policy = self.cfg.policy();
+        let mut report = PipelineReport::default();
+        let mut qmodel = model.clone();
+
+        let prop = Stopwatch::start();
+        let mut x_full = f.embed(model, calib_tokens);
+        let mut x_hat = x_full.clone();
+        report.propagation_s += prop.seconds();
+
+        let n_blocks = self
+            .cfg
+            .max_blocks
+            .unwrap_or(model.cfg.n_layers)
+            .min(model.cfg.n_layers);
+
+        for bi in 0..n_blocks {
+            // Full-precision stream: capture per-linear inputs in one pass.
+            let prop = Stopwatch::start();
+            let (x_full_next, cap) = f.block(&model.blocks[bi], &x_full);
+            report.propagation_s += prop.seconds();
+
+            // Quantized stream, incrementally quantizing in execution order.
+            // -- attention ------------------------------------------------
+            let prop = Stopwatch::start();
+            let attn_in_hat = rmsnorm(&x_hat, &qmodel.blocks[bi].attn_norm);
+            report.propagation_s += prop.seconds();
+            for short in ["attn.wq", "attn.wk", "attn.wv"] {
+                self.quantize_layer(
+                    &mut qmodel,
+                    bi,
+                    short,
+                    &cap.attn_in,
+                    &attn_in_hat,
+                    policy.as_ref(),
+                    &mut report,
+                )?;
+            }
+            let prop = Stopwatch::start();
+            let b = &qmodel.blocks[bi];
+            let (q, k, v) = (
+                linear(&attn_in_hat, &b.wq),
+                linear(&attn_in_hat, &b.wk),
+                linear(&attn_in_hat, &b.wv),
+            );
+            let ctx_hat = causal_attention(&q, &k, &v, model.cfg.n_heads, model.cfg.seq_len);
+            report.propagation_s += prop.seconds();
+            self.quantize_layer(
+                &mut qmodel,
+                bi,
+                "attn.wo",
+                &cap.attn_ctx,
+                &ctx_hat,
+                policy.as_ref(),
+                &mut report,
+            )?;
+
+            // -- MLP -------------------------------------------------------
+            let prop = Stopwatch::start();
+            let b = &qmodel.blocks[bi];
+            let x1_hat = x_hat.add(&linear(&ctx_hat, &b.wo));
+            let mlp_in_hat = rmsnorm(&x1_hat, &b.mlp_norm);
+            report.propagation_s += prop.seconds();
+            for short in ["mlp.gate", "mlp.up"] {
+                self.quantize_layer(
+                    &mut qmodel,
+                    bi,
+                    short,
+                    &cap.mlp_in,
+                    &mlp_in_hat,
+                    policy.as_ref(),
+                    &mut report,
+                )?;
+            }
+            let prop = Stopwatch::start();
+            let b = &qmodel.blocks[bi];
+            let act_hat = swiglu(&linear(&mlp_in_hat, &b.gate), &linear(&mlp_in_hat, &b.up));
+            report.propagation_s += prop.seconds();
+            self.quantize_layer(
+                &mut qmodel,
+                bi,
+                "mlp.down",
+                &cap.mlp_act,
+                &act_hat,
+                policy.as_ref(),
+                &mut report,
+            )?;
+
+            let prop = Stopwatch::start();
+            let b = &qmodel.blocks[bi];
+            x_hat = x1_hat.add(&linear(&act_hat, &b.down));
+            x_full = x_full_next;
+            report.propagation_s += prop.seconds();
+
+            if self.cfg.verbose {
+                eprintln!(
+                    "[pipeline] block {bi}/{n_blocks} done ({})",
+                    self.cfg.label()
+                );
+            }
+        }
+
+        report.total_s = total.seconds();
+        Ok(PipelineOutput { model: qmodel, report })
+    }
+
+    /// Quantize one linear in place.
+    #[allow(clippy::too_many_arguments)]
+    fn quantize_layer(
+        &self,
+        qmodel: &mut Model,
+        block: usize,
+        short: &str,
+        x_full_cap: &Mat,
+        x_hat_cap: &Mat,
+        policy: Option<&AlphaPolicy>,
+        report: &mut PipelineReport,
+    ) -> Result<()> {
+        let name = format!("blocks.{block}.{short}");
+        let w = qmodel.blocks[block].linear(short).clone();
+
+        // 1. Calibration statistics on the method's activation stream.
+        //    QEP always calibrates on X̂ (Eq. 5); base methods follow their
+        //    original papers.
+        let acts = if policy.is_some() || self.cfg.method.base_uses_quantized_acts() {
+            x_hat_cap
+        } else {
+            x_full_cap
+        };
+        let hes = Stopwatch::start();
+        let layer_seed = self.cfg.seed ^ hash_name(&name);
+        let ctx = LayerCtx::from_activations(acts, layer_seed, &name);
+        let hessian_s = hes.seconds();
+
+        // 2. QEP correction, reusing ctx's Ĥ (acts == X̂ whenever QEP is on,
+        //    so the Hessian is the same matrix the correction needs).
+        let (w_target, correction, alpha) = match policy {
+            Some(p) => {
+                let a = p.alpha_for(&name);
+                let (w_star, stats) = crate::qep::corrected_weight_with_h(
+                    &w,
+                    x_full_cap,
+                    x_hat_cap,
+                    Some(&ctx.hessian),
+                    a,
+                    self.cfg.damp_rel,
+                )?;
+                (w_star, stats, a)
+            }
+            None => (w.clone(), CorrectionStats::default(), 0.0),
+        };
+
+        // 3. Base method.
+        let qt = Stopwatch::start();
+        let w_hat = self.quantizer.quantize(&w_target, &self.cfg.quant, &ctx)?;
+        let quant_s = qt.seconds();
+
+        let recon_error = ctx.recon_error(&w_target, &w_hat);
+        *qmodel.blocks[block].linear_mut(short) = w_hat;
+        report.layers.push(LayerReport {
+            name,
+            recon_error,
+            correction,
+            hessian_s,
+            quant_s,
+            alpha,
+        });
+        Ok(())
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — stable across runs (layer seeds must be reproducible).
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Model, Vec<u32>) {
+        let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 8;
+        let model = Model::random(&cfg, 1);
+        let mut rng = Rng::new(2);
+        let tokens: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+        (model, tokens)
+    }
+
+    fn run(model: &Model, tokens: &[u32], cfg: PipelineConfig) -> PipelineOutput {
+        Pipeline::new(cfg).run(model, tokens).unwrap()
+    }
+
+    #[test]
+    fn quantizes_all_layers_and_reports() {
+        let (model, tokens) = setup();
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig { quant: QuantConfig::int(4), method: Method::Rtn, ..Default::default() },
+        );
+        assert_eq!(out.report.layers.len(), 2 * 7);
+        out.model.validate().unwrap();
+        // Weights must actually change (they're quantized).
+        assert!(out.model.blocks[0].wq.sub(&model.blocks[0].wq).frob() > 0.0);
+    }
+
+    #[test]
+    fn max_blocks_limits_quantization() {
+        let (model, tokens) = setup();
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig { max_blocks: Some(1), ..Default::default() },
+        );
+        assert_eq!(out.report.layers.len(), 7);
+        // Block 1 untouched.
+        assert_eq!(out.model.blocks[1].wq, model.blocks[1].wq);
+        assert_ne!(out.model.blocks[0].wq, model.blocks[0].wq);
+    }
+
+    #[test]
+    fn qep_runs_and_records_alpha() {
+        let (model, tokens) = setup();
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig {
+                quant: QuantConfig::int(3),
+                qep_alpha: Some(0.5),
+                ..Default::default()
+            },
+        );
+        assert!(out.report.layers.iter().all(|l| l.alpha == 0.5));
+        // First layer of the whole net sees identical streams ⇒ tiny
+        // correction; later layers see real upstream error.
+        let first = &out.report.layers[0];
+        assert!(first.correction.rel_upstream_err < 1e-9);
+    }
+
+    #[test]
+    fn alpha_policy_overrides_apply() {
+        let (model, tokens) = setup();
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig {
+                qep_alpha: Some(0.5),
+                alpha_policy: Some(AlphaPolicy::uniform(0.5).with_override("mlp.", 0.0)),
+                ..Default::default()
+            },
+        );
+        for l in &out.report.layers {
+            if l.name.contains("mlp.") {
+                assert_eq!(l.alpha, 0.0, "{}", l.name);
+            } else {
+                assert_eq!(l.alpha, 0.5, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (model, tokens) = setup();
+        let cfg = PipelineConfig {
+            method: Method::Quip,
+            quant: QuantConfig::int(3),
+            seed: 42,
+            ..Default::default()
+        };
+        let a = run(&model, &tokens, cfg.clone());
+        let b = run(&model, &tokens, cfg);
+        assert_eq!(a.model.blocks[0].wq, b.model.blocks[0].wq);
+        assert_eq!(a.model.blocks[1].down, b.model.blocks[1].down);
+    }
+
+    #[test]
+    fn all_methods_run_end_to_end() {
+        let (model, tokens) = setup();
+        for method in Method::all() {
+            for qep in [None, Some(0.5)] {
+                let out = run(
+                    &model,
+                    &tokens,
+                    PipelineConfig {
+                        quant: QuantConfig::int(3),
+                        method,
+                        qep_alpha: qep,
+                        ..Default::default()
+                    },
+                );
+                out.model.validate().unwrap();
+                assert!(
+                    out.model.blocks[0].wq.data.iter().all(|v| v.is_finite()),
+                    "{method:?} qep={qep:?} produced non-finite weights"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn timing_phases_are_populated() {
+        let (model, tokens) = setup();
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig { method: Method::Gptq, qep_alpha: Some(0.5), ..Default::default() },
+        );
+        assert!(out.report.total_s > 0.0);
+        assert!(out.report.hessian_s() > 0.0);
+        assert!(out.report.quant_s() > 0.0);
+        assert!(out.report.propagation_s > 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Pipeline diagnostics: per-layer reconstruction errors, correction
+//! magnitudes, and phase timings (Table 3's "quantization process" cost).
+
+use crate::qep::CorrectionStats;
+
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    /// Layer-wise objective value ‖(W_target − Ŵ)X̂‖² after quantization.
+    pub recon_error: f64,
+    /// QEP correction diagnostics (zeroed when QEP is off or α=0).
+    pub correction: CorrectionStats,
+    /// Seconds building the Hessian / activation statistics.
+    pub hessian_s: f64,
+    /// Seconds inside the base quantizer.
+    pub quant_s: f64,
+    /// α used for this layer (0 when QEP off).
+    pub alpha: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub layers: Vec<LayerReport>,
+    /// Seconds propagating the two calibration streams (forward passes).
+    pub propagation_s: f64,
+    pub total_s: f64,
+}
+
+impl PipelineReport {
+    pub fn correction_s(&self) -> f64 {
+        self.layers.iter().map(|l| l.correction.seconds).sum()
+    }
+
+    pub fn hessian_s(&self) -> f64 {
+        self.layers.iter().map(|l| l.hessian_s).sum()
+    }
+
+    pub fn quant_s(&self) -> f64 {
+        self.layers.iter().map(|l| l.quant_s).sum()
+    }
+
+    pub fn total_recon_error(&self) -> f64 {
+        self.layers.iter().map(|l| l.recon_error).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "layers={} total={} (propagate={}, hessian={}, correction={}, quantize={}) recon={:.4e}",
+            self.layers.len(),
+            crate::util::fmt_duration(self.total_s),
+            crate::util::fmt_duration(self.propagation_s),
+            crate::util::fmt_duration(self.hessian_s()),
+            crate::util::fmt_duration(self.correction_s()),
+            crate::util::fmt_duration(self.quant_s()),
+            self.total_recon_error()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_sums_layers() {
+        let mut r = PipelineReport::default();
+        for i in 0..3 {
+            r.layers.push(LayerReport {
+                name: format!("l{i}"),
+                recon_error: 1.0,
+                correction: CorrectionStats { rel_correction: 0.1, rel_upstream_err: 0.0, seconds: 0.5 },
+                hessian_s: 0.25,
+                quant_s: 1.0,
+                alpha: 0.5,
+            });
+        }
+        assert!((r.correction_s() - 1.5).abs() < 1e-12);
+        assert!((r.hessian_s() - 0.75).abs() < 1e-12);
+        assert!((r.quant_s() - 3.0).abs() < 1e-12);
+        assert!((r.total_recon_error() - 3.0).abs() < 1e-12);
+        assert!(r.summary().contains("layers=3"));
+    }
+}

@@ -1,0 +1,81 @@
+//! The Fig. 2 diagnostic: Δ_m = ‖f_m(X) − f̂_m(X)‖²_F per transformer
+//! block, where f̂ is the (partially) quantized model. The paper quantizes
+//! the first 10 blocks and shows the error keeps *growing* through the
+//! remaining full-precision blocks — the motivation for QEP.
+
+use crate::model::{Forward, Model};
+
+/// Δ_m for m = 1..=n_layers: squared Frobenius distance between the two
+/// models' activations *after* block m (index 0 in the returned vec is
+/// after block 1).
+pub fn delta_per_block(full: &Model, quantized: &Model, tokens: &[u32]) -> Vec<f64> {
+    assert_eq!(full.cfg, quantized.cfg, "model configs differ");
+    let f = Forward::new(&full.cfg);
+    let trace_full = f.block_trace(full, tokens);
+    let trace_q = f.block_trace(quantized, tokens);
+    // trace[i] = activations entering block i; trace[n] = final states.
+    // Δ after block m = trace[m+1] difference, skipping the embedding (i=0,
+    // identical by construction).
+    (1..trace_full.len())
+        .map(|i| trace_full[i].sub(&trace_q[i]).frob_sq())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Pipeline, PipelineConfig};
+    use crate::model::ModelConfig;
+    use crate::quant::{Method, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Model, Vec<u32>) {
+        let mut cfg = ModelConfig::new("unit", 16, 4, 2, 32);
+        cfg.seq_len = 8;
+        let model = Model::random(&cfg, 1);
+        let mut rng = Rng::new(2);
+        let tokens: Vec<u32> = (0..8 * 8).map(|_| rng.below(256) as u32).collect();
+        (model, tokens)
+    }
+
+    #[test]
+    fn identical_models_have_zero_delta() {
+        let (model, tokens) = setup();
+        let d = delta_per_block(&model, &model, &tokens);
+        assert_eq!(d.len(), 4);
+        assert!(d.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn partially_quantized_error_persists_after_quantized_prefix() {
+        let (model, tokens) = setup();
+        let out = Pipeline::new(PipelineConfig {
+            quant: QuantConfig::int(2),
+            method: Method::Rtn,
+            max_blocks: Some(2),
+            ..Default::default()
+        })
+        .run(&model, &tokens)
+        .unwrap();
+        let d = delta_per_block(&model, &out.model, &tokens);
+        // Error is introduced in blocks 1-2 and must not vanish afterwards.
+        assert!(d[0] > 0.0);
+        assert!(d[1] > 0.0);
+        assert!(d[2] > 0.0 && d[3] > 0.0, "error vanished in FP blocks: {d:?}");
+    }
+
+    #[test]
+    fn error_grows_within_quantized_prefix() {
+        let (model, tokens) = setup();
+        let out = Pipeline::new(PipelineConfig {
+            quant: QuantConfig::int(2),
+            method: Method::Rtn,
+            ..Default::default()
+        })
+        .run(&model, &tokens)
+        .unwrap();
+        let d = delta_per_block(&model, &out.model, &tokens);
+        // Accumulation: last block's delta exceeds the first block's.
+        assert!(d.last().unwrap() > &d[0], "{d:?}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation harness: perplexity (Tables 1, 5–7), zero-shot multiple
+//! choice tasks (Tables 2, 8–10), and the per-block error-accumulation
+//! metric Δ_m (Fig. 2).
+
+pub mod delta;
+pub mod ppl;
+pub mod tasks;
+
+pub use delta::delta_per_block;
+pub use ppl::perplexity;
+pub use tasks::{Task, TaskFamily, TaskSet};

@@ -1,0 +1,343 @@
+//! Synthetic zero-shot multiple-choice tasks, scored by length-normalized
+//! option log-likelihood — the same scoring machinery as the paper's
+//! ArcE/PiQA/StoryCloze harness (lm-eval style).
+//!
+//! Three families are generated from a corpus (see DESIGN.md §2):
+//! * `Cloze`      (PiQA analog, 4-way): pick the corpus-consistent next
+//!   word among distractors sampled from far-away positions.
+//! * `Completion` (StoryCloze analog, 2-way): true continuation of a
+//!   passage vs a continuation lifted from elsewhere.
+//! * `Pattern`    (ArcE analog, 4-way): true continuation vs
+//!   character-scrambled corruptions of it.
+
+use crate::linalg::Mat;
+use crate::model::{Forward, Model};
+use crate::text::{ByteTokenizer, Corpus};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskFamily {
+    Cloze,
+    Completion,
+    Pattern,
+}
+
+impl TaskFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskFamily::Cloze => "cloze",
+            TaskFamily::Completion => "completion",
+            TaskFamily::Pattern => "pattern",
+        }
+    }
+
+    /// The paper benchmark each family stands in for.
+    pub fn paper_analog(self) -> &'static str {
+        match self {
+            TaskFamily::Cloze => "PIQA",
+            TaskFamily::Completion => "StoryCloze",
+            TaskFamily::Pattern => "ARC-Easy",
+        }
+    }
+
+    pub fn all() -> [TaskFamily; 3] {
+        [TaskFamily::Cloze, TaskFamily::Completion, TaskFamily::Pattern]
+    }
+
+    pub fn n_options(self) -> usize {
+        match self {
+            TaskFamily::Completion => 2,
+            _ => 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub correct: usize,
+}
+
+pub struct TaskSet {
+    pub family: TaskFamily,
+    pub tasks: Vec<Task>,
+}
+
+impl TaskSet {
+    /// Build `n` tasks from a corpus, deterministic in `seed`.
+    pub fn generate(family: TaskFamily, corpus: &Corpus, n: usize, seed: u64) -> TaskSet {
+        let mut rng = Rng::new(seed ^ 0x7A5C_0000 ^ family.name().len() as u64);
+        let text = &corpus.text;
+        let words: Vec<&str> = text.split_whitespace().collect();
+        let mut tasks = Vec::with_capacity(n);
+        let mut guard = 0;
+        while tasks.len() < n && guard < n * 50 {
+            guard += 1;
+            if let Some(t) = make_task(family, text, &words, &mut rng) {
+                tasks.push(t);
+            }
+        }
+        TaskSet { family, tasks }
+    }
+
+    /// Accuracy of `model` on this task set.
+    pub fn accuracy(&self, model: &Model) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        let scorer = OptionScorer::new(model);
+        let correct = self
+            .tasks
+            .iter()
+            .filter(|t| scorer.pick(&t.prompt, &t.options) == t.correct)
+            .count();
+        correct as f64 / self.tasks.len() as f64
+    }
+}
+
+fn make_task(family: TaskFamily, text: &str, words: &[&str], rng: &mut Rng) -> Option<Task> {
+    match family {
+        TaskFamily::Cloze => {
+            // Prompt = span ending right before a word; options = that word
+            // + 3 words sampled from far away (must differ).
+            if words.len() < 64 {
+                return None;
+            }
+            let wi = 24 + rng.below(words.len() - 48);
+            let target = words.get(wi)?.trim_end_matches(['.', ',']);
+            if target.len() < 3 {
+                return None;
+            }
+            let prompt_words = &words[wi.saturating_sub(16)..wi];
+            let prompt = prompt_words.join(" ") + " ";
+            let mut options = vec![target.to_string()];
+            let mut tries = 0;
+            while options.len() < 4 && tries < 64 {
+                tries += 1;
+                let d = words[rng.below(words.len())].trim_end_matches(['.', ',']);
+                if d.len() >= 3 && !options.iter().any(|o| o == d) {
+                    options.push(d.to_string());
+                }
+            }
+            if options.len() < 4 {
+                return None;
+            }
+            shuffle_with_answer(prompt, options, rng)
+        }
+        TaskFamily::Completion => {
+            let len = text.len();
+            if len < 600 {
+                return None;
+            }
+            let a = floor_char(text, rng.below(len - 400));
+            let p_end = floor_char(text, a + 192);
+            let t_end = floor_char(text, p_end + 96);
+            let prompt = text[a..p_end].to_string();
+            let truth = text[p_end..t_end].to_string();
+            // Distractor: same length, far-away position.
+            let b = floor_char(text, (a + len / 2) % (len - 200));
+            let b_end = floor_char(text, b + (t_end - p_end));
+            let distract = text[b..b_end].to_string();
+            if truth == distract || truth.is_empty() || distract.is_empty() {
+                return None;
+            }
+            shuffle_with_answer(prompt, vec![truth, distract], rng)
+        }
+        TaskFamily::Pattern => {
+            let len = text.len();
+            if len < 400 {
+                return None;
+            }
+            let a = floor_char(text, rng.below(len - 300));
+            let p_end = floor_char(text, a + 128);
+            let t_end = floor_char(text, p_end + 64);
+            let prompt = text[a..p_end].to_string();
+            let truth = text[p_end..t_end].to_string();
+            let mut options = vec![truth.clone()];
+            for _ in 0..3 {
+                options.push(scramble(&truth, rng));
+            }
+            if options[1..].iter().any(|o| *o == truth) {
+                return None;
+            }
+            shuffle_with_answer(prompt, options, rng)
+        }
+    }
+}
+
+/// Scramble the characters of each word (keeps whitespace structure —
+/// plausible-looking but ungrammatical, the "wrong answer" signature).
+fn scramble(s: &str, rng: &mut Rng) -> String {
+    s.split(' ')
+        .map(|w| {
+            let mut chars: Vec<char> = w.chars().collect();
+            rng.shuffle(&mut chars);
+            chars.into_iter().collect::<String>()
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn floor_char(s: &str, mut i: usize) -> usize {
+    i = i.min(s.len());
+    while i > 0 && !s.is_char_boundary(i) {
+        i -= 1;
+    }
+    i
+}
+
+/// Shuffle options (truth is at index 0 on input), tracking the correct
+/// index so answer position carries no signal.
+fn shuffle_with_answer(prompt: String, options: Vec<String>, rng: &mut Rng) -> Option<Task> {
+    let n = options.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&i| i == 0)?;
+    let options = order.into_iter().map(|i| options[i].clone()).collect();
+    Some(Task { prompt, options, correct })
+}
+
+/// Length-normalized option log-likelihood scorer.
+pub struct OptionScorer<'m> {
+    model: &'m Model,
+}
+
+impl<'m> OptionScorer<'m> {
+    pub fn new(model: &'m Model) -> OptionScorer<'m> {
+        OptionScorer { model }
+    }
+
+    /// Mean per-token log-prob of `option` following `prompt`.
+    pub fn score(&self, prompt: &str, option: &str) -> f64 {
+        let tok = ByteTokenizer;
+        let seq = self.model.cfg.seq_len;
+        let mut ids = tok.encode(prompt);
+        let opt_ids = tok.encode(option);
+        if opt_ids.is_empty() {
+            return f64::NEG_INFINITY;
+        }
+        ids.extend_from_slice(&opt_ids);
+        // Keep the last `seq` tokens; the option must fit.
+        if ids.len() > seq {
+            ids.drain(..ids.len() - seq);
+        }
+        let opt_len = opt_ids.len().min(ids.len().saturating_sub(1));
+        let opt_start = ids.len() - opt_len;
+        // Pad to a full segment (causal: pads after the option are inert).
+        let real_len = ids.len();
+        ids.resize(seq, crate::text::PAD);
+        let f = Forward::new(&self.model.cfg);
+        let logits = f.forward(self.model, &ids);
+        let mut lp = 0.0f64;
+        for pos in opt_start..real_len {
+            // logits at pos-1 predict token at pos.
+            lp += log_prob(&logits, pos - 1, ids[pos] as usize);
+        }
+        lp / opt_len as f64
+    }
+
+    pub fn pick(&self, prompt: &str, options: &[String]) -> usize {
+        let mut best = 0;
+        let mut best_score = f64::NEG_INFINITY;
+        for (i, o) in options.iter().enumerate() {
+            let s = self.score(prompt, o);
+            if s > best_score {
+                best_score = s;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+fn log_prob(logits: &Mat, row: usize, target: usize) -> f64 {
+    let r = logits.row(row);
+    let max = r.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f32 = r.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+    (r[target] - lse) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::text::Flavor;
+
+    fn tiny_model() -> Model {
+        let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 64;
+        Model::random(&cfg, 1)
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sized() {
+        let corpus = Corpus::generate(Flavor::Wiki, 30_000, 0);
+        for fam in TaskFamily::all() {
+            let a = TaskSet::generate(fam, &corpus, 20, 7);
+            let b = TaskSet::generate(fam, &corpus, 20, 7);
+            assert_eq!(a.tasks.len(), 20, "{fam:?}");
+            for (x, y) in a.tasks.iter().zip(b.tasks.iter()) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.options, y.options);
+                assert_eq!(x.correct, y.correct);
+            }
+        }
+    }
+
+    #[test]
+    fn option_counts_match_family() {
+        let corpus = Corpus::generate(Flavor::C4, 30_000, 1);
+        for fam in TaskFamily::all() {
+            let ts = TaskSet::generate(fam, &corpus, 10, 3);
+            for t in &ts.tasks {
+                assert_eq!(t.options.len(), fam.n_options());
+                assert!(t.correct < t.options.len());
+            }
+        }
+    }
+
+    #[test]
+    fn correct_answers_are_uniformly_placed() {
+        let corpus = Corpus::generate(Flavor::Ptb, 40_000, 2);
+        let ts = TaskSet::generate(TaskFamily::Cloze, &corpus, 60, 5);
+        let mut counts = [0usize; 4];
+        for t in &ts.tasks {
+            counts[t.correct] += 1;
+        }
+        // No position should hoard the answers (guards against a scorer
+        // that always picks index 0 looking accurate).
+        assert!(counts.iter().all(|&c| c > 3), "{counts:?}");
+    }
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let corpus = Corpus::generate(Flavor::Wiki, 30_000, 3);
+        let model = tiny_model();
+        let ts = TaskSet::generate(TaskFamily::Completion, &corpus, 30, 9);
+        let acc = ts.accuracy(&model);
+        assert!(acc > 0.15 && acc < 0.85, "acc {acc}");
+    }
+
+    #[test]
+    fn scorer_prefers_duplicated_prompt_text() {
+        // A model with strong positional/token correlations isn't available
+        // untrained; instead sanity-check the scorer machinery: identical
+        // options must produce identical scores.
+        let model = tiny_model();
+        let scorer = OptionScorer::new(&model);
+        let a = scorer.score("hello world ", "foo bar");
+        let b = scorer.score("hello world ", "foo bar");
+        assert_eq!(a, b);
+        assert!(a.is_finite());
+    }
+
+    #[test]
+    fn scramble_preserves_length_structure() {
+        let mut rng = Rng::new(4);
+        let s = "alpha beta gamma";
+        let sc = scramble(s, &mut rng);
+        assert_eq!(sc.split(' ').count(), 3);
+        assert_eq!(sc.len(), s.len());
+    }
+}

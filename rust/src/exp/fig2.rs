@@ -1,0 +1,84 @@
+//! Fig. 2: accumulation and growth of quantization error across blocks.
+//! Quantize the first `n` blocks (paper: 10 of 32; we default to half the
+//! model) with RTN, base vs +QEP, and report Δ_m (Eq. 2) per block.
+
+use super::common::{persist, ExpEnv};
+use crate::coordinator::{Pipeline, PipelineConfig};
+use crate::eval::delta_per_block;
+use crate::model::Size;
+use crate::quant::{Method, QuantConfig};
+use crate::text::Flavor;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub struct Fig2Result {
+    pub deltas_base: Vec<f64>,
+    pub deltas_qep: Vec<f64>,
+    pub n_quantized: usize,
+}
+
+pub fn run(env: &mut ExpEnv, size: Size, bits: u32, n_blocks: Option<usize>) -> Result<Fig2Result> {
+    let model = env.model(size);
+    let n = n_blocks.unwrap_or(model.cfg.n_layers / 2).min(model.cfg.n_layers);
+    let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
+    let probe = env.eval_tokens(Flavor::Wiki);
+    let probe = &probe[..(8 * model.cfg.seq_len).min(probe.len())];
+
+    let run_one = |qep: Option<f32>| -> Result<Vec<f64>> {
+        let out = Pipeline::new(PipelineConfig {
+            quant: QuantConfig::int(bits),
+            method: Method::Rtn,
+            qep_alpha: qep,
+            max_blocks: Some(n),
+            ..Default::default()
+        })
+        .run(&model, &calib)?;
+        Ok(delta_per_block(&model, &out.model, probe))
+    };
+
+    let deltas_base = run_one(None)?;
+    let deltas_qep = run_one(Some(0.5))?;
+
+    let mut t = Table::new(
+        &format!(
+            "Figure 2: Δ_m per block ({}, INT{bits}, first {n} of {} blocks quantized, RTN)",
+            size.name(),
+            model.cfg.n_layers
+        ),
+        &["block m", "quantized?", "Δ_m BASE", "Δ_m +QEP", "ratio"],
+    );
+    for (i, (b, q)) in deltas_base.iter().zip(deltas_qep.iter()).enumerate() {
+        t.row(vec![
+            format!("{}", i + 1),
+            if i < n { "yes" } else { "no" }.to_string(),
+            format!("{b:.4e}"),
+            format!("{q:.4e}"),
+            format!("{:.2}x", b / q.max(1e-30)),
+        ]);
+    }
+    println!("{}", t.render());
+    persist("fig2", &t)?;
+    Ok(Fig2Result { deltas_base, deltas_qep, n_quantized: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shows_growth_and_qep_reduction() {
+        let mut env = ExpEnv::new("/nonexistent-artifacts");
+        let r = run(&mut env, Size::TinyS, 2, Some(2)).unwrap();
+        assert_eq!(r.deltas_base.len(), 4);
+        // Error persists into the unquantized blocks.
+        assert!(r.deltas_base[2] > 0.0 && r.deltas_base[3] > 0.0);
+        // QEP reduces the final-block error (the paper's headline of Fig 2).
+        let last = r.deltas_base.len() - 1;
+        assert!(
+            r.deltas_qep[last] < r.deltas_base[last],
+            "QEP {} !< BASE {}",
+            r.deltas_qep[last],
+            r.deltas_base[last]
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig. 3: seed stability of QuIP ± QEP. Five seeds per configuration;
+//! report mean ± SEM for PPL (wiki) and mean task accuracy.
+
+use super::common::{persist, Cell, ExpEnv, TASKS_PER_FAMILY};
+use crate::eval::{perplexity, TaskFamily, TaskSet};
+use crate::model::Size;
+use crate::quant::{Method, QuantConfig};
+use crate::text::Flavor;
+use crate::util::stats::{mean, sem};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(env: &mut ExpEnv, sizes: &[Size], bits_list: &[u32], n_seeds: u64) -> Result<()> {
+    let mut t = Table::new(
+        "Figure 3 data: QuIP ± QEP over seeds (mean ± SEM)",
+        &["bits", "size", "QEP", "ppl mean", "ppl sem", "acc mean", "acc sem"],
+    );
+    let eval = env.eval_tokens(Flavor::Wiki);
+    let task_corpus = env.corpus(Flavor::Wiki);
+    for &bits in bits_list {
+        for &size in sizes {
+            for qep in [false, true] {
+                let mut ppls = Vec::new();
+                let mut accs = Vec::new();
+                for seed in 0..n_seeds {
+                    let mut cell = Cell::new(size, Method::Quip, QuantConfig::int(bits), qep);
+                    cell.seed = seed;
+                    let out = cell.run(env)?;
+                    ppls.push(perplexity(&out.model, &eval));
+                    let fam_accs: Vec<f64> = TaskFamily::all()
+                        .iter()
+                        .map(|&f| {
+                            TaskSet::generate(f, &task_corpus, TASKS_PER_FAMILY, 1234)
+                                .accuracy(&out.model)
+                        })
+                        .collect();
+                    accs.push(mean(&fam_accs));
+                    eprintln!(
+                        "[fig3] {} INT{bits} qep={qep} seed={seed}: ppl={:.3} acc={:.4}",
+                        size.name(),
+                        ppls.last().unwrap(),
+                        accs.last().unwrap()
+                    );
+                }
+                t.row(vec![
+                    format!("INT{bits}"),
+                    size.name().to_string(),
+                    if qep { "yes" } else { "no" }.to_string(),
+                    format!("{:.3}", mean(&ppls)),
+                    format!("{:.3}", sem(&ppls)),
+                    format!("{:.4}", mean(&accs)),
+                    format!("{:.4}", sem(&accs)),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    persist("fig3", &t)
+}

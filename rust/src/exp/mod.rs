@@ -1,0 +1,8 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §6).
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod tables;
+
+pub use common::{ExpEnv, Cell};

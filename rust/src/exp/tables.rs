@@ -1,0 +1,364 @@
+//! Table drivers. Each driver quantizes a matrix of (size × grid × method
+//! × ±QEP) cells and formats the paper's corresponding table. Cells are
+//! quantized once and every requested metric is computed from the same
+//! quantized model, so combined drivers (tables 5–7 share cells; 8–10
+//! share cells) cost no more than a single table.
+
+use super::common::{cell_ppl, persist, Cell, ExpEnv, TASKS_PER_FAMILY};
+use crate::eval::{perplexity, TaskFamily, TaskSet};
+use crate::model::Size;
+use crate::quant::{Method, QuantConfig};
+use crate::text::Flavor;
+use crate::util::stats;
+use crate::util::table::{fmt_acc, fmt_ppl, Table};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// What to measure for a cell matrix.
+pub struct Wants {
+    pub ppl: Vec<Flavor>,
+    pub tasks: Vec<TaskFamily>,
+}
+
+/// Everything measured for one cell.
+pub struct CellResult {
+    pub cell: Cell,
+    pub ppl: HashMap<Flavor, f64>,
+    pub acc: HashMap<TaskFamily, f64>,
+    pub runtime_s: f64,
+    pub correction_s: f64,
+}
+
+/// Run a matrix of cells, computing all requested metrics per quantized
+/// model (quantize once, evaluate many).
+pub fn run_matrix(env: &mut ExpEnv, cells: &[Cell], wants: &Wants) -> Result<Vec<CellResult>> {
+    let mut results = Vec::with_capacity(cells.len());
+    let task_corpus = env.corpus(Flavor::Wiki);
+    for (i, cell) in cells.iter().enumerate() {
+        eprintln!("[exp] cell {}/{}: {}", i + 1, cells.len(), cell.label());
+        let out = cell.run(env)?;
+        let mut ppl = HashMap::new();
+        for &fl in &wants.ppl {
+            let eval = env.eval_tokens(fl);
+            ppl.insert(fl, perplexity(&out.model, &eval));
+        }
+        let mut acc = HashMap::new();
+        for &fam in &wants.tasks {
+            let ts = TaskSet::generate(fam, &task_corpus, TASKS_PER_FAMILY, 1234);
+            acc.insert(fam, ts.accuracy(&out.model));
+        }
+        results.push(CellResult {
+            cell: cell.clone(),
+            ppl,
+            acc,
+            runtime_s: out.report.total_s,
+            correction_s: out.report.correction_s(),
+        });
+    }
+    Ok(results)
+}
+
+/// Standard cell matrix: `settings × methods × ±QEP` for each size.
+pub fn matrix(sizes: &[Size], settings: &[QuantConfig], methods: &[Method]) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &q in settings {
+        for &m in methods {
+            for qep in [false, true] {
+                for &s in sizes {
+                    cells.push(Cell::new(s, m, q, qep));
+                }
+            }
+        }
+    }
+    cells
+}
+
+fn header(sizes: &[Size]) -> Vec<String> {
+    let mut h = vec!["Bits".to_string(), "Method".to_string(), "QEP".to_string()];
+    h.extend(sizes.iter().map(|s| format!("{} ({})", s.name(), s.paper_analog())));
+    h
+}
+
+/// Format a PPL table in the paper's layout (Tables 1, 5, 6, 7).
+fn format_ppl_table(
+    title: &str,
+    results: &[CellResult],
+    sizes: &[Size],
+    settings: &[QuantConfig],
+    methods: &[Method],
+    flavor: Flavor,
+) -> Table {
+    let hdr = header(sizes);
+    let mut t = Table::new(title, &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for &q in settings {
+        for &m in methods {
+            for qep in [false, true] {
+                let mut row = vec![
+                    q.label(),
+                    m.name().to_string(),
+                    if qep { "yes" } else { "no" }.to_string(),
+                ];
+                for &s in sizes {
+                    let v = results
+                        .iter()
+                        .find(|r| {
+                            r.cell.size == s
+                                && r.cell.method == m
+                                && r.cell.quant == q
+                                && r.cell.qep == qep
+                        })
+                        .and_then(|r| r.ppl.get(&flavor))
+                        .copied()
+                        .unwrap_or(f64::NAN);
+                    row.push(fmt_ppl(v));
+                }
+                t.row(row);
+            }
+        }
+        t.rule();
+    }
+    t
+}
+
+/// Format an accuracy table (Tables 2, 8, 9, 10). `families = None` means
+/// the mean over all requested families (Table 2).
+fn format_acc_table(
+    title: &str,
+    results: &[CellResult],
+    sizes: &[Size],
+    settings: &[QuantConfig],
+    methods: &[Method],
+    family: Option<TaskFamily>,
+) -> Table {
+    let hdr = header(sizes);
+    let mut t = Table::new(title, &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for &q in settings {
+        for &m in methods {
+            for qep in [false, true] {
+                let mut row = vec![
+                    q.label(),
+                    m.name().to_string(),
+                    if qep { "yes" } else { "no" }.to_string(),
+                ];
+                for &s in sizes {
+                    let v = results
+                        .iter()
+                        .find(|r| {
+                            r.cell.size == s
+                                && r.cell.method == m
+                                && r.cell.quant == q
+                                && r.cell.qep == qep
+                        })
+                        .map(|r| match family {
+                            Some(f) => *r.acc.get(&f).unwrap_or(&f64::NAN),
+                            None => stats::mean(&r.acc.values().copied().collect::<Vec<_>>()),
+                        })
+                        .unwrap_or(f64::NAN);
+                    row.push(fmt_acc(v));
+                }
+                t.row(row);
+            }
+        }
+        t.rule();
+    }
+    t
+}
+
+/// Table 1 (+ Fig. 1 data): WikiText-analog PPL, per-channel INT4/3/2.
+/// Table 2: zero-shot average accuracy for the same cells.
+pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+    let settings = [QuantConfig::int(4), QuantConfig::int(3), QuantConfig::int(2)];
+    let methods = Method::all();
+    let cells = matrix(sizes, &settings, &methods);
+    let wants = Wants { ppl: vec![Flavor::Wiki], tasks: TaskFamily::all().to_vec() };
+    let results = run_matrix(env, &cells, &wants)?;
+
+    let t1 = format_ppl_table(
+        "Table 1: perplexity (wiki analog) — lower is better",
+        &results,
+        sizes,
+        &settings,
+        &methods,
+        Flavor::Wiki,
+    );
+    println!("{}", t1.render());
+    persist("table1", &t1)?;
+
+    let t2 = format_acc_table(
+        "Table 2: zero-shot average accuracy (cloze/completion/pattern) — higher is better",
+        &results,
+        sizes,
+        &settings,
+        &methods,
+        None,
+    );
+    println!("{}", t2.render());
+    persist("table2", &t2)?;
+
+    // Fig. 1 is the bar-chart view of Table 1; emit its CSV series.
+    let mut fig1 = Table::new(
+        "Figure 1 data: PPL bars (method, bits, size, base, qep)",
+        &["method", "bits", "size", "ppl_base", "ppl_qep"],
+    );
+    for &q in &settings {
+        for &m in &methods {
+            for &s in sizes {
+                let find = |qep: bool| {
+                    results
+                        .iter()
+                        .find(|r| {
+                            r.cell.size == s && r.cell.method == m && r.cell.quant == q && r.cell.qep == qep
+                        })
+                        .and_then(|r| r.ppl.get(&Flavor::Wiki))
+                        .copied()
+                        .unwrap_or(f64::NAN)
+                };
+                fig1.row(vec![
+                    m.name().into(),
+                    q.label(),
+                    s.name().into(),
+                    fmt_ppl(find(false)),
+                    fmt_ppl(find(true)),
+                ]);
+            }
+        }
+    }
+    println!("{}", fig1.render());
+    persist("fig1", &fig1)?;
+    Ok(())
+}
+
+/// Table 3: quantization runtime comparison (GPTQ vs AWQ vs QEP+RTN).
+pub fn table3(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+    let mut hdr = vec!["Runtime".to_string()];
+    hdr.extend(sizes.iter().map(|s| s.name().to_string()));
+    let mut t = Table::new(
+        "Table 3: quantization-process runtime",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let rows: Vec<(&str, Method, bool)> = vec![
+        ("GPTQ", Method::Gptq, false),
+        ("AWQ", Method::Awq, false),
+        ("QEP + RTN", Method::Rtn, true),
+    ];
+    let q = QuantConfig::int(3);
+    for (label, method, qep) in rows {
+        let mut row = vec![label.to_string()];
+        for &s in sizes {
+            let cell = Cell::new(s, method, q, qep);
+            let out = cell.run(env)?;
+            row.push(crate::util::fmt_duration(out.report.total_s));
+            eprintln!(
+                "[table3] {} {}: {} (correction {})",
+                s.name(),
+                label,
+                crate::util::fmt_duration(out.report.total_s),
+                crate::util::fmt_duration(out.report.correction_s())
+            );
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    persist("table3", &t)
+}
+
+/// Table 4: robustness to the calibration dataset. PPL (wiki eval) deltas
+/// vs base RTN for GPTQ and QEP+RTN calibrated on c4/ptb/wiki.
+pub fn table4(env: &mut ExpEnv, size: Size) -> Result<()> {
+    let q = QuantConfig::int(3);
+    // Reference: base RTN (calibration-free).
+    let rtn = cell_ppl(env, &Cell::new(size, Method::Rtn, q, false), Flavor::Wiki)?;
+    let flavors = [Flavor::C4, Flavor::Ptb, Flavor::Wiki];
+    let mut t = Table::new(
+        &format!("Table 4: PPL relative to RTN ({}; eval=wiki; RTN={:.3})", size.name(), rtn),
+        &["Method", "calib=C4", "calib=PTB", "calib=WikiText2"],
+    );
+    for (label, method, qep) in [("GPTQ", Method::Gptq, false), ("QEP + RTN", Method::Rtn, true)] {
+        let mut row = vec![label.to_string()];
+        for &fl in &flavors {
+            let mut cell = Cell::new(size, method, q, qep);
+            cell.calib_flavor = fl;
+            let ppl = cell_ppl(env, &cell, Flavor::Wiki)?;
+            row.push(format!("{:+.3}", ppl - rtn));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    persist("table4", &t)
+}
+
+/// Ablation (DESIGN.md §6, Prop. 5.4 empirically): PPL as a function of
+/// the propagation strength α for RTN INT3 — the knob §5.3 introduces.
+pub fn ablation_alpha(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+    let alphas = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+    let mut hdr = vec!["alpha".to_string()];
+    hdr.extend(sizes.iter().map(|s| s.name().to_string()));
+    let mut t = Table::new(
+        "Ablation: wiki PPL vs propagation strength α (RTN INT3)",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &a in &alphas {
+        let mut row = vec![format!("{a:.2}")];
+        for &s in sizes {
+            let model = env.model(s);
+            let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
+            let mut cfg = Cell::new(s, Method::Rtn, QuantConfig::int(3), a > 0.0).pipeline_config();
+            cfg.qep_alpha = Some(a); // α=0 ⇒ effectively BASE via short-circuit
+            cfg.alpha_policy = None; // uniform α even for tiny-l here
+            let out = crate::coordinator::Pipeline::new(cfg).run(&model, &calib)?;
+            let eval = env.eval_tokens(Flavor::Wiki);
+            row.push(fmt_ppl(perplexity(&out.model, &eval)));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    persist("ablation_alpha", &t)
+}
+
+/// Tables 5–7: PPL under the eight grid settings on wiki/ptb/c4 evals.
+/// Tables 8–10: per-task accuracy for the same cells.
+/// One pass covers all six tables (methods: RTN/GPTQ/AWQ as in appendix).
+pub fn appendix_tables(env: &mut ExpEnv, sizes: &[Size], settings: &[QuantConfig]) -> Result<()> {
+    let methods = [Method::Rtn, Method::Gptq, Method::Awq];
+    let cells = matrix(sizes, settings, &methods);
+    let wants = Wants { ppl: Flavor::all().to_vec(), tasks: TaskFamily::all().to_vec() };
+    let results = run_matrix(env, &cells, &wants)?;
+
+    for (idx, flavor, label) in [
+        (5, Flavor::Wiki, "WikiText-2 analog"),
+        (6, Flavor::Ptb, "PTB analog"),
+        (7, Flavor::C4, "C4 analog"),
+    ] {
+        let t = format_ppl_table(
+            &format!("Table {idx}: perplexity on {label}, eight grid settings"),
+            &results,
+            sizes,
+            settings,
+            &methods,
+            flavor,
+        );
+        println!("{}", t.render());
+        persist(&format!("table{idx}"), &t)?;
+    }
+    for (idx, family) in [
+        (8, TaskFamily::Cloze),
+        (9, TaskFamily::Completion),
+        (10, TaskFamily::Pattern),
+    ] {
+        let t = format_acc_table(
+            &format!(
+                "Table {idx}: accuracy on {} ({} analog), eight grid settings",
+                family.name(),
+                family.paper_analog()
+            ),
+            &results,
+            sizes,
+            settings,
+            &methods,
+            Some(family),
+        );
+        println!("{}", t.render());
+        persist(&format!("table{idx}"), &t)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! On-disk interchange formats shared between the build-time Python side
+//! and the Rust runtime.
+
+pub mod qtz;
+
+pub use qtz::{Dtype, TensorFile, TensorView};

@@ -1,0 +1,314 @@
+//! QTZ — the tensor container used to pass model weights between the
+//! Python build path and the Rust runtime (the environment has no
+//! safetensors crate; this is a deliberately minimal equivalent).
+//!
+//! Layout:
+//! ```text
+//! b"QTZ1"                      4-byte magic
+//! u64 LE header_len
+//! header: JSON                 {"meta": {...}, "tensors": {name: {dtype, shape, offset, nbytes}}}
+//! data blob                    little-endian raw values, 64-byte aligned per tensor
+//! ```
+//!
+//! Supported dtypes: `f32` (weights, scales) and `i8` (quantized codes).
+//! Both `python/compile/qtz.py` and this module implement the format; the
+//! cross-language round-trip is covered by `rust/tests/qtz_interop.rs`.
+
+use crate::linalg::Mat;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"QTZ1";
+const ALIGN: usize = 64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+    fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I8 => "i8",
+        }
+    }
+    fn from_name(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i8" => Ok(Dtype::I8),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorView {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// An in-memory QTZ file: named tensors + a free-form JSON metadata object.
+pub struct TensorFile {
+    pub meta: Json,
+    entries: BTreeMap<String, TensorView>,
+    blob: Vec<u8>,
+}
+
+impl Default for TensorFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TensorFile {
+    pub fn new() -> TensorFile {
+        TensorFile { meta: Json::obj(), entries: BTreeMap::new(), blob: Vec::new() }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn view(&self, name: &str) -> Result<&TensorView> {
+        self.entries.get(name).ok_or_else(|| anyhow!("tensor '{name}' not found"))
+    }
+
+    fn align_blob(&mut self) {
+        while self.blob.len() % ALIGN != 0 {
+            self.blob.push(0);
+        }
+    }
+
+    pub fn put_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "{name}: shape/data mismatch");
+        self.align_blob();
+        let offset = self.blob.len();
+        for v in data {
+            self.blob.extend_from_slice(&v.to_le_bytes());
+        }
+        self.entries.insert(
+            name.to_string(),
+            TensorView { dtype: Dtype::F32, shape: shape.to_vec(), offset, nbytes: data.len() * 4 },
+        );
+    }
+
+    pub fn put_mat(&mut self, name: &str, m: &Mat) {
+        self.put_f32(name, &[m.rows, m.cols], &m.data);
+    }
+
+    pub fn put_i8(&mut self, name: &str, shape: &[usize], data: &[i8]) {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "{name}: shape/data mismatch");
+        self.align_blob();
+        let offset = self.blob.len();
+        self.blob.extend(data.iter().map(|&v| v as u8));
+        self.entries.insert(
+            name.to_string(),
+            TensorView { dtype: Dtype::I8, shape: shape.to_vec(), offset, nbytes: data.len() },
+        );
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let v = self.view(name)?;
+        if v.dtype != Dtype::F32 {
+            bail!("tensor '{name}' is {:?}, wanted f32", v.dtype);
+        }
+        let bytes = &self.blob[v.offset..v.offset + v.nbytes];
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((v.shape.clone(), data))
+    }
+
+    /// Fetch a rank-2 f32 tensor as a `Mat`.
+    pub fn get_mat(&self, name: &str) -> Result<Mat> {
+        let (shape, data) = self.get_f32(name)?;
+        if shape.len() != 2 {
+            bail!("tensor '{name}' has rank {} (wanted 2)", shape.len());
+        }
+        Ok(Mat::from_vec(shape[0], shape[1], data))
+    }
+
+    /// Fetch a rank-1 f32 tensor.
+    pub fn get_vec(&self, name: &str) -> Result<Vec<f32>> {
+        let (shape, data) = self.get_f32(name)?;
+        if shape.len() != 1 {
+            bail!("tensor '{name}' has rank {} (wanted 1)", shape.len());
+        }
+        Ok(data)
+    }
+
+    pub fn get_i8(&self, name: &str) -> Result<(Vec<usize>, Vec<i8>)> {
+        let v = self.view(name)?;
+        if v.dtype != Dtype::I8 {
+            bail!("tensor '{name}' is {:?}, wanted i8", v.dtype);
+        }
+        let bytes = &self.blob[v.offset..v.offset + v.nbytes];
+        Ok((v.shape.clone(), bytes.iter().map(|&b| b as i8).collect()))
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut tensors = Json::obj();
+        for (name, v) in &self.entries {
+            let mut t = Json::obj();
+            t.set("dtype", Json::Str(v.dtype.name().into()))
+                .set("shape", Json::from_usize_slice(&v.shape))
+                .set("offset", Json::Num(v.offset as f64))
+                .set("nbytes", Json::Num(v.nbytes as f64));
+            tensors.set(name, t);
+        }
+        let mut header = Json::obj();
+        header.set("meta", self.meta.clone()).set("tensors", tensors);
+        let header_bytes = header.dump().into_bytes();
+
+        let mut out = Vec::with_capacity(16 + header_bytes.len() + self.blob.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header_bytes.len() as u64).to_le_bytes());
+        out.extend_from_slice(&header_bytes);
+        // Pad so the blob start is ALIGN-aligned relative to file start.
+        while (out.len()) % ALIGN != 0 {
+            out.push(b' ');
+        }
+        out.extend_from_slice(&self.blob);
+        out
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<TensorFile> {
+        if bytes.len() < 12 || &bytes[..4] != MAGIC {
+            bail!("not a QTZ1 file");
+        }
+        let header_len = u64::from_le_bytes(bytes[4..12].try_into().unwrap()) as usize;
+        let header_end = 12 + header_len;
+        if bytes.len() < header_end {
+            bail!("truncated QTZ header");
+        }
+        let header_text = std::str::from_utf8(&bytes[12..header_end])
+            .context("QTZ header not utf8")?;
+        let header = Json::parse(header_text).map_err(|e| anyhow!("QTZ header: {e}"))?;
+        let blob_start = header_end.div_ceil(ALIGN) * ALIGN;
+        let blob = bytes[blob_start.min(bytes.len())..].to_vec();
+
+        let mut entries = BTreeMap::new();
+        if let Some(Json::Obj(tensors)) = header.get("tensors") {
+            for (name, t) in tensors {
+                let dtype = Dtype::from_name(
+                    t.get("dtype").and_then(|d| d.as_str()).unwrap_or(""),
+                )?;
+                let shape: Vec<usize> = t
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                let offset = t.get("offset").and_then(|o| o.as_usize()).unwrap_or(0);
+                let nbytes = t.get("nbytes").and_then(|o| o.as_usize()).unwrap_or(0);
+                if offset + nbytes > blob.len() {
+                    bail!("tensor '{name}' out of bounds ({offset}+{nbytes} > {})", blob.len());
+                }
+                entries.insert(name.clone(), TensorView { dtype, shape, offset, nbytes });
+            }
+        }
+        let meta = header.get("meta").cloned().unwrap_or_else(Json::obj);
+        Ok(TensorFile { meta, entries, blob })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let bytes = self.serialize();
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<TensorFile> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        TensorFile::deserialize(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut rng = Rng::new(1);
+        let mut tf = TensorFile::new();
+        tf.meta.set("model", Json::Str("tiny-s".into()));
+        let w = Mat::randn(7, 5, 1.0, &mut rng);
+        tf.put_mat("blocks.0.attn.wq", &w);
+        tf.put_f32("scales", &[3], &[0.5, 1.5, -2.0]);
+        tf.put_i8("codes", &[2, 2], &[-8, 7, 0, 1]);
+
+        let back = TensorFile::deserialize(&tf.serialize()).unwrap();
+        assert_eq!(back.meta.get("model").unwrap().as_str(), Some("tiny-s"));
+        let w2 = back.get_mat("blocks.0.attn.wq").unwrap();
+        assert_eq!(w, w2);
+        assert_eq!(back.get_vec("scales").unwrap(), vec![0.5, 1.5, -2.0]);
+        let (shape, codes) = back.get_i8("codes").unwrap();
+        assert_eq!(shape, vec![2, 2]);
+        assert_eq!(codes, vec![-8, 7, 0, 1]);
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let mut tf = TensorFile::new();
+        tf.put_f32("x", &[4], &[1.0, 2.0, 3.0, 4.0]);
+        let path = std::env::temp_dir().join("qep_qtz_test.qtz");
+        tf.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        assert_eq!(back.get_vec("x").unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(TensorFile::deserialize(b"nope").is_err());
+        let tf = TensorFile::new();
+        let mut bytes = tf.serialize();
+        bytes[0] = b'X';
+        assert!(TensorFile::deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let tf = TensorFile::new();
+        assert!(tf.get_vec("absent").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let mut tf = TensorFile::new();
+        tf.put_i8("c", &[1], &[3]);
+        assert!(tf.get_f32("c").is_err());
+    }
+
+    #[test]
+    fn alignment_is_respected() {
+        let mut tf = TensorFile::new();
+        tf.put_i8("a", &[3], &[1, 2, 3]);
+        tf.put_f32("b", &[1], &[9.0]);
+        let v = tf.view("b").unwrap();
+        assert_eq!(v.offset % ALIGN, 0);
+    }
+}

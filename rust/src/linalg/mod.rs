@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate, written from scratch for this repo
+//! (the environment is offline — no ndarray/BLAS). Everything the PTQ
+//! pipeline needs: a row-major `Mat` (f32) workhorse with blocked GEMM,
+//! an f64 `Mat64` for the numerically sensitive Hessian factorizations
+//! (Cholesky, SPD inverse, triangular solves), and the fast Walsh–Hadamard
+//! transform used by QuIP's incoherence preprocessing.
+
+pub mod chol;
+pub mod gemm;
+pub mod hadamard;
+pub mod mat;
+
+pub use chol::{cholesky_in_place, spd_inverse, spd_solve, upper_cholesky_of_inverse};
+pub use gemm::{matmul, matmul_nt, matmul_tn};
+pub use hadamard::{fwht_inplace, hadamard_conjugate, hadamard_rows, SignedHadamard};
+pub use mat::{Mat, Mat64};

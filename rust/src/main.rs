@@ -1,0 +1,229 @@
+//! `repro` — the QEP reproduction CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! repro gen-data [--out artifacts/data] [--tokens N]
+//! repro quantize --model tiny-s --method gptq --bits 3 [--group 64] [--qep 0.5] [--out q.qtz]
+//! repro eval --model-file q.qtz [--flavor wiki] [--tasks]
+//! repro exp <fig1|fig2|fig3|table1|table2|table3|table4|appendix|all> [--sizes s,m,l] [--fast]
+//! repro info
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::eval::{perplexity, TaskFamily, TaskSet};
+use qep::exp::{self, ExpEnv};
+use qep::model::{Model, Size};
+use qep::quant::{Method, QuantConfig};
+use qep::text::{Corpus, Flavor};
+use qep::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("gen-data") => gen_data(args),
+        Some("quantize") => quantize(args),
+        Some("eval") => eval(args),
+        Some("exp") => experiment(args),
+        Some("info") => info(),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — Quantization Error Propagation (QEP) reproduction
+
+USAGE:
+  repro gen-data [--out artifacts/data] [--tokens 262144]
+  repro quantize --model <tiny-s|tiny-m|tiny-l|path.qtz> --method <rtn|gptq|awq|quip>
+                 --bits <2|3|4|8> [--group N] [--qep <alpha>] [--calib <wiki|ptb|c4>]
+                 [--seed N] [--out out.qtz]
+  repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks]
+  repro exp      <fig1|fig2|fig3|table1|table2|table3|table4|appendix|all>
+                 [--sizes s,m,l] [--fast] [--artifacts DIR]
+  repro info
+";
+
+fn gen_data(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "artifacts/data");
+    let tokens = args.get_usize("tokens", 256 * 1024);
+    std::fs::create_dir_all(out)?;
+    for flavor in Flavor::all() {
+        let c = Corpus::generate(flavor, tokens, 0);
+        let path = format!("{out}/{}.txt", flavor.name());
+        std::fs::write(&path, &c.text)?;
+        println!("wrote {path} ({} bytes)", c.text.len());
+    }
+    Ok(())
+}
+
+fn load_model(args: &Args, key: &str) -> Result<Model> {
+    let spec = args
+        .get(key)
+        .ok_or_else(|| anyhow!("--{key} required"))?;
+    if let Some(size) = Size::from_name(spec) {
+        let reg = qep::runtime::ArtifactRegistry::new(args.get_or("artifacts", "artifacts"));
+        reg.load_model(size.name())
+    } else {
+        Model::load(spec)
+    }
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let model = load_model(args, "model")?;
+    let method = Method::from_name(args.get_or("method", "rtn"))
+        .ok_or_else(|| anyhow!("unknown method"))?;
+    let bits = args.get_usize("bits", 4) as u32;
+    let quant = match args.get("group") {
+        Some(g) => QuantConfig::int_group(bits, g.parse()?),
+        None => QuantConfig::int(bits),
+    };
+    let qep_alpha = args.get("qep").map(|a| a.parse::<f32>()).transpose()?;
+    let flavor = Flavor::from_name(args.get_or("calib", "c4"))
+        .ok_or_else(|| anyhow!("unknown calib flavor"))?;
+    let seed = args.get_usize("seed", 0) as u64;
+
+    let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
+    let calib = env.calib_tokens(flavor, model.cfg.seq_len, seed);
+    let cfg = PipelineConfig {
+        quant,
+        method,
+        qep_alpha,
+        seed,
+        verbose: args.has("verbose"),
+        ..Default::default()
+    };
+    println!("quantizing {} with {}", model.cfg.name, cfg.label());
+    let out = Pipeline::new(cfg).run(&model, &calib)?;
+    println!("{}", out.report.summary());
+    if let Some(path) = args.get("out") {
+        out.model.save(path)?;
+        println!("saved {path}");
+    }
+    let eval_tokens = env.eval_tokens(Flavor::Wiki);
+    println!("wiki ppl: {:.3}", perplexity(&out.model, &eval_tokens));
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let model = Model::load(
+        args.get("model-file").ok_or_else(|| anyhow!("--model-file required"))?,
+    )?;
+    let flavor = Flavor::from_name(args.get_or("flavor", "wiki"))
+        .ok_or_else(|| anyhow!("unknown flavor"))?;
+    let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
+    let tokens = env.eval_tokens(flavor);
+    println!("{} ppl: {:.3}", flavor.name(), perplexity(&model, &tokens));
+    if args.has("tasks") {
+        let corpus = env.corpus(Flavor::Wiki);
+        for fam in TaskFamily::all() {
+            let ts = TaskSet::generate(fam, &corpus, 60, 1234);
+            println!("{} ({}): {:.4}", fam.name(), fam.paper_analog(), ts.accuracy(&model));
+        }
+    }
+    Ok(())
+}
+
+fn parse_sizes(args: &Args) -> Vec<Size> {
+    match args.get("sizes") {
+        Some(spec) => spec.split(',').filter_map(Size::from_name).collect(),
+        None => {
+            if args.has("fast") {
+                vec![Size::TinyS]
+            } else {
+                Size::all().to_vec()
+            }
+        }
+    }
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro exp <id>"))?
+        .as_str();
+    let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
+    let sizes = parse_sizes(args);
+    let fast = args.has("fast");
+    match which {
+        "fig1" | "table1" | "table2" => exp::tables::table1_and_2(&mut env, &sizes)?,
+        "fig2" => {
+            let size = sizes.first().copied().unwrap_or(Size::TinyM);
+            let bits = args.get_usize("bits", 3) as u32;
+            let n = args.get("blocks").map(|b| b.parse()).transpose()?;
+            exp::fig2::run(&mut env, size, bits, n)?;
+        }
+        "fig3" => {
+            let seeds = args.get_usize("seeds", if fast { 2 } else { 5 }) as u64;
+            let bits: Vec<u32> = if fast { vec![3] } else { vec![4, 3, 2] };
+            exp::fig3::run(&mut env, &sizes, &bits, seeds)?;
+        }
+        "table3" => exp::tables::table3(&mut env, &sizes)?,
+        "ablation-alpha" => exp::tables::ablation_alpha(&mut env, &sizes)?,
+        "table4" => {
+            let size = sizes.first().copied().unwrap_or(Size::TinyS);
+            exp::tables::table4(&mut env, size)?;
+        }
+        "appendix" | "table5" | "table6" | "table7" | "table8" | "table9" | "table10" => {
+            let settings = if fast {
+                vec![QuantConfig::int(3), QuantConfig::int_group(2, 32)]
+            } else {
+                QuantConfig::appendix_settings()
+            };
+            exp::tables::appendix_tables(&mut env, &sizes, &settings)?;
+        }
+        "all" => {
+            exp::tables::table1_and_2(&mut env, &sizes)?;
+            exp::tables::table3(&mut env, &sizes)?;
+            exp::tables::table4(&mut env, sizes.first().copied().unwrap_or(Size::TinyS))?;
+            let size = sizes.get(1).copied().unwrap_or(sizes[0]);
+            exp::fig2::run(&mut env, size, 3, None)?;
+            let seeds = if fast { 2u64 } else { 5u64 };
+            let bits: &[u32] = if fast { &[3] } else { &[4, 3, 2] };
+            exp::fig3::run(&mut env, &sizes, bits, seeds)?;
+            let settings = if fast {
+                vec![QuantConfig::int(3), QuantConfig::int_group(2, 32)]
+            } else {
+                QuantConfig::appendix_settings()
+            };
+            exp::tables::appendix_tables(&mut env, &sizes, &settings)?;
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    if env.used_fallback {
+        eprintln!("[exp] NOTE: ran with RANDOM weights (artifacts missing). Results are structural only.");
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("QEP reproduction — three-layer Rust + JAX + Pallas stack");
+    for s in Size::all() {
+        let c = s.config();
+        println!(
+            "  {:7} (stand-in for {:11}): dim={} layers={} heads={} ffn={} params={:.2}M",
+            c.name,
+            s.paper_analog(),
+            c.dim,
+            c.n_layers,
+            c.n_heads,
+            c.ffn,
+            c.n_params() as f64 / 1e6
+        );
+    }
+    match qep::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("  PJRT: {}", rt.platform()),
+        Err(e) => println!("  PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

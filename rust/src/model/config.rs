@@ -1,0 +1,146 @@
+//! Model hyper-parameters. Dimensions are powers of two so QuIP's fast
+//! Hadamard rotations apply without padding.
+
+use crate::text::VOCAB_SIZE;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Size {
+    /// ≈0.3M block params — the "7B" of our scale ladder.
+    TinyS,
+    /// ≈1.5M — the "13B".
+    TinyM,
+    /// ≈7M — the "70B".
+    TinyL,
+}
+
+impl Size {
+    pub fn name(self) -> &'static str {
+        match self {
+            Size::TinyS => "tiny-s",
+            Size::TinyM => "tiny-m",
+            Size::TinyL => "tiny-l",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Size> {
+        match s {
+            "tiny-s" | "s" => Some(Size::TinyS),
+            "tiny-m" | "m" => Some(Size::TinyM),
+            "tiny-l" | "l" => Some(Size::TinyL),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Size; 3] {
+        [Size::TinyS, Size::TinyM, Size::TinyL]
+    }
+
+    /// The paper-model each size stands in for (table row labels).
+    pub fn paper_analog(self) -> &'static str {
+        match self {
+            Size::TinyS => "Llama-2-7B",
+            Size::TinyM => "Llama-2-13B",
+            Size::TinyL => "Llama-2-70B",
+        }
+    }
+
+    pub fn config(self) -> ModelConfig {
+        match self {
+            Size::TinyS => ModelConfig::new("tiny-s", 64, 4, 4, 128),
+            Size::TinyM => ModelConfig::new("tiny-m", 128, 6, 4, 256),
+            Size::TinyL => ModelConfig::new("tiny-l", 256, 8, 8, 512),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    pub fn new(name: &str, dim: usize, n_layers: usize, n_heads: usize, ffn: usize) -> ModelConfig {
+        assert_eq!(dim % n_heads, 0, "dim must divide by heads");
+        ModelConfig {
+            name: name.to_string(),
+            dim,
+            n_layers,
+            n_heads,
+            ffn,
+            vocab: VOCAB_SIZE,
+            seq_len: 128,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Parameter count (tied embeddings counted once).
+    pub fn n_params(&self) -> usize {
+        let block = 2 * self.dim                  // norms
+            + 4 * self.dim * self.dim             // q,k,v,o
+            + 2 * self.ffn * self.dim             // gate, up
+            + self.dim * self.ffn; // down
+        self.vocab * self.dim                      // embed (tied head)
+            + self.seq_len * self.dim              // positions
+            + self.n_layers * block
+            + self.dim // final norm
+    }
+
+    /// Canonical quantizable layer names in execution order for one block.
+    pub fn layer_names(block: usize) -> [String; 7] {
+        [
+            format!("blocks.{block}.attn.wq"),
+            format!("blocks.{block}.attn.wk"),
+            format!("blocks.{block}.attn.wv"),
+            format!("blocks.{block}.attn.wo"),
+            format!("blocks.{block}.mlp.gate"),
+            format!("blocks.{block}.mlp.up"),
+            format!("blocks.{block}.mlp.down"),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_roundtrip_names() {
+        for s in Size::all() {
+            assert_eq!(Size::from_name(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn dims_are_pow2_and_divisible() {
+        for s in Size::all() {
+            let c = s.config();
+            assert!(c.dim.is_power_of_two());
+            assert!(c.ffn.is_power_of_two());
+            assert_eq!(c.dim % c.n_heads, 0);
+        }
+    }
+
+    #[test]
+    fn param_counts_are_ordered() {
+        let ns: Vec<usize> = Size::all().iter().map(|s| s.config().n_params()).collect();
+        assert!(ns[0] < ns[1] && ns[1] < ns[2], "{ns:?}");
+        // tiny-l should be ≈7M.
+        assert!(ns[2] > 4_000_000 && ns[2] < 12_000_000, "{}", ns[2]);
+    }
+
+    #[test]
+    fn layer_names_shape() {
+        let names = ModelConfig::layer_names(3);
+        assert_eq!(names[0], "blocks.3.attn.wq");
+        assert_eq!(names[6], "blocks.3.mlp.down");
+    }
+}

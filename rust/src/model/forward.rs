@@ -1,0 +1,234 @@
+//! Pure-Rust forward pass with per-linear activation capture — the data
+//! source for the coordinator's dual calibration streams and the fallback
+//! evaluation path (the PJRT artifacts execute the same graph; see
+//! `crate::runtime`).
+
+use super::config::ModelConfig;
+use super::ops::{causal_attention, linear, next_token_nll, rmsnorm, swiglu};
+use super::store::{BlockWeights, Model};
+use crate::linalg::Mat;
+
+/// Activations captured at the inputs of each quantizable linear in one
+/// block. `attn_in` feeds wq/wk/wv, `attn_ctx` feeds wo, `mlp_in` feeds
+/// gate/up, `mlp_act` feeds down.
+#[derive(Clone, Debug)]
+pub struct BlockCapture {
+    pub attn_in: Mat,
+    pub attn_ctx: Mat,
+    pub mlp_in: Mat,
+    pub mlp_act: Mat,
+}
+
+impl BlockCapture {
+    /// Capture matching a linear's short name.
+    pub fn input_for(&self, short: &str) -> &Mat {
+        match short {
+            "attn.wq" | "attn.wk" | "attn.wv" => &self.attn_in,
+            "attn.wo" => &self.attn_ctx,
+            "mlp.gate" | "mlp.up" => &self.mlp_in,
+            "mlp.down" => &self.mlp_act,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+}
+
+/// Forward-pass engine bound to a config (holds no weights; weights are
+/// passed per call so full-precision and quantized streams share code).
+pub struct Forward<'a> {
+    pub cfg: &'a ModelConfig,
+}
+
+impl<'a> Forward<'a> {
+    pub fn new(cfg: &'a ModelConfig) -> Forward<'a> {
+        Forward { cfg }
+    }
+
+    /// Token + position embedding: tokens.len() must be a multiple of
+    /// seq_len.
+    pub fn embed(&self, model: &Model, tokens: &[u32]) -> Mat {
+        let c = self.cfg;
+        assert_eq!(tokens.len() % c.seq_len, 0, "tokens must tile seq_len");
+        let mut x = Mat::zeros(tokens.len(), c.dim);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let e = model.embed.row(tok as usize);
+            let p = model.pos.row(t % c.seq_len);
+            let row = x.row_mut(t);
+            for i in 0..c.dim {
+                row[i] = e[i] + p[i];
+            }
+        }
+        x
+    }
+
+    /// One block, returning output and captured per-linear inputs.
+    pub fn block(&self, b: &BlockWeights, x: &Mat) -> (Mat, BlockCapture) {
+        let c = self.cfg;
+        let attn_in = rmsnorm(x, &b.attn_norm);
+        let q = linear(&attn_in, &b.wq);
+        let k = linear(&attn_in, &b.wk);
+        let v = linear(&attn_in, &b.wv);
+        let attn_ctx = causal_attention(&q, &k, &v, c.n_heads, c.seq_len);
+        let attn_out = linear(&attn_ctx, &b.wo);
+        let x1 = x.add(&attn_out);
+
+        let mlp_in = rmsnorm(&x1, &b.mlp_norm);
+        let g = linear(&mlp_in, &b.gate);
+        let u = linear(&mlp_in, &b.up);
+        let mlp_act = swiglu(&g, &u);
+        let mlp_out = linear(&mlp_act, &b.down);
+        let out = x1.add(&mlp_out);
+        (
+            out,
+            BlockCapture { attn_in, attn_ctx, mlp_in, mlp_act },
+        )
+    }
+
+    /// Hidden states after all blocks (no final norm).
+    pub fn backbone(&self, model: &Model, tokens: &[u32]) -> Mat {
+        let mut x = self.embed(model, tokens);
+        for b in &model.blocks {
+            let (nx, _) = self.block(b, &x);
+            x = nx;
+        }
+        x
+    }
+
+    /// Hidden states after each block: `out[i]` = activations *entering*
+    /// block i; `out[n_layers]` = final hidden states. Used by the Fig. 2
+    /// Δ_m experiment.
+    pub fn block_trace(&self, model: &Model, tokens: &[u32]) -> Vec<Mat> {
+        let mut x = self.embed(model, tokens);
+        let mut trace = Vec::with_capacity(model.blocks.len() + 1);
+        for b in &model.blocks {
+            trace.push(x.clone());
+            let (nx, _) = self.block(b, &x);
+            x = nx;
+        }
+        trace.push(x);
+        trace
+    }
+
+    /// Final logits (tied head): rmsnorm then x·Embedᵀ.
+    pub fn logits(&self, model: &Model, hidden: &Mat) -> Mat {
+        let h = rmsnorm(hidden, &model.final_norm);
+        linear(&h, &model.embed)
+    }
+
+    /// Full forward to logits.
+    pub fn forward(&self, model: &Model, tokens: &[u32]) -> Mat {
+        let h = self.backbone(model, tokens);
+        self.logits(model, &h)
+    }
+
+    /// Perplexity over tokens (exp of mean next-token NLL in nats).
+    pub fn perplexity(&self, model: &Model, tokens: &[u32]) -> f64 {
+        let logits = self.forward(model, tokens);
+        let (sum, count) = next_token_nll(&logits, tokens, self.cfg.seq_len);
+        (sum / count.max(1) as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::text::VOCAB_SIZE;
+    use crate::util::rng::Rng;
+
+    fn small() -> (ModelConfig, Model) {
+        let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 8;
+        let m = Model::random(&cfg, 1);
+        (cfg, m)
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(200) as u32).collect()
+    }
+
+    #[test]
+    fn shapes_flow() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let toks = tokens(16, 2);
+        let logits = f.forward(&m, &toks);
+        assert_eq!((logits.rows, logits.cols), (16, VOCAB_SIZE));
+    }
+
+    #[test]
+    fn random_model_ppl_near_uniform() {
+        // An untrained model should sit near uniform perplexity over the
+        // vocabulary (allowing slack for embedding geometry).
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let ppl = f.perplexity(&m, &tokens(256, 3));
+        let uniform = VOCAB_SIZE as f64;
+        assert!(ppl > uniform * 0.5 && ppl < uniform * 2.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn capture_matches_recompute() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let toks = tokens(16, 4);
+        let x = f.embed(&m, &toks);
+        let (out, cap) = f.block(&m.blocks[0], &x);
+        // attn_in must be the rmsnorm of x.
+        let want = rmsnorm(&x, &m.blocks[0].attn_norm);
+        assert_eq!(cap.attn_in, want);
+        // Rebuilding the block output from captures must agree.
+        let attn_out = linear(&cap.attn_ctx, &m.blocks[0].wo);
+        let x1 = x.add(&attn_out);
+        let mlp_out = linear(&cap.mlp_act, &m.blocks[0].down);
+        let rebuilt = x1.add(&mlp_out);
+        for (a, b) in out.data.iter().zip(rebuilt.data.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn block_trace_is_consistent() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let toks = tokens(16, 5);
+        let trace = f.block_trace(&m, &toks);
+        assert_eq!(trace.len(), cfg.n_layers + 1);
+        let direct = f.backbone(&m, &toks);
+        assert_eq!(trace.last().unwrap(), &direct);
+    }
+
+    #[test]
+    fn capture_input_for_names() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let toks = tokens(8, 6);
+        let x = f.embed(&m, &toks);
+        let (_, cap) = f.block(&m.blocks[0], &x);
+        assert_eq!(cap.input_for("attn.wq"), &cap.attn_in);
+        assert_eq!(cap.input_for("attn.wo"), &cap.attn_ctx);
+        assert_eq!(cap.input_for("mlp.up"), &cap.mlp_in);
+        assert_eq!(cap.input_for("mlp.down"), &cap.mlp_act);
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let toks = tokens(16, 7);
+        let a = f.forward(&m, &toks);
+        let b = f.forward(&m, &toks);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn perturbing_late_block_changes_output() {
+        let (cfg, mut m) = small();
+        let toks = tokens(16, 8);
+        let f = Forward::new(&cfg);
+        let base = f.forward(&m, &toks);
+        m.blocks[1].down.scale(1.5);
+        let changed = f.forward(&m, &toks);
+        assert!(base.sub(&changed).frob() > 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! The subject models: small pre-LN transformers (RMSNorm, multi-head
+//! causal attention with learned absolute position embeddings, SwiGLU MLP,
+//! tied embedding/LM head). Three sizes stand in for the paper's
+//! 7B/13B/70B axis (see DESIGN.md §2). The architecture is mirrored
+//! *exactly* by `python/compile/model.py`, so weights trained in JAX load
+//! here and the PJRT artifacts agree numerically with this pure-Rust
+//! forward (cross-checked in `rust/tests/pjrt_crosscheck.rs`).
+
+pub mod config;
+pub mod forward;
+pub mod ops;
+pub mod store;
+
+pub use config::{ModelConfig, Size};
+pub use forward::{BlockCapture, Forward};
+pub use store::{BlockWeights, Model};

@@ -1,0 +1,256 @@
+//! Primitive neural ops shared by the forward pass and the coordinator's
+//! fine-grained capture path. All functions are pure and tokens-major:
+//! activations are `Mat [m, d]` with `m = n_segments * seq_len`.
+
+use crate::linalg::{matmul_nt, Mat};
+
+pub const NORM_EPS: f32 = 1e-5;
+
+/// RMSNorm with learned gain: y = x / rms(x) * g.
+pub fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
+    assert_eq!(x.cols, gain.len());
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + NORM_EPS).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..x.cols {
+            orow[c] = row[c] * inv * gain[c];
+        }
+    }
+    out
+}
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Elementwise silu(gate) * up — the SwiGLU gate.
+pub fn swiglu(gate: &Mat, up: &Mat) -> Mat {
+    assert_eq!((gate.rows, gate.cols), (up.rows, up.cols));
+    let data = gate
+        .data
+        .iter()
+        .zip(up.data.iter())
+        .map(|(&g, &u)| silu(g) * u)
+        .collect();
+    Mat { rows: gate.rows, cols: gate.cols, data }
+}
+
+/// Numerically stable in-place softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Multi-head causal self-attention over per-segment Q/K/V.
+///
+/// `q,k,v` are `[m, d]` with `m = n_seg * seq_len`; each segment attends
+/// only within itself (the paper's calibration segments are independent).
+/// Returns the context `[m, d]` (pre-output-projection).
+pub fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize, seq_len: usize) -> Mat {
+    let (m, d) = (q.rows, q.cols);
+    assert_eq!(m % seq_len, 0, "tokens not a multiple of seq_len");
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let n_seg = m / seq_len;
+    let mut ctx = Mat::zeros(m, d);
+    let mut scores = vec![0.0f32; seq_len];
+    for s in 0..n_seg {
+        let base = s * seq_len;
+        for h in 0..n_heads {
+            let h0 = h * hd;
+            for t in 0..seq_len {
+                let qrow = &q.row(base + t)[h0..h0 + hd];
+                // scores over keys 0..=t (causal).
+                for (u, sc) in scores[..=t].iter_mut().enumerate() {
+                    let krow = &k.row(base + u)[h0..h0 + hd];
+                    *sc = crate::linalg::gemm::dot(qrow, krow) * scale;
+                }
+                softmax_inplace(&mut scores[..=t]);
+                let orow = &mut ctx.row_mut(base + t)[h0..h0 + hd];
+                for (u, &p) in scores[..=t].iter().enumerate() {
+                    let vrow = &v.row(base + u)[h0..h0 + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// Linear layer y = x·Wᵀ for weight W [out, in] and x [m, in].
+#[inline]
+pub fn linear(x: &Mat, w: &Mat) -> Mat {
+    matmul_nt(x, w)
+}
+
+/// Per-position next-token cross-entropy (nats). `logits` is `[m, vocab]`,
+/// targets are the next token within each segment (positions `seq_len-1`,
+/// i.e. segment boundaries, are skipped). Returns (sum_nll, count).
+pub fn next_token_nll(
+    logits: &Mat,
+    tokens: &[u32],
+    seq_len: usize,
+) -> (f64, usize) {
+    let m = logits.rows;
+    assert_eq!(m, tokens.len());
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    let mut probs = vec![0.0f32; logits.cols];
+    for t in 0..m {
+        if (t + 1) % seq_len == 0 {
+            continue; // last position in segment has no target
+        }
+        let target = tokens[t + 1] as usize;
+        probs.copy_from_slice(logits.row(t));
+        // log-softmax at the target index.
+        let max = probs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse: f32 = probs.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        sum += (lse - logits.at(t, target)) as f64;
+        count += 1;
+    }
+    (sum, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(10, 16, 3.0, &mut rng);
+        let gain = vec![1.0f32; 16];
+        let y = rmsnorm(&x, &gain);
+        for r in 0..y.rows {
+            let ms: f32 = y.row(r).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "rms {ms}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_gain_scales() {
+        let x = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        let y1 = rmsnorm(&x, &[1.0, 1.0]);
+        let y2 = rmsnorm(&x, &[2.0, 2.0]);
+        for c in 0..2 {
+            assert!((y2.at(0, c) - 2.0 * y1.at(0, c)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut xs = vec![1.0f32, 3.0, 2.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[1] > xs[2] && xs[2] > xs[0]);
+    }
+
+    #[test]
+    fn silu_properties() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // Changing a *future* token must not change earlier outputs.
+        let mut rng = Rng::new(2);
+        let seq = 8;
+        let (q, k, mut v) = (
+            Mat::randn(seq, 8, 1.0, &mut rng),
+            Mat::randn(seq, 8, 1.0, &mut rng),
+            Mat::randn(seq, 8, 1.0, &mut rng),
+        );
+        let a = causal_attention(&q, &k, &v, 2, seq);
+        for c in 0..8 {
+            *v.at_mut(seq - 1, c) += 100.0;
+        }
+        let b = causal_attention(&q, &k, &v, 2, seq);
+        for t in 0..seq - 1 {
+            for c in 0..8 {
+                assert!((a.at(t, c) - b.at(t, c)).abs() < 1e-6, "leak at t={t}");
+            }
+        }
+        // ...but the last position must change.
+        assert!((a.at(seq - 1, 0) - b.at(seq - 1, 0)).abs() > 1e-3);
+    }
+
+    #[test]
+    fn attention_segments_are_independent() {
+        let mut rng = Rng::new(3);
+        let seq = 4;
+        let q = Mat::randn(2 * seq, 8, 1.0, &mut rng);
+        let k = Mat::randn(2 * seq, 8, 1.0, &mut rng);
+        let v = Mat::randn(2 * seq, 8, 1.0, &mut rng);
+        let both = causal_attention(&q, &k, &v, 2, seq);
+        // Segment 0 alone must equal rows 0..seq of the combined run.
+        let q0 = q.cols_slice(0, 8); // full cols; take first seq rows manually
+        let mut q0r = Mat::zeros(seq, 8);
+        let mut k0r = Mat::zeros(seq, 8);
+        let mut v0r = Mat::zeros(seq, 8);
+        for t in 0..seq {
+            q0r.row_mut(t).copy_from_slice(q0.row(t));
+            k0r.row_mut(t).copy_from_slice(k.row(t));
+            v0r.row_mut(t).copy_from_slice(v.row(t));
+        }
+        let solo = causal_attention(&q0r, &k0r, &v0r, 2, seq);
+        for t in 0..seq {
+            for c in 0..8 {
+                assert!((both.at(t, c) - solo.at(t, c)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn first_position_attends_only_itself() {
+        let mut rng = Rng::new(4);
+        let q = Mat::randn(4, 4, 1.0, &mut rng);
+        let k = Mat::randn(4, 4, 1.0, &mut rng);
+        let v = Mat::randn(4, 4, 1.0, &mut rng);
+        let a = causal_attention(&q, &k, &v, 1, 4);
+        for c in 0..4 {
+            assert!((a.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nll_of_uniform_logits_is_log_vocab() {
+        let vocab = 16;
+        let seq = 4;
+        let logits = Mat::zeros(seq, vocab);
+        let tokens = vec![3u32; seq];
+        let (sum, count) = next_token_nll(&logits, &tokens, seq);
+        assert_eq!(count, seq - 1);
+        let nll = sum / count as f64;
+        assert!((nll - (vocab as f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nll_rewards_correct_prediction() {
+        let vocab = 8;
+        let mut logits = Mat::zeros(2, vocab);
+        *logits.at_mut(0, 5) = 20.0; // confidently predicts token 5
+        let tokens = vec![0u32, 5u32];
+        let (sum, count) = next_token_nll(&logits, &tokens, 2);
+        assert_eq!(count, 1);
+        assert!(sum < 1e-3, "nll {sum}");
+    }
+}

@@ -1,0 +1,288 @@
+//! Model weights: in-memory layout, QTZ (de)serialization, random init.
+
+use super::config::{ModelConfig, Size};
+use crate::io::TensorFile;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Weights of one transformer block.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub mlp_norm: Vec<f32>,
+    pub gate: Mat,
+    pub up: Mat,
+    pub down: Mat,
+}
+
+impl BlockWeights {
+    /// Access a quantizable linear by short name.
+    pub fn linear(&self, short: &str) -> &Mat {
+        match short {
+            "attn.wq" => &self.wq,
+            "attn.wk" => &self.wk,
+            "attn.wv" => &self.wv,
+            "attn.wo" => &self.wo,
+            "mlp.gate" => &self.gate,
+            "mlp.up" => &self.up,
+            "mlp.down" => &self.down,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+
+    pub fn linear_mut(&mut self, short: &str) -> &mut Mat {
+        match short {
+            "attn.wq" => &mut self.wq,
+            "attn.wk" => &mut self.wk,
+            "attn.wv" => &mut self.wv,
+            "attn.wo" => &mut self.wo,
+            "mlp.gate" => &mut self.gate,
+            "mlp.up" => &mut self.up,
+            "mlp.down" => &mut self.down,
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+
+    pub const LINEAR_NAMES: [&'static str; 7] = [
+        "attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.gate", "mlp.up", "mlp.down",
+    ];
+}
+
+/// A full model: config + weights. Embedding and LM head are tied.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub embed: Mat,
+    pub pos: Mat,
+    pub blocks: Vec<BlockWeights>,
+    pub final_norm: Vec<f32>,
+}
+
+impl Model {
+    /// Random init (trainer-compatible scale): weights N(0, 0.02·base) with
+    /// residual projections down-scaled by depth, norms at 1.
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Model {
+        Model::random_scaled(cfg, seed, 1.0)
+    }
+
+    /// Random init with all linear weights multiplied by `gain` — used by
+    /// the error-growth experiments to push γ‖W‖₂ above 1 (Prop. A.3).
+    pub fn random_scaled(cfg: &ModelConfig, seed: u64, gain: f32) -> Model {
+        let mut rng = Rng::new(seed);
+        let d = cfg.dim;
+        let std = 0.02f32 * gain;
+        let resid_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| BlockWeights {
+                attn_norm: vec![1.0; d],
+                wq: Mat::randn(d, d, std, &mut rng),
+                wk: Mat::randn(d, d, std, &mut rng),
+                wv: Mat::randn(d, d, std, &mut rng),
+                wo: Mat::randn(d, d, resid_std, &mut rng),
+                mlp_norm: vec![1.0; d],
+                gate: Mat::randn(cfg.ffn, d, std, &mut rng),
+                up: Mat::randn(cfg.ffn, d, std, &mut rng),
+                down: Mat::randn(d, cfg.ffn, resid_std, &mut rng),
+            })
+            .collect();
+        Model {
+            cfg: cfg.clone(),
+            embed: Mat::randn(cfg.vocab, d, std, &mut rng),
+            pos: Mat::randn(cfg.seq_len, d, std, &mut rng),
+            blocks,
+            final_norm: vec![1.0; d],
+        }
+    }
+
+    pub fn size(&self) -> Option<Size> {
+        Size::from_name(&self.cfg.name)
+    }
+
+    /// Serialize to a QTZ tensor file.
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        let c = &self.cfg;
+        tf.meta = Json::obj();
+        tf.meta
+            .set("name", Json::Str(c.name.clone()))
+            .set("dim", Json::Num(c.dim as f64))
+            .set("n_layers", Json::Num(c.n_layers as f64))
+            .set("n_heads", Json::Num(c.n_heads as f64))
+            .set("ffn", Json::Num(c.ffn as f64))
+            .set("vocab", Json::Num(c.vocab as f64))
+            .set("seq_len", Json::Num(c.seq_len as f64));
+        tf.put_mat("embed", &self.embed);
+        tf.put_mat("pos", &self.pos);
+        tf.put_f32("final_norm", &[self.final_norm.len()], &self.final_norm);
+        for (i, b) in self.blocks.iter().enumerate() {
+            let p = format!("blocks.{i}");
+            tf.put_f32(&format!("{p}.attn_norm"), &[b.attn_norm.len()], &b.attn_norm);
+            tf.put_mat(&format!("{p}.attn.wq"), &b.wq);
+            tf.put_mat(&format!("{p}.attn.wk"), &b.wk);
+            tf.put_mat(&format!("{p}.attn.wv"), &b.wv);
+            tf.put_mat(&format!("{p}.attn.wo"), &b.wo);
+            tf.put_f32(&format!("{p}.mlp_norm"), &[b.mlp_norm.len()], &b.mlp_norm);
+            tf.put_mat(&format!("{p}.mlp.gate"), &b.gate);
+            tf.put_mat(&format!("{p}.mlp.up"), &b.up);
+            tf.put_mat(&format!("{p}.mlp.down"), &b.down);
+        }
+        tf
+    }
+
+    pub fn from_tensor_file(tf: &TensorFile) -> Result<Model> {
+        let meta = &tf.meta;
+        let g = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("model meta missing '{k}'"))
+        };
+        let name = meta
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom")
+            .to_string();
+        let mut cfg = ModelConfig::new(&name, g("dim")?, g("n_layers")?, g("n_heads")?, g("ffn")?);
+        cfg.vocab = g("vocab")?;
+        cfg.seq_len = g("seq_len")?;
+        let blocks = (0..cfg.n_layers)
+            .map(|i| -> Result<BlockWeights> {
+                let p = format!("blocks.{i}");
+                Ok(BlockWeights {
+                    attn_norm: tf.get_vec(&format!("{p}.attn_norm"))?,
+                    wq: tf.get_mat(&format!("{p}.attn.wq"))?,
+                    wk: tf.get_mat(&format!("{p}.attn.wk"))?,
+                    wv: tf.get_mat(&format!("{p}.attn.wv"))?,
+                    wo: tf.get_mat(&format!("{p}.attn.wo"))?,
+                    mlp_norm: tf.get_vec(&format!("{p}.mlp_norm"))?,
+                    gate: tf.get_mat(&format!("{p}.mlp.gate"))?,
+                    up: tf.get_mat(&format!("{p}.mlp.up"))?,
+                    down: tf.get_mat(&format!("{p}.mlp.down"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let model = Model {
+            embed: tf.get_mat("embed")?,
+            pos: tf.get_mat("pos")?,
+            final_norm: tf.get_vec("final_norm")?,
+            blocks,
+            cfg,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.to_tensor_file().save(path)
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Model> {
+        let tf = TensorFile::load(path.as_ref())
+            .with_context(|| format!("loading model {}", path.as_ref().display()))?;
+        Model::from_tensor_file(&tf)
+    }
+
+    /// Shape sanity checks (runs on every load).
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.cfg;
+        let check = |name: &str, m: &Mat, rows: usize, cols: usize| -> Result<()> {
+            if (m.rows, m.cols) != (rows, cols) {
+                Err(anyhow!(
+                    "{name}: expected {rows}x{cols}, got {}x{}",
+                    m.rows,
+                    m.cols
+                ))
+            } else {
+                Ok(())
+            }
+        };
+        check("embed", &self.embed, c.vocab, c.dim)?;
+        check("pos", &self.pos, c.seq_len, c.dim)?;
+        if self.blocks.len() != c.n_layers {
+            return Err(anyhow!("expected {} blocks, got {}", c.n_layers, self.blocks.len()));
+        }
+        for (i, b) in self.blocks.iter().enumerate() {
+            check(&format!("blocks.{i}.wq"), &b.wq, c.dim, c.dim)?;
+            check(&format!("blocks.{i}.wk"), &b.wk, c.dim, c.dim)?;
+            check(&format!("blocks.{i}.wv"), &b.wv, c.dim, c.dim)?;
+            check(&format!("blocks.{i}.wo"), &b.wo, c.dim, c.dim)?;
+            check(&format!("blocks.{i}.gate"), &b.gate, c.ffn, c.dim)?;
+            check(&format!("blocks.{i}.up"), &b.up, c.ffn, c.dim)?;
+            check(&format!("blocks.{i}.down"), &b.down, c.dim, c.ffn)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ModelConfig {
+        let mut c = ModelConfig::new("unit", 16, 2, 2, 32);
+        c.seq_len = 8;
+        c
+    }
+
+    #[test]
+    fn random_model_validates() {
+        let m = Model::random(&small_cfg(), 1);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn qtz_roundtrip_preserves_everything() {
+        let m = Model::random(&small_cfg(), 2);
+        let tf = m.to_tensor_file();
+        let back = Model::from_tensor_file(&tf).unwrap();
+        assert_eq!(back.cfg, m.cfg);
+        assert_eq!(back.embed, m.embed);
+        assert_eq!(back.blocks[1].down, m.blocks[1].down);
+        assert_eq!(back.final_norm, m.final_norm);
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let m = Model::random(&small_cfg(), 3);
+        let path = std::env::temp_dir().join("qep_model_test.qtz");
+        m.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        assert_eq!(back.blocks[0].wq, m.blocks[0].wq);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn linear_accessors_cover_all_names() {
+        let mut m = Model::random(&small_cfg(), 4);
+        for name in BlockWeights::LINEAR_NAMES {
+            let w = m.blocks[0].linear(name).clone();
+            assert!(w.rows > 0);
+            m.blocks[0].linear_mut(name).scale(2.0);
+            let w2 = m.blocks[0].linear(name);
+            assert!((w2.data[0] - 2.0 * w.data[0]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn validate_catches_shape_errors() {
+        let mut m = Model::random(&small_cfg(), 5);
+        m.blocks[0].wq = Mat::zeros(3, 3);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn scaled_init_scales_spectra() {
+        let mut rng = Rng::new(0);
+        let a = Model::random_scaled(&small_cfg(), 7, 1.0);
+        let b = Model::random_scaled(&small_cfg(), 7, 10.0);
+        let na = a.blocks[0].wq.spectral_norm_est(20, &mut rng);
+        let nb = b.blocks[0].wq.spectral_norm_est(20, &mut rng);
+        assert!(nb > na * 5.0);
+    }
+}

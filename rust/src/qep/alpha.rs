@@ -1,0 +1,78 @@
+//! Propagation-strength policy (§5.3). The paper uses α=1/2 everywhere
+//! except the MLP layers of the largest model, where α=0 both regularizes
+//! and skips the correction cost entirely.
+
+/// Decides α per layer. Patterns match on substrings of the canonical
+/// layer name (`blocks.3.mlp.down` etc).
+#[derive(Clone, Debug)]
+pub struct AlphaPolicy {
+    /// Default α for every layer.
+    pub default: f32,
+    /// `(substring, α)` overrides, first match wins.
+    pub overrides: Vec<(String, f32)>,
+}
+
+impl AlphaPolicy {
+    /// The paper's default: α = 1/2 for all layers.
+    pub fn uniform(alpha: f32) -> AlphaPolicy {
+        AlphaPolicy { default: alpha, overrides: Vec::new() }
+    }
+
+    /// The paper's Llama-2-70B setting: α = 1/2, but 0 for MLP layers
+    /// (we mirror it for our largest model via the coordinator).
+    pub fn paper_large_model() -> AlphaPolicy {
+        AlphaPolicy {
+            default: 0.5,
+            overrides: vec![("mlp.".to_string(), 0.0)],
+        }
+    }
+
+    pub fn with_override(mut self, pattern: &str, alpha: f32) -> AlphaPolicy {
+        self.overrides.push((pattern.to_string(), alpha));
+        self
+    }
+
+    pub fn alpha_for(&self, layer_name: &str) -> f32 {
+        for (pat, a) in &self.overrides {
+            if layer_name.contains(pat.as_str()) {
+                return *a;
+            }
+        }
+        self.default
+    }
+}
+
+impl Default for AlphaPolicy {
+    fn default() -> Self {
+        AlphaPolicy::uniform(0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_policy() {
+        let p = AlphaPolicy::uniform(0.5);
+        assert_eq!(p.alpha_for("blocks.0.attn.wq"), 0.5);
+        assert_eq!(p.alpha_for("blocks.7.mlp.down"), 0.5);
+    }
+
+    #[test]
+    fn overrides_first_match_wins() {
+        let p = AlphaPolicy::uniform(0.5)
+            .with_override("mlp.", 0.0)
+            .with_override("blocks.0.", 1.0);
+        assert_eq!(p.alpha_for("blocks.0.mlp.down"), 0.0); // mlp matched first
+        assert_eq!(p.alpha_for("blocks.0.attn.wq"), 1.0);
+        assert_eq!(p.alpha_for("blocks.3.attn.wo"), 0.5);
+    }
+
+    #[test]
+    fn paper_large_model_zeroes_mlp() {
+        let p = AlphaPolicy::paper_large_model();
+        assert_eq!(p.alpha_for("blocks.5.mlp.gate"), 0.0);
+        assert_eq!(p.alpha_for("blocks.5.attn.wv"), 0.5);
+    }
+}

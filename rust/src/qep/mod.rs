@@ -1,0 +1,19 @@
+//! QEP — the paper's contribution. Given the dual calibration streams
+//! (full-precision activations `X` and quantized-stream activations `X̂`)
+//! for a layer, compute the corrected weight
+//!
+//! ```text
+//! W*(α) = W + α · W δ X̂ᵀ (Ĥ + ρI)⁻¹,   δ = X − X̂,  Ĥ = X̂ X̂ᵀ
+//! ```
+//!
+//! (Prop. 5.1 + the tunable propagation of §5.3), then hand `W*` to any
+//! base quantizer calibrated against `X̂`.
+
+pub mod alpha;
+pub mod correction;
+
+pub use alpha::AlphaPolicy;
+pub use correction::{
+    corrected_weight, corrected_weight_with_h, correction_term, correction_term_with_h,
+    CorrectionStats,
+};

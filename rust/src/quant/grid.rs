@@ -1,0 +1,308 @@
+//! The uniform asymmetric quantization grid shared by every method
+//! (§6 “Quantization”: weight-only, per-channel or group-wise, INT4/3/2,
+//! groups g32/g64/g128).
+//!
+//! A weight matrix W [out, in] is quantized per *output channel* (one
+//! scale/zero per row) or *group-wise* (one scale/zero per `group`
+//! consecutive input columns within a row). Codes are unsigned b-bit
+//! integers; dequantization is `(q - zero) * scale`.
+
+use crate::linalg::Mat;
+
+/// Grid configuration. `group = None` means per-channel (one group spanning
+/// the whole row — the paper's “per-channel” setting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub bits: u32,
+    pub group: Option<usize>,
+}
+
+impl QuantConfig {
+    /// Per-channel b-bit config (paper main text: INT4/INT3/INT2).
+    pub fn int(bits: u32) -> QuantConfig {
+        QuantConfig { bits, group: None }
+    }
+
+    /// Group-wise config (paper appendix: INT2g32 etc).
+    pub fn int_group(bits: u32, group: usize) -> QuantConfig {
+        QuantConfig { bits, group: Some(group) }
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    /// Effective group length for a row of `cols` input features: group
+    /// sizes larger than the row clamp to per-channel.
+    pub fn group_len(&self, cols: usize) -> usize {
+        match self.group {
+            Some(g) if g < cols => g,
+            _ => cols,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self.group {
+            Some(g) => format!("INT{}g{}", self.bits, g),
+            None => format!("INT{}", self.bits),
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<QuantConfig> {
+        let rest = s.strip_prefix("INT").or_else(|| s.strip_prefix("int"))?;
+        if let Some((b, g)) = rest.split_once('g') {
+            Some(QuantConfig::int_group(b.parse().ok()?, g.parse().ok()?))
+        } else {
+            Some(QuantConfig::int(rest.parse().ok()?))
+        }
+    }
+
+    /// The eight settings of the appendix tables, in paper order.
+    pub fn appendix_settings() -> Vec<QuantConfig> {
+        vec![
+            QuantConfig::int_group(4, 128),
+            QuantConfig::int(4),
+            QuantConfig::int_group(3, 128),
+            QuantConfig::int(3),
+            QuantConfig::int_group(2, 32),
+            QuantConfig::int_group(2, 64),
+            QuantConfig::int_group(2, 128),
+            QuantConfig::int(2),
+        ]
+    }
+}
+
+/// Min–max asymmetric scale/zero for one group of values.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupGrid {
+    pub scale: f32,
+    pub zero: f32,
+    pub qmax: i32,
+}
+
+impl GroupGrid {
+    /// Fit the grid to a slice of values (standard min-max with zero-point
+    /// clamping so 0.0 is representable when the range straddles it).
+    pub fn fit(values: &[f32], bits: u32) -> GroupGrid {
+        let qmax = (1i32 << bits) - 1;
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &v in values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi - lo < 1e-12 {
+            // Degenerate (all-equal, possibly all-zero) group.
+            return GroupGrid { scale: 1.0, zero: -lo, qmax };
+        }
+        let scale = (hi - lo) / qmax as f32;
+        let zero = (-lo / scale).round().clamp(0.0, qmax as f32);
+        GroupGrid { scale, zero, qmax }
+    }
+
+    #[inline]
+    pub fn quantize(&self, v: f32) -> i32 {
+        ((v / self.scale + self.zero).round() as i32).clamp(0, self.qmax)
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q as f32 - self.zero) * self.scale
+    }
+
+    /// Round-trip a value through the grid.
+    #[inline]
+    pub fn snap(&self, v: f32) -> f32 {
+        self.dequantize(self.quantize(v))
+    }
+}
+
+/// A fully quantized tensor: codes + per-group grids. This is what the
+/// serving path stores on disk / feeds the Pallas `quant_matmul` kernel;
+/// the PTQ pipeline itself mostly passes dequantized f32 around.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub group_len: usize,
+    pub codes: Vec<u8>,
+    /// One (scale, zero) per row per group, row-major: `rows * n_groups`.
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    pub fn n_groups(&self) -> usize {
+        self.cols.div_ceil(self.group_len)
+    }
+
+    /// RTN-quantize a weight matrix onto the grid.
+    pub fn from_mat(w: &Mat, cfg: &QuantConfig) -> QuantizedTensor {
+        let glen = cfg.group_len(w.cols);
+        let ngroups = w.cols.div_ceil(glen);
+        let mut codes = vec![0u8; w.rows * w.cols];
+        let mut scales = vec![0.0f32; w.rows * ngroups];
+        let mut zeros = vec![0.0f32; w.rows * ngroups];
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for g in 0..ngroups {
+                let c0 = g * glen;
+                let c1 = (c0 + glen).min(w.cols);
+                let grid = GroupGrid::fit(&row[c0..c1], cfg.bits);
+                scales[r * ngroups + g] = grid.scale;
+                zeros[r * ngroups + g] = grid.zero;
+                for c in c0..c1 {
+                    codes[r * w.cols + c] = grid.quantize(row[c]) as u8;
+                }
+            }
+        }
+        QuantizedTensor {
+            rows: w.rows,
+            cols: w.cols,
+            bits: cfg.bits,
+            group_len: glen,
+            codes,
+            scales,
+            zeros,
+        }
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let ngroups = self.n_groups();
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let g = c / self.group_len;
+                let s = self.scales[r * ngroups + g];
+                let z = self.zeros[r * ngroups + g];
+                m.data[r * self.cols + c] = (self.codes[r * self.cols + c] as f32 - z) * s;
+            }
+        }
+        m
+    }
+
+    /// Storage cost in bits per weight (codes + grids), the paper's
+    /// compression metric for group-wise settings.
+    pub fn bits_per_weight(&self) -> f64 {
+        let code_bits = self.bits as f64;
+        let grid_bits = 2.0 * 32.0 * self.n_groups() as f64 * self.rows as f64;
+        code_bits + grid_bits / (self.rows * self.cols) as f64
+    }
+}
+
+/// Fit per-group grids for a weight matrix and return them without
+/// quantizing (GPTQ fits grids up front, then rounds columns sequentially).
+pub fn fit_grids(w: &Mat, cfg: &QuantConfig) -> Vec<Vec<GroupGrid>> {
+    let glen = cfg.group_len(w.cols);
+    let ngroups = w.cols.div_ceil(glen);
+    (0..w.rows)
+        .map(|r| {
+            let row = w.row(r);
+            (0..ngroups)
+                .map(|g| {
+                    let c0 = g * glen;
+                    let c1 = (c0 + glen).min(w.cols);
+                    GroupGrid::fit(&row[c0..c1], cfg.bits)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn labels_roundtrip() {
+        for cfg in QuantConfig::appendix_settings() {
+            assert_eq!(QuantConfig::from_label(&cfg.label()), Some(cfg));
+        }
+        assert_eq!(QuantConfig::from_label("INT4").unwrap(), QuantConfig::int(4));
+        assert_eq!(QuantConfig::from_label("bad"), None);
+    }
+
+    #[test]
+    fn grid_snap_error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        for bits in [2u32, 3, 4, 8] {
+            let vals = rng.normal_vec(256, 1.0);
+            let grid = GroupGrid::fit(&vals, bits);
+            for &v in &vals {
+                let err = (grid.snap(v) - v).abs();
+                assert!(err <= grid.scale * 0.5 + 1e-6, "bits={bits} err={err} scale={}", grid.scale);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_represents_extremes() {
+        let vals = [-1.0f32, 0.3, 2.0];
+        let grid = GroupGrid::fit(&vals, 4);
+        assert!((grid.snap(-1.0) + 1.0).abs() < grid.scale);
+        assert!((grid.snap(2.0) - 2.0).abs() < grid.scale);
+    }
+
+    #[test]
+    fn degenerate_group_is_exact() {
+        let vals = [0.0f32; 16];
+        let grid = GroupGrid::fit(&vals, 2);
+        assert_eq!(grid.snap(0.0), 0.0);
+        let vals2 = [3.5f32; 16];
+        let grid2 = GroupGrid::fit(&vals2, 2);
+        assert!((grid2.snap(3.5) - 3.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tensor_roundtrip_error_shrinks_with_bits() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(16, 64, 1.0, &mut rng);
+        let mut last = f64::INFINITY;
+        for bits in [2u32, 3, 4, 8] {
+            let qt = QuantizedTensor::from_mat(&w, &QuantConfig::int(bits));
+            let err = qt.dequantize().sub(&w).frob_sq();
+            assert!(err < last, "bits={bits}: {err} !< {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn group_wise_beats_per_channel() {
+        // Rows of unit-scale weights with a trailing block of exactly-
+        // representable ±100 outliers: per-channel grids blow the step size
+        // up to ~200/q (flattening the unit-scale weights onto the zero
+        // level), while a group grid isolates the outlier block and keeps
+        // the unit-scale groups at fine resolution.
+        let mut rng = Rng::new(3);
+        let mut w = Mat::randn(4, 64, 1.0, &mut rng);
+        for r in 0..4 {
+            for c in 56..64 {
+                *w.at_mut(r, c) = 100.0; // constant outlier group: exactly
+                                         // representable by its own grid
+            }
+        }
+        let per_ch = QuantizedTensor::from_mat(&w, &QuantConfig::int(3));
+        let grouped = QuantizedTensor::from_mat(&w, &QuantConfig::int_group(3, 8));
+        let e_pc = per_ch.dequantize().sub(&w).frob_sq();
+        let e_g = grouped.dequantize().sub(&w).frob_sq();
+        assert!(e_g < e_pc * 0.5, "group {e_g} vs per-channel {e_pc}");
+    }
+
+    #[test]
+    fn group_clamps_to_row_length() {
+        let cfg = QuantConfig::int_group(4, 128);
+        assert_eq!(cfg.group_len(64), 64);
+        assert_eq!(cfg.group_len(256), 128);
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(8, 128, 1.0, &mut rng);
+        let qt = QuantizedTensor::from_mat(&w, &QuantConfig::int_group(2, 32));
+        // 2 bits + 2 f32 per 32 weights = 2 + 64/32*... = 2 + 2 = 4.
+        assert!((qt.bits_per_weight() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! QuIP (Chee et al., 2023): quantization with incoherence processing.
+//!
+//! The layer problem `min ‖(W−Ŵ)X‖²` is conjugated with randomized signed
+//! Hadamard rotations: `W̃ = U W Vᵀ`, `H̃ = V H Vᵀ` (activations rotate as
+//! `X̃ = V X`). In the rotated basis weight magnitudes are *incoherent*
+//! (no outliers), which is what makes 2-bit grids viable — the paper's
+//! Table 1 shows QuIP(+QEP) as the only method standing at INT2. The
+//! rounding core is LDLQ, which is equivalent to the GPTQ compensation
+//! loop; we reuse our GPTQ implementation on the rotated problem and
+//! rotate back afterwards.
+//!
+//! Both dimensions must be powers of two for the fast Hadamard transform;
+//! when the output dimension is not (e.g. a vocab-sized head), we fall back
+//! to input-side-only rotation, which preserves the objective exactly.
+
+use super::{gptq::Gptq, LayerCtx, QuantConfig, Quantizer};
+use crate::linalg::{Mat, Mat64, SignedHadamard};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+pub struct Quip {
+    pub core: Gptq,
+}
+
+impl Default for Quip {
+    fn default() -> Self {
+        Quip { core: Gptq::default() }
+    }
+}
+
+impl Quantizer for Quip {
+    fn name(&self) -> &'static str {
+        "QuIP"
+    }
+
+    fn quantize(&self, w: &Mat, cfg: &QuantConfig, ctx: &LayerCtx) -> Result<Mat> {
+        let (n, d) = (w.rows, w.cols);
+        assert!(d.is_power_of_two(), "QuIP needs power-of-two in-features, got {d}");
+        let mut rng = Rng::new(ctx.seed ^ 0x5157_4950); // "QuIP"
+        let v = SignedHadamard::new(d, &mut rng);
+        let u = if n.is_power_of_two() {
+            Some(SignedHadamard::new(n, &mut rng))
+        } else {
+            None
+        };
+
+        // W̃ = U W Vᵀ.
+        let mut wt = w.clone();
+        v.right_mul_t(&mut wt); // W·Vᵀ
+        if let Some(u) = &u {
+            u.left_mul(&mut wt); // U·(W·Vᵀ)
+        }
+
+        // H̃ = V H Vᵀ in f64 (conjugate via f32 path then refine).
+        let h32 = ctx.hessian.to_f32();
+        let ht32 = conjugate_vhv(&h32, &v);
+        let mut ht = Mat64::zeros(d, d);
+        for (dst, src) in ht.data.iter_mut().zip(ht32.data.iter()) {
+            *dst = *src as f64;
+        }
+        // Symmetrize (the FWHT in f32 introduces tiny asymmetry that can
+        // trip the Cholesky).
+        for i in 0..d {
+            for j in 0..i {
+                let m = 0.5 * (ht.at(i, j) + ht.at(j, i));
+                *ht.at_mut(i, j) = m;
+                *ht.at_mut(j, i) = m;
+            }
+        }
+
+        let rot_ctx = LayerCtx {
+            hessian: ht,
+            act_mean_abs: vec![1.0; d],
+            seed: ctx.seed,
+            layer_name: format!("{}@rot", ctx.layer_name),
+        };
+        let mut wq = self.core.quantize(&wt, cfg, &rot_ctx)?;
+
+        // Rotate back: Ŵ = Uᵀ W̃q V.
+        if let Some(u) = &u {
+            u.left_mul_t(&mut wq);
+        }
+        v.right_mul(&mut wq);
+        Ok(wq)
+    }
+}
+
+/// Compute V·H·Vᵀ for symmetric H.
+fn conjugate_vhv(h: &Mat, v: &SignedHadamard) -> Mat {
+    let mut m = h.clone();
+    v.left_mul(&mut m); // V·H
+    v.right_mul_t(&mut m); // (V·H)·Vᵀ
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::util::rng::Rng;
+
+    /// Weights in the regime where incoherence provably helps a min-max
+    /// grid: a unit-variance body plus a *single* large outlier per row.
+    /// The outlier inflates the per-row range (so RTN's 2-bit step dwarfs
+    /// the body, flattening it onto the zero level ⇒ ~σ²·d error), while
+    /// after rotation the same energy only raises the row variance by
+    /// k²/d, giving ~0.3·(σ²+k²/d)·d error — smaller when n_out·k² ≲ 2.4·d.
+    fn outlier_weights(n: usize, d: usize, rng: &mut Rng) -> Mat {
+        let mut w = Mat::randn(n, d, 1.0, rng);
+        for r in 0..n {
+            let c = rng.below(d);
+            *w.at_mut(r, c) = 12.0 * rng.sign();
+        }
+        w
+    }
+
+    fn gaussian_ctx(m: usize, d: usize, seed: u64) -> LayerCtx {
+        let mut rng = Rng::new(seed);
+        let x = Mat::randn(m, d, 1.0, &mut rng);
+        LayerCtx::from_activations(&x, seed, "t")
+    }
+
+    #[test]
+    fn quip_beats_rtn_at_2bit_with_outliers() {
+        let mut rng = Rng::new(1);
+        let ctx = gaussian_ctx(512, 128, 2);
+        let w = outlier_weights(16, 128, &mut rng);
+        let cfg = QuantConfig::int(2);
+        let qq = Quip::default().quantize(&w, &cfg, &ctx).unwrap();
+        let rq = Rtn.quantize(&w, &cfg, &ctx).unwrap();
+        let (eq, er) = (ctx.recon_error(&w, &qq), ctx.recon_error(&w, &rq));
+        assert!(eq < er, "QuIP {eq} !< RTN {er}");
+    }
+
+    #[test]
+    fn conjugation_preserves_objective_value() {
+        // ‖(W−Ŵ)X‖² is invariant under the (U,V) conjugation; check that
+        // recon error evaluated in rotated coordinates matches direct.
+        let mut rng = Rng::new(3);
+        let d = 32;
+        let x = Mat::randn(256, d, 1.0, &mut rng);
+        let ctx = LayerCtx::from_activations(&x, 0, "t");
+        let w = Mat::randn(8, d, 1.0, &mut rng);
+        let mut w_hat = w.clone();
+        for v in w_hat.data.iter_mut() {
+            *v += 0.05 * rng.normal_f32();
+        }
+        let mut r2 = Rng::new(9);
+        let v = SignedHadamard::new(d, &mut r2);
+        let h32 = ctx.hessian.to_f32();
+        let ht = conjugate_vhv(&h32, &v);
+        let mut wt = w.clone();
+        v.right_mul_t(&mut wt);
+        let mut wht = w_hat.clone();
+        v.right_mul_t(&mut wht);
+        let mut ht64 = Mat64::zeros(d, d);
+        for (dst, src) in ht64.data.iter_mut().zip(ht.data.iter()) {
+            *dst = *src as f64;
+        }
+        let rot_ctx = LayerCtx { hessian: ht64, act_mean_abs: vec![1.0; d], seed: 0, layer_name: "r".into() };
+        let e_direct = ctx.recon_error(&w, &w_hat);
+        let e_rot = rot_ctx.recon_error(&wt, &wht);
+        assert!((e_direct - e_rot).abs() < 1e-2 * (1.0 + e_direct), "{e_direct} vs {e_rot}");
+    }
+
+    #[test]
+    fn non_pow2_out_dim_falls_back_to_one_sided() {
+        let mut rng = Rng::new(5);
+        let ctx = gaussian_ctx(256, 32, 6);
+        let w = outlier_weights(7, 32, &mut rng); // 7 rows: not a power of 2
+        let q = Quip::default().quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+        assert_eq!((q.rows, q.cols), (7, 32));
+        assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(7);
+        let ctx = gaussian_ctx(128, 16, 8);
+        let w = Mat::randn(8, 16, 1.0, &mut rng);
+        let a = Quip::default().quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+        let b = Quip::default().quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seed_changes_result() {
+        let mut rng = Rng::new(9);
+        let x = Mat::randn(128, 16, 1.0, &mut rng);
+        let ctx_a = LayerCtx::from_activations(&x, 1, "t");
+        let ctx_b = LayerCtx::from_activations(&x, 2, "t");
+        let w = Mat::randn(8, 16, 1.0, &mut rng);
+        let a = Quip::default().quantize(&w, &QuantConfig::int(2), &ctx_a).unwrap();
+        let b = Quip::default().quantize(&w, &QuantConfig::int(2), &ctx_b).unwrap();
+        assert_ne!(a, b);
+    }
+}

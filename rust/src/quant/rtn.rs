@@ -1,0 +1,65 @@
+//! Round-to-nearest (RTN) baseline: snap every weight to its group grid,
+//! ignoring activations entirely (Dettmers & Zettlemoyer 2023). This is the
+//! cheapest method in Table 3 and — combined with QEP — the paper's
+//! "QEP+RTN" row that stays competitive at a fraction of GPTQ's cost.
+
+use super::{LayerCtx, QuantConfig, Quantizer, QuantizedTensor};
+use crate::linalg::Mat;
+use anyhow::Result;
+
+#[derive(Default)]
+pub struct Rtn;
+
+impl Quantizer for Rtn {
+    fn name(&self) -> &'static str {
+        "RTN"
+    }
+
+    fn quantize(&self, w: &Mat, cfg: &QuantConfig, _ctx: &LayerCtx) -> Result<Mat> {
+        Ok(QuantizedTensor::from_mat(w, cfg).dequantize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ctx(d: usize) -> LayerCtx {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(32, d, 1.0, &mut rng);
+        LayerCtx::from_activations(&x, 0, "t")
+    }
+
+    #[test]
+    fn rtn_8bit_is_near_lossless() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(8, 32, 1.0, &mut rng);
+        let q = Rtn.quantize(&w, &QuantConfig::int(8), &ctx(32)).unwrap();
+        let rel = q.sub(&w).frob() / w.frob();
+        assert!(rel < 0.01, "rel err {rel}");
+    }
+
+    #[test]
+    fn rtn_output_is_on_grid() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(4, 16, 1.0, &mut rng);
+        let cfg = QuantConfig::int(3);
+        let q = Rtn.quantize(&w, &cfg, &ctx(16)).unwrap();
+        // Re-quantizing the output must be a fixed point.
+        let q2 = Rtn.quantize(&q, &cfg, &ctx(16)).unwrap();
+        for (a, b) in q.data.iter().zip(q2.data.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rtn_error_grows_as_bits_shrink() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(8, 64, 1.0, &mut rng);
+        let c = ctx(64);
+        let e4 = Rtn.quantize(&w, &QuantConfig::int(4), &c).unwrap().sub(&w).frob_sq();
+        let e2 = Rtn.quantize(&w, &QuantConfig::int(2), &c).unwrap().sub(&w).frob_sq();
+        assert!(e2 > e4 * 4.0);
+    }
+}

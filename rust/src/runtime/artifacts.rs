@@ -1,0 +1,213 @@
+//! Artifact registry + the PJRT-backed model executor.
+//!
+//! `make artifacts` (Python, build-time only) writes per-size HLO programs:
+//!
+//! * `<name>.fwd.hlo.txt`    — tokens[seq] + all weights → (logits,)
+//! * `<name>.block.hlo.txt`  — x[seq,d] + block weights → (out, attn_in,
+//!                             attn_ctx, mlp_in, mlp_act) — the capture op
+//! * `<name>.qmm.hlo.txt`    — Pallas fused dequant×matmul (serving path)
+//! * `<name>.hess.hlo.txt`   — Pallas Hessian accumulation X → XᵀX
+//! * `<name>.qtz`            — trained weights
+//! * `data/<flavor>.txt`     — corpora (written by `repro gen-data`)
+//!
+//! Weight parameter order is canonical (see `param_order`) and mirrored by
+//! `python/compile/aot.py`; changing one side breaks the cross-check test.
+
+use super::executor::{literal_to_mat, mat_to_literal, tokens_to_literal, vec_to_literal, HloExecutable, PjrtRuntime};
+use crate::linalg::Mat;
+use crate::model::ops::next_token_nll;
+use crate::model::{Model, ModelConfig};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub struct ArtifactRegistry {
+    pub root: PathBuf,
+}
+
+impl ArtifactRegistry {
+    pub fn new<P: AsRef<Path>>(root: P) -> ArtifactRegistry {
+        ArtifactRegistry { root: root.as_ref().to_path_buf() }
+    }
+
+    /// Default location relative to the repo root.
+    pub fn default_root() -> ArtifactRegistry {
+        ArtifactRegistry::new("artifacts")
+    }
+
+    pub fn model_weights(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.qtz"))
+    }
+
+    pub fn fwd_hlo(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.fwd.hlo.txt"))
+    }
+
+    pub fn block_hlo(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.block.hlo.txt"))
+    }
+
+    pub fn qmm_hlo(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.qmm.hlo.txt"))
+    }
+
+    pub fn hess_hlo(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.hess.hlo.txt"))
+    }
+
+    pub fn corpus(&self, flavor: &str) -> PathBuf {
+        self.root.join("data").join(format!("{flavor}.txt"))
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.model_weights(name).exists() && self.fwd_hlo(name).exists()
+    }
+
+    pub fn load_model(&self, name: &str) -> Result<Model> {
+        Model::load(self.model_weights(name))
+            .with_context(|| format!("loading {name} (run `make artifacts` first)"))
+    }
+
+    pub fn load_corpus(&self, flavor: crate::text::Flavor) -> Result<crate::text::Corpus> {
+        let path = self.corpus(flavor.name());
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `repro gen-data`)", path.display()))?;
+        Ok(crate::text::Corpus::from_text(flavor, text))
+    }
+}
+
+/// Canonical flat parameter order for the `fwd` artifact (after `tokens`).
+pub fn param_order(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = vec!["embed".to_string(), "pos".to_string()];
+    for i in 0..cfg.n_layers {
+        let p = format!("blocks.{i}");
+        names.push(format!("{p}.attn_norm"));
+        names.push(format!("{p}.attn.wq"));
+        names.push(format!("{p}.attn.wk"));
+        names.push(format!("{p}.attn.wv"));
+        names.push(format!("{p}.attn.wo"));
+        names.push(format!("{p}.mlp_norm"));
+        names.push(format!("{p}.mlp.gate"));
+        names.push(format!("{p}.mlp.up"));
+        names.push(format!("{p}.mlp.down"));
+    }
+    names.push("final_norm".to_string());
+    names
+}
+
+/// Collect a model's weights as literals in canonical order.
+fn weight_literals(model: &Model) -> Result<Vec<xla::Literal>> {
+    let mut lits = Vec::new();
+    lits.push(mat_to_literal(&model.embed)?);
+    lits.push(mat_to_literal(&model.pos)?);
+    for b in &model.blocks {
+        lits.push(vec_to_literal(&b.attn_norm));
+        lits.push(mat_to_literal(&b.wq)?);
+        lits.push(mat_to_literal(&b.wk)?);
+        lits.push(mat_to_literal(&b.wv)?);
+        lits.push(mat_to_literal(&b.wo)?);
+        lits.push(vec_to_literal(&b.mlp_norm));
+        lits.push(mat_to_literal(&b.gate)?);
+        lits.push(mat_to_literal(&b.up)?);
+        lits.push(mat_to_literal(&b.down)?);
+    }
+    lits.push(vec_to_literal(&model.final_norm));
+    Ok(lits)
+}
+
+/// A model served through the compiled PJRT forward artifact. Weights are
+/// converted to literals once; per request only the token literal changes.
+pub struct PjrtModel {
+    exe: HloExecutable,
+    weights: Vec<xla::Literal>,
+    pub cfg: ModelConfig,
+}
+
+impl PjrtModel {
+    /// Compile the artifact and bind `model`'s weights (which may be a
+    /// quantized variant — same shapes, different values).
+    pub fn bind(rt: &PjrtRuntime, reg: &ArtifactRegistry, model: &Model) -> Result<PjrtModel> {
+        let exe = rt.load(reg.fwd_hlo(&model.cfg.name))?;
+        Ok(PjrtModel { exe, weights: weight_literals(model)?, cfg: model.cfg.clone() })
+    }
+
+    /// Logits for exactly one segment of `seq_len` tokens.
+    pub fn logits(&self, tokens: &[u32]) -> Result<Mat> {
+        if tokens.len() != self.cfg.seq_len {
+            return Err(anyhow!(
+                "fwd artifact is shape-specialized to seq_len={}, got {}",
+                self.cfg.seq_len,
+                tokens.len()
+            ));
+        }
+        let mut inputs = Vec::with_capacity(1 + self.weights.len());
+        inputs.push(tokens_to_literal(tokens));
+        // Literal isn't Clone in the public API; re-create views each call
+        // is wasteful, so we keep literals and pass by slice reference.
+        for w in &self.weights {
+            inputs.push(shallow_copy(w)?);
+        }
+        let out = self.exe.run(&inputs)?;
+        literal_to_mat(&out[0])
+    }
+
+    /// Perplexity over a token stream (multiple of seq_len).
+    pub fn perplexity(&self, tokens: &[u32]) -> Result<f64> {
+        let seq = self.cfg.seq_len;
+        let usable = tokens.len() / seq * seq;
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for seg in tokens[..usable].chunks_exact(seq) {
+            let logits = self.logits(seg)?;
+            let (s, c) = next_token_nll(&logits, seg, seq);
+            sum += s;
+            count += c;
+        }
+        Ok((sum / count.max(1) as f64).exp())
+    }
+}
+
+/// The xla crate's `Literal` is not `Clone`; round-trip through raw data.
+fn shallow_copy(lit: &xla::Literal) -> Result<xla::Literal> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            xla::Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+            xla::Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+        }
+        other => Err(anyhow!("unsupported literal type {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Size;
+
+    #[test]
+    fn registry_paths() {
+        let reg = ArtifactRegistry::new("/tmp/a");
+        assert_eq!(reg.fwd_hlo("tiny-s"), PathBuf::from("/tmp/a/tiny-s.fwd.hlo.txt"));
+        assert_eq!(reg.model_weights("tiny-m"), PathBuf::from("/tmp/a/tiny-m.qtz"));
+        assert_eq!(reg.corpus("wiki"), PathBuf::from("/tmp/a/data/wiki.txt"));
+        assert!(!reg.has_model("missing"));
+    }
+
+    #[test]
+    fn param_order_matches_model_layout() {
+        let cfg = Size::TinyS.config();
+        let names = param_order(&cfg);
+        assert_eq!(names.len(), 3 + 9 * cfg.n_layers);
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[2], "blocks.0.attn_norm");
+        assert_eq!(names.last().unwrap(), "final_norm");
+        // Count matches weight_literals emission.
+        let model = Model::random(&cfg, 0);
+        let lits = weight_literals(&model).unwrap();
+        assert_eq!(lits.len(), names.len());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads HLO-text artifacts produced by `python/compile/aot.py`
+//! (JAX + Pallas, lowered once at build time) and executes them on the PJRT
+//! CPU client. Python is never on this path — the artifacts are plain
+//! files; after `make artifacts` the `repro` binary is self-contained.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::ArtifactRegistry;
+pub use executor::{HloExecutable, PjrtRuntime};

@@ -1,0 +1,321 @@
+//! Deterministic synthetic corpus generator.
+//!
+//! Three flavors stand in for the paper's datasets:
+//!
+//! * `Wiki`  — small vocabulary, long structured sentences, low branching
+//!   entropy, section headers (WikiText-2 analog; easiest to model).
+//! * `Ptb`   — medium vocabulary, short newswire-style sentences, `<unk>`
+//!   markers and digit normalization quirks (Penn Treebank analog).
+//! * `C4`    — large vocabulary, high branching entropy, mixed casing and
+//!   urls (web-crawl analog; hardest to model, used for calibration by
+//!   GPTQ/QuIP in the paper).
+//!
+//! Each flavor is a first-order word-level Markov chain over a synthetic
+//! lexicon: word `i` transitions to one of `branching` successors drawn
+//! (deterministically per flavor+seed) with Zipf weights. The chain is
+//! ergodic and learnable, so a byte-level transformer trained on one flavor
+//! has meaningfully different PPL on the others — exactly the distribution
+//! shift Table 4 needs.
+
+use super::tokenizer::ByteTokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Flavor {
+    Wiki,
+    Ptb,
+    C4,
+}
+
+impl Flavor {
+    pub fn name(self) -> &'static str {
+        match self {
+            Flavor::Wiki => "wiki",
+            Flavor::Ptb => "ptb",
+            Flavor::C4 => "c4",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Flavor> {
+        match s {
+            "wiki" | "wikitext2" | "wikitext-2" => Some(Flavor::Wiki),
+            "ptb" => Some(Flavor::Ptb),
+            "c4" => Some(Flavor::C4),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Flavor; 3] {
+        [Flavor::Wiki, Flavor::Ptb, Flavor::C4]
+    }
+
+    fn params(self) -> FlavorParams {
+        match self {
+            Flavor::Wiki => FlavorParams {
+                vocab: 400,
+                branching: 6,
+                zipf: 1.3,
+                sent_len: (6, 18),
+                base_seed: 0x5EED_0001,
+                headers: true,
+                unk_rate: 0.0,
+                url_rate: 0.0,
+            },
+            Flavor::Ptb => FlavorParams {
+                vocab: 800,
+                branching: 10,
+                zipf: 1.1,
+                sent_len: (4, 12),
+                base_seed: 0x5EED_0002,
+                headers: false,
+                unk_rate: 0.03,
+                url_rate: 0.0,
+            },
+            Flavor::C4 => FlavorParams {
+                vocab: 1600,
+                branching: 24,
+                zipf: 0.9,
+                sent_len: (3, 24),
+                base_seed: 0x5EED_0003,
+                headers: false,
+                unk_rate: 0.0,
+                url_rate: 0.02,
+            },
+        }
+    }
+}
+
+struct FlavorParams {
+    vocab: usize,
+    branching: usize,
+    zipf: f64,
+    sent_len: (usize, usize),
+    base_seed: u64,
+    headers: bool,
+    unk_rate: f64,
+    url_rate: f64,
+}
+
+/// A generated corpus: raw text plus its byte-token encoding.
+pub struct Corpus {
+    pub flavor: Flavor,
+    pub text: String,
+    pub tokens: Vec<u32>,
+}
+
+const SYLLABLES: [&str; 24] = [
+    "ba", "ke", "li", "mo", "nu", "ra", "se", "ti", "vo", "wa", "ze", "dro",
+    "fen", "gal", "hir", "jul", "kap", "lor", "mer", "nis", "pod", "qua",
+    "rus", "tam",
+];
+
+/// Build the flavor's lexicon: short pronounceable pseudo-words. Word ids
+/// are frequency-ranked (id 0 = most frequent under the Zipf draw).
+fn lexicon(p: &FlavorParams, rng: &mut Rng) -> Vec<String> {
+    let mut words = Vec::with_capacity(p.vocab);
+    let mut seen = std::collections::HashSet::new();
+    while words.len() < p.vocab {
+        let n_syll = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..n_syll {
+            w.push_str(SYLLABLES[rng.below(SYLLABLES.len())]);
+        }
+        if seen.insert(w.clone()) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// Deterministic successor table: word i → `branching` candidate next-words
+/// with Zipf-over-rank weights.
+struct Chain {
+    succ: Vec<Vec<usize>>,
+    weights: Vec<f64>,
+}
+
+fn build_chain(p: &FlavorParams, rng: &mut Rng) -> Chain {
+    let succ = (0..p.vocab)
+        .map(|_| (0..p.branching).map(|_| zipf_draw(p.vocab, p.zipf, rng)).collect())
+        .collect();
+    let weights = (0..p.branching)
+        .map(|r| 1.0 / ((r + 1) as f64).powf(p.zipf))
+        .collect();
+    Chain { succ, weights }
+}
+
+/// Draw a word id with Zipf(s) distribution over ranks 1..=n via inverse
+/// CDF on a precomputed-free approximation (rejection-free, cheap).
+fn zipf_draw(n: usize, s: f64, rng: &mut Rng) -> usize {
+    // Inverse-transform on the continuous approximation of the Zipf CDF.
+    let u = rng.f64().max(1e-12);
+    if (s - 1.0).abs() < 1e-9 {
+        let x = (n as f64).powf(u);
+        (x as usize).clamp(1, n) - 1
+    } else {
+        let t = 1.0 - s;
+        let x = ((n as f64).powf(t) * u + (1.0 - u)).powf(1.0 / t);
+        (x as usize).clamp(1, n) - 1
+    }
+}
+
+impl Corpus {
+    /// Generate ≈`n_tokens` byte-tokens of flavor text, deterministic in
+    /// `(flavor, seed)`.
+    pub fn generate(flavor: Flavor, n_tokens: usize, seed: u64) -> Corpus {
+        let p = flavor.params();
+        // Lexicon + chain are functions of the flavor ONLY (base_seed), so
+        // different seeds sample different walks of the *same* language —
+        // that's what makes calibration/eval splits iid per flavor.
+        let mut structure_rng = Rng::new(p.base_seed);
+        let words = lexicon(&p, &mut structure_rng);
+        let chain = build_chain(&p, &mut structure_rng);
+
+        let mut rng = Rng::new(p.base_seed ^ (seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)).wrapping_add(1));
+        let mut text = String::with_capacity(n_tokens + 64);
+        let mut state = zipf_draw(p.vocab, p.zipf, &mut rng);
+        let mut sent_words = 0usize;
+        let mut sent_target = rng.range_f64(p.sent_len.0 as f64, p.sent_len.1 as f64) as usize;
+        let mut sents_in_para = 0usize;
+        let mut start_sentence = true;
+
+        while text.len() < n_tokens {
+            if p.headers && sents_in_para == 0 && rng.f64() < 0.15 {
+                text.push_str(&format!("= {} =\n", words[rng.below(40)]));
+            }
+            let w = if rng.f64() < p.unk_rate {
+                "<unk>".to_string()
+            } else if rng.f64() < p.url_rate {
+                format!("www.{}.com", words[rng.below(p.vocab)])
+            } else {
+                let mut w = words[state].clone();
+                if start_sentence {
+                    // Capitalize sentence starts (C4/wiki style; PTB is lowercased).
+                    if flavor != Flavor::Ptb {
+                        let mut cs = w.chars();
+                        if let Some(c0) = cs.next() {
+                            w = c0.to_ascii_uppercase().to_string() + cs.as_str();
+                        }
+                    }
+                }
+                w
+            };
+            text.push_str(&w);
+            start_sentence = false;
+            sent_words += 1;
+            // Advance the chain.
+            let next_rank = rng.categorical(&chain.weights);
+            state = chain.succ[state][next_rank];
+
+            if sent_words >= sent_target {
+                text.push_str(". ");
+                sent_words = 0;
+                sent_target = rng.range_f64(p.sent_len.0 as f64, p.sent_len.1 as f64) as usize;
+                sents_in_para += 1;
+                start_sentence = true;
+                if sents_in_para >= 4 + rng.below(4) {
+                    text.pop();
+                    text.push('\n');
+                    sents_in_para = 0;
+                }
+            } else {
+                text.push(' ');
+            }
+        }
+        text.truncate(n_tokens);
+        let tokens = ByteTokenizer.encode(&text);
+        Corpus { flavor, text, tokens }
+    }
+
+    /// Load corpus text from a file (the artifact path written by
+    /// `repro gen-data`, shared with the Python trainer).
+    pub fn from_text(flavor: Flavor, text: String) -> Corpus {
+        let tokens = ByteTokenizer.encode(&text);
+        Corpus { flavor, text, tokens }
+    }
+
+    /// Split tokens into non-overlapping segments of `len` (the paper
+    /// calibrates on 128 segments of 2048 tokens; we scale down).
+    pub fn segments(&self, len: usize, count: usize) -> Vec<&[u32]> {
+        self.tokens
+            .chunks_exact(len)
+            .take(count)
+            .collect()
+    }
+}
+
+/// Unigram byte entropy in bits — a quick flavor-separation diagnostic.
+pub fn byte_entropy(tokens: &[u32]) -> f64 {
+    let mut counts = [0usize; 259];
+    for &t in tokens {
+        counts[t as usize] += 1;
+    }
+    let total = tokens.len() as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / total;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Corpus::generate(Flavor::Wiki, 2000, 7);
+        let b = Corpus::generate(Flavor::Wiki, 2000, 7);
+        assert_eq!(a.text, b.text);
+    }
+
+    #[test]
+    fn seeds_sample_different_walks_of_same_language() {
+        let a = Corpus::generate(Flavor::Ptb, 2000, 1);
+        let b = Corpus::generate(Flavor::Ptb, 2000, 2);
+        assert_ne!(a.text, b.text);
+        // Same language ⇒ similar byte entropy.
+        assert!((byte_entropy(&a.tokens) - byte_entropy(&b.tokens)).abs() < 0.3);
+    }
+
+    #[test]
+    fn flavors_differ_statistically() {
+        let wiki = Corpus::generate(Flavor::Wiki, 20_000, 0);
+        let c4 = Corpus::generate(Flavor::C4, 20_000, 0);
+        let ptb = Corpus::generate(Flavor::Ptb, 20_000, 0);
+        assert_ne!(wiki.text[..200], c4.text[..200]);
+        // C4 has the richest vocabulary ⇒ highest byte entropy.
+        let (hw, hp, hc) =
+            (byte_entropy(&wiki.tokens), byte_entropy(&ptb.tokens), byte_entropy(&c4.tokens));
+        assert!(hc > hw, "c4 {hc} !> wiki {hw}");
+        assert!(hp > 3.0 && hw > 3.0, "degenerate corpora");
+    }
+
+    #[test]
+    fn ptb_has_unk_wiki_has_headers() {
+        let ptb = Corpus::generate(Flavor::Ptb, 30_000, 0);
+        assert!(ptb.text.contains("<unk>"));
+        let wiki = Corpus::generate(Flavor::Wiki, 30_000, 0);
+        assert!(wiki.text.contains("= "));
+    }
+
+    #[test]
+    fn segments_are_exact_and_disjoint() {
+        let c = Corpus::generate(Flavor::C4, 10_000, 3);
+        let segs = c.segments(512, 8);
+        assert_eq!(segs.len(), 8);
+        assert!(segs.iter().all(|s| s.len() == 512));
+        assert_eq!(segs[0], &c.tokens[..512]);
+        assert_eq!(segs[1], &c.tokens[512..1024]);
+    }
+
+    #[test]
+    fn ascii_only_output() {
+        let c = Corpus::generate(Flavor::C4, 5_000, 0);
+        assert!(c.text.is_ascii());
+        assert!(c.tokens.iter().all(|&t| t < 256));
+    }
+}

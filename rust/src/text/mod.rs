@@ -1,0 +1,12 @@
+//! Synthetic text substrate: the paper calibrates on C4/Pile and evaluates
+//! on WikiText-2/PTB/C4. We have none of those (repro gate), so we build
+//! three deterministic word-Markov corpora with *different statistics* —
+//! what matters for the paper's experiments is (a) a learnable token
+//! process so perplexity is meaningful and (b) genuine distribution shift
+//! between the three flavors for the robustness study (Table 4).
+
+pub mod gen;
+pub mod tokenizer;
+
+pub use gen::{Corpus, Flavor};
+pub use tokenizer::{ByteTokenizer, BOS, EOS, PAD, VOCAB_SIZE};

@@ -1,0 +1,66 @@
+//! Byte-level tokenizer. Vocabulary = 256 byte values + BOS/EOS/PAD.
+//! Chosen over BPE so the Python trainer and the Rust runtime share the
+//! vocabulary with zero coordination (the corpus generator emits ASCII).
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+pub const VOCAB_SIZE: usize = 259;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    /// Encode text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    /// Encode with BOS prefix and EOS suffix.
+    pub fn encode_with_specials(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 2);
+        out.push(BOS);
+        out.extend(text.as_bytes().iter().map(|&b| b as u32));
+        out.push(EOS);
+        out
+    }
+
+    /// Decode ids back to text; specials are dropped, non-UTF8 replaced.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| id < 256)
+            .map(|&id| id as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox. 123!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_wrap_and_strip() {
+        let t = ByteTokenizer;
+        let ids = t.encode_with_specials("ab");
+        assert_eq!(ids, vec![BOS, 97, 98, EOS]);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn vocab_constants_are_distinct_and_sized() {
+        assert!((BOS as usize) < VOCAB_SIZE);
+        assert!((EOS as usize) < VOCAB_SIZE);
+        assert!((PAD as usize) < VOCAB_SIZE);
+        assert_ne!(BOS, EOS);
+        assert_ne!(EOS, PAD);
+    }
+}

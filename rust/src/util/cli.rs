@@ -1,0 +1,94 @@
+//! Tiny CLI argument parser (the environment has no `clap`). Supports
+//! `--flag`, `--key value`, `--key=value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    out.flags.insert(k.to_string(), v[1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["exp", "table1", "--bits", "3", "--alpha=0.5", "--verbose"]);
+        assert_eq!(a.positional, vec!["exp", "table1"]);
+        assert_eq!(a.get("bits"), Some("3"));
+        assert_eq!(a.get_f64("alpha", 0.0), 0.5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--seed", "3", "run"]);
+        assert_eq!(a.get_usize("seed", 0), 3);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn bare_flag_at_end() {
+        let a = parse(&["--qep"]);
+        assert_eq!(a.get("qep"), Some("true"));
+    }
+}

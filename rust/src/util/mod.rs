@@ -1,0 +1,51 @@
+//! Small self-contained utilities (the environment is offline, so we carry
+//! our own RNG, CLI parsing, bench timer, and table/JSON formatting instead
+//! of pulling crates).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Wall-clock stopwatch used for the runtime experiments (Table 3).
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn seconds(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Human-friendly duration, matching the paper's "14.9m / 2.9h" style.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1.0 {
+        format!("{:.0}ms", seconds * 1e3)
+    } else if seconds < 120.0 {
+        format!("{seconds:.1}s")
+    } else if seconds < 7200.0 {
+        format!("{:.1}m", seconds / 60.0)
+    } else {
+        format!("{:.1}h", seconds / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_formatting_matches_paper_style() {
+        assert_eq!(fmt_duration(0.5), "500ms");
+        assert_eq!(fmt_duration(90.0), "90.0s");
+        assert_eq!(fmt_duration(894.0), "14.9m");
+        assert_eq!(fmt_duration(10440.0), "2.9h");
+    }
+}

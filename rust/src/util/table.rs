@@ -1,0 +1,147 @@
+//! Plain-text table renderer for the experiment drivers. Each paper table
+//! is regenerated as an aligned monospace table with the same row/column
+//! structure as the original.
+
+/// A simple column-aligned table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// A separator row rendered as dashes.
+    pub fn rule(&mut self) {
+        self.rows.push(vec!["—".to_string(); self.header.len()]);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = widths[i] - c.chars().count();
+                line.push_str(c);
+                line.push_str(&" ".repeat(pad));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            if row.iter().all(|c| c == "—") {
+                out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+            } else {
+                out.push_str(&fmt_row(row, &widths));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            if row.iter().all(|c| c == "—") {
+                continue;
+            }
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format perplexity the way the paper does: 3 decimals for small values,
+/// no decimals for collapsed (>1000) cells.
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "N/A".to_string()
+    } else if p >= 1000.0 {
+        format!("{p:.0}")
+    } else {
+        format!("{p:.3}")
+    }
+}
+
+/// Format accuracy with 4 decimals (paper style).
+pub fn fmt_acc(a: f64) -> String {
+    format!("{a:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["100".into(), "x".into(), "yy".into()]);
+        let r = t.render();
+        assert!(r.contains("# demo"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(6.1234), "6.123");
+        assert_eq!(fmt_ppl(17783.9), "17784");
+        assert_eq!(fmt_ppl(f64::NAN), "N/A");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_skips_rules() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.rule();
+        t.row(vec!["3".into(), "4".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n3,4\n");
+    }
+}

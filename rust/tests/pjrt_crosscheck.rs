@@ -1,0 +1,182 @@
+//! Cross-checks between the PJRT-executed AOT artifacts (JAX/Pallas,
+//! lowered at build time) and the pure-Rust forward path. These are the
+//! tests that prove the three layers compose: same weights, same tokens,
+//! same numbers.
+//!
+//! Gated on `artifacts/` being present (run `make artifacts`); without it
+//! each test is a no-op pass with a loud eprintln, so `cargo test` stays
+//! green on a fresh checkout.
+
+use qep::linalg::matmul_tn;
+use qep::model::{Forward, Model};
+use qep::quant::{QuantConfig, QuantizedTensor};
+use qep::runtime::executor::{literal_to_mat, mat_to_literal};
+use qep::runtime::{ArtifactRegistry, PjrtRuntime};
+use qep::text::Flavor;
+use qep::util::rng::Rng;
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn skip(name: &str) -> bool {
+    let reg = registry();
+    if !reg.has_model("tiny-s") {
+        eprintln!("[{name}] SKIP: artifacts missing (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn fwd_artifact_matches_rust_forward() {
+    if skip("fwd_artifact_matches_rust_forward") {
+        return;
+    }
+    let reg = registry();
+    let model = reg.load_model("tiny-s").unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let pjrt = qep::runtime::artifacts::PjrtModel::bind(&rt, &reg, &model).unwrap();
+
+    let corpus = reg.load_corpus(Flavor::Wiki).unwrap();
+    let tokens = &corpus.tokens[..model.cfg.seq_len];
+    let jax_logits = pjrt.logits(tokens).unwrap();
+
+    let f = Forward::new(&model.cfg);
+    let rust_logits = f.forward(&model, tokens);
+
+    assert_eq!((jax_logits.rows, jax_logits.cols), (rust_logits.rows, rust_logits.cols));
+    let diff = jax_logits.sub(&rust_logits);
+    let rel = diff.frob() / rust_logits.frob().max(1e-12);
+    assert!(rel < 2e-4, "PJRT vs Rust logits diverge: rel={rel}");
+}
+
+#[test]
+fn fwd_artifact_ppl_matches_rust_ppl() {
+    if skip("fwd_artifact_ppl_matches_rust_ppl") {
+        return;
+    }
+    let reg = registry();
+    let model = reg.load_model("tiny-s").unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let pjrt = qep::runtime::artifacts::PjrtModel::bind(&rt, &reg, &model).unwrap();
+    let corpus = reg.load_corpus(Flavor::Wiki).unwrap();
+    let tokens = &corpus.tokens[..model.cfg.seq_len * 4];
+    let ppl_pjrt = pjrt.perplexity(tokens).unwrap();
+    let ppl_rust = qep::eval::perplexity(&model, tokens);
+    assert!(
+        (ppl_pjrt - ppl_rust).abs() / ppl_rust < 1e-3,
+        "ppl mismatch: pjrt={ppl_pjrt} rust={ppl_rust}"
+    );
+    // A trained model must be far below the uniform 259 baseline.
+    assert!(ppl_rust < 100.0, "trained tiny-s ppl suspiciously high: {ppl_rust}");
+}
+
+#[test]
+fn hessian_artifact_matches_rust_gemm() {
+    if skip("hessian_artifact_matches_rust_gemm") {
+        return;
+    }
+    let reg = registry();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(reg.hess_hlo("tiny-s")).unwrap();
+    let mut rng = Rng::new(9);
+    let x = qep::linalg::Mat::randn(1024, 64, 1.0, &mut rng); // shape fixed by aot.py
+    let out = exe.run(&[mat_to_literal(&x).unwrap()]).unwrap();
+    let h_pjrt = literal_to_mat(&out[0]).unwrap();
+    let h_rust = matmul_tn(&x, &x);
+    let rel = h_pjrt.sub(&h_rust).frob() / h_rust.frob();
+    assert!(rel < 1e-4, "Pallas hessian vs Rust: rel={rel}");
+}
+
+#[test]
+fn qmm_artifact_matches_rust_dequant_matmul() {
+    if skip("qmm_artifact_matches_rust_dequant_matmul") {
+        return;
+    }
+    let reg = registry();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(reg.qmm_hlo("tiny-s")).unwrap();
+
+    // Build a quantized weight with the Rust grid, group=32 (aot contract).
+    let mut rng = Rng::new(11);
+    let w = qep::linalg::Mat::randn(64, 64, 1.0, &mut rng);
+    let qt = QuantizedTensor::from_mat(&w, &QuantConfig::int_group(4, 32));
+    let x = qep::linalg::Mat::randn(128, 64, 1.0, &mut rng);
+
+    let codes_f32: Vec<f32> = qt.codes.iter().map(|&c| c as f32).collect();
+    let codes = qep::linalg::Mat::from_vec(64, 64, codes_f32);
+    let ngroups = qt.n_groups();
+    let scales = qep::linalg::Mat::from_vec(64, ngroups, qt.scales.clone());
+    let zeros = qep::linalg::Mat::from_vec(64, ngroups, qt.zeros.clone());
+
+    let out = exe
+        .run(&[
+            mat_to_literal(&x).unwrap(),
+            mat_to_literal(&codes).unwrap(),
+            mat_to_literal(&scales).unwrap(),
+            mat_to_literal(&zeros).unwrap(),
+        ])
+        .unwrap();
+    let y_pjrt = literal_to_mat(&out[0]).unwrap();
+
+    let y_rust = qep::linalg::matmul_nt(&x, &qt.dequantize());
+    let rel = y_pjrt.sub(&y_rust).frob() / y_rust.frob();
+    assert!(rel < 1e-4, "Pallas qmm vs Rust dequant·matmul: rel={rel}");
+}
+
+#[test]
+fn block_artifact_matches_rust_block() {
+    if skip("block_artifact_matches_rust_block") {
+        return;
+    }
+    let reg = registry();
+    let model = reg.load_model("tiny-s").unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(reg.block_hlo("tiny-s")).unwrap();
+
+    let mut rng = Rng::new(13);
+    let x = qep::linalg::Mat::randn(model.cfg.seq_len, model.cfg.dim, 0.5, &mut rng);
+    let b = &model.blocks[1];
+    let inputs = vec![
+        mat_to_literal(&x).unwrap(),
+        qep::runtime::executor::vec_to_literal(&b.attn_norm),
+        mat_to_literal(&b.wq).unwrap(),
+        mat_to_literal(&b.wk).unwrap(),
+        mat_to_literal(&b.wv).unwrap(),
+        mat_to_literal(&b.wo).unwrap(),
+        qep::runtime::executor::vec_to_literal(&b.mlp_norm),
+        mat_to_literal(&b.gate).unwrap(),
+        mat_to_literal(&b.up).unwrap(),
+        mat_to_literal(&b.down).unwrap(),
+    ];
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 5, "block artifact returns (out, 4 captures)");
+    let out_pjrt = literal_to_mat(&out[0]).unwrap();
+
+    let f = Forward::new(&model.cfg);
+    let (out_rust, cap) = f.block(b, &x);
+    let rel = out_pjrt.sub(&out_rust).frob() / out_rust.frob();
+    assert!(rel < 2e-4, "block output mismatch: rel={rel}");
+
+    // Capture points line up too (attn_in is the cheapest to check).
+    let attn_in_pjrt = literal_to_mat(&out[1]).unwrap();
+    let rel2 = attn_in_pjrt.sub(&cap.attn_in).frob() / cap.attn_in.frob();
+    assert!(rel2 < 2e-4, "attn_in capture mismatch: rel={rel2}");
+}
+
+#[test]
+fn trained_weights_load_and_validate() {
+    if skip("trained_weights_load_and_validate") {
+        return;
+    }
+    let reg = registry();
+    for name in ["tiny-s", "tiny-m", "tiny-l"] {
+        if !reg.has_model(name) {
+            continue;
+        }
+        let m = reg.load_model(name).unwrap();
+        m.validate().unwrap();
+        assert!(m.embed.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,338 @@
+//! Property tests for the paper's theoretical claims (Appendix A), on
+//! synthetic deep networks where the quantities are directly measurable:
+//!
+//! * Prop. A.1/A.3 — error accumulates and grows exponentially with depth
+//!   when γ‖W‖₂ > 1 under layer-wise *independent* quantization.
+//! * Thm. 5.2    — QEP's output error ≤ BASE's output error.
+//! * Prop. 5.4   — output error is monotone non-increasing in α.
+//! * Prop. 5.3/A.6 — the α ↔ ridge-λ correspondence: α(λ) is strictly
+//!   decreasing with α(0)=1, α(∞)=0; ridge endpoints match W*(0)/W*(1).
+//! * Lemma A.7   — ‖Z(I−αP)‖_F is non-increasing in α for projections P.
+
+use qep::linalg::{matmul, matmul_nt, matmul_tn, spd_solve, Mat, Mat64};
+use qep::qep::corrected_weight;
+use qep::quant::{LayerCtx, QuantConfig, Quantizer};
+use qep::util::rng::Rng;
+
+/// A deep MLP: y = σ(W_L σ(W_{L-1} ... σ(W_1 x))), tokens-major.
+struct DeepNet {
+    weights: Vec<Mat>,
+    relu: bool,
+}
+
+impl DeepNet {
+    fn random(depth: usize, dim: usize, gain: f32, relu: bool, rng: &mut Rng) -> DeepNet {
+        // N(0, gain/sqrt(d)) keeps ‖W‖₂ ≈ 2·gain.
+        let sigma = gain / (dim as f32).sqrt();
+        let weights = (0..depth).map(|_| Mat::randn(dim, dim, sigma, rng)).collect();
+        DeepNet { weights, relu }
+    }
+
+    fn act(&self, mut x: Mat) -> Mat {
+        if self.relu {
+            for v in x.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        x
+    }
+
+    /// Forward through layers `0..upto` with the given weight set.
+    fn forward(&self, weights: &[Mat], x: &Mat, upto: usize) -> Mat {
+        let mut h = x.clone();
+        for w in weights.iter().take(upto) {
+            h = self.act(matmul_nt(&h, w));
+        }
+        h
+    }
+
+    /// Per-layer activation mismatch ‖X_l − X̂_l‖_F between weight sets.
+    fn mismatch_profile(&self, quantized: &[Mat], x: &Mat) -> Vec<f64> {
+        (1..=self.weights.len())
+            .map(|l| {
+                let a = self.forward(&self.weights, x, l);
+                let b = self.forward(quantized, x, l);
+                a.sub(&b).frob()
+            })
+            .collect()
+    }
+
+    /// BASE layer-wise PTQ: quantize each layer independently against the
+    /// quantized stream, no correction (Eq. 1 with X = X̂).
+    fn quantize_base(&self, x: &Mat, cfg: &QuantConfig, q: &dyn Quantizer) -> Vec<Mat> {
+        let mut out = Vec::new();
+        let mut x_hat = x.clone();
+        for w in &self.weights {
+            let ctx = LayerCtx::from_activations(&x_hat, 0, "t");
+            let wq = q.quantize(w, cfg, &ctx).unwrap();
+            x_hat = self.act(matmul_nt(&x_hat, &wq));
+            out.push(wq);
+        }
+        out
+    }
+
+    /// QEP layer-wise PTQ (Eq. 3 via Prop. 5.1): correct, then quantize
+    /// against X̂.
+    fn quantize_qep(
+        &self,
+        x: &Mat,
+        cfg: &QuantConfig,
+        q: &dyn Quantizer,
+        alpha: f32,
+        damp: f64,
+    ) -> Vec<Mat> {
+        let mut out = Vec::new();
+        let mut x_full = x.clone();
+        let mut x_hat = x.clone();
+        for w in &self.weights {
+            let (w_star, _) = corrected_weight(w, &x_full, &x_hat, alpha, damp).unwrap();
+            let ctx = LayerCtx::from_activations(&x_hat, 0, "t");
+            let wq = q.quantize(&w_star, cfg, &ctx).unwrap();
+            x_hat = self.act(matmul_nt(&x_hat, &wq));
+            x_full = self.act(matmul_nt(&x_full, w));
+            out.push(wq);
+        }
+        out
+    }
+
+    fn output_error(&self, quantized: &[Mat], x: &Mat) -> f64 {
+        let l = self.weights.len();
+        self.forward(&self.weights, x, l)
+            .sub(&self.forward(quantized, x, l))
+            .frob()
+    }
+}
+
+fn rtn() -> Box<dyn Quantizer + Send + Sync> {
+    qep::quant::quantizer_for(qep::quant::Method::Rtn)
+}
+
+// ---------------------------------------------------------------- A.3 ----
+
+#[test]
+fn error_grows_geometrically_in_expansive_nets() {
+    let mut rng = Rng::new(1);
+    let dim = 24;
+    let depth = 10;
+    // gain 1.5 ⇒ ‖W‖₂ ≈ 3 > 1: the expansive regime of Prop. A.3.
+    let net = DeepNet::random(depth, dim, 1.5, false, &mut rng);
+    let x = Mat::randn(64, dim, 1.0, &mut rng);
+    let quantized = net.quantize_base(&x, &QuantConfig::int(8), rtn().as_ref());
+    let profile = net.mismatch_profile(&quantized, &x);
+    // Strictly increasing after the first couple of layers, and the
+    // overall growth is at least geometric with a sizeable base.
+    let growth = profile.last().unwrap() / profile[1].max(1e-30);
+    let per_layer = growth.powf(1.0 / (depth as f64 - 2.0));
+    assert!(per_layer > 1.25, "per-layer growth {per_layer} (profile {profile:?})");
+    for w in profile[1..].windows(2) {
+        assert!(w[1] > w[0] * 0.9, "profile not growing: {profile:?}");
+    }
+}
+
+#[test]
+fn error_stays_bounded_in_contractive_nets() {
+    // Complement of A.3: with γ‖W‖ < 1 the recursion is a contraction and
+    // the profile must not blow up.
+    let mut rng = Rng::new(2);
+    let net = DeepNet::random(10, 24, 0.3, false, &mut rng);
+    let x = Mat::randn(64, 24, 1.0, &mut rng);
+    let quantized = net.quantize_base(&x, &QuantConfig::int(8), rtn().as_ref());
+    let profile = net.mismatch_profile(&quantized, &x);
+    assert!(profile.last().unwrap() < &(profile.iter().cloned().fold(0.0, f64::max) + 1e-9));
+    assert!(profile.last().unwrap() / profile[0].max(1e-30) < 10.0, "{profile:?}");
+}
+
+// ------------------------------------------------------------- Thm 5.2 ----
+
+#[test]
+fn qep_output_error_beats_base_linear() {
+    let mut rng = Rng::new(3);
+    let mut wins = 0;
+    let n_trials = 8;
+    for seed in 0..n_trials {
+        let mut r = Rng::new(100 + seed);
+        let net = DeepNet::random(6, 16, 1.0, false, &mut r);
+        let x = Mat::randn(128, 16, 1.0, &mut rng);
+        let base = net.quantize_base(&x, &QuantConfig::int(4), rtn().as_ref());
+        let qep = net.quantize_qep(&x, &QuantConfig::int(4), rtn().as_ref(), 1.0, 1e-6);
+        if net.output_error(&qep, &x) <= net.output_error(&base, &x) {
+            wins += 1;
+        }
+    }
+    // The theorem is first-order; rounding noise can flip rare cases.
+    assert!(wins >= n_trials - 1, "QEP won only {wins}/{n_trials}");
+}
+
+#[test]
+fn qep_output_error_beats_base_relu() {
+    let mut rng = Rng::new(4);
+    let mut err_base = 0.0;
+    let mut err_qep = 0.0;
+    for seed in 0..6 {
+        let mut r = Rng::new(200 + seed);
+        let net = DeepNet::random(5, 16, 0.9, true, &mut r);
+        let x = Mat::randn(128, 16, 1.0, &mut rng);
+        let base = net.quantize_base(&x, &QuantConfig::int(3), rtn().as_ref());
+        // ReLU sparsifies X̂ ⇒ ill-conditioned Ĥ: use the paper's damping
+        // regime (App. B.1) rather than the near-zero linear-case value.
+        let qep = net.quantize_qep(&x, &QuantConfig::int(3), rtn().as_ref(), 1.0, 0.1);
+        err_base += net.output_error(&base, &x);
+        err_qep += net.output_error(&qep, &x);
+    }
+    assert!(err_qep < err_base, "QEP {err_qep} !< BASE {err_base}");
+}
+
+// ------------------------------------------------------------- Prop 5.4 ----
+
+#[test]
+fn output_error_is_monotone_in_alpha() {
+    // Aggregate monotonicity across seeds (per-seed curves carry rounding
+    // noise; the theorem is first-order).
+    let alphas = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+    let mut totals = vec![0.0f64; alphas.len()];
+    for seed in 0..6 {
+        let mut r = Rng::new(300 + seed);
+        let net = DeepNet::random(6, 16, 1.0, false, &mut r);
+        let mut rx = Rng::new(400 + seed);
+        let x = Mat::randn(128, 16, 1.0, &mut rx);
+        for (i, &a) in alphas.iter().enumerate() {
+            let q = net.quantize_qep(&x, &QuantConfig::int(4), rtn().as_ref(), a, 1e-6);
+            totals[i] += net.output_error(&q, &x);
+        }
+    }
+    for i in 1..alphas.len() {
+        assert!(
+            totals[i] <= totals[i - 1] * 1.02,
+            "not monotone at α={}: {totals:?}",
+            alphas[i]
+        );
+    }
+    assert!(
+        *totals.last().unwrap() < totals[0] * 0.95,
+        "α=1 should clearly beat α=0: {totals:?}"
+    );
+}
+
+// -------------------------------------------------------- Prop 5.3/A.6 ----
+
+/// α(λ) = (1/d)·tr(Ĥ·(Ĥ+λI)⁻¹).
+fn alpha_of_lambda(h: &Mat64, lambda: f64) -> f64 {
+    let d = h.rows;
+    let mut damped = h.clone();
+    damped.add_diag(lambda);
+    let sol = spd_solve(&damped, h).unwrap();
+    (0..d).map(|i| sol.at(i, i)).sum::<f64>() / d as f64
+}
+
+#[test]
+fn alpha_lambda_mapping_is_decreasing_bijection() {
+    let mut rng = Rng::new(5);
+    let x = Mat::randn(200, 12, 1.0, &mut rng);
+    let h32 = matmul_tn(&x, &x);
+    let mut h = Mat64::zeros(12, 12);
+    for (d, s) in h.data.iter_mut().zip(h32.data.iter()) {
+        *d = *s as f64;
+    }
+    let lambdas = [0.0, 1.0, 10.0, 100.0, 1e4, 1e8];
+    let alphas: Vec<f64> = lambdas.iter().map(|&l| alpha_of_lambda(&h, l)).collect();
+    assert!((alphas[0] - 1.0).abs() < 1e-9, "α(0) = {}", alphas[0]);
+    for w in alphas.windows(2) {
+        assert!(w[1] < w[0], "not strictly decreasing: {alphas:?}");
+    }
+    assert!(*alphas.last().unwrap() < 0.01, "α(∞) → 0: {alphas:?}");
+}
+
+#[test]
+fn ridge_endpoints_match_alpha_endpoints() {
+    // W*(λ→∞) → W (α=0) and W*(λ→0) → the α=1 closed form.
+    let mut rng = Rng::new(6);
+    let x = Mat::randn(200, 10, 1.0, &mut rng);
+    let mut x_hat = x.clone();
+    for v in x_hat.data.iter_mut() {
+        *v += 0.2 * rng.normal_f32();
+    }
+    let w = Mat::randn(5, 10, 1.0, &mut rng);
+
+    // Ridge solution: W(I + δX̂ᵀ(Ĥ+λI)⁻¹) computed directly.
+    let ridge = |lambda: f64| -> Mat {
+        let delta = x.sub(&x_hat);
+        let dxt = matmul_tn(&delta, &x_hat);
+        let h32 = matmul_tn(&x_hat, &x_hat);
+        let d = h32.rows;
+        let mut h = Mat64::zeros(d, d);
+        for (dst, src) in h.data.iter_mut().zip(h32.data.iter()) {
+            *dst = *src as f64;
+        }
+        h.add_diag(lambda);
+        let mut dxt_t = Mat64::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                *dxt_t.at_mut(i, j) = dxt.at(j, i) as f64;
+            }
+        }
+        let y_t = spd_solve(&h, &dxt_t).unwrap();
+        let mut c = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                *c.at_mut(i, j) = y_t.at(j, i) as f32;
+            }
+        }
+        w.add(&matmul(&w, &c))
+    };
+
+    let (w_alpha1, _) = corrected_weight(&w, &x, &x_hat, 1.0, 1e-12).unwrap();
+    let near0 = ridge(1e-9);
+    assert!(near0.sub(&w_alpha1).frob() / w_alpha1.frob() < 1e-3);
+
+    let huge = ridge(1e12);
+    assert!(huge.sub(&w).frob() / w.frob() < 1e-3);
+}
+
+// ----------------------------------------------------------- Lemma A.7 ----
+
+#[test]
+fn projection_shrinkage_lemma() {
+    let mut rng = Rng::new(7);
+    // P = X̂ᵀ(X̂X̂ᵀ)⁻¹X̂ in the paper's layout; build an orthogonal projector
+    // onto a random k-dim subspace via Gram-Schmidt.
+    let (n, k) = (16, 5);
+    let mut basis: Vec<Vec<f32>> = Vec::new();
+    while basis.len() < k {
+        let mut v = rng.normal_vec(n, 1.0);
+        for b in &basis {
+            let dot: f32 = v.iter().zip(b.iter()).map(|(a, c)| a * c).sum();
+            for (vi, bi) in v.iter_mut().zip(b.iter()) {
+                *vi -= dot * bi;
+            }
+        }
+        let norm: f32 = v.iter().map(|a| a * a).sum::<f32>().sqrt();
+        if norm > 1e-3 {
+            for vi in v.iter_mut() {
+                *vi /= norm;
+            }
+            basis.push(v);
+        }
+    }
+    let mut p = Mat::zeros(n, n);
+    for b in &basis {
+        for i in 0..n {
+            for j in 0..n {
+                *p.at_mut(i, j) += b[i] * b[j];
+            }
+        }
+    }
+    let z = Mat::randn(8, n, 1.0, &mut rng);
+    let mut last = f64::INFINITY;
+    for step in 0..=10 {
+        let a = step as f32 / 10.0;
+        // Z(I - αP)
+        let zp = matmul(&z, &p);
+        let mut za = z.clone();
+        for (v, q) in za.data.iter_mut().zip(zp.data.iter()) {
+            *v -= a * q;
+        }
+        let norm = za.frob();
+        assert!(norm <= last + 1e-5, "α={a}: {norm} > {last}");
+        last = norm;
+    }
+}

@@ -6,10 +6,11 @@
 //! Run: `cargo bench --bench linalg_hotpath`
 
 use qep::linalg::{
-    fwht_inplace, matmul, matmul_nt, matmul_tn, spd_inverse, upper_cholesky_of_inverse, Mat,
-    Mat64,
+    fwht_inplace, matmul, matmul_nt, matmul_nt_serial, matmul_nt_with, matmul_tn,
+    matmul_tn_serial, matmul_tn_with, spd_inverse, upper_cholesky_of_inverse, Mat, Mat64,
 };
 use qep::util::bench::{bench, black_box, fmt_time, BenchConfig};
+use qep::util::pool::{available_parallelism, Pool};
 use qep::util::rng::Rng;
 
 fn gflops(flops: f64, secs: f64) -> f64 {
@@ -66,5 +67,60 @@ fn main() {
             x[0]
         });
         println!("{:<28} {:>10}", r.name, fmt_time(r.mean_s));
+    }
+
+    // Parallel engine speedup: the acceptance bar is >= 2x for
+    // matmul_nt 512x512x512 at 4 threads over the serial baseline
+    // (on >= 4 hardware threads; results are bit-identical either way).
+    println!(
+        "\n# parallel engine (work-stealing pool, {} hardware threads)\n",
+        available_parallelism()
+    );
+    let (m, k, n) = (512usize, 512usize, 512usize);
+    let a = Mat::randn(m, k, 1.0, &mut rng);
+    let b = Mat::randn(n, k, 1.0, &mut rng); // matmul_nt takes B as [n, k]
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let base = bench("matmul_nt 512x512x512 serial", cfg, || matmul_nt_serial(&a, &b));
+    println!(
+        "{:<34} {:>10}  {:6.2} GFLOP/s",
+        base.name,
+        fmt_time(base.mean_s),
+        gflops(flops, base.mean_s)
+    );
+    for threads in [2usize, 4, 8] {
+        let pool = Pool::new(threads);
+        let r = bench(&format!("matmul_nt 512x512x512 t={threads}"), cfg, || {
+            matmul_nt_with(&a, &b, &pool)
+        });
+        println!(
+            "{:<34} {:>10}  {:6.2} GFLOP/s  ({:.2}x vs serial)",
+            r.name,
+            fmt_time(r.mean_s),
+            gflops(flops, r.mean_s),
+            base.mean_s / r.mean_s
+        );
+    }
+
+    let x = Mat::randn(3072, 256, 1.0, &mut rng);
+    let hflops = 2.0 * 3072.0 * 256.0 * 256.0;
+    let hb = bench("hessian XᵀX 3072x256 serial", cfg, || matmul_tn_serial(&x, &x));
+    println!(
+        "{:<34} {:>10}  {:6.2} GFLOP/s",
+        hb.name,
+        fmt_time(hb.mean_s),
+        gflops(hflops, hb.mean_s)
+    );
+    for threads in [2usize, 4] {
+        let pool = Pool::new(threads);
+        let r = bench(&format!("hessian XᵀX 3072x256 t={threads}"), cfg, || {
+            matmul_tn_with(&x, &x, &pool)
+        });
+        println!(
+            "{:<34} {:>10}  {:6.2} GFLOP/s  ({:.2}x vs serial)",
+            r.name,
+            fmt_time(r.mean_s),
+            gflops(hflops, r.mean_s),
+            hb.mean_s / r.mean_s
+        );
     }
 }

@@ -6,8 +6,16 @@ use crate::model::ops::{causal_attention, linear, rmsnorm, swiglu};
 use crate::model::{Forward, Model};
 use crate::qep::{AlphaPolicy, CorrectionStats};
 use crate::quant::{quantizer_for, LayerCtx, Method, QuantConfig, Quantizer};
+use crate::util::pool::Pool;
 use crate::util::Stopwatch;
 use anyhow::Result;
+
+/// Linears that share one captured input stream and therefore quantize
+/// independently of each other: their Hessian builds, QEP corrections, and
+/// quantizer runs fan out across the pool (execution-order application
+/// keeps reports deterministic).
+const ATTN_QKV: [&str; 3] = ["attn.wq", "attn.wk", "attn.wv"];
+const MLP_GATE_UP: [&str; 2] = ["mlp.gate", "mlp.up"];
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -26,6 +34,14 @@ pub struct PipelineConfig {
     pub max_blocks: Option<usize>,
     pub seed: u64,
     pub verbose: bool,
+    /// Worker threads for this pipeline's per-layer fan-out (0 = the
+    /// process-wide default, which itself defaults to all hardware
+    /// threads). GEMM/Hessian kernels consult the process-wide setting
+    /// (`util::pool::set_global_threads`; the `repro --threads` flag sets
+    /// both). Results are bit-identical for every value — per-layer seeds
+    /// derive from the layer name and every parallel kernel fixes its
+    /// reduction order — so these knobs only trade wall-clock time.
+    pub threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -39,6 +55,7 @@ impl Default for PipelineConfig {
             max_blocks: None,
             seed: 0,
             verbose: false,
+            threads: 0,
         }
     }
 }
@@ -70,12 +87,14 @@ pub struct PipelineOutput {
 pub struct Pipeline {
     cfg: PipelineConfig,
     quantizer: Box<dyn Quantizer + Send + Sync>,
+    pool: Pool,
 }
 
 impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Pipeline {
         let quantizer = quantizer_for(cfg.method);
-        Pipeline { cfg, quantizer }
+        let pool = Pool::new(cfg.threads);
+        Pipeline { cfg, quantizer, pool }
     }
 
     /// Run layer-wise PTQ over the model using `calib_tokens` (length must
@@ -109,16 +128,16 @@ impl Pipeline {
             let prop = Stopwatch::start();
             let attn_in_hat = rmsnorm(&x_hat, &qmodel.blocks[bi].attn_norm);
             report.propagation_s += prop.seconds();
-            for short in ["attn.wq", "attn.wk", "attn.wv"] {
-                self.quantize_layer(
-                    &mut qmodel,
-                    bi,
-                    short,
-                    &cap.attn_in,
-                    &attn_in_hat,
-                    policy.as_ref(),
-                    &mut report,
-                )?;
+            // wq/wk/wv see the same captured inputs and never read each
+            // other's quantized weights, so they fan out across the pool;
+            // applying in canonical order keeps the run deterministic.
+            let outs = self.pool.par_map(ATTN_QKV.len(), |i| {
+                self.compute_layer(&qmodel, bi, ATTN_QKV[i], &cap.attn_in, &attn_in_hat, policy.as_ref())
+            });
+            for (short, out) in ATTN_QKV.iter().zip(outs) {
+                let (w_hat, layer_report) = out?;
+                *qmodel.blocks[bi].linear_mut(short) = w_hat;
+                report.layers.push(layer_report);
             }
             let prop = Stopwatch::start();
             let b = &qmodel.blocks[bi];
@@ -129,15 +148,10 @@ impl Pipeline {
             );
             let ctx_hat = causal_attention(&q, &k, &v, model.cfg.n_heads, model.cfg.seq_len);
             report.propagation_s += prop.seconds();
-            self.quantize_layer(
-                &mut qmodel,
-                bi,
-                "attn.wo",
-                &cap.attn_ctx,
-                &ctx_hat,
-                policy.as_ref(),
-                &mut report,
-            )?;
+            let (w_hat, layer_report) =
+                self.compute_layer(&qmodel, bi, "attn.wo", &cap.attn_ctx, &ctx_hat, policy.as_ref())?;
+            *qmodel.blocks[bi].linear_mut("attn.wo") = w_hat;
+            report.layers.push(layer_report);
 
             // -- MLP -------------------------------------------------------
             let prop = Stopwatch::start();
@@ -145,30 +159,23 @@ impl Pipeline {
             let x1_hat = x_hat.add(&linear(&ctx_hat, &b.wo));
             let mlp_in_hat = rmsnorm(&x1_hat, &b.mlp_norm);
             report.propagation_s += prop.seconds();
-            for short in ["mlp.gate", "mlp.up"] {
-                self.quantize_layer(
-                    &mut qmodel,
-                    bi,
-                    short,
-                    &cap.mlp_in,
-                    &mlp_in_hat,
-                    policy.as_ref(),
-                    &mut report,
-                )?;
+            // gate/up share captured inputs, exactly like wq/wk/wv.
+            let outs = self.pool.par_map(MLP_GATE_UP.len(), |i| {
+                self.compute_layer(&qmodel, bi, MLP_GATE_UP[i], &cap.mlp_in, &mlp_in_hat, policy.as_ref())
+            });
+            for (short, out) in MLP_GATE_UP.iter().zip(outs) {
+                let (w_hat, layer_report) = out?;
+                *qmodel.blocks[bi].linear_mut(short) = w_hat;
+                report.layers.push(layer_report);
             }
             let prop = Stopwatch::start();
             let b = &qmodel.blocks[bi];
             let act_hat = swiglu(&linear(&mlp_in_hat, &b.gate), &linear(&mlp_in_hat, &b.up));
             report.propagation_s += prop.seconds();
-            self.quantize_layer(
-                &mut qmodel,
-                bi,
-                "mlp.down",
-                &cap.mlp_act,
-                &act_hat,
-                policy.as_ref(),
-                &mut report,
-            )?;
+            let (w_hat, layer_report) =
+                self.compute_layer(&qmodel, bi, "mlp.down", &cap.mlp_act, &act_hat, policy.as_ref())?;
+            *qmodel.blocks[bi].linear_mut("mlp.down") = w_hat;
+            report.layers.push(layer_report);
 
             let prop = Stopwatch::start();
             let b = &qmodel.blocks[bi];
@@ -188,18 +195,21 @@ impl Pipeline {
         Ok(PipelineOutput { model: qmodel, report })
     }
 
-    /// Quantize one linear in place.
-    #[allow(clippy::too_many_arguments)]
-    fn quantize_layer(
+    /// Quantize one linear, returning the dequantized weights plus the
+    /// layer report instead of mutating the model — this is the unit of
+    /// work the pool fans out, so it must not touch shared state. It reads
+    /// only the layer's own weights and the captured activation streams;
+    /// the per-layer seed derives from the layer *name*, keeping results
+    /// independent of scheduling order.
+    fn compute_layer(
         &self,
-        qmodel: &mut Model,
+        qmodel: &Model,
         block: usize,
         short: &str,
         x_full_cap: &Mat,
         x_hat_cap: &Mat,
         policy: Option<&AlphaPolicy>,
-        report: &mut PipelineReport,
-    ) -> Result<()> {
+    ) -> Result<(Mat, LayerReport)> {
         let name = format!("blocks.{block}.{short}");
         let w = qmodel.blocks[block].linear(short).clone();
 
@@ -240,16 +250,10 @@ impl Pipeline {
         let quant_s = qt.seconds();
 
         let recon_error = ctx.recon_error(&w_target, &w_hat);
-        *qmodel.blocks[block].linear_mut(short) = w_hat;
-        report.layers.push(LayerReport {
-            name,
-            recon_error,
-            correction,
-            hessian_s,
-            quant_s,
-            alpha,
-        });
-        Ok(())
+        Ok((
+            w_hat,
+            LayerReport { name, recon_error, correction, hessian_s, quant_s, alpha },
+        ))
     }
 }
 

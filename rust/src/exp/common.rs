@@ -117,6 +117,7 @@ impl Cell {
             max_blocks: None,
             seed: self.seed,
             verbose: false,
+            threads: 0,
         }
     }
 

@@ -1,24 +1,90 @@
-//! Blocked matrix multiplication. Single-threaded (the testbed is one
-//! core), optimized for cache locality and auto-vectorization:
-//! i-k-j loop order with a contiguous j-inner loop, plus k-blocking so the
-//! working set of B stays in L1/L2. This is the L3 hot path — QEP's
-//! correction term, Hessian builds, and every forward pass run through it.
+//! Blocked matrix multiplication, optimized for cache locality and
+//! auto-vectorization: i-k-j loop order with a contiguous j-inner loop,
+//! plus k-blocking so the working set of B stays in L1/L2. This is the L3
+//! hot path — QEP's correction term, Hessian builds, and every forward
+//! pass run through it.
+//!
+//! The public `matmul` / `matmul_nt` / `matmul_tn` entry points dispatch
+//! large problems to the row-partitioned parallel kernels in
+//! [`super::par`] (work-stealing pool, see `crate::util::pool`). Results
+//! are **bit-identical** to the `*_serial` variants for every thread
+//! count: both paths run the same chunk kernels below, and each output
+//! element's floating-point accumulation order is fixed by construction
+//! (k ascending), independent of how rows are partitioned.
 
 use super::mat::Mat;
 
 /// k-panel size: 256 k-steps × 4B × (inner j tile) fits comfortably in L2.
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 
-/// C = A[m,k] · B[k,n].
+/// C = A[m,k] · B[k,n], parallel over row blocks when the problem is large
+/// enough (see [`super::par::matmul_with`]).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+    super::par::matmul_with(a, b, &crate::util::pool::global())
+}
+
+/// C = A[m,k] · B[n,k]ᵀ  (i.e. rows of A dotted with rows of B).
+/// This is the layout of every `x·Wᵀ` linear layer in the forward pass —
+/// the single hottest operation in the repo.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    super::par::matmul_nt_with(a, b, &crate::util::pool::global())
+}
+
+/// C = A[k,m]ᵀ · B[k,n]. Used for Hessian builds `Xᵀ X`-style products when
+/// activations are stored tokens-major.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    super::par::matmul_tn_with(a, b, &crate::util::pool::global())
+}
+
+/// Single-threaded C = A[m,k] · B[k,n] (the reference the parallel path
+/// must match bit-for-bit; also what benches use as the speedup baseline).
+pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_block(a, b, &mut c.data, 0, a.rows);
+    c
+}
+
+/// Single-threaded C = A[m,k] · B[n,k]ᵀ.
+///
+/// §Perf: the dot-product formulation ran at ~3.3 GFLOP/s (strided
+/// accumulator chains defeat the vectorizer); transposing B once and
+/// dispatching to the axpy-style [`matmul_serial`] kernel runs at
+/// ~7.5 GFLOP/s. The transpose is O(n·k) against O(m·n·k) multiply work,
+/// negligible for every shape the model uses (m ≥ 128). For tiny m we keep
+/// the dot path.
+pub fn matmul_nt_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    if a.rows >= 8 {
+        return matmul_serial(a, &b.transpose());
+    }
+    matmul_nt_small(a, b)
+}
+
+/// Single-threaded C = A[k,m]ᵀ · B[k,n].
+pub fn matmul_tn_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let mut c = Mat::zeros(a.cols, b.cols);
+    matmul_tn_block(a, b, &mut c.data, 0, a.cols);
+    c
+}
+
+/// Compute rows `[r0, r1)` of C = A·B into `c` (the slice holding exactly
+/// those rows). Every output element accumulates in ascending-k order —
+/// k-panels ascending, k ascending within a panel — so any row
+/// partitioning yields bit-identical results.
+pub(crate) fn matmul_block(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
+    let (k, n) = (a.cols, b.cols);
+    debug_assert_eq!(c.len(), (r1 - r0) * n);
     for kb in (0..k).step_by(KC) {
         let kend = (kb + KC).min(k);
-        for i in 0..m {
+        for i in r0..r1 {
             let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * n..(i + 1) * n];
+            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
             for kk in kb..kend {
                 let av = arow[kk];
                 if av == 0.0 {
@@ -32,24 +98,36 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
-    c
 }
 
-/// C = A[m,k] · B[n,k]ᵀ  (i.e. rows of A dotted with rows of B).
-/// This is the layout of every `x·Wᵀ` linear layer in the forward pass —
-/// the single hottest operation in the repo.
-///
-/// §Perf: the dot-product formulation ran at ~3.3 GFLOP/s (strided
-/// accumulator chains defeat the vectorizer); transposing B once and
-/// dispatching to the axpy-style [`matmul`] kernel runs at ~7.5 GFLOP/s.
-/// The transpose is O(n·k) against O(m·n·k) multiply work, negligible for
-/// every shape the model uses (m ≥ 128). For tiny m we keep the dot path.
-pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    if m >= 8 {
-        return matmul(a, &b.transpose());
+/// Compute rows `[r0, r1)` of C = Aᵀ·B (A stored [k, m]) into `c`. Same
+/// ascending-k accumulation order as [`matmul_block`]; the k-panel keeps
+/// the streamed B rows hot in L2 across the chunk's output rows.
+pub(crate) fn matmul_tn_block(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!(c.len(), (r1 - r0) * n);
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for i in r0..r1 {
+            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in kb..kend {
+                let av = a.data[kk * m + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
     }
+}
+
+/// Dot-product path for skinny `matmul_nt` (m < 8), where the transpose
+/// overhead is not amortized.
+pub(crate) fn matmul_nt_small(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Mat::zeros(m, n);
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
@@ -57,29 +135,6 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
         for j in 0..n {
             let brow = &b.data[j * k..(j + 1) * k];
             crow[j] = dot(arow, brow);
-        }
-    }
-    c
-}
-
-/// C = A[k,m]ᵀ · B[k,n]. Used for Hessian builds `Xᵀ X`-style products when
-/// activations are stored tokens-major.
-pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
-    let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
-    for kk in 0..k {
-        let arow = &a.data[kk * m..(kk + 1) * m];
-        let brow = &b.data[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
         }
     }
     c
@@ -161,6 +216,20 @@ mod tests {
         let a2 = Mat::randn(29, 13, 1.0, &mut rng);
         let b2 = Mat::randn(29, 21, 1.0, &mut rng);
         assert_close(&matmul_tn(&a2, &b2), &naive(&a2.transpose(), &b2), 1e-4);
+    }
+
+    #[test]
+    fn dispatched_equals_serial_bitwise() {
+        // The auto-dispatching entry points must agree with the serial
+        // kernels to the bit, whatever the global pool looks like.
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(96, 200, 1.0, &mut rng);
+        let b = Mat::randn(200, 64, 1.0, &mut rng);
+        assert_eq!(matmul(&a, &b), matmul_serial(&a, &b));
+        let bt = Mat::randn(64, 200, 1.0, &mut rng);
+        assert_eq!(matmul_nt(&a, &bt), matmul_nt_serial(&a, &bt));
+        let x = Mat::randn(300, 72, 1.0, &mut rng);
+        assert_eq!(matmul_tn(&x, &x), matmul_tn_serial(&x, &x));
     }
 
     #[test]

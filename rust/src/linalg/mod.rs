@@ -9,8 +9,10 @@ pub mod chol;
 pub mod gemm;
 pub mod hadamard;
 pub mod mat;
+pub mod par;
 
 pub use chol::{cholesky_in_place, spd_inverse, spd_solve, upper_cholesky_of_inverse};
-pub use gemm::{matmul, matmul_nt, matmul_tn};
+pub use gemm::{matmul, matmul_nt, matmul_nt_serial, matmul_serial, matmul_tn, matmul_tn_serial};
 pub use hadamard::{fwht_inplace, hadamard_conjugate, hadamard_rows, SignedHadamard};
 pub use mat::{Mat, Mat64};
+pub use par::{matmul_nt_with, matmul_tn_with, matmul_with};

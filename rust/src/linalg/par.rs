@@ -1,0 +1,138 @@
+//! Row-partitioned parallel GEMM kernels on the work-stealing pool.
+//!
+//! Parallelism model: the output matrix is split into contiguous row
+//! chunks; each pool worker steals a chunk and runs the *same* chunk
+//! kernel the serial path uses (`gemm::matmul_block` /
+//! `gemm::matmul_tn_block`). Because every output element's accumulation
+//! order is fixed by those kernels (ascending k), the result is
+//! bit-identical to the serial computation for every thread count and
+//! every stealing schedule — there is no cross-thread reduction anywhere.
+//!
+//! Small problems run inline: below ~`PAR_FLOP_THRESHOLD` floating-point
+//! operations the scoped-spawn overhead outweighs the speedup.
+
+use super::gemm;
+use super::mat::Mat;
+use crate::util::pool::{chunk, Pool, SendPtr};
+
+/// Problems below this many FLOPs run serial even on a multi-thread pool
+/// (~a 128×128×128 GEMM; spawn+steal overhead is tens of microseconds).
+const PAR_FLOP_THRESHOLD: f64 = 4e6;
+
+fn big_enough(m: usize, k: usize, n: usize) -> bool {
+    2.0 * m as f64 * k as f64 * n as f64 >= PAR_FLOP_THRESHOLD
+}
+
+/// C = A[m,k] · B[k,n] on `pool`. Bit-identical to
+/// [`gemm::matmul_serial`] for every thread count.
+pub fn matmul_with(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    if pool.threads() > 1 && m >= 2 && big_enough(m, k, n) {
+        let base = SendPtr::new(c.data.as_mut_ptr());
+        pool.run(m, chunk(m, pool.threads()), |r0, r1| {
+            // Sound: chunks are disjoint row ranges of c.
+            let rows =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), (r1 - r0) * n) };
+            gemm::matmul_block(a, b, rows, r0, r1);
+        });
+    } else {
+        gemm::matmul_block(a, b, &mut c.data, 0, m);
+    }
+    c
+}
+
+/// C = A[m,k] · B[n,k]ᵀ on `pool`. Bit-identical to
+/// [`gemm::matmul_nt_serial`]: both transpose B once (m ≥ 8) and reuse the
+/// row-chunk matmul kernel; the skinny dot path stays serial.
+pub fn matmul_nt_with(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    if a.rows >= 8 {
+        return matmul_with(a, &b.transpose(), pool);
+    }
+    gemm::matmul_nt_small(a, b)
+}
+
+/// C = A[k,m]ᵀ · B[k,n] on `pool` (the Hessian `XᵀX` build). Bit-identical
+/// to [`gemm::matmul_tn_serial`].
+pub fn matmul_tn_with(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    if pool.threads() > 1 && m >= 2 && big_enough(m, k, n) {
+        let base = SendPtr::new(c.data.as_mut_ptr());
+        pool.run(m, chunk(m, pool.threads()), |r0, r1| {
+            // Sound: chunks are disjoint row ranges of c.
+            let rows =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), (r1 - r0) * n) };
+            gemm::matmul_tn_block(a, b, rows, r0, r1);
+        });
+    } else {
+        gemm::matmul_tn_block(a, b, &mut c.data, 0, m);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt_serial, matmul_serial, matmul_tn_serial};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pooled_matmul_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(1);
+        // Shapes straddling the FLOP threshold and the chunk grain.
+        for (m, k, n) in [(2, 1024, 1024), (64, 300, 129), (257, 128, 64), (512, 64, 64)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let want = matmul_serial(&a, &b);
+            for threads in [1usize, 2, 3, 4, 8] {
+                let got = matmul_with(&a, &b, &Pool::new(threads));
+                assert_eq!(got, want, "matmul {m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_nt_and_tn_are_bit_identical_to_serial() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(200, 256, 1.0, &mut rng);
+        let b = Mat::randn(96, 256, 1.0, &mut rng);
+        let want_nt = matmul_nt_serial(&a, &b);
+        let x = Mat::randn(1024, 96, 1.0, &mut rng);
+        let want_tn = matmul_tn_serial(&x, &x);
+        for threads in [2usize, 4, 7] {
+            let pool = Pool::new(threads);
+            assert_eq!(matmul_nt_with(&a, &b, &pool), want_nt, "nt threads={threads}");
+            assert_eq!(matmul_tn_with(&x, &x, &pool), want_tn, "tn threads={threads}");
+        }
+    }
+
+    #[test]
+    fn skinny_nt_uses_dot_path_on_any_pool() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(3, 64, 1.0, &mut rng);
+        let b = Mat::randn(40, 64, 1.0, &mut rng);
+        assert_eq!(matmul_nt_with(&a, &b, &Pool::new(4)), matmul_nt_serial(&a, &b));
+    }
+
+    #[test]
+    fn degenerate_shapes_survive_the_pool() {
+        let pool = Pool::new(4);
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        let c = matmul_with(&a, &b, &pool);
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let a2 = Mat::zeros(4, 0);
+        let b2 = Mat::zeros(0, 3);
+        let c2 = matmul_with(&a2, &b2, &pool);
+        assert_eq!((c2.rows, c2.cols), (4, 3));
+        assert!(c2.data.iter().all(|&v| v == 0.0));
+    }
+}

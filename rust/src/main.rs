@@ -26,6 +26,12 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow!("--threads expects a non-negative integer, got '{t}'"))?;
+        qep::util::pool::set_global_threads(n);
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("gen-data") => gen_data(args),
         Some("quantize") => quantize(args),
@@ -46,11 +52,20 @@ USAGE:
   repro gen-data [--out artifacts/data] [--tokens 262144]
   repro quantize --model <tiny-s|tiny-m|tiny-l|path.qtz> --method <rtn|gptq|awq|quip>
                  --bits <2|3|4|8> [--group N] [--qep <alpha>] [--calib <wiki|ptb|c4>]
-                 [--seed N] [--out out.qtz]
+                 [--seed N] [--threads N] [--out out.qtz]
   repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks]
   repro exp      <fig1|fig2|fig3|table1|table2|table3|table4|appendix|all>
                  [--sizes s,m,l] [--fast] [--artifacts DIR]
   repro info
+
+THREADS:
+  --threads N    Worker threads for the parallel execution engine (GEMMs,
+                 Hessian builds, per-layer fan-out, GPTQ row sweeps).
+                 Accepted by every subcommand. 0 or omitted = use all
+                 hardware threads. Output is bit-identical for every N —
+                 per-layer seeds derive from layer names and all parallel
+                 reductions have a fixed order — so the knob only trades
+                 wall-clock time.
 ";
 
 fn gen_data(args: &Args) -> Result<()> {
@@ -94,6 +109,8 @@ fn quantize(args: &Args) -> Result<()> {
 
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
     let calib = env.calib_tokens(flavor, model.cfg.seq_len, seed);
+    // `--threads` is handled once in dispatch() (set_global_threads);
+    // threads: 0 in the default config resolves to that global setting.
     let cfg = PipelineConfig {
         quant,
         method,

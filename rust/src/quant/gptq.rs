@@ -6,9 +6,18 @@
 //! implement the blocked "lazy batch" variant from the original paper:
 //! within a block of `block_size` columns errors propagate immediately;
 //! the tail update for the remaining columns is a single GEMM per block.
+//!
+//! Parallelism: the column order is a strict data dependence, but *rows*
+//! are independent throughout — row `r`'s grid refits, rounding decisions,
+//! and in-block compensation touch only row `r` of W and of the error
+//! buffer (the Cholesky factor is shared read-only). Each lazy block
+//! therefore sweeps its rows across the work-stealing pool, and the tail
+//! update runs through the parallel GEMM. Per-row operation order is
+//! untouched, so results stay bit-identical to the serial sweep.
 
 use super::{grid::GroupGrid, LayerCtx, QuantConfig, Quantizer};
 use crate::linalg::{matmul, upper_cholesky_of_inverse, Mat};
+use crate::util::pool::{self, SendPtr};
 use anyhow::{Context, Result};
 
 pub struct Gptq {
@@ -80,37 +89,55 @@ impl Quantizer for Gptq {
         // *current* (error-compensated) weights — as in the reference code.
         let mut grids: Vec<GroupGrid> = vec![GroupGrid { scale: 1.0, zero: 0.0, qmax: 1 }; n];
 
+        let pool = pool::global();
+        let grain = pool::chunk(n, pool.threads());
         let mut err = Mat::zeros(n, bs);
         for b0 in (0..d).step_by(bs) {
             let b1 = (b0 + bs).min(d);
             let bw = b1 - b0;
             err.data[..n * bs].fill(0.0);
 
-            for j in b0..b1 {
-                let ujj = u.at(j, j);
-                let urow = u.row(j);
-                if j % glen == 0 {
-                    // New group: fit each row's grid on current values.
-                    let g1 = (j + glen).min(d);
-                    for (r, grid) in grids.iter_mut().enumerate() {
-                        *grid = GroupGrid::fit(&wq.row(r)[j..g1], cfg.bits);
+            // Row-parallel block sweep. Each worker owns a disjoint row
+            // range of W, the error buffer, and the grid table; the column
+            // loop runs serially *within* each row, preserving the exact
+            // serial compensation order per row.
+            {
+                let wq_base = SendPtr::new(wq.data.as_mut_ptr());
+                let err_base = SendPtr::new(err.data.as_mut_ptr());
+                let grids_base = SendPtr::new(grids.as_mut_ptr());
+                let u_ref = &u;
+                pool.run(n, grain, |r0, r1| {
+                    for r in r0..r1 {
+                        // Sound: rows are disjoint across pool chunks.
+                        let wr = unsafe { std::slice::from_raw_parts_mut(wq_base.0.add(r * d), d) };
+                        let er = unsafe { std::slice::from_raw_parts_mut(err_base.0.add(r * bs), bs) };
+                        let grid = unsafe { &mut *grids_base.0.add(r) };
+                        for j in b0..b1 {
+                            if j % glen == 0 {
+                                // New group: fit the row's grid on current
+                                // (error-compensated) values.
+                                let g1 = (j + glen).min(d);
+                                *grid = GroupGrid::fit(&wr[j..g1], cfg.bits);
+                            }
+                            let ujj = u_ref.at(j, j);
+                            let urow = u_ref.row(j);
+                            let v = wr[j];
+                            let q = grid.snap(v);
+                            wr[j] = q;
+                            let e = (v - q) / ujj;
+                            er[j - b0] = e;
+                            // Immediate in-block compensation.
+                            for c in j + 1..b1 {
+                                wr[c] -= e * urow[c];
+                            }
+                        }
                     }
-                }
-                for r in 0..n {
-                    let wr = &mut wq.data[r * d..(r + 1) * d];
-                    let v = wr[j];
-                    let q = grids[r].snap(v);
-                    wr[j] = q;
-                    let e = (v - q) / ujj;
-                    err.data[r * bs + (j - b0)] = e;
-                    // Immediate in-block compensation.
-                    for c in j + 1..b1 {
-                        wr[c] -= e * urow[c];
-                    }
-                }
+                });
             }
 
-            // Lazy tail update: W[:, b1..] -= Err · U[b0..b1, b1..].
+            // Lazy tail update: W[:, b1..] -= Err · U[b0..b1, b1..]. The
+            // GEMM goes through the parallel kernel; the subtraction is
+            // row-partitioned over the pool.
             if b1 < d {
                 let err_blk = if bw == bs {
                     err.clone()
@@ -122,12 +149,21 @@ impl Quantizer for Gptq {
                     u_tail.row_mut(bi).copy_from_slice(&u.row(j)[b1..]);
                 }
                 let upd = matmul(&err_blk, &u_tail);
-                for r in 0..n {
-                    let wr = &mut wq.data[r * d + b1..(r + 1) * d];
-                    for (c, val) in wr.iter_mut().enumerate() {
-                        *val -= upd.at(r, c);
+                let tail = d - b1;
+                let wq_base = SendPtr::new(wq.data.as_mut_ptr());
+                let upd_ref = &upd;
+                pool.run(n, grain, |r0, r1| {
+                    for r in r0..r1 {
+                        // Sound: rows are disjoint across pool chunks.
+                        let wr = unsafe {
+                            std::slice::from_raw_parts_mut(wq_base.0.add(r * d + b1), tail)
+                        };
+                        let ur = upd_ref.row(r);
+                        for (val, &u_val) in wr.iter_mut().zip(ur.iter()) {
+                            *val -= u_val;
+                        }
                     }
-                }
+                });
             }
         }
 

@@ -13,11 +13,18 @@
 //! Weight parameter order is canonical (see `param_order`) and mirrored by
 //! `python/compile/aot.py`; changing one side breaks the cross-check test.
 
-use super::executor::{literal_to_mat, mat_to_literal, tokens_to_literal, vec_to_literal, HloExecutable, PjrtRuntime};
+#[cfg(feature = "pjrt")]
+use super::executor::{
+    literal_to_mat, mat_to_literal, tokens_to_literal, vec_to_literal, HloExecutable, PjrtRuntime,
+};
+#[cfg(feature = "pjrt")]
 use crate::linalg::Mat;
+#[cfg(feature = "pjrt")]
 use crate::model::ops::next_token_nll;
 use crate::model::{Model, ModelConfig};
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 pub struct ArtifactRegistry {
@@ -95,6 +102,7 @@ pub fn param_order(cfg: &ModelConfig) -> Vec<String> {
 }
 
 /// Collect a model's weights as literals in canonical order.
+#[cfg(feature = "pjrt")]
 fn weight_literals(model: &Model) -> Result<Vec<xla::Literal>> {
     let mut lits = Vec::new();
     lits.push(mat_to_literal(&model.embed)?);
@@ -116,12 +124,14 @@ fn weight_literals(model: &Model) -> Result<Vec<xla::Literal>> {
 
 /// A model served through the compiled PJRT forward artifact. Weights are
 /// converted to literals once; per request only the token literal changes.
+#[cfg(feature = "pjrt")]
 pub struct PjrtModel {
     exe: HloExecutable,
     weights: Vec<xla::Literal>,
     pub cfg: ModelConfig,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtModel {
     /// Compile the artifact and bind `model`'s weights (which may be a
     /// quantized variant — same shapes, different values).
@@ -167,6 +177,7 @@ impl PjrtModel {
 }
 
 /// The xla crate's `Literal` is not `Clone`; round-trip through raw data.
+#[cfg(feature = "pjrt")]
 fn shallow_copy(lit: &xla::Literal) -> Result<xla::Literal> {
     let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
     let dims: Vec<i64> = shape.dims().to_vec();
@@ -205,9 +216,12 @@ mod tests {
         assert_eq!(names[0], "embed");
         assert_eq!(names[2], "blocks.0.attn_norm");
         assert_eq!(names.last().unwrap(), "final_norm");
-        // Count matches weight_literals emission.
-        let model = Model::random(&cfg, 0);
-        let lits = weight_literals(&model).unwrap();
-        assert_eq!(lits.len(), names.len());
+        // Count matches weight_literals emission (needs the xla crate).
+        #[cfg(feature = "pjrt")]
+        {
+            let model = Model::random(&cfg, 0);
+            let lits = weight_literals(&model).unwrap();
+            assert_eq!(lits.len(), names.len());
+        }
     }
 }

@@ -1,96 +1,149 @@
 //! Thin, typed wrapper over the `xla` crate's PJRT client.
+//!
+//! The `xla` crate binds a vendored `xla_extension` build that is not
+//! present in every build environment, so the real client lives behind the
+//! `pjrt` cargo feature (enabling it additionally requires adding the
+//! `xla` dependency to `Cargo.toml`). Without the feature this module
+//! compiles a stub with the same surface whose constructor reports the
+//! runtime as unavailable; everything else in the repo — quantization,
+//! QEP, eval, experiments — is pure Rust and never needs it.
 
-use crate::linalg::Mat;
-use anyhow::{anyhow, Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::linalg::Mat;
+    use anyhow::{anyhow, Context, Result};
+    use std::path::Path;
 
-/// One PJRT client per process; executables borrow it.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(PjrtRuntime { client })
+    /// One PJRT client per process; executables borrow it.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(PjrtRuntime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load<P: AsRef<Path>>(&self, path: P) -> Result<HloExecutable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            Ok(HloExecutable { exe, name: path.display().to_string() })
+        }
     }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load<P: AsRef<Path>>(&self, path: P) -> Result<HloExecutable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        Ok(HloExecutable { exe, name: path.display().to_string() })
+    /// A compiled artifact ready to execute. JAX lowers with
+    /// `return_tuple=True`, so outputs are always a tuple literal.
+    pub struct HloExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl HloExecutable {
+        /// Execute with raw literals; returns the decomposed output tuple.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+            out.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+        }
+    }
+
+    /// Convert a row-major matrix into an f32 literal of shape [rows, cols].
+    pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+        xla::Literal::vec1(&m.data)
+            .reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Convert a 1-D f32 slice into a literal.
+    pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    /// Tokens as an i32 literal of shape [n].
+    pub fn tokens_to_literal(tokens: &[u32]) -> xla::Literal {
+        let t: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        xla::Literal::vec1(&t)
+    }
+
+    /// Read an f32 literal of any shape back into (shape, data).
+    pub fn literal_to_f32(lit: &xla::Literal) -> Result<(Vec<usize>, Vec<f32>)> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal data: {e:?}"))?;
+        Ok((dims, data))
+    }
+
+    /// Read a rank-2 f32 literal into a Mat.
+    pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
+        let (dims, data) = literal_to_f32(lit)?;
+        match dims.len() {
+            2 => Ok(Mat::from_vec(dims[0], dims[1], data)),
+            // Accept [1, r, c] / [r*c] shapes defensively.
+            3 if dims[0] == 1 => Ok(Mat::from_vec(dims[1], dims[2], data)),
+            _ => Err(anyhow!("expected rank-2 literal, got {dims:?}")),
+        }
     }
 }
 
-/// A compiled artifact ready to execute. JAX lowers with
-/// `return_tuple=True`, so outputs are always a tuple literal.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(feature = "pjrt")]
+pub use real::*;
 
-impl HloExecutable {
-    /// Execute with raw literals; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
-        out.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use anyhow::{anyhow, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+         (requires the vendored `xla` crate)";
+
+    /// Stub PJRT client compiled when the `pjrt` feature is off. Mirrors
+    /// the real surface so callers (`repro info`, experiment fallbacks)
+    /// degrade gracefully instead of failing to build.
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (no `pjrt` feature)".to_string()
+        }
+
+        pub fn load<P: AsRef<Path>>(&self, _path: P) -> Result<HloExecutable> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+    }
+
+    /// Stub executable; never constructible without the `pjrt` feature.
+    pub struct HloExecutable {
+        pub name: String,
     }
 }
 
-/// Convert a row-major matrix into an f32 literal of shape [rows, cols].
-pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
-    xla::Literal::vec1(&m.data)
-        .reshape(&[m.rows as i64, m.cols as i64])
-        .map_err(|e| anyhow!("reshape literal: {e:?}"))
-}
-
-/// Convert a 1-D f32 slice into a literal.
-pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-/// Tokens as an i32 literal of shape [n].
-pub fn tokens_to_literal(tokens: &[u32]) -> xla::Literal {
-    let t: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
-    xla::Literal::vec1(&t)
-}
-
-/// Read an f32 literal of any shape back into (shape, data).
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<(Vec<usize>, Vec<f32>)> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal data: {e:?}"))?;
-    Ok((dims, data))
-}
-
-/// Read a rank-2 f32 literal into a Mat.
-pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
-    let (dims, data) = literal_to_f32(lit)?;
-    match dims.len() {
-        2 => Ok(Mat::from_vec(dims[0], dims[1], data)),
-        // Accept [1, r, c] / [r*c] shapes defensively.
-        3 if dims[0] == 1 => Ok(Mat::from_vec(dims[1], dims[2], data)),
-        _ => Err(anyhow!("expected rank-2 literal, got {dims:?}")),
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

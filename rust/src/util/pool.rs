@@ -1,0 +1,286 @@
+//! Work-stealing parallel execution substrate for the PTQ hot path.
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Bit-identical results to the serial path.** Reproducibility is the
+//!    whole point of this repo, so the pool never changes *what* is
+//!    computed — only *who* computes it. Callers partition work into
+//!    disjoint output regions (rows of a GEMM, independent layers) and each
+//!    region is processed with exactly the serial kernel's floating-point
+//!    operation order. No atomic float reductions, ever.
+//! 2. **No dependencies.** The environment is offline; everything is built
+//!    on `std::thread::scope` + atomics.
+//! 3. **No oversubscription.** Work executed *inside* a pool worker that
+//!    itself calls into the pool runs inline (a thread-local flag marks
+//!    pool context), so nested parallelism — e.g. a GEMM inside a
+//!    parallel per-layer quantization — degrades gracefully to the serial
+//!    kernel instead of spawning threads quadratically.
+//!
+//! Scheduling is chunked self-stealing: work items `[0, n)` are split into
+//! grain-sized chunks published through a shared atomic cursor, and every
+//! worker (including the calling thread) steals the next chunk when it
+//! finishes its current one. Fast workers therefore take more chunks —
+//! the load balancing of a work-stealing deque without the deque.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide default worker count. 0 means "ask the OS"
+/// (`available_parallelism`). Set from the `repro` CLI via `--threads`.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True while the current thread is executing inside a pool worker.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Number of hardware threads the OS reports (>= 1).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Set the process-wide default worker count (0 = auto). This only affects
+/// scheduling; results are bit-identical for every setting.
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The process-wide default worker count, resolving 0 to the hardware.
+pub fn global_threads() -> usize {
+    match GLOBAL_THREADS.load(Ordering::Relaxed) {
+        0 => available_parallelism(),
+        n => n,
+    }
+}
+
+/// A pool handle using the process-wide default worker count.
+pub fn global() -> Pool {
+    Pool::new(0)
+}
+
+/// Default stealing grain for `n` items on `threads` workers: ~4 chunks
+/// per worker so fast workers can steal from slow ones, never below 1.
+pub fn chunk(n: usize, threads: usize) -> usize {
+    n.div_ceil(threads.max(1) * 4).max(1)
+}
+
+/// Shared mutable base pointer handed to pool workers.
+///
+/// Safety contract: workers may only dereference *disjoint* regions derived
+/// from this pointer (e.g. distinct row ranges of a matrix). The wrapper
+/// exists purely to move the pointer across the `Send`/`Sync` boundary of
+/// scoped threads; every dereference site stays `unsafe` and local.
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+}
+
+/// A lightweight handle on the execution substrate. Cheap to copy; threads
+/// are spawned scoped per call (no idle spinning between calls).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// `threads = 0` resolves to the process-wide default
+    /// ([`global_threads`]), which itself defaults to the hardware count.
+    pub fn new(threads: usize) -> Pool {
+        let t = if threads == 0 { global_threads() } else { threads };
+        Pool { threads: t.max(1) }
+    }
+
+    /// A pool that always runs inline on the calling thread.
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(start, end)` over every grain-sized chunk of `[0, n)`,
+    /// stealing chunks dynamically across `self.threads()` workers.
+    ///
+    /// `f` must only touch state owned by its `[start, end)` range; chunks
+    /// are disjoint, so disjoint-range writers need no further
+    /// synchronization. Runs inline when a single worker suffices or when
+    /// already inside a pool worker.
+    pub fn run<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        let workers = self.threads.min(n.div_ceil(grain));
+        if workers <= 1 || IN_POOL.with(|c| c.get()) {
+            f(0, n);
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let cursor_ref = &cursor;
+        let f_ref = &f;
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(move || {
+                    IN_POOL.with(|c| c.set(true));
+                    steal_loop(cursor_ref, n, grain, f_ref);
+                });
+            }
+            // The calling thread is worker 0.
+            IN_POOL.with(|c| c.set(true));
+            steal_loop(cursor_ref, n, grain, f_ref);
+            IN_POOL.with(|c| c.set(false));
+        });
+    }
+
+    /// Evaluate `f(0), …, f(n-1)` across the pool and return the results in
+    /// index order. Each item runs exactly once; output order is
+    /// deterministic regardless of which worker computed what.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 || IN_POOL.with(|c| c.get()) {
+            return (0..n).map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let slots_ref = &slots;
+        let cursor_ref = &cursor;
+        let f_ref = &f;
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(move || {
+                    IN_POOL.with(|c| c.set(true));
+                    map_loop(cursor_ref, n, f_ref, slots_ref);
+                });
+            }
+            IN_POOL.with(|c| c.set(true));
+            map_loop(cursor_ref, n, f_ref, slots_ref);
+            IN_POOL.with(|c| c.set(false));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("par_map: unfilled slot"))
+            .collect()
+    }
+}
+
+fn steal_loop<F: Fn(usize, usize) + Sync>(cursor: &AtomicUsize, n: usize, grain: usize, f: &F) {
+    loop {
+        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        f(start, (start + grain).min(n));
+    }
+}
+
+fn map_loop<T: Send, F: Fn(usize) -> T + Sync>(
+    cursor: &AtomicUsize,
+    n: usize,
+    f: &F,
+    slots: &[Mutex<Option<T>>],
+) {
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        let v = f(i);
+        *slots[i].lock().unwrap() = Some(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let pool = Pool::new(4);
+        let href = &hits;
+        pool.run(n, 7, |start, end| {
+            for i in start..end {
+                href[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn run_handles_empty_and_tiny_ranges() {
+        let pool = Pool::new(4);
+        pool.run(0, 8, |_, _| panic!("must not be called"));
+        let hit = AtomicU64::new(0);
+        pool.run(1, 128, |s, e| {
+            assert_eq!((s, e), (0, 1));
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn par_map_preserves_index_order() {
+        for threads in [1usize, 2, 4, 9] {
+            let pool = Pool::new(threads);
+            let out = pool.par_map(37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let pool = Pool::new(4);
+        let total = AtomicU64::new(0);
+        let tref = &total;
+        pool.run(8, 1, |s, e| {
+            // Nested use of the pool from inside a worker must degrade to
+            // inline execution (and must not spawn recursively).
+            let inner = Pool::new(4);
+            inner.run(4, 1, |is, ie| {
+                tref.fetch_add((ie - is) as u64 * (e - s) as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn chunk_grain_is_sane() {
+        assert_eq!(chunk(0, 4), 1);
+        assert_eq!(chunk(16, 4), 1);
+        assert!(chunk(1000, 4) >= 32);
+        assert_eq!(chunk(5, 0), 2);
+    }
+
+    #[test]
+    fn global_threads_resolves_zero_to_hardware() {
+        assert!(available_parallelism() >= 1);
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::new(3).threads(), 3);
+        assert_eq!(Pool::serial().threads(), 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! GPTQ edge cases the row-parallel refactor must not break: dead-column
+//! pinning (zero Hessian diagonal), `act_order` permutation round-trips,
+//! and lazy-batch block sizes that do not divide the column count.
+
+use qep::linalg::{matmul, Mat};
+use qep::quant::gptq::Gptq;
+use qep::quant::{LayerCtx, QuantConfig, Quantizer};
+use qep::util::pool;
+use qep::util::rng::Rng;
+
+/// Correlated activations (the regime where compensation matters).
+fn make_ctx(m: usize, d: usize, seed: u64) -> LayerCtx {
+    let mut rng = Rng::new(seed);
+    let base = Mat::randn(m, d, 1.0, &mut rng);
+    let mix = Mat::randn(d, d, 0.4, &mut rng);
+    let mut x = matmul(&base, &mix);
+    for (v, b) in x.data.iter_mut().zip(base.data.iter()) {
+        *v += b;
+    }
+    LayerCtx::from_activations(&x, seed, "edge")
+}
+
+fn assert_all_close(a: &Mat, b: &Mat, tol: f32, label: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{label}: shape");
+    for (x, y) in a.data.iter().zip(b.data.iter()) {
+        assert!((x - y).abs() < tol, "{label}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn dead_columns_stay_pinned_and_deterministic() {
+    let mut rng = Rng::new(1);
+    let mut x = Mat::randn(128, 16, 1.0, &mut rng);
+    for t in 0..x.rows {
+        *x.at_mut(t, 3) = 0.0;
+        *x.at_mut(t, 11) = 0.0;
+    }
+    let ctx = LayerCtx::from_activations(&x, 0, "dead");
+    let w = Mat::randn(6, 16, 1.0, &mut rng);
+    let mut runs = Vec::new();
+    for rep in 0..2 {
+        let q = Gptq::default().quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+        for r in 0..q.rows {
+            assert_eq!(q.at(r, 3), 0.0, "rep={rep} row {r} col 3");
+            assert_eq!(q.at(r, 11), 0.0, "rep={rep} row {r} col 11");
+        }
+        runs.push(q);
+    }
+    assert_eq!(runs[0], runs[1], "dead-column result not deterministic");
+}
+
+#[test]
+fn fully_dead_hessian_quantizes_to_zero_without_crashing() {
+    // Every calibration activation is zero: all diagonals get pinned, the
+    // damped identity keeps the Cholesky alive, and the output is the
+    // all-zero matrix.
+    let x = Mat::zeros(64, 8);
+    let ctx = LayerCtx::from_activations(&x, 0, "allzero");
+    let mut rng = Rng::new(2);
+    let w = Mat::randn(4, 8, 1.0, &mut rng);
+    let q = Gptq::default().quantize(&w, &QuantConfig::int(4), &ctx).unwrap();
+    assert!(q.data.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn act_order_roundtrip_recovers_weights_at_high_bits() {
+    // With 8 bits the grid is fine enough that quantize(permute(W)) then
+    // unpermute must land within a hair of W — any permutation bookkeeping
+    // bug (e.g. rows swept in a stale order after the parallel refactor)
+    // shows up as gross error here.
+    let mut rng = Rng::new(3);
+    let ctx = make_ctx(256, 24, 4);
+    let w = Mat::randn(6, 24, 1.0, &mut rng);
+    let g = Gptq { act_order: true, ..Default::default() };
+    let q = g.quantize(&w, &QuantConfig::int(8), &ctx).unwrap();
+    assert_eq!((q.rows, q.cols), (6, 24));
+    let rel = q.sub(&w).frob() / w.frob();
+    assert!(rel < 0.02, "act_order high-bit round-trip rel err {rel}");
+}
+
+/// The ONLY test in this binary that touches the process-wide thread
+/// setting (GPTQ's internal row sweep reads the global pool). Keeping all
+/// `set_global_threads` calls inside one `#[test]` means its forced-serial
+/// leg cannot be overwritten by a concurrently running test, so the
+/// serial-vs-parallel comparison stays meaningful under cargo's default
+/// parallel harness.
+#[test]
+fn sweep_is_bit_identical_across_forced_global_thread_counts() {
+    let mut rng = Rng::new(5);
+    let ctx = make_ctx(512, 32, 6);
+    let w = Mat::randn(8, 32, 1.0, &mut rng);
+    let mut dead_x = Mat::randn(128, 16, 1.0, &mut rng);
+    for t in 0..dead_x.rows {
+        *dead_x.at_mut(t, 7) = 0.0;
+    }
+    let dead_ctx = LayerCtx::from_activations(&dead_x, 0, "dead");
+    let dead_w = Mat::randn(6, 16, 1.0, &mut rng);
+
+    pool::set_global_threads(1);
+    let plain_serial = Gptq::default().quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+    let ordered_serial = Gptq { act_order: true, ..Default::default() }
+        .quantize(&w, &QuantConfig::int(3), &ctx)
+        .unwrap();
+    let dead_serial = Gptq::default().quantize(&dead_w, &QuantConfig::int(3), &dead_ctx).unwrap();
+
+    pool::set_global_threads(4);
+    let plain_pooled = Gptq::default().quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+    let ordered_pooled = Gptq { act_order: true, ..Default::default() }
+        .quantize(&w, &QuantConfig::int(3), &ctx)
+        .unwrap();
+    let dead_pooled = Gptq::default().quantize(&dead_w, &QuantConfig::int(3), &dead_ctx).unwrap();
+
+    pool::set_global_threads(0);
+    assert_eq!(plain_serial, plain_pooled, "plain sweep");
+    assert_eq!(ordered_serial, ordered_pooled, "act_order sweep");
+    assert_eq!(dead_serial, dead_pooled, "dead-column sweep");
+    for r in 0..dead_pooled.rows {
+        assert_eq!(dead_pooled.at(r, 7), 0.0, "dead column unpinned at row {r}");
+    }
+}
+
+#[test]
+fn block_size_not_dividing_columns_matches_unblocked() {
+    // d = 37 is prime: every block size below exercises a ragged final
+    // block; all must agree with the unblocked sweep up to f32 noise.
+    let mut rng = Rng::new(7);
+    let ctx = make_ctx(256, 37, 8);
+    let w = Mat::randn(8, 37, 1.0, &mut rng);
+    let cfg = QuantConfig::int(4);
+    let unblocked = Gptq { block_size: 4096, ..Default::default() }
+        .quantize(&w, &cfg, &ctx)
+        .unwrap();
+    for bs in [1usize, 5, 16, 36] {
+        let blocked = Gptq { block_size: bs, ..Default::default() }
+            .quantize(&w, &cfg, &ctx)
+            .unwrap();
+        assert_all_close(&blocked, &unblocked, 2e-3, &format!("block_size={bs}"));
+    }
+}
+
+#[test]
+fn group_boundaries_misaligned_with_blocks_still_work() {
+    // Group length 10 on d = 37 with block size 16: group refits land
+    // mid-block and the last group is ragged. The sweep must stay finite,
+    // deterministic, and better than not compensating at all.
+    let mut rng = Rng::new(9);
+    let ctx = make_ctx(256, 37, 10);
+    let w = Mat::randn(8, 37, 1.0, &mut rng);
+    let cfg = QuantConfig::int_group(3, 10);
+    let g = Gptq { block_size: 16, ..Default::default() };
+    let a = g.quantize(&w, &cfg, &ctx).unwrap();
+    let b = g.quantize(&w, &cfg, &ctx).unwrap();
+    assert_eq!(a, b, "misaligned groups must stay deterministic");
+    assert!(a.data.iter().all(|v| v.is_finite()));
+    let unblocked = Gptq { block_size: 4096, ..Default::default() }
+        .quantize(&w, &cfg, &ctx)
+        .unwrap();
+    assert_all_close(&a, &unblocked, 2e-3, "grouped blocked vs unblocked");
+}

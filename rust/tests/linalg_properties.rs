@@ -1,0 +1,170 @@
+//! Property tests for the GEMM kernels: the dispatching entry points and
+//! the pooled kernels must match a naive triple-loop reference on random
+//! rectangular shapes, survive degenerate (empty / 1×n / n×1) shapes, and
+//! stay bit-identical to the serial kernels for every thread count.
+
+use qep::linalg::{
+    matmul, matmul_nt, matmul_nt_serial, matmul_nt_with, matmul_serial, matmul_tn,
+    matmul_tn_serial, matmul_tn_with, matmul_with, Mat,
+};
+use qep::util::pool::Pool;
+use qep::util::rng::Rng;
+
+/// f64-accumulated reference C = A·B.
+fn naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                s += a.at(i, k) as f64 * b.at(k, j) as f64;
+            }
+            *c.at_mut(i, j) = s as f32;
+        }
+    }
+    c
+}
+
+fn assert_close(a: &Mat, b: &Mat, tol: f32, label: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{label}: shape");
+    for (x, y) in a.data.iter().zip(b.data.iter()) {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{label}: {x} vs {y}"
+        );
+    }
+}
+
+/// Random rectangular shapes plus every degenerate axis combination.
+const SHAPES: [(usize, usize, usize); 14] = [
+    (1, 1, 1),
+    (1, 64, 1),
+    (1, 17, 9),
+    (9, 17, 1),
+    (7, 1, 5),
+    (8, 8, 8),
+    (33, 129, 65),
+    (64, 300, 48),
+    (128, 64, 256),
+    (0, 5, 3),
+    (5, 0, 3),
+    (5, 3, 0),
+    (0, 0, 0),
+    (2, 512, 512),
+];
+
+#[test]
+fn matmul_matches_naive_on_all_shapes() {
+    let mut rng = Rng::new(1);
+    for (m, k, n) in SHAPES {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let want = naive(&a, &b);
+        assert_close(&matmul(&a, &b), &want, 1e-4, &format!("matmul {m}x{k}x{n}"));
+        assert_close(
+            &matmul_serial(&a, &b),
+            &want,
+            1e-4,
+            &format!("matmul_serial {m}x{k}x{n}"),
+        );
+    }
+}
+
+#[test]
+fn matmul_nt_matches_naive_on_all_shapes() {
+    let mut rng = Rng::new(2);
+    for (m, k, n) in SHAPES {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(n, k, 1.0, &mut rng); // [n, k]: rows dotted with rows
+        let want = naive(&a, &b.transpose());
+        assert_close(&matmul_nt(&a, &b), &want, 1e-4, &format!("matmul_nt {m}x{k}x{n}"));
+        assert_close(
+            &matmul_nt_serial(&a, &b),
+            &want,
+            1e-4,
+            &format!("matmul_nt_serial {m}x{k}x{n}"),
+        );
+    }
+}
+
+#[test]
+fn matmul_tn_matches_naive_on_all_shapes() {
+    let mut rng = Rng::new(3);
+    for (m, k, n) in SHAPES {
+        let a = Mat::randn(k, m, 1.0, &mut rng); // [k, m]: transposed operand
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let want = naive(&a.transpose(), &b);
+        assert_close(&matmul_tn(&a, &b), &want, 1e-4, &format!("matmul_tn {m}x{k}x{n}"));
+        assert_close(
+            &matmul_tn_serial(&a, &b),
+            &want,
+            1e-4,
+            &format!("matmul_tn_serial {m}x{k}x{n}"),
+        );
+    }
+}
+
+#[test]
+fn pooled_kernels_are_bit_identical_to_serial_on_all_shapes() {
+    let mut rng = Rng::new(4);
+    for (m, k, n) in SHAPES {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let bt = Mat::randn(n, k, 1.0, &mut rng);
+        let at = Mat::randn(k, m, 1.0, &mut rng);
+        let want = matmul_serial(&a, &b);
+        let want_nt = matmul_nt_serial(&a, &bt);
+        let want_tn = matmul_tn_serial(&at, &b);
+        for threads in [2usize, 3, 4, 8] {
+            let pool = Pool::new(threads);
+            assert_eq!(
+                matmul_with(&a, &b, &pool),
+                want,
+                "matmul {m}x{k}x{n} t={threads}"
+            );
+            assert_eq!(
+                matmul_nt_with(&a, &bt, &pool),
+                want_nt,
+                "matmul_nt {m}x{k}x{n} t={threads}"
+            );
+            assert_eq!(
+                matmul_tn_with(&at, &b, &pool),
+                want_tn,
+                "matmul_tn {m}x{k}x{n} t={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hessian_build_is_exactly_symmetric_under_the_pool() {
+    // XᵀX: element (i,j) and (j,i) accumulate the same products in the
+    // same k order on (possibly) different workers; IEEE multiplication
+    // commutes, so the result must be exactly symmetric — a direct probe
+    // of the fixed-reduction-order guarantee.
+    let mut rng = Rng::new(5);
+    for (tokens, d) in [(300, 33), (1024, 96)] {
+        let x = Mat::randn(tokens, d, 1.0, &mut rng);
+        for threads in [1usize, 4] {
+            let h = matmul_tn_with(&x, &x, &Pool::new(threads));
+            assert_eq!((h.rows, h.cols), (d, d));
+            for i in 0..d {
+                assert!(h.at(i, i) >= 0.0, "diag ({i},{i}) negative");
+                for j in 0..i {
+                    assert_eq!(h.at(i, j), h.at(j, i), "asymmetry at ({i},{j}) t={threads}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_inputs_give_exactly_zero_outputs() {
+    let pool = Pool::new(4);
+    let a = Mat::zeros(100, 200);
+    let b = Mat::zeros(200, 50);
+    for v in matmul_with(&a, &b, &pool).data {
+        assert_eq!(v, 0.0);
+    }
+}

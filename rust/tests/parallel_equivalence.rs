@@ -1,0 +1,136 @@
+//! Serial-equivalence suite for the parallel execution engine.
+//!
+//! The contract under test: the `threads` knob NEVER changes results. For
+//! every method × bit-width × QEP setting, a pipeline run with `threads=1`
+//! must produce a model bit-identical to `threads=4` — same floats, same
+//! serialized `.qtz` bytes — and runs must stay deterministic given a seed
+//! while the pool is active. This is what lets the repo claim the paper's
+//! "lightweight and scalable" axis without giving up reproducibility.
+
+use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::model::{BlockWeights, Model, ModelConfig};
+use qep::quant::{Method, QuantConfig};
+use qep::util::rng::Rng;
+
+fn setup() -> (Model, Vec<u32>) {
+    let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 1);
+    let mut rng = Rng::new(2);
+    let tokens: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+    (model, tokens)
+}
+
+fn quantize(
+    model: &Model,
+    tokens: &[u32],
+    method: Method,
+    bits: u32,
+    qep_alpha: Option<f32>,
+    threads: usize,
+) -> Model {
+    let cfg = PipelineConfig {
+        quant: QuantConfig::int(bits),
+        method,
+        qep_alpha,
+        seed: 42,
+        threads,
+        ..Default::default()
+    };
+    Pipeline::new(cfg).run(model, tokens).unwrap().model
+}
+
+fn assert_models_bit_identical(a: &Model, b: &Model, label: &str) {
+    assert_eq!(a.embed, b.embed, "{label}: embed");
+    assert_eq!(a.final_norm, b.final_norm, "{label}: final_norm");
+    assert_eq!(a.blocks.len(), b.blocks.len(), "{label}: block count");
+    for (i, (ba, bb)) in a.blocks.iter().zip(b.blocks.iter()).enumerate() {
+        for name in BlockWeights::LINEAR_NAMES {
+            assert_eq!(
+                ba.linear(name),
+                bb.linear(name),
+                "{label}: block {i} {name} differs between thread counts"
+            );
+        }
+        assert_eq!(ba.attn_norm, bb.attn_norm, "{label}: block {i} attn_norm");
+        assert_eq!(ba.mlp_norm, bb.mlp_norm, "{label}: block {i} mlp_norm");
+    }
+}
+
+#[test]
+fn every_method_bits_qep_combo_is_thread_count_invariant() {
+    let (model, tokens) = setup();
+    for method in Method::all() {
+        for bits in [3u32, 4] {
+            for qep_alpha in [None, Some(0.5)] {
+                let label = format!("{method:?} int{bits} qep={qep_alpha:?}");
+                let serial = quantize(&model, &tokens, method, bits, qep_alpha, 1);
+                let pooled = quantize(&model, &tokens, method, bits, qep_alpha, 4);
+                assert_models_bit_identical(&serial, &pooled, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_given_seed_under_the_pool() {
+    let (model, tokens) = setup();
+    for method in [Method::Gptq, Method::Quip] {
+        let a = quantize(&model, &tokens, method, 3, Some(0.5), 4);
+        let b = quantize(&model, &tokens, method, 3, Some(0.5), 4);
+        assert_models_bit_identical(&a, &b, &format!("{method:?} repeat @ threads=4"));
+    }
+}
+
+#[test]
+fn oversubscribed_and_odd_thread_counts_agree() {
+    // More workers than rows/layers, and a thread count that divides
+    // nothing evenly, must still match the serial reference.
+    let (model, tokens) = setup();
+    let serial = quantize(&model, &tokens, Method::Gptq, 3, Some(0.5), 1);
+    for threads in [3usize, 7, 16] {
+        let pooled = quantize(&model, &tokens, Method::Gptq, 3, Some(0.5), threads);
+        assert_models_bit_identical(&serial, &pooled, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn qtz_files_are_byte_identical_across_thread_counts() {
+    let (model, tokens) = setup();
+    let serial = quantize(&model, &tokens, Method::Gptq, 3, Some(0.5), 1);
+    let pooled = quantize(&model, &tokens, Method::Gptq, 3, Some(0.5), 4);
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("qep_parallel_equiv_t1.qtz");
+    let p4 = dir.join("qep_parallel_equiv_t4.qtz");
+    serial.save(&p1).unwrap();
+    pooled.save(&p4).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, ".qtz bytes differ between threads=1 and threads=4");
+}
+
+#[test]
+fn reports_match_across_thread_counts() {
+    // Recon errors and layer ordering in the report are part of the
+    // deterministic surface (timings are not).
+    let (model, tokens) = setup();
+    let cfg = |threads: usize| PipelineConfig {
+        quant: QuantConfig::int(3),
+        method: Method::Gptq,
+        qep_alpha: Some(0.5),
+        seed: 7,
+        threads,
+        ..Default::default()
+    };
+    let a = Pipeline::new(cfg(1)).run(&model, &tokens).unwrap().report;
+    let b = Pipeline::new(cfg(4)).run(&model, &tokens).unwrap().report;
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+        assert_eq!(la.name, lb.name, "layer order must be canonical");
+        assert_eq!(la.recon_error, lb.recon_error, "{}", la.name);
+        assert_eq!(la.alpha, lb.alpha, "{}", la.name);
+    }
+}

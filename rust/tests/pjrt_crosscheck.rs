@@ -5,7 +5,10 @@
 //!
 //! Gated on `artifacts/` being present (run `make artifacts`); without it
 //! each test is a no-op pass with a loud eprintln, so `cargo test` stays
-//! green on a fresh checkout.
+//! green on a fresh checkout. The whole file additionally requires the
+//! `pjrt` cargo feature (the `xla` crate is not in the default build).
+
+#![cfg(feature = "pjrt")]
 
 use qep::linalg::matmul_tn;
 use qep::model::{Forward, Model};

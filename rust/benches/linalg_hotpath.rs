@@ -6,8 +6,9 @@
 //! Run: `cargo bench --bench linalg_hotpath`
 
 use qep::linalg::{
-    fwht_inplace, matmul, matmul_nt, matmul_nt_serial, matmul_nt_with, matmul_tn,
-    matmul_tn_serial, matmul_tn_with, spd_inverse, upper_cholesky_of_inverse, Mat, Mat64,
+    cholesky_in_place_with, cholesky_unblocked, fwht_inplace, matmul, matmul_nt, matmul_nt_serial,
+    matmul_nt_with, matmul_tn, matmul_tn_serial, matmul_tn_with, spd_inverse, spd_solve_with,
+    upper_cholesky_of_inverse, Mat, Mat64, CHOL_BLOCK,
 };
 use qep::util::bench::{bench, black_box, fmt_time, BenchConfig};
 use qep::util::pool::{available_parallelism, Pool};
@@ -99,6 +100,60 @@ fn main() {
             gflops(flops, r.mean_s),
             base.mean_s / r.mean_s
         );
+    }
+
+    // Blocked SPD engine: serial (unblocked reference) vs blocked-pool
+    // Cholesky and multi-RHS spd_solve at the sizes where the QEP/GPTQ
+    // compensation lives. Results are bit-identical across all variants;
+    // only wall-clock differs.
+    println!("\n# blocked SPD engine (Cholesky / spd_solve on the pool)\n");
+    for n in [512usize, 1024] {
+        let b = Mat::randn(n, n, 1.0, &mut rng);
+        let h32 = matmul_tn(&b, &b);
+        let mut h = Mat64::zeros(n, n);
+        for (dst, src) in h.data.iter_mut().zip(h32.data.iter()) {
+            *dst = *src as f64;
+        }
+        h.add_diag(n as f64);
+        let rhs = Mat::randn(n, 64, 1.0, &mut rng).to_f64();
+
+        let base = bench(&format!("cholesky {n} serial (unblocked)"), cfg, || {
+            let mut c = h.clone();
+            cholesky_unblocked(&mut c).unwrap();
+            c
+        });
+        println!("{:<34} {:>10}", base.name, fmt_time(base.mean_s));
+        for threads in [2usize, 4, 8] {
+            let pool = Pool::new(threads);
+            let r = bench(&format!("cholesky {n} blocked t={threads}"), cfg, || {
+                let mut c = h.clone();
+                cholesky_in_place_with(&mut c, CHOL_BLOCK, &pool).unwrap();
+                c
+            });
+            println!(
+                "{:<34} {:>10}  ({:.2}x vs serial)",
+                r.name,
+                fmt_time(r.mean_s),
+                base.mean_s / r.mean_s
+            );
+        }
+
+        let sbase = bench(&format!("spd_solve {n}x{n}·{n}x64 serial"), cfg, || {
+            spd_solve_with(&h, &rhs, &Pool::serial()).unwrap()
+        });
+        println!("{:<34} {:>10}", sbase.name, fmt_time(sbase.mean_s));
+        for threads in [2usize, 4, 8] {
+            let pool = Pool::new(threads);
+            let r = bench(&format!("spd_solve {n} blocked-pool t={threads}"), cfg, || {
+                spd_solve_with(&h, &rhs, &pool).unwrap()
+            });
+            println!(
+                "{:<34} {:>10}  ({:.2}x vs serial)",
+                r.name,
+                fmt_time(r.mean_s),
+                sbase.mean_s / r.mean_s
+            );
+        }
     }
 
     let x = Mat::randn(3072, 256, 1.0, &mut rng);

@@ -1,4 +1,12 @@
 //! The quantization pipeline driver.
+//!
+//! Parallelism happens at three nested levels, all on the same
+//! work-stealing pool and all bit-identical to serial execution: the
+//! per-layer fan-out here (wq/wk/wv and gate/up share captured inputs),
+//! the row-partitioned GEMM/Hessian kernels (`linalg::par`), and the
+//! blocked SPD engine behind the QEP correction and GPTQ's Cholesky
+//! factor (`linalg::chol`). Nested calls degrade gracefully: work issued
+//! from inside a pool worker runs inline instead of oversubscribing.
 
 use super::report::{LayerReport, PipelineReport};
 use crate::linalg::Mat;
@@ -222,7 +230,7 @@ impl Pipeline {
             x_full_cap
         };
         let hes = Stopwatch::start();
-        let layer_seed = self.cfg.seed ^ hash_name(&name);
+        let layer_seed = self.cfg.seed ^ crate::util::fnv1a(&name);
         let ctx = LayerCtx::from_activations(acts, layer_seed, &name);
         let hessian_s = hes.seconds();
 
@@ -255,16 +263,6 @@ impl Pipeline {
             LayerReport { name, recon_error, correction, hessian_s, quant_s, alpha },
         ))
     }
-}
-
-fn hash_name(name: &str) -> u64 {
-    // FNV-1a — stable across runs (layer seeds must be reproducible).
-    let mut h = 0xcbf29ce484222325u64;
-    for b in name.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

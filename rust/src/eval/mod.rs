@@ -1,11 +1,17 @@
 //! Evaluation harness: perplexity (Tables 1, 5–7), zero-shot multiple
 //! choice tasks (Tables 2, 8–10), and the per-block error-accumulation
 //! metric Δ_m (Fig. 2).
+//!
+//! Both perplexity and task scoring batch their independent forward
+//! passes across the work-stealing pool (`crate::util::pool`) with fixed
+//! reduction orders, so every metric is bit-identical for every thread
+//! count; `*_with` variants take the pool explicitly, plain names use the
+//! process-global one (`repro --threads`).
 
 pub mod delta;
 pub mod ppl;
 pub mod tasks;
 
 pub use delta::delta_per_block;
-pub use ppl::perplexity;
+pub use ppl::{perplexity, perplexity_chunked, perplexity_with, DEFAULT_CHUNK_SEGMENTS};
 pub use tasks::{Task, TaskFamily, TaskSet};

@@ -1,29 +1,87 @@
-//! Perplexity evaluation, chunked so memory stays flat on long corpora.
+//! Perplexity evaluation, chunked so memory stays flat on long corpora
+//! and batched across the work-stealing pool so long corpora evaluate at
+//! hardware speed.
+//!
+//! Calibration segments are independent by construction (each segment
+//! attends only within itself and segment-boundary positions carry no
+//! next-token target), so chunks of segments fan out across pool workers.
+//! The per-chunk forward passes are untouched and the final log-loss
+//! reduction runs in fixed chunk order on the calling thread, so the
+//! result is **bit-identical for every thread count** — same contract as
+//! the rest of the parallel engine.
 
 use crate::model::ops::next_token_nll;
 use crate::model::{Forward, Model};
+use crate::util::pool::{self, Pool};
 
-/// Next-token perplexity of `model` over `tokens` (trimmed to a multiple of
-/// seq_len). Processes `chunk_segments` segments per forward pass.
+/// Segments per forward pass used by [`perplexity`]. Large enough to
+/// amortize per-chunk setup, small enough that logits for one chunk
+/// ([`DEFAULT_CHUNK_SEGMENTS`] × seq_len × vocab floats) stay cache- and
+/// memory-friendly, and small enough to leave several chunks per worker
+/// for stealing on typical eval budgets.
+pub const DEFAULT_CHUNK_SEGMENTS: usize = 8;
+
+/// Next-token perplexity of `model` over `tokens` (trimmed to a multiple
+/// of seq_len), on the process-global pool. Forwards to
+/// [`perplexity_chunked`] with [`DEFAULT_CHUNK_SEGMENTS`].
+///
+/// Degenerate inputs are NaN-free by contract: with fewer tokens than one
+/// full segment — or a seq_len of 1, which leaves no position with a
+/// next-token target — there is nothing to score and the result is
+/// `f64::INFINITY` (no evidence of fit), never NaN and never a panic.
+///
+/// ```
+/// use qep::eval::perplexity;
+/// use qep::model::{Model, ModelConfig};
+/// let mut cfg = ModelConfig::new("doc", 16, 2, 2, 32);
+/// cfg.seq_len = 8;
+/// let model = Model::random(&cfg, 0);
+/// let tokens: Vec<u32> = (0..32).map(|t| (t % 251) as u32).collect();
+/// let ppl = perplexity(&model, &tokens);
+/// assert!(ppl.is_finite() && ppl > 1.0);
+/// // Fewer tokens than one segment: defined, not a panic.
+/// assert_eq!(perplexity(&model, &tokens[..3]), f64::INFINITY);
+/// ```
 pub fn perplexity(model: &Model, tokens: &[u32]) -> f64 {
-    perplexity_chunked(model, tokens, 8)
+    perplexity_chunked(model, tokens, DEFAULT_CHUNK_SEGMENTS)
 }
 
+/// [`perplexity`] with an explicit chunk size (segments per forward pass)
+/// on the process-global pool.
 pub fn perplexity_chunked(model: &Model, tokens: &[u32], chunk_segments: usize) -> f64 {
+    perplexity_with(model, tokens, chunk_segments, &pool::global())
+}
+
+/// [`perplexity_chunked`] on an explicit pool: chunks of `chunk_segments`
+/// segments run their forward passes in parallel; per-chunk (nll, count)
+/// pairs are reduced in chunk order, so at a fixed chunk size the value
+/// is bit-identical to the serial evaluation for every thread count.
+/// Different chunk sizes regroup the partial log-loss sums (different
+/// floating-point association) and may differ in the last bits — the
+/// thread-count knob is the bit-exact one, the chunk size is not.
+pub fn perplexity_with(model: &Model, tokens: &[u32], chunk_segments: usize, pool: &Pool) -> f64 {
     let seq = model.cfg.seq_len;
     let usable = tokens.len() / seq * seq;
-    assert!(usable > 0, "not enough tokens for one segment");
-    let f = Forward::new(&model.cfg);
-    let chunk = (chunk_segments.max(1)) * seq;
+    if usable == 0 {
+        return f64::INFINITY; // not enough tokens for one segment
+    }
+    let chunk = chunk_segments.max(1) * seq;
+    let pieces: Vec<&[u32]> = tokens[..usable].chunks(chunk).collect();
+    let partials = pool.par_map(pieces.len(), |i| {
+        let f = Forward::new(&model.cfg);
+        let logits = f.forward(model, pieces[i]);
+        next_token_nll(&logits, pieces[i], seq)
+    });
     let mut sum = 0.0f64;
     let mut count = 0usize;
-    for piece in tokens[..usable].chunks(chunk) {
-        let logits = f.forward(model, piece);
-        let (s, c) = next_token_nll(&logits, piece, seq);
+    for (s, c) in partials {
         sum += s;
         count += c;
     }
-    (sum / count.max(1) as f64).exp()
+    if count == 0 {
+        return f64::INFINITY; // seq_len == 1: every position is a boundary
+    }
+    (sum / count as f64).exp()
 }
 
 #[cfg(test)]
@@ -47,6 +105,38 @@ mod tests {
         let a = perplexity_chunked(&model, &tokens, 1);
         let b = perplexity_chunked(&model, &tokens, 20);
         assert!((a - b).abs() < 1e-6 * a, "{a} vs {b}");
+    }
+
+    #[test]
+    fn default_forwards_to_chunked() {
+        let (model, tokens) = setup();
+        let a = perplexity(&model, &tokens);
+        let b = perplexity_chunked(&model, &tokens, DEFAULT_CHUNK_SEGMENTS);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pooled_eval_is_bit_identical_to_serial() {
+        let (model, tokens) = setup();
+        let want = perplexity_with(&model, &tokens, 2, &Pool::serial());
+        for threads in [2usize, 3, 8] {
+            let got = perplexity_with(&model, &tokens, 2, &Pool::new(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_are_nan_free() {
+        let (model, tokens) = setup();
+        // Empty and shorter-than-one-segment inputs: +∞, no panic, no NaN.
+        assert_eq!(perplexity(&model, &[]), f64::INFINITY);
+        assert_eq!(perplexity(&model, &tokens[..1]), f64::INFINITY);
+        assert_eq!(perplexity(&model, &tokens[..7]), f64::INFINITY);
+        // seq_len = 1 leaves no next-token targets: +∞ as documented.
+        let mut cfg = model.cfg.clone();
+        cfg.seq_len = 1;
+        let m1 = Model::random(&cfg, 1);
+        assert_eq!(perplexity(&m1, &tokens[..4]), f64::INFINITY);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use crate::linalg::Mat;
 use crate::model::{Forward, Model};
 use crate::text::{ByteTokenizer, Corpus};
+use crate::util::pool::{self, Pool};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -81,17 +82,24 @@ impl TaskSet {
         TaskSet { family, tasks }
     }
 
-    /// Accuracy of `model` on this task set.
+    /// Accuracy of `model` on this task set, scored on the process-global
+    /// pool (tasks are independent forward passes).
     pub fn accuracy(&self, model: &Model) -> f64 {
+        self.accuracy_with(model, &pool::global())
+    }
+
+    /// [`TaskSet::accuracy`] on an explicit pool. Each task's scoring is
+    /// an independent forward pass, and the correct-count reduction is an
+    /// integer sum, so the result is identical for every thread count.
+    pub fn accuracy_with(&self, model: &Model, pool: &Pool) -> f64 {
         if self.tasks.is_empty() {
             return 0.0;
         }
-        let scorer = OptionScorer::new(model);
-        let correct = self
-            .tasks
-            .iter()
-            .filter(|t| scorer.pick(&t.prompt, &t.options) == t.correct)
-            .count();
+        let hits = pool.par_map(self.tasks.len(), |i| {
+            let t = &self.tasks[i];
+            OptionScorer::new(model).pick(&t.prompt, &t.options) == t.correct
+        });
+        let correct = hits.into_iter().filter(|&h| h).count();
         correct as f64 / self.tasks.len() as f64
     }
 }

@@ -1,5 +1,14 @@
 //! Shared experiment plumbing: model/corpus loading with fallbacks, the
 //! quantize→evaluate cell runner, and result persistence.
+//!
+//! Sharding model: [`ExpEnv`] owns the mutable caches (artifact loading,
+//! fallback bookkeeping) and is *not* shared across workers. A sweep first
+//! takes an immutable [`ExpData`] snapshot (models + corpora), then fans
+//! independent cells out over the pool via [`Cell::run_on`]. Every cell
+//! derives its calibration/pipeline seed from its own identity
+//! ([`Cell::derived_seed`]), so results do not depend on which worker runs
+//! which cell or in what order — sweeps are bit-identical for every
+//! thread count.
 
 use crate::coordinator::{Pipeline, PipelineConfig, PipelineOutput};
 use crate::eval::{perplexity, TaskFamily, TaskSet};
@@ -8,6 +17,7 @@ use crate::qep::AlphaPolicy;
 use crate::quant::{Method, QuantConfig};
 use crate::runtime::ArtifactRegistry;
 use crate::text::{Corpus, Flavor};
+use crate::util::pool::Pool;
 use anyhow::Result;
 use std::collections::HashMap;
 
@@ -16,6 +26,67 @@ use std::collections::HashMap;
 pub const CALIB_SEGMENTS: usize = 16;
 pub const EVAL_TOKENS: usize = 8 * 1024;
 pub const TASKS_PER_FAMILY: usize = 32;
+
+/// Start offset of the calibration window in a corpus of `len` tokens:
+/// spread over `[0, len − need − EVAL_TOKENS)` so the whole window stays
+/// out of the [`EVAL_TOKENS`]-sized tail that [`eval_slice`] reads — for
+/// *every* seed, because name-derived seeds are uniform full-width hashes
+/// ("small seeds stay near the front" no longer holds). Shared by
+/// [`calib_slice`] and the guard test so the two cannot drift apart.
+pub fn calib_offset(len: usize, seq_len: usize, seed: u64) -> usize {
+    let need = CALIB_SEGMENTS * seq_len;
+    let span = len.saturating_sub(need + EVAL_TOKENS).max(1);
+    // Full-width hashed seeds: wrap instead of overflowing.
+    (seed as usize).wrapping_mul(7919).wrapping_mul(seq_len) % span
+}
+
+/// Calibration tokens from a corpus for a seed. Pure function of
+/// (corpus, seq_len, seed) so sharded cells can draw their streams
+/// without touching shared mutable state.
+///
+/// Disjointness contract: whenever the corpus holds a calibration window
+/// plus the eval tail (`len ≥ CALIB_SEGMENTS·seq_len + EVAL_TOKENS`), the
+/// window never overlaps [`eval_slice`]'s tail, for every seed (see
+/// [`calib_offset`]). Shorter corpora fall back to the front and *may*
+/// overlap the (also shrunken) eval split; a corpus smaller than one
+/// calibration window is a hard error.
+pub fn calib_slice(c: &Corpus, seq_len: usize, seed: u64) -> Vec<u32> {
+    let need = CALIB_SEGMENTS * seq_len;
+    let offset = calib_offset(c.tokens.len(), seq_len, seed);
+    assert!(
+        offset + need <= c.tokens.len(),
+        "corpus too small for calibration: {} tokens < {need} needed",
+        c.tokens.len()
+    );
+    c.tokens[offset..offset + need].to_vec()
+}
+
+/// Evaluation tokens: the [`EVAL_TOKENS`]-sized tail of the corpus.
+/// Disjoint from [`calib_slice`]'s window for *every* seed whenever the
+/// corpus holds both (see [`calib_offset`]).
+pub fn eval_slice(c: &Corpus) -> Vec<u32> {
+    let n = EVAL_TOKENS.min(c.tokens.len() / 2);
+    c.tokens[c.tokens.len() - n..].to_vec()
+}
+
+/// Run `n` independent experiment jobs, either sharded across `pool`
+/// (when there are at least as many jobs as workers) or serially with
+/// each job keeping the *whole* pool for its inner kernels (when jobs are
+/// scarcer than workers — outer fan-out would mark every worker as
+/// in-pool, serialize the nested GEMM/SPD engines, and idle the remaining
+/// cores). Results come back in job order and are bit-identical either
+/// way; only wall-clock differs.
+pub fn run_jobs<T, F>(pool: &Pool, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n >= pool.threads() {
+        pool.par_map(n, f)
+    } else {
+        (0..n).map(f).collect()
+    }
+}
 
 /// Experiment environment: loads trained models from artifacts when
 /// available, otherwise falls back to deterministic random-weight models
@@ -56,31 +127,82 @@ impl ExpEnv {
 
     pub fn corpus(&mut self, flavor: Flavor) -> Corpus {
         if let Some(c) = self.corpora.get(&flavor) {
-            return Corpus { flavor: c.flavor, text: c.text.clone(), tokens: c.tokens.clone() };
+            return c.clone();
         }
         let c = match self.reg.load_corpus(flavor) {
             Ok(c) => c,
             Err(_) => Corpus::generate(flavor, 256 * 1024, 0),
         };
-        self.corpora.insert(flavor, Corpus { flavor: c.flavor, text: c.text.clone(), tokens: c.tokens.clone() });
+        self.corpora.insert(flavor, c.clone());
         c
     }
 
-    /// Calibration tokens for a flavor + seed (disjoint from eval split:
-    /// calibration reads from the front, eval from the back).
+    /// Calibration tokens for a flavor + seed (see [`calib_slice`]).
     pub fn calib_tokens(&mut self, flavor: Flavor, seq_len: usize, seed: u64) -> Vec<u32> {
         let c = self.corpus(flavor);
-        let need = CALIB_SEGMENTS * seq_len;
-        let offset = (seed as usize * 7919 * seq_len) % c.tokens.len().saturating_sub(2 * need).max(1);
-        c.tokens[offset..offset + need].to_vec()
+        calib_slice(&c, seq_len, seed)
     }
 
-    /// Evaluation tokens (tail of the corpus — disjoint from calibration
-    /// for reasonable seeds).
+    /// Evaluation tokens (see [`eval_slice`]).
     pub fn eval_tokens(&mut self, flavor: Flavor) -> Vec<u32> {
         let c = self.corpus(flavor);
-        let n = EVAL_TOKENS.min(c.tokens.len() / 2);
-        c.tokens[c.tokens.len() - n..].to_vec()
+        eval_slice(&c)
+    }
+
+    /// Immutable snapshot of everything a sharded sweep needs: the models
+    /// for `sizes` (loading/falling back now, so warnings print once,
+    /// before the fan-out) and all corpus flavors. Workers read the
+    /// snapshot concurrently; the env's caches stay warm for later calls.
+    /// All flavors are included deliberately (a few MB of clones) so
+    /// [`ExpData::corpus`] can never hit its missing-flavor panic no
+    /// matter which eval/calib flavors a driver's cells request.
+    pub fn snapshot(&mut self, sizes: &[Size]) -> ExpData {
+        let mut models = HashMap::new();
+        for &s in sizes {
+            models.insert(s.name().to_string(), self.model(s));
+        }
+        let mut corpora = HashMap::new();
+        for f in Flavor::all() {
+            corpora.insert(f, self.corpus(f));
+        }
+        ExpData { models, corpora }
+    }
+}
+
+/// Read-only inputs for a sharded sweep; see [`ExpEnv::snapshot`].
+pub struct ExpData {
+    models: HashMap<String, Model>,
+    corpora: HashMap<Flavor, Corpus>,
+}
+
+impl ExpData {
+    /// Assemble a snapshot directly (tests inject custom tiny models under
+    /// a size's name to keep sharded-sweep tests fast).
+    pub fn from_parts(models: HashMap<String, Model>, corpora: HashMap<Flavor, Corpus>) -> ExpData {
+        ExpData { models, corpora }
+    }
+
+    /// The snapshot's model for `size`. Panics if the snapshot was taken
+    /// without it — a driver bug, not a runtime condition.
+    pub fn model(&self, size: Size) -> &Model {
+        self.models
+            .get(size.name())
+            .unwrap_or_else(|| panic!("model '{}' missing from snapshot", size.name()))
+    }
+
+    /// The snapshot's corpus for `flavor`.
+    pub fn corpus(&self, flavor: Flavor) -> &Corpus {
+        self.corpora
+            .get(&flavor)
+            .unwrap_or_else(|| panic!("corpus '{}' missing from snapshot", flavor.name()))
+    }
+
+    pub fn calib_tokens(&self, flavor: Flavor, seq_len: usize, seed: u64) -> Vec<u32> {
+        calib_slice(self.corpus(flavor), seq_len, seed)
+    }
+
+    pub fn eval_tokens(&self, flavor: Flavor) -> Vec<u32> {
+        eval_slice(self.corpus(flavor))
     }
 }
 
@@ -91,6 +213,8 @@ pub struct Cell {
     pub method: Method,
     pub quant: QuantConfig,
     pub qep: bool,
+    /// Replicate index (Fig. 3's seed axis); folded with the cell identity
+    /// into [`Cell::derived_seed`] for the actual streams.
     pub seed: u64,
     pub calib_flavor: Flavor,
 }
@@ -98,6 +222,20 @@ pub struct Cell {
 impl Cell {
     pub fn new(size: Size, method: Method, quant: QuantConfig, qep: bool) -> Cell {
         Cell { size, method, quant, qep, seed: 0, calib_flavor: default_calib(method) }
+    }
+
+    /// Scheduling-independent seed for this cell's calibration draw and
+    /// pipeline randomness: an FNV-1a hash of the cell's *data identity*
+    /// (model size + calibration flavor) folded with the explicit
+    /// replicate `seed`. Deliberately NOT a function of method/bits/±QEP:
+    /// cells that differ only along a compared axis share the identical
+    /// calibration window and per-layer randomness (the paper calibrates
+    /// all methods on the same set, and Fig. 3's QuIP±QEP pairs must share
+    /// rotations), while sharded sweeps stay bit-identical no matter which
+    /// worker runs which cell.
+    pub fn derived_seed(&self) -> u64 {
+        crate::util::fnv1a(&format!("{}|{}", self.size.name(), self.calib_flavor.name()))
+            ^ self.seed
     }
 
     /// Build the pipeline config for this cell, mirroring the paper's
@@ -115,17 +253,27 @@ impl Cell {
             alpha_policy,
             damp_rel: 1.0,
             max_blocks: None,
-            seed: self.seed,
+            seed: self.derived_seed(),
             verbose: false,
             threads: 0,
         }
     }
 
-    /// Quantize the model for this cell.
+    /// Quantize the model for this cell straight off the env's caches (no
+    /// snapshot clone — the single-cell path; sweeps use [`Cell::run_on`]
+    /// against a shared snapshot instead).
     pub fn run(&self, env: &mut ExpEnv) -> Result<PipelineOutput> {
         let model = env.model(self.size);
-        let calib = env.calib_tokens(self.calib_flavor, model.cfg.seq_len, self.seed);
+        let calib = env.calib_tokens(self.calib_flavor, model.cfg.seq_len, self.derived_seed());
         Pipeline::new(self.pipeline_config()).run(&model, &calib)
+    }
+
+    /// Quantize the model for this cell against an immutable snapshot —
+    /// the unit of work a sharded sweep hands to pool workers.
+    pub fn run_on(&self, data: &ExpData) -> Result<PipelineOutput> {
+        let model = data.model(self.size);
+        let calib = data.calib_tokens(self.calib_flavor, model.cfg.seq_len, self.derived_seed());
+        Pipeline::new(self.pipeline_config()).run(model, &calib)
     }
 
     pub fn label(&self) -> String {
@@ -150,6 +298,13 @@ pub fn default_calib(_method: Method) -> Flavor {
 pub fn cell_ppl(env: &mut ExpEnv, cell: &Cell, eval_flavor: Flavor) -> Result<f64> {
     let out = cell.run(env)?;
     let eval = env.eval_tokens(eval_flavor);
+    Ok(perplexity(&out.model, &eval))
+}
+
+/// [`cell_ppl`] against a snapshot (the sharded-sweep path).
+pub fn cell_ppl_on(data: &ExpData, cell: &Cell, eval_flavor: Flavor) -> Result<f64> {
+    let out = cell.run_on(data)?;
+    let eval = data.eval_tokens(eval_flavor);
     Ok(perplexity(&out.model, &eval))
 }
 
@@ -199,6 +354,69 @@ mod tests {
         // Disjoint by construction: calib from the front region, eval tail.
         let c = env.corpus(Flavor::Wiki);
         assert!(c.tokens.len() > calib.len() + eval.len());
+    }
+
+    #[test]
+    fn snapshot_matches_env_streams() {
+        let mut env = ExpEnv::new("/nonexistent-artifacts");
+        let data = env.snapshot(&[Size::TinyS]);
+        assert_eq!(
+            data.calib_tokens(Flavor::Ptb, 64, 7),
+            env.calib_tokens(Flavor::Ptb, 64, 7)
+        );
+        assert_eq!(data.eval_tokens(Flavor::C4), env.eval_tokens(Flavor::C4));
+        assert_eq!(data.model(Size::TinyS).blocks[0].wq, env.model(Size::TinyS).blocks[0].wq);
+    }
+
+    #[test]
+    fn derived_seeds_control_comparisons_and_split_replicates() {
+        let a = Cell::new(Size::TinyS, Method::Gptq, QuantConfig::int(3), true);
+        assert_eq!(a.derived_seed(), a.clone().derived_seed());
+        // Cells that differ only along a compared axis (method/bits/±QEP)
+        // must SHARE the stream — the comparison holds calibration fixed.
+        let base = Cell::new(Size::TinyS, Method::Gptq, QuantConfig::int(3), false);
+        assert_eq!(a.derived_seed(), base.derived_seed(), "±QEP must share calibration");
+        let rtn = Cell::new(Size::TinyS, Method::Rtn, QuantConfig::int(2), false);
+        assert_eq!(a.derived_seed(), rtn.derived_seed(), "methods must share calibration");
+        // Data identity and replicates must split streams.
+        let mut c = a.clone();
+        c.calib_flavor = Flavor::Wiki;
+        assert_ne!(a.derived_seed(), c.derived_seed(), "calib flavor must split streams");
+        let mut d = a.clone();
+        d.seed = 1;
+        assert_ne!(a.derived_seed(), d.derived_seed(), "replicates must split streams");
+        let l = Cell::new(Size::TinyL, Method::Gptq, QuantConfig::int(3), true);
+        assert_ne!(a.derived_seed(), l.derived_seed(), "sizes must split streams");
+        assert_eq!(a.pipeline_config().seed, a.derived_seed());
+    }
+
+    #[test]
+    fn huge_derived_seeds_do_not_overflow_calib_offsets() {
+        let c = Corpus::generate(Flavor::C4, 64 * 1024, 0);
+        let cell = Cell::new(Size::TinyS, Method::Quip, QuantConfig::int(2), true);
+        let toks = calib_slice(&c, 128, cell.derived_seed());
+        assert_eq!(toks.len(), CALIB_SEGMENTS * 128);
+    }
+
+    #[test]
+    fn hashed_seed_calib_never_lands_in_eval_tail() {
+        // Name-derived seeds are uniform over u64, so the offset window
+        // itself must exclude the eval tail — for every possible seed, not
+        // just "reasonable" small ones. Uses the production calib_offset,
+        // so the guard cannot drift from the implementation.
+        let c = Corpus::generate(Flavor::C4, 64 * 1024, 0);
+        let seq_len = 128usize;
+        let need = CALIB_SEGMENTS * seq_len;
+        let eval_start = c.tokens.len() - EVAL_TOKENS.min(c.tokens.len() / 2);
+        for s in 0..256u64 {
+            let seed = crate::util::fnv1a(&format!("probe-{s}"));
+            let offset = calib_offset(c.tokens.len(), seq_len, seed);
+            assert!(
+                offset + need <= eval_start,
+                "seed {s}: calib [{offset}..{}) reaches into eval tail [{eval_start}..)",
+                offset + need
+            );
+        }
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Fig. 2: accumulation and growth of quantization error across blocks.
 //! Quantize the first `n` blocks (paper: 10 of 32; we default to half the
-//! model) with RTN, base vs +QEP, and report Δ_m (Eq. 2) per block.
+//! model) with RTN, base vs +QEP, and report Δ_m (Eq. 2) per block. Each
+//! run saturates the pool internally (GEMMs, SPD solves, per-layer
+//! fan-out); see the comment at the call sites for why the two variants
+//! are not themselves fanned out.
 
 use super::common::{persist, ExpEnv};
 use crate::coordinator::{Pipeline, PipelineConfig};
@@ -36,6 +39,11 @@ pub fn run(env: &mut ExpEnv, size: Size, bits: u32, n_blocks: Option<usize>) -> 
         Ok(delta_per_block(&model, &out.model, probe))
     };
 
+    // The two variants run sequentially on purpose: fanning just 2 jobs
+    // across the pool would mark both workers as in-pool and serialize
+    // every GEMM/SPD solve *inside* each pipeline — at ≥4 threads the
+    // inner row-level parallelism is the much wider axis, so each run
+    // gets the whole pool instead.
     let deltas_base = run_one(None)?;
     let deltas_qep = run_one(Some(0.5))?;
 

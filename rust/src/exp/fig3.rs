@@ -1,47 +1,73 @@
 //! Fig. 3: seed stability of QuIP ± QEP. Five seeds per configuration;
-//! report mean ± SEM for PPL (wiki) and mean task accuracy.
+//! report mean ± SEM for PPL (wiki) and mean task accuracy. Every
+//! (bits × size × ±QEP × seed) replicate is an independent cell, so the
+//! whole grid shards across the pool; aggregation runs in a fixed order
+//! afterwards, keeping the table bytes thread-count-invariant.
 
-use super::common::{persist, Cell, ExpEnv, TASKS_PER_FAMILY};
+use super::common::{persist, run_jobs, Cell, ExpEnv, TASKS_PER_FAMILY};
 use crate::eval::{perplexity, TaskFamily, TaskSet};
 use crate::model::Size;
 use crate::quant::{Method, QuantConfig};
 use crate::text::Flavor;
+use crate::util::pool;
 use crate::util::stats::{mean, sem};
 use crate::util::table::Table;
 use anyhow::Result;
 
 pub fn run(env: &mut ExpEnv, sizes: &[Size], bits_list: &[u32], n_seeds: u64) -> Result<()> {
+    let data = env.snapshot(sizes);
+    let eval = data.eval_tokens(Flavor::Wiki);
+
+    // Flat job list in table order; chunks of `n_seeds` aggregate below.
+    let mut jobs: Vec<Cell> = Vec::new();
+    for &bits in bits_list {
+        for &size in sizes {
+            for qep in [false, true] {
+                for seed in 0..n_seeds {
+                    let mut cell = Cell::new(size, Method::Quip, QuantConfig::int(bits), qep);
+                    cell.seed = seed;
+                    jobs.push(cell);
+                }
+            }
+        }
+    }
+
+    // Task sets are replicate-independent: build once, score per cell.
+    let task_corpus = data.corpus(Flavor::Wiki);
+    let task_sets: Vec<TaskSet> = TaskFamily::all()
+        .iter()
+        .map(|&f| TaskSet::generate(f, task_corpus, TASKS_PER_FAMILY, 1234))
+        .collect();
+    let per_seed: Vec<(f64, f64)> =
+        run_jobs(&pool::global(), jobs.len(), |i| -> Result<(f64, f64)> {
+            let cell = &jobs[i];
+            let out = cell.run_on(&data)?;
+            let ppl = perplexity(&out.model, &eval);
+            let fam_accs: Vec<f64> =
+                task_sets.iter().map(|ts| ts.accuracy(&out.model)).collect();
+            let acc = mean(&fam_accs);
+            eprintln!(
+                "[fig3] {} seed={}: ppl={ppl:.3} acc={acc:.4}",
+                cell.label(),
+                cell.seed
+            );
+            Ok((ppl, acc))
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
+
     let mut t = Table::new(
         "Figure 3 data: QuIP ± QEP over seeds (mean ± SEM)",
         &["bits", "size", "QEP", "ppl mean", "ppl sem", "acc mean", "acc sem"],
     );
-    let eval = env.eval_tokens(Flavor::Wiki);
-    let task_corpus = env.corpus(Flavor::Wiki);
+    let mut idx = 0;
     for &bits in bits_list {
         for &size in sizes {
             for qep in [false, true] {
-                let mut ppls = Vec::new();
-                let mut accs = Vec::new();
-                for seed in 0..n_seeds {
-                    let mut cell = Cell::new(size, Method::Quip, QuantConfig::int(bits), qep);
-                    cell.seed = seed;
-                    let out = cell.run(env)?;
-                    ppls.push(perplexity(&out.model, &eval));
-                    let fam_accs: Vec<f64> = TaskFamily::all()
-                        .iter()
-                        .map(|&f| {
-                            TaskSet::generate(f, &task_corpus, TASKS_PER_FAMILY, 1234)
-                                .accuracy(&out.model)
-                        })
-                        .collect();
-                    accs.push(mean(&fam_accs));
-                    eprintln!(
-                        "[fig3] {} INT{bits} qep={qep} seed={seed}: ppl={:.3} acc={:.4}",
-                        size.name(),
-                        ppls.last().unwrap(),
-                        accs.last().unwrap()
-                    );
-                }
+                let chunk = &per_seed[idx..idx + n_seeds as usize];
+                idx += n_seeds as usize;
+                let ppls: Vec<f64> = chunk.iter().map(|&(p, _)| p).collect();
+                let accs: Vec<f64> = chunk.iter().map(|&(_, a)| a).collect();
                 t.row(vec![
                     format!("INT{bits}"),
                     size.name().to_string(),

@@ -1,8 +1,17 @@
 //! Experiment drivers — one per paper table/figure (see DESIGN.md §6).
+//!
+//! Drivers shard their independent (model × method × grid × ±QEP) cells
+//! across the work-stealing pool: [`ExpEnv`] snapshots its caches into an
+//! immutable [`ExpData`], cells run via [`Cell::run_on`] with per-cell
+//! name-derived seeds, and results are collected in cell order — so
+//! `repro exp all` saturates the machine while every table stays
+//! byte-identical for every `--threads` value. The one exception is
+//! Table 3, which measures per-cell runtime and therefore runs its cells
+//! serially (see `tables::table3`).
 
 pub mod common;
 pub mod fig2;
 pub mod fig3;
 pub mod tables;
 
-pub use common::{ExpEnv, Cell};
+pub use common::{Cell, ExpData, ExpEnv};

@@ -3,12 +3,21 @@
 //! quantized once and every requested metric is computed from the same
 //! quantized model, so combined drivers (tables 5–7 share cells; 8–10
 //! share cells) cost no more than a single table.
+//!
+//! Sharding: independent cells fan out across the work-stealing pool
+//! ([`run_matrix_on`]) against an immutable [`ExpData`] snapshot, with
+//! per-cell name-derived seeds and results collected in cell order — so
+//! every table renders byte-identically for every `--threads` value.
+//! Table 3 is the deliberate exception: it *measures* per-cell runtime,
+//! and concurrent cells would contend for cores and corrupt the timings,
+//! so its cells run serially (each cell still uses the pool internally).
 
-use super::common::{cell_ppl, persist, Cell, ExpEnv, TASKS_PER_FAMILY};
+use super::common::{cell_ppl_on, persist, run_jobs, Cell, ExpData, ExpEnv, TASKS_PER_FAMILY};
 use crate::eval::{perplexity, TaskFamily, TaskSet};
 use crate::model::Size;
 use crate::quant::{Method, QuantConfig};
 use crate::text::Flavor;
+use crate::util::pool::{self, Pool};
 use crate::util::stats;
 use crate::util::table::{fmt_acc, fmt_ppl, Table};
 use anyhow::Result;
@@ -25,37 +34,66 @@ pub struct CellResult {
     pub cell: Cell,
     pub ppl: HashMap<Flavor, f64>,
     pub acc: HashMap<TaskFamily, f64>,
+    /// Wall-clock of this cell's own pipeline. Meaningful in isolation
+    /// (Table 3 runs cells serially); under a sharded sweep cells contend
+    /// for cores and this becomes an upper bound.
     pub runtime_s: f64,
     pub correction_s: f64,
 }
 
-/// Run a matrix of cells, computing all requested metrics per quantized
-/// model (quantize once, evaluate many).
+/// Run a matrix of cells on the process-global pool, computing all
+/// requested metrics per quantized model (quantize once, evaluate many).
 pub fn run_matrix(env: &mut ExpEnv, cells: &[Cell], wants: &Wants) -> Result<Vec<CellResult>> {
-    let mut results = Vec::with_capacity(cells.len());
-    let task_corpus = env.corpus(Flavor::Wiki);
-    for (i, cell) in cells.iter().enumerate() {
-        eprintln!("[exp] cell {}/{}: {}", i + 1, cells.len(), cell.label());
-        let out = cell.run(env)?;
+    let mut sizes: Vec<Size> = Vec::new();
+    for c in cells {
+        if !sizes.contains(&c.size) {
+            sizes.push(c.size);
+        }
+    }
+    let data = env.snapshot(&sizes);
+    run_matrix_on(&data, cells, wants, &pool::global())
+}
+
+/// [`run_matrix`] against a snapshot on an explicit pool: one pool task
+/// per cell, results collected in cell order. Cells derive their seeds
+/// from their own identity, so the output is bit-identical for every
+/// thread count and every stealing schedule.
+pub fn run_matrix_on(
+    data: &ExpData,
+    cells: &[Cell],
+    wants: &Wants,
+    pool: &Pool,
+) -> Result<Vec<CellResult>> {
+    eprintln!("[exp] running {} cells on {} worker(s)", cells.len(), pool.threads());
+    // Task sets are cell-independent: build them once, score per cell.
+    let task_corpus = data.corpus(Flavor::Wiki);
+    let task_sets: Vec<(TaskFamily, TaskSet)> = wants
+        .tasks
+        .iter()
+        .map(|&fam| (fam, TaskSet::generate(fam, task_corpus, TASKS_PER_FAMILY, 1234)))
+        .collect();
+    let results = run_jobs(pool, cells.len(), |i| -> Result<CellResult> {
+        let cell = &cells[i];
+        let out = cell.run_on(data)?;
         let mut ppl = HashMap::new();
         for &fl in &wants.ppl {
-            let eval = env.eval_tokens(fl);
+            let eval = data.eval_tokens(fl);
             ppl.insert(fl, perplexity(&out.model, &eval));
         }
         let mut acc = HashMap::new();
-        for &fam in &wants.tasks {
-            let ts = TaskSet::generate(fam, &task_corpus, TASKS_PER_FAMILY, 1234);
-            acc.insert(fam, ts.accuracy(&out.model));
+        for (fam, ts) in &task_sets {
+            acc.insert(*fam, ts.accuracy(&out.model));
         }
-        results.push(CellResult {
+        eprintln!("[exp] cell {}/{} done: {}", i + 1, cells.len(), cell.label());
+        Ok(CellResult {
             cell: cell.clone(),
             ppl,
             acc,
             runtime_s: out.report.total_s,
             correction_s: out.report.correction_s(),
-        });
-    }
-    Ok(results)
+        })
+    });
+    results.into_iter().collect()
 }
 
 /// Standard cell matrix: `settings × methods × ±QEP` for each size.
@@ -79,8 +117,10 @@ fn header(sizes: &[Size]) -> Vec<String> {
     h
 }
 
-/// Format a PPL table in the paper's layout (Tables 1, 5, 6, 7).
-fn format_ppl_table(
+/// Format a PPL table in the paper's layout (Tables 1, 5, 6, 7). Public
+/// so the parallel-equivalence suite can assert byte-identical renders
+/// across thread counts.
+pub fn format_ppl_table(
     title: &str,
     results: &[CellResult],
     sizes: &[Size],
@@ -120,9 +160,10 @@ fn format_ppl_table(
     t
 }
 
-/// Format an accuracy table (Tables 2, 8, 9, 10). `families = None` means
-/// the mean over all requested families (Table 2).
-fn format_acc_table(
+/// Format an accuracy table (Tables 2, 8, 9, 10). `family = None` means
+/// the mean over all requested families (Table 2). Public for the same
+/// reason as [`format_ppl_table`].
+pub fn format_acc_table(
     title: &str,
     results: &[CellResult],
     sizes: &[Size],
@@ -229,6 +270,11 @@ pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
 }
 
 /// Table 3: quantization runtime comparison (GPTQ vs AWQ vs QEP+RTN).
+///
+/// Cells run *serially* on purpose: this table's metric is the wall-clock
+/// of each quantization, and fanning cells out would make them contend
+/// for the same cores. The pipeline inside each cell still uses the full
+/// pool, so the reported times reflect the parallel engine.
 pub fn table3(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
     let mut hdr = vec!["Runtime".to_string()];
     hdr.extend(sizes.iter().map(|s| s.name().to_string()));
@@ -263,22 +309,37 @@ pub fn table3(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
 }
 
 /// Table 4: robustness to the calibration dataset. PPL (wiki eval) deltas
-/// vs base RTN for GPTQ and QEP+RTN calibrated on c4/ptb/wiki.
+/// vs base RTN for GPTQ and QEP+RTN calibrated on c4/ptb/wiki. All seven
+/// cells (the RTN reference plus method × calibration flavor) shard
+/// across the pool.
 pub fn table4(env: &mut ExpEnv, size: Size) -> Result<()> {
     let q = QuantConfig::int(3);
-    // Reference: base RTN (calibration-free).
-    let rtn = cell_ppl(env, &Cell::new(size, Method::Rtn, q, false), Flavor::Wiki)?;
+    let data = env.snapshot(&[size]);
     let flavors = [Flavor::C4, Flavor::Ptb, Flavor::Wiki];
+    let variants = [("GPTQ", Method::Gptq, false), ("QEP + RTN", Method::Rtn, true)];
+    // cells[0] = the calibration-free RTN reference, then method × flavor.
+    let mut cells = vec![Cell::new(size, Method::Rtn, q, false)];
+    for &(_, method, qep) in &variants {
+        for &fl in &flavors {
+            let mut cell = Cell::new(size, method, q, qep);
+            cell.calib_flavor = fl;
+            cells.push(cell);
+        }
+    }
+    let pool = pool::global();
+    let ppls: Vec<f64> =
+        run_jobs(&pool, cells.len(), |i| cell_ppl_on(&data, &cells[i], Flavor::Wiki))
+            .into_iter()
+            .collect::<Result<_>>()?;
+    let rtn = ppls[0];
     let mut t = Table::new(
         &format!("Table 4: PPL relative to RTN ({}; eval=wiki; RTN={:.3})", size.name(), rtn),
         &["Method", "calib=C4", "calib=PTB", "calib=WikiText2"],
     );
-    for (label, method, qep) in [("GPTQ", Method::Gptq, false), ("QEP + RTN", Method::Rtn, true)] {
+    for (vi, &(label, _, _)) in variants.iter().enumerate() {
         let mut row = vec![label.to_string()];
-        for &fl in &flavors {
-            let mut cell = Cell::new(size, method, q, qep);
-            cell.calib_flavor = fl;
-            let ppl = cell_ppl(env, &cell, Flavor::Wiki)?;
+        for fi in 0..flavors.len() {
+            let ppl = ppls[1 + vi * flavors.len() + fi];
             row.push(format!("{:+.3}", ppl - rtn));
         }
         t.row(row);
@@ -289,25 +350,42 @@ pub fn table4(env: &mut ExpEnv, size: Size) -> Result<()> {
 
 /// Ablation (DESIGN.md §6, Prop. 5.4 empirically): PPL as a function of
 /// the propagation strength α for RTN INT3 — the knob §5.3 introduces.
+/// The α × size grid shards across the pool; every cell draws the same
+/// seed-0 calibration slice so α is the only moving part.
 pub fn ablation_alpha(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
     let alphas = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+    let data = env.snapshot(sizes);
+    let mut jobs = Vec::new();
+    for &a in &alphas {
+        for &s in sizes {
+            jobs.push((a, s));
+        }
+    }
+    let pool = pool::global();
+    let vals: Vec<f64> = run_jobs(&pool, jobs.len(), |i| -> Result<f64> {
+            let (a, s) = jobs[i];
+            let model = data.model(s);
+            let calib = data.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
+            let mut cfg = Cell::new(s, Method::Rtn, QuantConfig::int(3), a > 0.0).pipeline_config();
+            cfg.qep_alpha = Some(a); // α=0 ⇒ effectively BASE via short-circuit
+            cfg.alpha_policy = None; // uniform α even for tiny-l here
+            let out = crate::coordinator::Pipeline::new(cfg).run(model, &calib)?;
+            let eval = data.eval_tokens(Flavor::Wiki);
+            Ok(perplexity(&out.model, &eval))
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
+
     let mut hdr = vec!["alpha".to_string()];
     hdr.extend(sizes.iter().map(|s| s.name().to_string()));
     let mut t = Table::new(
         "Ablation: wiki PPL vs propagation strength α (RTN INT3)",
         &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
-    for &a in &alphas {
+    for (ai, &a) in alphas.iter().enumerate() {
         let mut row = vec![format!("{a:.2}")];
-        for &s in sizes {
-            let model = env.model(s);
-            let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
-            let mut cfg = Cell::new(s, Method::Rtn, QuantConfig::int(3), a > 0.0).pipeline_config();
-            cfg.qep_alpha = Some(a); // α=0 ⇒ effectively BASE via short-circuit
-            cfg.alpha_policy = None; // uniform α even for tiny-l here
-            let out = crate::coordinator::Pipeline::new(cfg).run(&model, &calib)?;
-            let eval = env.eval_tokens(Flavor::Wiki);
-            row.push(fmt_ppl(perplexity(&out.model, &eval)));
+        for si in 0..sizes.len() {
+            row.push(fmt_ppl(vals[ai * sizes.len() + si]));
         }
         t.row(row);
     }

@@ -1,5 +1,13 @@
 //! On-disk interchange formats shared between the build-time Python side
 //! and the Rust runtime.
+//!
+//! The one format is `.qtz` ([`qtz`]): a minimal little-endian tensor
+//! container (named f32/u8 tensors + JSON-ish metadata) written by
+//! `python/compile/qtz.py` after JAX training and read back here for
+//! quantization, evaluation, and serving. Quantized pipeline outputs
+//! round-trip through the same format, which is what lets
+//! `tests/parallel_equivalence.rs` assert *byte*-identical artifacts
+//! across thread counts.
 
 pub mod qtz;
 

@@ -33,6 +33,37 @@
 //! let calib = qep::text::Corpus::generate(qep::text::Flavor::C4, 64 * 2048, 0);
 //! let quantized = Pipeline::new(cfg).run(&model, &calib.tokens).unwrap();
 //! ```
+//!
+//! # Parallelism contract
+//!
+//! Everything hot runs on a dependency-free work-stealing pool
+//! ([`util::pool`]): GEMM/Hessian kernels ([`linalg::par`]), the blocked
+//! Cholesky/SPD engine ([`linalg::chol`]), per-layer pipeline fan-out
+//! ([`coordinator`]), GPTQ row sweeps, batched perplexity/task evaluation
+//! ([`eval`]), and sharded experiment sweeps ([`exp`]). The invariant
+//! every one of these upholds — and that new code MUST uphold — is:
+//!
+//! > **Results are bit-identical for every thread count** (and, for the
+//! > blocked SPD engine, every block size). Workers own disjoint output
+//! > regions, every floating-point reduction has a fixed order, and all
+//! > randomness derives from stable names ([`util::fnv1a`]), never from
+//! > scheduling.
+//!
+//! `rust/tests/parallel_equivalence.rs` gates the contract; the
+//! `--threads N` CLI knob (0 = all cores) therefore only trades
+//! wall-clock time. See `README.md` and `docs/ARCHITECTURE.md` at the
+//! repo root for the contributor-facing tour.
+//!
+//! # Feature flags
+//!
+//! * `pjrt` (off by default) — the real PJRT executor in [`runtime`],
+//!   wrapping the vendored `xla` crate. The offline build image does not
+//!   ship that crate, so enabling the feature additionally requires adding
+//!   the `xla` dependency to `rust/Cargo.toml`. Without the feature the
+//!   module compiles a same-surface stub whose constructor reports the
+//!   runtime as unavailable; every other subsystem — quantization, QEP,
+//!   eval, experiments — is pure Rust and never needs it
+//!   (`tests/pjrt_crosscheck.rs` re-arms with the feature).
 
 pub mod coordinator;
 pub mod eval;

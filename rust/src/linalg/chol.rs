@@ -1,5 +1,29 @@
-//! Cholesky-based SPD routines in f64. These back both the QEP correction
-//! term `(Ĥ + ρI)⁻¹` (Prop. 5.1) and GPTQ's `chol(H⁻¹)ᵀ` factor.
+//! Cholesky-based SPD routines in f64 — the blocked, pool-parallel heart
+//! of the compensation hot path. These back both the QEP correction term
+//! `(Ĥ + ρI)⁻¹` (Prop. 5.1) and GPTQ's `chol(H⁻¹)ᵀ` factor, and they are
+//! called once per quantized linear, so after PR 1 parallelized GEMM they
+//! were the largest single-threaded residue of the pipeline.
+//!
+//! # Algorithm
+//!
+//! [`cholesky_in_place_with`] is a blocked right-looking factorization:
+//! per panel of `block` columns it (1) factors the small diagonal tile
+//! serially, (2) triangular-solves the panel below the tile with rows
+//! fanned across the work-stealing pool, and (3) applies the trailing
+//! SYRK-shaped update `A₂₂ -= L₂₁·L₂₁ᵀ`, also row-parallel. Multi-RHS
+//! solves ([`spd_solve_with`]) batch the right-hand-side *columns* across
+//! pool workers.
+//!
+//! # Bit-identical parallelism (the repo contract)
+//!
+//! Every element's floating-point operation sequence is exactly the one
+//! the classic unblocked algorithm ([`cholesky_unblocked`]) performs:
+//! subtractions are applied term-by-term in ascending `k`, each one
+//! individually rounded, regardless of which panel or worker applies them.
+//! Workers own disjoint rows (factorization) or disjoint RHS column
+//! strips (solves) and there is no cross-thread reduction anywhere, so
+//! results are **bit-identical for every thread count and every block
+//! size** — `tests/parallel_equivalence.rs` gates this.
 //!
 //! All factorizations run in f64 regardless of the f32 data path: the
 //! Hessians of trained transformer layers are poorly conditioned, and the
@@ -7,11 +31,28 @@
 //! into these routines by the callers.
 
 use super::mat::Mat64;
+use super::par::big_enough;
+use crate::util::pool::{self, Pool, SendPtr};
 use anyhow::{bail, Result};
 
-/// In-place lower-Cholesky: on success `a` holds L (strictly-upper garbage
-/// zeroed) with `a = L·Lᵀ` for the original SPD input.
+/// Default panel width for the blocked factorization. Chosen so the
+/// serial diagonal-tile work (`block³/3` per panel) is negligible next to
+/// the parallel panel solve + trailing update on the layer sizes the
+/// pipeline sees (d = 64…512). Any value gives bit-identical results.
+pub const CHOL_BLOCK: usize = 64;
+
+/// In-place lower-Cholesky on the process-global pool: on success `a`
+/// holds L (strictly-upper garbage zeroed) with `a = L·Lᵀ` for the
+/// original SPD input. Equivalent to
+/// `cholesky_in_place_with(a, CHOL_BLOCK, &pool::global())`.
 pub fn cholesky_in_place(a: &mut Mat64) -> Result<()> {
+    cholesky_in_place_with(a, CHOL_BLOCK, &pool::global())
+}
+
+/// Reference unblocked factorization (the pre-blocking serial kernel).
+/// Kept public so property tests and benches can pin the blocked engine
+/// against it; the blocked path reproduces its results bit-for-bit.
+pub fn cholesky_unblocked(a: &mut Mat64) -> Result<()> {
     let n = a.rows;
     assert_eq!(a.rows, a.cols, "cholesky needs square input");
     for j in 0..n {
@@ -36,16 +77,126 @@ pub fn cholesky_in_place(a: &mut Mat64) -> Result<()> {
             *a.at_mut(i, j) = s / ljj;
         }
     }
-    // Zero the strictly-upper triangle so the result is a clean L.
+    zero_upper(a);
+    Ok(())
+}
+
+/// Blocked right-looking in-place lower-Cholesky on `pool`.
+///
+/// Bit-identical to [`cholesky_unblocked`] for every `block ≥ 1` and every
+/// thread count: the per-element subtraction order (ascending `k`, one
+/// rounding per term) is preserved exactly; panels and workers only change
+/// *who* applies each operation, never the sequence.
+pub fn cholesky_in_place_with(a: &mut Mat64, block: usize, pool: &Pool) -> Result<()> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let block = block.max(1);
+    let mut p0 = 0;
+    while p0 < n {
+        let p1 = (p0 + block).min(n);
+
+        // 1. Factor the diagonal tile [p0,p1)² serially (contributions from
+        //    columns < p0 were already subtracted by earlier trailing
+        //    updates, so this is the plain unblocked recurrence).
+        for j in p0..p1 {
+            let mut d = a.at(j, j);
+            for k in p0..j {
+                let l = a.at(j, k);
+                d -= l * l;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                bail!("matrix not positive definite at pivot {j} (d = {d}); increase damping");
+            }
+            let ljj = d.sqrt();
+            *a.at_mut(j, j) = ljj;
+            for i in j + 1..p1 {
+                let mut s = a.at(i, j);
+                let (ri, rj) = (i * n, j * n);
+                for k in p0..j {
+                    s -= a.data[ri + k] * a.data[rj + k];
+                }
+                *a.at_mut(i, j) = s / ljj;
+            }
+        }
+
+        // 2. Panel solve: rows below the tile compute their L entries for
+        //    the panel columns. Rows are independent (each reads only its
+        //    own row plus the finished tile rows), so they fan out.
+        let rows = n - p1;
+        if rows > 0 {
+            let base = SendPtr::new(a.data.as_mut_ptr());
+            let bw = p1 - p0;
+            let run_rows = |r0: usize, r1: usize| {
+                for r in r0..r1 {
+                    let i = p1 + r;
+                    // Sound: this worker owns row i's panel slice; the tile
+                    // rows [p0,p1) it reads are finalized and read-only here.
+                    unsafe {
+                        let arow = base.0.add(i * n);
+                        for j in p0..p1 {
+                            let ljrow = base.0.add(j * n);
+                            let mut s = *arow.add(j);
+                            for k in p0..j {
+                                s -= *arow.add(k) * *ljrow.add(k);
+                            }
+                            *arow.add(j) = s / *ljrow.add(j);
+                        }
+                    }
+                }
+            };
+            if pool.threads() > 1 && rows >= 2 && big_enough(rows, bw, bw) {
+                pool.run(rows, pool::chunk(rows, pool.threads()), &run_rows);
+            } else {
+                run_rows(0, rows);
+            }
+
+            // 3. Trailing update A₂₂ -= L₂₁·L₂₁ᵀ (lower triangle only).
+            //    Row i writes a[i][p1..=i] and reads panel columns [p0,p1)
+            //    of rows ≤ i — finalized in step 2, untouched here — so
+            //    rows again fan out with no synchronization.
+            let run_trail = |r0: usize, r1: usize| {
+                for r in r0..r1 {
+                    let i = p1 + r;
+                    // Sound: disjoint row ranges; reads are of panel columns
+                    // no worker writes during this pass.
+                    unsafe {
+                        let arow = base.0.add(i * n);
+                        for j2 in p1..=i {
+                            let brow = base.0.add(j2 * n);
+                            let mut v = *arow.add(j2);
+                            for k in p0..p1 {
+                                v -= *arow.add(k) * *brow.add(k);
+                            }
+                            *arow.add(j2) = v;
+                        }
+                    }
+                }
+            };
+            if pool.threads() > 1 && rows >= 2 && big_enough(rows, bw, rows / 2 + 1) {
+                pool.run(rows, pool::chunk(rows, pool.threads()), &run_trail);
+            } else {
+                run_trail(0, rows);
+            }
+        }
+        p0 = p1;
+    }
+    zero_upper(a);
+    Ok(())
+}
+
+/// Zero the strictly-upper triangle so the result is a clean L.
+fn zero_upper(a: &mut Mat64) {
+    let n = a.rows;
     for i in 0..n {
         for j in i + 1..n {
             *a.at_mut(i, j) = 0.0;
         }
     }
-    Ok(())
 }
 
 /// Solve L·y = b in place (forward substitution), L lower-triangular.
+/// Single-RHS vector path; multi-RHS callers use
+/// [`solve_lower_multi_with`] to batch columns across the pool.
 pub fn solve_lower(l: &Mat64, b: &mut [f64]) {
     let n = l.rows;
     for i in 0..n {
@@ -70,55 +221,124 @@ pub fn solve_lower_transpose(l: &Mat64, b: &mut [f64]) {
     }
 }
 
-/// Solve (A) X = B for SPD A; returns X.
-///
-/// §Perf: substitution runs at the *matrix* level — whole rows of the RHS
-/// are updated with contiguous axpys instead of solving column vectors one
-/// at a time (the per-column path strided through B and ran ~6× slower on
-/// the 512-wide MLP Hessians).
-pub fn spd_solve(a: &Mat64, b: &Mat64) -> Result<Mat64> {
-    assert_eq!(a.rows, b.rows);
-    let mut l = a.clone();
-    cholesky_in_place(&mut l)?;
-    let n = a.rows;
-    let m = b.cols;
-    let mut x = b.clone();
-    // Forward: L·Y = B, row-major rows of Y updated in place.
+/// Forward-substitute L·Y = B in place over the RHS matrix `x` [n,m],
+/// batching contiguous column strips across `pool`. Per-element operation
+/// order is independent of the strip partition (each element's updates run
+/// over `k` ascending with one rounding per axpy term), so results are
+/// bit-identical for every thread count.
+pub fn solve_lower_multi_with(l: &Mat64, x: &mut Mat64, pool: &Pool) {
+    let (n, m) = (l.rows, x.cols);
+    assert_eq!(x.rows, n, "solve_lower_multi shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if pool.threads() > 1 && m >= 2 && big_enough(n, n, m) {
+        let base = SendPtr::new(x.data.as_mut_ptr());
+        pool.run(m, pool::chunk(m, pool.threads()), |c0, c1| {
+            // Sound: column strips are disjoint regions of x.
+            unsafe { forward_cols(l, base.0, m, c0, c1) }
+        });
+    } else {
+        unsafe { forward_cols(l, x.data.as_mut_ptr(), m, 0, m) }
+    }
+}
+
+/// Backward-substitute Lᵀ·X = Y in place over `x` [n,m]; the column-strip
+/// twin of [`solve_lower_multi_with`].
+pub fn solve_lower_transpose_multi_with(l: &Mat64, x: &mut Mat64, pool: &Pool) {
+    let (n, m) = (l.rows, x.cols);
+    assert_eq!(x.rows, n, "solve_lower_transpose_multi shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if pool.threads() > 1 && m >= 2 && big_enough(n, n, m) {
+        let base = SendPtr::new(x.data.as_mut_ptr());
+        pool.run(m, pool::chunk(m, pool.threads()), |c0, c1| {
+            // Sound: column strips are disjoint regions of x.
+            unsafe { backward_cols(l, base.0, m, c0, c1) }
+        });
+    } else {
+        unsafe { backward_cols(l, x.data.as_mut_ptr(), m, 0, m) }
+    }
+}
+
+/// Forward substitution restricted to columns [c0,c1) of the row-major RHS
+/// at `x`. Caller guarantees strips are disjoint across concurrent calls.
+unsafe fn forward_cols(l: &Mat64, x: *mut f64, m: usize, c0: usize, c1: usize) {
+    let n = l.rows;
     for i in 0..n {
-        let (done, rest) = x.data.split_at_mut(i * m);
-        let yi = &mut rest[..m];
+        let xi = x.add(i * m);
         let lrow = &l.data[i * n..i * n + i];
         for (k, &lik) in lrow.iter().enumerate() {
             if lik != 0.0 {
-                let yk = &done[k * m..(k + 1) * m];
-                for (a, b) in yi.iter_mut().zip(yk.iter()) {
-                    *a -= lik * b;
+                let xk = x.add(k * m);
+                for c in c0..c1 {
+                    *xi.add(c) -= lik * *xk.add(c);
                 }
             }
         }
         let inv = 1.0 / l.at(i, i);
-        for v in yi.iter_mut() {
-            *v *= inv;
+        for c in c0..c1 {
+            *xi.add(c) *= inv;
         }
     }
-    // Backward: Lᵀ·X = Y.
+}
+
+/// Backward substitution restricted to columns [c0,c1); see
+/// [`forward_cols`] for the soundness contract.
+unsafe fn backward_cols(l: &Mat64, x: *mut f64, m: usize, c0: usize, c1: usize) {
+    let n = l.rows;
     for i in (0..n).rev() {
-        let (head, tail) = x.data.split_at_mut((i + 1) * m);
-        let xi = &mut head[i * m..];
+        let xi = x.add(i * m);
         for k in i + 1..n {
             let lki = l.at(k, i);
             if lki != 0.0 {
-                let xk = &tail[(k - i - 1) * m..(k - i) * m];
-                for (a, b) in xi.iter_mut().zip(xk.iter()) {
-                    *a -= lki * b;
+                let xk = x.add(k * m);
+                for c in c0..c1 {
+                    *xi.add(c) -= lki * *xk.add(c);
                 }
             }
         }
         let inv = 1.0 / l.at(i, i);
-        for v in xi.iter_mut() {
-            *v *= inv;
+        for c in c0..c1 {
+            *xi.add(c) *= inv;
         }
     }
+}
+
+/// Solve A·X = B for SPD A on the process-global pool; returns X.
+///
+/// §Perf: substitution runs at the *matrix* level — whole column strips of
+/// the RHS are updated with contiguous axpys instead of solving column
+/// vectors one at a time (the per-column path strided through B and ran
+/// ~6× slower on the 512-wide MLP Hessians), and strips fan out across
+/// pool workers.
+///
+/// ```
+/// use qep::linalg::{spd_solve, Mat64};
+/// let mut a = Mat64::eye(2);
+/// a.add_diag(3.0); // A = 4·I
+/// let mut b = Mat64::zeros(2, 1);
+/// *b.at_mut(0, 0) = 4.0;
+/// *b.at_mut(1, 0) = 6.0;
+/// let x = spd_solve(&a, &b).unwrap();
+/// assert_eq!(x.at(0, 0), 1.0);
+/// assert_eq!(x.at(1, 0), 1.5);
+/// ```
+pub fn spd_solve(a: &Mat64, b: &Mat64) -> Result<Mat64> {
+    spd_solve_with(a, b, &pool::global())
+}
+
+/// [`spd_solve`] on an explicit pool: blocked Cholesky, then pooled
+/// forward/backward substitution over RHS column strips. Bit-identical for
+/// every thread count.
+pub fn spd_solve_with(a: &Mat64, b: &Mat64, pool: &Pool) -> Result<Mat64> {
+    assert_eq!(a.rows, b.rows);
+    let mut l = a.clone();
+    cholesky_in_place_with(&mut l, CHOL_BLOCK, pool)?;
+    let mut x = b.clone();
+    solve_lower_multi_with(&l, &mut x, pool);
+    solve_lower_transpose_multi_with(&l, &mut x, pool);
     Ok(x)
 }
 
@@ -126,8 +346,13 @@ pub fn spd_solve(a: &Mat64, b: &Mat64) -> Result<Mat64> {
 /// A⁻¹·B; the explicit inverse is used by QEP's correction where the same
 /// Ĥ⁻¹ is reused across all rows of a layer.
 pub fn spd_inverse(a: &Mat64) -> Result<Mat64> {
+    spd_inverse_with(a, &pool::global())
+}
+
+/// [`spd_inverse`] on an explicit pool.
+pub fn spd_inverse_with(a: &Mat64, pool: &Pool) -> Result<Mat64> {
     let n = a.rows;
-    spd_solve(a, &Mat64::eye(n))
+    spd_solve_with(a, &Mat64::eye(n), pool)
 }
 
 /// GPTQ's factor: the *upper* Cholesky factor U of A⁻¹ (A SPD), such that
@@ -137,8 +362,13 @@ pub fn spd_inverse(a: &Mat64) -> Result<Mat64> {
 /// For real matrices `chol(B, upper=True) = chol(B, lower=True)ᵀ`, so we
 /// factor H⁻¹ = L·Lᵀ and return U = Lᵀ (B = (Lᵀ)ᵀ(Lᵀ) = Uᵀ·U).
 pub fn upper_cholesky_of_inverse(h: &Mat64) -> Result<Mat64> {
-    let mut l = spd_inverse(h)?;
-    cholesky_in_place(&mut l)?;
+    upper_cholesky_of_inverse_with(h, &pool::global())
+}
+
+/// [`upper_cholesky_of_inverse`] on an explicit pool.
+pub fn upper_cholesky_of_inverse_with(h: &Mat64, pool: &Pool) -> Result<Mat64> {
+    let mut l = spd_inverse_with(h, pool)?;
+    cholesky_in_place_with(&mut l, CHOL_BLOCK, pool)?;
     let n = l.rows;
     let mut u = Mat64::zeros(n, n);
     for i in 0..n {
@@ -174,6 +404,19 @@ mod tests {
         a
     }
 
+    /// Near-singular SPD: rank-1 dominant structure plus a tiny ridge.
+    fn ill_conditioned_spd(n: usize, ridge: f64, rng: &mut Rng) -> Mat64 {
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut a = Mat64::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                *a.at_mut(i, j) = v[i] * v[j];
+            }
+        }
+        a.add_diag(ridge);
+        a
+    }
+
     #[test]
     fn cholesky_reconstructs() {
         let mut rng = Rng::new(1);
@@ -195,10 +438,57 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_unblocked_bit_for_bit() {
+        // The contract: every block size and every thread count reproduces
+        // the unblocked serial factorization exactly, including sizes that
+        // are not a multiple of the block.
+        let mut rng = Rng::new(10);
+        for n in [1usize, 2, 7, 33, 64, 65, 129] {
+            let a = random_spd(n, &mut rng);
+            let mut want = a.clone();
+            cholesky_unblocked(&mut want).unwrap();
+            for block in [1usize, 3, 8, 64, 200] {
+                for threads in [1usize, 2, 4, 7] {
+                    let mut got = a.clone();
+                    cholesky_in_place_with(&mut got, block, &Pool::new(threads)).unwrap();
+                    assert_eq!(
+                        got.data, want.data,
+                        "n={n} block={block} threads={threads} differs from unblocked"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ill_conditioned_agrees_or_fails_identically() {
+        // Near-singular inputs must behave the same on every path: either
+        // all succeed with identical bits or all bail (same pivot check).
+        let mut rng = Rng::new(11);
+        for ridge in [1e-6, 1e-10, 0.0] {
+            let a = ill_conditioned_spd(24, ridge, &mut rng);
+            let mut reference = a.clone();
+            let want = cholesky_unblocked(&mut reference);
+            for block in [4usize, 24, 64] {
+                let mut got = a.clone();
+                let res = cholesky_in_place_with(&mut got, block, &Pool::new(4));
+                match (&want, &res) {
+                    (Ok(()), Ok(())) => assert_eq!(got.data, reference.data, "ridge={ridge}"),
+                    (Err(_), Err(_)) => {}
+                    _ => panic!("ridge={ridge} block={block}: blocked/unblocked disagree on PD"),
+                }
+            }
+        }
+    }
+
+    #[test]
     fn cholesky_rejects_indefinite() {
         let mut a = Mat64::eye(3);
         *a.at_mut(2, 2) = -1.0;
         assert!(cholesky_in_place(&mut a).is_err());
+        let mut b = Mat64::eye(3);
+        *b.at_mut(2, 2) = -1.0;
+        assert!(cholesky_unblocked(&mut b).is_err());
     }
 
     #[test]
@@ -213,6 +503,27 @@ mod tests {
                 let want = if i == j { 1.0 } else { 0.0 };
                 assert!((id.at(i, j) - want).abs() < 1e-8, "{} {}", i, j);
             }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_solve_is_thread_invariant() {
+        let mut rng = Rng::new(12);
+        let n = 48;
+        let a = random_spd(n, &mut rng);
+        let mut b = Mat64::zeros(n, 13);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let want = spd_solve_with(&a, &b, &Pool::serial()).unwrap();
+        for threads in [2usize, 3, 8] {
+            let got = spd_solve_with(&a, &b, &Pool::new(threads)).unwrap();
+            assert_eq!(got.data, want.data, "threads={threads}");
+        }
+        // And it actually solves: A·X ≈ B.
+        let ax = a.matmul(&want);
+        for (x, y) in ax.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() < 1e-7, "{x} vs {y}");
         }
     }
 
@@ -234,6 +545,32 @@ mod tests {
         solve_lower(&l, &mut b);
         for i in 0..n {
             assert!((b[i] - x_true[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_vector_solves() {
+        // The batched column-strip substitution must agree with the
+        // single-RHS vector path on each column (to solver tolerance).
+        let mut rng = Rng::new(13);
+        let n = 20;
+        let a = random_spd(n, &mut rng);
+        let mut l = a.clone();
+        cholesky_in_place(&mut l).unwrap();
+        let mut b = Mat64::zeros(n, 5);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut x = b.clone();
+        solve_lower_multi_with(&l, &mut x, &Pool::new(4));
+        solve_lower_transpose_multi_with(&l, &mut x, &Pool::new(4));
+        for c in 0..5 {
+            let mut col: Vec<f64> = (0..n).map(|r| b.at(r, c)).collect();
+            solve_lower(&l, &mut col);
+            solve_lower_transpose(&l, &mut col);
+            for r in 0..n {
+                assert!((x.at(r, c) - col[r]).abs() < 1e-12, "col {c} row {r}");
+            }
         }
     }
 

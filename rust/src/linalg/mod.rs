@@ -2,8 +2,16 @@
 //! (the environment is offline — no ndarray/BLAS). Everything the PTQ
 //! pipeline needs: a row-major `Mat` (f32) workhorse with blocked GEMM,
 //! an f64 `Mat64` for the numerically sensitive Hessian factorizations
-//! (Cholesky, SPD inverse, triangular solves), and the fast Walsh–Hadamard
-//! transform used by QuIP's incoherence preprocessing.
+//! (blocked Cholesky, SPD inverse, pooled multi-RHS triangular solves),
+//! and the fast Walsh–Hadamard transform used by QuIP's incoherence
+//! preprocessing.
+//!
+//! Parallel variants live in two places: [`par`] holds the row-partitioned
+//! GEMM kernels, [`chol`] the blocked SPD engine. Both run on the
+//! work-stealing pool (`crate::util::pool`) and both uphold the repo
+//! contract that results are **bit-identical for every thread count** —
+//! plain names (`matmul`, `spd_solve`, …) dispatch on the process-global
+//! pool, `*_with`/`*_serial` variants take it explicitly.
 
 pub mod chol;
 pub mod gemm;
@@ -11,7 +19,12 @@ pub mod hadamard;
 pub mod mat;
 pub mod par;
 
-pub use chol::{cholesky_in_place, spd_inverse, spd_solve, upper_cholesky_of_inverse};
+pub use chol::{
+    cholesky_in_place, cholesky_in_place_with, cholesky_unblocked, solve_lower,
+    solve_lower_multi_with, solve_lower_transpose, solve_lower_transpose_multi_with, spd_inverse,
+    spd_inverse_with, spd_solve, spd_solve_with, upper_cholesky_of_inverse,
+    upper_cholesky_of_inverse_with, CHOL_BLOCK,
+};
 pub use gemm::{matmul, matmul_nt, matmul_nt_serial, matmul_serial, matmul_tn, matmul_tn_serial};
 pub use hadamard::{fwht_inplace, hadamard_conjugate, hadamard_rows, SignedHadamard};
 pub use mat::{Mat, Mat64};

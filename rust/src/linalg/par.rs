@@ -19,7 +19,11 @@ use crate::util::pool::{chunk, Pool, SendPtr};
 /// (~a 128×128×128 GEMM; spawn+steal overhead is tens of microseconds).
 const PAR_FLOP_THRESHOLD: f64 = 4e6;
 
-fn big_enough(m: usize, k: usize, n: usize) -> bool {
+/// Shared dispatch heuristic for GEMM-shaped work (also used by the
+/// blocked SPD engine in `chol.rs`): parallelize only when the ~`2·m·k·n`
+/// FLOP count clears the spawn overhead. Purely a performance knob —
+/// results are bit-identical either way.
+pub(crate) fn big_enough(m: usize, k: usize, n: usize) -> bool {
     2.0 * m as f64 * k as f64 * n as f64 >= PAR_FLOP_THRESHOLD
 }
 

@@ -53,19 +53,28 @@ USAGE:
   repro quantize --model <tiny-s|tiny-m|tiny-l|path.qtz> --method <rtn|gptq|awq|quip>
                  --bits <2|3|4|8> [--group N] [--qep <alpha>] [--calib <wiki|ptb|c4>]
                  [--seed N] [--threads N] [--out out.qtz]
-  repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks]
+  repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks] [--chunk N]
   repro exp      <fig1|fig2|fig3|table1|table2|table3|table4|appendix|all>
                  [--sizes s,m,l] [--fast] [--artifacts DIR]
   repro info
 
 THREADS:
   --threads N    Worker threads for the parallel execution engine (GEMMs,
-                 Hessian builds, per-layer fan-out, GPTQ row sweeps).
-                 Accepted by every subcommand. 0 or omitted = use all
-                 hardware threads. Output is bit-identical for every N —
-                 per-layer seeds derive from layer names and all parallel
+                 Hessian builds, blocked Cholesky/SPD solves, per-layer
+                 fan-out, GPTQ row sweeps, batched perplexity/task eval,
+                 and sharded `exp` cell sweeps). Accepted by every
+                 subcommand. 0 or omitted = use all hardware threads.
+                 Output is bit-identical for every N — per-layer and
+                 per-cell seeds derive from names and all parallel
                  reductions have a fixed order — so the knob only trades
-                 wall-clock time.
+                 wall-clock time. (Exception to *sharding*, not to
+                 determinism: `exp table3` runs its cells serially because
+                 it measures per-cell runtime.)
+
+DOCS:
+  README.md            quickstart + repo layout map
+  docs/ARCHITECTURE.md  dataflow and paper-equation pointers
+  cargo doc --no-deps   API reference (kept warning-free in CI)
 ";
 
 fn gen_data(args: &Args) -> Result<()> {
@@ -139,7 +148,12 @@ fn eval(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown flavor"))?;
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
     let tokens = env.eval_tokens(flavor);
-    println!("{} ppl: {:.3}", flavor.name(), perplexity(&model, &tokens));
+    let chunk = args.get_usize("chunk", qep::eval::DEFAULT_CHUNK_SEGMENTS);
+    println!(
+        "{} ppl: {:.3}",
+        flavor.name(),
+        qep::eval::perplexity_chunked(&model, &tokens, chunk)
+    );
     if args.has("tasks") {
         let corpus = env.corpus(Flavor::Wiki);
         for fam in TaskFamily::all() {

@@ -8,6 +8,12 @@
 //!
 //! (Prop. 5.1 + the tunable propagation of §5.3), then hand `W*` to any
 //! base quantizer calibrated against `X̂`.
+//!
+//! The damped solve `(Ĥ + ρI)⁻¹·B` (ρ from App. B.1's mean-diagonal
+//! rule) runs on the blocked, pool-parallel SPD engine in
+//! `crate::linalg::chol`, so the correction scales with cores while
+//! staying bit-identical for every thread count. See
+//! `docs/ARCHITECTURE.md` §3 for the full equation-to-code map.
 
 pub mod alpha;
 pub mod correction;

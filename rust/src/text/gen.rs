@@ -96,7 +96,10 @@ struct FlavorParams {
     url_rate: f64,
 }
 
-/// A generated corpus: raw text plus its byte-token encoding.
+/// A generated corpus: raw text plus its byte-token encoding. `Clone` so
+/// experiment sweeps can snapshot corpora into read-only shared state for
+/// pool workers (see `exp::common::ExpData`).
+#[derive(Clone)]
 pub struct Corpus {
     pub flavor: Flavor,
     pub text: String,

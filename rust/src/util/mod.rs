@@ -10,6 +10,20 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+/// FNV-1a hash of a name — the repo's stable name→seed derivation.
+/// Per-layer and per-experiment-cell seeds must be identical across runs,
+/// platforms, and pool scheduling orders (std's SipHash is randomized per
+/// process, so we carry FNV). Used by the pipeline's layer seeds and the
+/// sharded experiment sweeps' cell seeds.
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Wall-clock stopwatch used for the runtime experiments (Table 3).
 pub struct Stopwatch(std::time::Instant);
 

@@ -4,13 +4,27 @@
 //! every method × bit-width × QEP setting, a pipeline run with `threads=1`
 //! must produce a model bit-identical to `threads=4` — same floats, same
 //! serialized `.qtz` bytes — and runs must stay deterministic given a seed
-//! while the pool is active. This is what lets the repo claim the paper's
-//! "lightweight and scalable" axis without giving up reproducibility.
+//! while the pool is active. The same contract covers the blocked SPD
+//! engine (every thread count AND every block size), the pooled
+//! perplexity/task evaluation, and the sharded experiment sweeps (table
+//! renders must be byte-identical across `--threads`). This is what lets
+//! the repo claim the paper's "lightweight and scalable" axis without
+//! giving up reproducibility.
 
 use qep::coordinator::{Pipeline, PipelineConfig};
-use qep::model::{BlockWeights, Model, ModelConfig};
+use qep::eval::perplexity_with;
+use qep::exp::tables::{format_acc_table, format_ppl_table, matrix, run_matrix_on, Wants};
+use qep::exp::ExpData;
+use qep::linalg::{
+    cholesky_in_place_with, cholesky_unblocked, spd_solve_with, upper_cholesky_of_inverse_with,
+    Mat64,
+};
+use qep::model::{BlockWeights, Model, ModelConfig, Size};
 use qep::quant::{Method, QuantConfig};
+use qep::text::{Corpus, Flavor};
+use qep::util::pool::Pool;
 use qep::util::rng::Rng;
+use std::collections::HashMap;
 
 fn setup() -> (Model, Vec<u32>) {
     let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
@@ -110,6 +124,115 @@ fn qtz_files_are_byte_identical_across_thread_counts() {
     std::fs::remove_file(&p4).ok();
     assert!(!b1.is_empty());
     assert_eq!(b1, b4, ".qtz bytes differ between threads=1 and threads=4");
+}
+
+fn random_spd(n: usize, rng: &mut Rng) -> Mat64 {
+    // A = B·Bᵀ + n·I — well conditioned SPD, built in f64.
+    let mut b = Mat64::zeros(n, n);
+    for v in b.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut a = Mat64::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += b.at(i, k) * b.at(j, k);
+            }
+            *a.at_mut(i, j) = s;
+        }
+    }
+    a.add_diag(n as f64);
+    a
+}
+
+#[test]
+fn spd_engine_is_thread_and_block_invariant() {
+    let mut rng = Rng::new(9);
+    let n = 96;
+    let a = random_spd(n, &mut rng);
+
+    // Factorization: every block size × thread count reproduces the
+    // unblocked serial reference bit-for-bit.
+    let mut want = a.clone();
+    cholesky_unblocked(&mut want).unwrap();
+    for block in [7usize, 32, 96, 128] {
+        for threads in [1usize, 2, 8] {
+            let mut got = a.clone();
+            cholesky_in_place_with(&mut got, block, &Pool::new(threads)).unwrap();
+            assert_eq!(got.data, want.data, "chol block={block} threads={threads}");
+        }
+    }
+
+    // Multi-RHS solve: column strips across workers, same bits.
+    let mut b = Mat64::zeros(n, 17);
+    for v in b.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let want_x = spd_solve_with(&a, &b, &Pool::serial()).unwrap();
+    for threads in [2usize, 3, 8] {
+        let got = spd_solve_with(&a, &b, &Pool::new(threads)).unwrap();
+        assert_eq!(got.data, want_x.data, "spd_solve threads={threads}");
+    }
+
+    // GPTQ's factor (inverse + re-factor + transpose) end to end.
+    let want_u = upper_cholesky_of_inverse_with(&a, &Pool::serial()).unwrap();
+    for threads in [2usize, 8] {
+        let got = upper_cholesky_of_inverse_with(&a, &Pool::new(threads)).unwrap();
+        assert_eq!(got.data, want_u.data, "chol_of_inv threads={threads}");
+    }
+}
+
+#[test]
+fn pooled_perplexity_is_thread_invariant() {
+    let (model, tokens) = setup();
+    let want = perplexity_with(&model, &tokens, 2, &Pool::serial());
+    for threads in [2usize, 5, 8] {
+        assert_eq!(
+            perplexity_with(&model, &tokens, 2, &Pool::new(threads)),
+            want,
+            "threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn exp_tables_are_byte_identical_across_thread_counts() {
+    // A full sharded sweep — quantize, evaluate ppl + tasks, render the
+    // paper-layout tables — must produce the same bytes for --threads
+    // 1/2/8. Tiny injected model + small corpora keep this fast.
+    let mut cfg = ModelConfig::new("tiny-s", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 3);
+    let mut models = HashMap::new();
+    models.insert(Size::TinyS.name().to_string(), model);
+    let mut corpora = HashMap::new();
+    for f in Flavor::all() {
+        corpora.insert(f, Corpus::generate(f, 24 * 1024, 0));
+    }
+    let data = ExpData::from_parts(models, corpora);
+
+    let sizes = [Size::TinyS];
+    let settings = [QuantConfig::int(3)];
+    let methods = [Method::Rtn, Method::Gptq];
+    let cells = matrix(&sizes, &settings, &methods);
+    let wants = Wants { ppl: vec![Flavor::Wiki], tasks: vec![qep::eval::TaskFamily::Cloze] };
+
+    let render = |threads: usize| -> (String, String) {
+        let results = run_matrix_on(&data, &cells, &wants, &Pool::new(threads)).unwrap();
+        let t1 = format_ppl_table("t1", &results, &sizes, &settings, &methods, Flavor::Wiki);
+        let t2 = format_acc_table("t2", &results, &sizes, &settings, &methods, None);
+        (t1.render(), t2.render())
+    };
+    let (ppl1, acc1) = render(1);
+    for threads in [2usize, 8] {
+        let (ppl_t, acc_t) = render(threads);
+        assert_eq!(ppl1, ppl_t, "ppl table bytes differ at threads={threads}");
+        assert_eq!(acc1, acc_t, "acc table bytes differ at threads={threads}");
+    }
+    // The tables contain real numbers, not N/A placeholders (a cell that
+    // failed to match would render as N/A).
+    assert!(!ppl1.contains("N/A"), "{ppl1}");
 }
 
 #[test]

@@ -1,7 +1,12 @@
-//! Fig. 2 reproduction as a runnable example: quantize the first half of
-//! tiny-m's blocks with RTN INT3 and plot (ASCII) how the block-output
-//! error Δ_m accumulates through the quantized prefix and keeps *growing*
-//! through the full-precision suffix — then show QEP damping it.
+//! **What this example demonstrates:** the paper's core diagnosis (Fig. 2)
+//! — quantization error *propagates*. It quantizes the first half of
+//! tiny-m's blocks with RTN INT3 (`PipelineConfig::max_blocks`), measures
+//! the per-block output error Δ_m (Eq. 2, `eval::delta_per_block`), and
+//! plots an ASCII log-scale chart of the error accumulating through the
+//! quantized prefix and *continuing to grow* through the untouched
+//! full-precision suffix — then repeats with QEP enabled to show the
+//! compensation damping it. Falls back to random weights when artifacts
+//! are missing.
 //!
 //! Run: `cargo run --release --example error_propagation [-- --bits 2]`
 

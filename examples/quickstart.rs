@@ -1,10 +1,12 @@
-//! Quickstart: the end-to-end driver proving all layers compose.
-//!
-//! Loads the trained tiny-s model (JAX-trained at build time, QTZ format),
-//! quantizes it with GPTQ at INT3 — once plain, once QEP-enhanced —
-//! evaluates perplexity on the WikiText-analog corpus through BOTH the
-//! pure-Rust forward and the PJRT-compiled JAX artifact, and reports
-//! zero-shot accuracy. This is the workload recorded in EXPERIMENTS.md.
+//! **What this example demonstrates:** the end-to-end happy path — every
+//! layer of the stack composing in one run. It loads the trained tiny-s
+//! model (JAX-trained at build time, QTZ format), quantizes it with GPTQ
+//! at INT2 — once plain, once QEP-enhanced — on the persistent worker
+//! pool, evaluates perplexity on the WikiText-analog corpus, reports
+//! zero-shot accuracy, and prints the QEP improvement. With the `pjrt`
+//! cargo feature it additionally runs the same quantized model through
+//! the PJRT-compiled JAX artifact as a cross-check; the default build
+//! notes that the runtime is off and stays pure Rust.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
@@ -12,7 +14,9 @@ use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::eval::{perplexity, TaskFamily, TaskSet};
 use qep::model::Size;
 use qep::quant::{Method, QuantConfig};
-use qep::runtime::{artifacts::PjrtModel, ArtifactRegistry, PjrtRuntime};
+use qep::runtime::ArtifactRegistry;
+#[cfg(feature = "pjrt")]
+use qep::runtime::{artifacts::PjrtModel, PjrtRuntime};
 use qep::text::Flavor;
 
 fn main() -> anyhow::Result<()> {
@@ -64,7 +68,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Same quantized model through the PJRT serving path (L1+L2 artifacts).
+    // Same quantized model through the PJRT serving path (L1+L2
+    // artifacts) when the `pjrt` feature is compiled in.
+    #[cfg(feature = "pjrt")]
     match PjrtRuntime::cpu() {
         Ok(rt) => {
             let pjrt = PjrtModel::bind(&rt, &reg, qep_model)?;
@@ -73,6 +79,8 @@ fn main() -> anyhow::Result<()> {
         }
         Err(e) => println!("PJRT unavailable ({e}); pure-Rust path only"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT disabled at build time (enable with --features pjrt); pure-Rust path only");
 
     let base_ppl = quantized[0].2;
     let qep_ppl = quantized[1].2;

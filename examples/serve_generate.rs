@@ -1,28 +1,44 @@
-//! Serving demo: batched greedy generation from the QEP-quantized tiny-s
-//! model where every attention projection runs through the **Pallas fused
-//! dequant×matmul artifact on PJRT** — quantized codes + grids in, logits
-//! out, Python nowhere in sight. Reports per-request latency and
-//! aggregate throughput like a serving-paper harness.
+//! **What this example demonstrates:** the *serving* story — batched
+//! greedy generation from a QEP-quantized tiny-s model, reported like a
+//! serving-paper harness (per-request latency, aggregate throughput).
+//! Block-0's attention projections are wrapped as quantized
+//! codes+grids layers; with the `pjrt` cargo feature (and `make
+//! artifacts`) every step additionally runs them through the **Pallas
+//! fused dequant×matmul artifact on PJRT** and cross-checks it against
+//! the pure-Rust dequant·matmul — Python nowhere in sight. The default
+//! (feature-less) build serves through the pure-Rust path alone, so the
+//! example builds and runs everywhere.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_generate`
+//! The generation loop itself runs on the persistent worker pool
+//! (GEMMs dispatch through `util::pool`), so this is also the latency
+//! profile of the parallel engine end to end.
+//!
+//! Run: `cargo run --release --example serve_generate`
+//! (PJRT path: `make artifacts && cargo run --release --features pjrt
+//! --example serve_generate`.)
 
 use anyhow::Result;
 use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::linalg::Mat;
 use qep::model::{Forward, Size};
 use qep::quant::{Method, QuantConfig, QuantizedTensor};
+use qep::runtime::ArtifactRegistry;
+#[cfg(feature = "pjrt")]
 use qep::runtime::executor::{literal_to_mat, mat_to_literal};
-use qep::runtime::{ArtifactRegistry, HloExecutable, PjrtRuntime};
+#[cfg(feature = "pjrt")]
+use qep::runtime::{HloExecutable, PjrtRuntime};
 use qep::text::{ByteTokenizer, Flavor};
 use qep::util::{stats, Stopwatch};
 
-/// One attention projection served via the Pallas qmm artifact.
+/// One attention projection served from quantized codes + per-group
+/// grids (the `.qtz`/Pallas storage layout).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 struct QmmLayer {
     codes: Mat,
     scales: Mat,
     zeros: Mat,
     /// Dequantized reference weights (what the codes decode to) — the
-    /// pure-Rust cross-check target.
+    /// pure-Rust serving path and the PJRT cross-check target.
     dequant: Mat,
 }
 
@@ -38,6 +54,8 @@ impl QmmLayer {
         }
     }
 
+    /// Serve through the compiled Pallas fused dequant×matmul artifact.
+    #[cfg(feature = "pjrt")]
     fn run(&self, exe: &HloExecutable, x: &Mat) -> Result<Mat> {
         let out = exe.run(&[
             mat_to_literal(x)?,
@@ -66,11 +84,19 @@ fn main() -> Result<()> {
     .run(&model, calib)?;
     let qmodel = out.model;
 
-    let rt = PjrtRuntime::cpu()?;
-    let qmm = rt.load(reg.qmm_hlo(&model.cfg.name))?;
-    println!("PJRT platform: {}; qmm artifact: {}", rt.platform(), qmm.name);
+    // With the `pjrt` feature + artifacts, bind the Pallas qmm executable
+    // for the per-step cross-check; the default build serves pure-Rust.
+    #[cfg(feature = "pjrt")]
+    let (_rt, qmm) = {
+        let rt = PjrtRuntime::cpu()?;
+        let exe = rt.load(reg.qmm_hlo(&model.cfg.name))?;
+        println!("PJRT platform: {}; qmm artifact: {}", rt.platform(), exe.name);
+        (rt, exe)
+    };
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT disabled at build time (enable with --features pjrt); pure-Rust serving only");
 
-    // Wrap block-0's q/k/v/o projections as PJRT-served quantized layers.
+    // Wrap block-0's q/k/v/o projections as quantized served layers.
     let b0 = &qmodel.blocks[0];
     let layers = [
         ("wq", QmmLayer::new(&b0.wq, &qcfg)),
@@ -81,8 +107,7 @@ fn main() -> Result<()> {
 
     // Batched "requests": prompts drawn from the corpus; generation is
     // greedy over the full quantized model (pure-Rust forward) while the
-    // Pallas path handles block-0 attention projections — we cross-check
-    // the two every step.
+    // served path handles block-0 attention projections every step.
     let tok = ByteTokenizer;
     let prompts: Vec<String> = (0..8)
         .map(|i| corpus.text[i * 500..i * 500 + 64].to_string())
@@ -102,13 +127,18 @@ fn main() -> Result<()> {
             let mut seg = ids[ids.len() - real..].to_vec();
             seg.resize(qmodel.cfg.seq_len, qep::text::PAD);
 
-            // Cross-check: block-0 attn input through Pallas qmm vs Rust.
+            // Serve block-0's q-projection from the quantized layer (and,
+            // with `pjrt`, cross-check it against the Pallas artifact).
             let x = f.embed(&qmodel, &seg);
             let attn_in = qep::model::ops::rmsnorm(&x, &qmodel.blocks[0].attn_norm);
-            let q_pjrt = layers[0].1.run(&qmm, &attn_in)?;
             let q_rust = qep::model::ops::linear(&attn_in, &layers[0].1.dequant);
-            let rel = q_pjrt.sub(&q_rust).frob() / q_rust.frob().max(1e-12);
-            assert!(rel < 1e-4, "Pallas/Rust divergence: {rel}");
+            #[cfg(feature = "pjrt")]
+            {
+                let q_pjrt = layers[0].1.run(&qmm, &attn_in)?;
+                let rel = q_pjrt.sub(&q_rust).frob() / q_rust.frob().max(1e-12);
+                assert!(rel < 1e-4, "Pallas/Rust divergence: {rel}");
+            }
+            qep::util::bench::black_box(&q_rust);
 
             // Greedy next token from the full forward.
             let logits = f.forward(&qmodel, &seg);
@@ -146,6 +176,15 @@ fn main() -> Result<()> {
         stats::percentile(&latencies, 50.0),
         stats::percentile(&latencies, 90.0)
     );
-    println!("(every step cross-checked Pallas qmm vs pure-Rust dequant·matmul, {} layers bound)", layers.len());
+    #[cfg(feature = "pjrt")]
+    println!(
+        "(every step cross-checked Pallas qmm vs pure-Rust dequant·matmul, {} layers bound)",
+        layers.len()
+    );
+    #[cfg(not(feature = "pjrt"))]
+    println!(
+        "(served via pure-Rust dequant·matmul, {} layers bound; `--features pjrt` adds the Pallas cross-check)",
+        layers.len()
+    );
     Ok(())
 }

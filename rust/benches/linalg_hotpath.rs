@@ -1,17 +1,21 @@
-//! L3 hot-path micro-benchmarks: GEMM variants, Cholesky/SPD solves, and
-//! the fast Walsh–Hadamard transform. These are the kernels the §Perf pass
-//! optimizes; the GFLOP/s numbers below are the before/after evidence in
-//! EXPERIMENTS.md §Perf.
+//! L3 hot-path micro-benchmarks: GEMM variants, Cholesky/SPD solves, the
+//! fast Walsh–Hadamard transform, the dispatch-engine comparison
+//! (persistent workers vs the scoped-spawn baseline), and the SYRK
+//! micro-kernel vs its scalar reference. These are the kernels the §Perf
+//! pass optimizes; the GFLOP/s numbers below are the before/after
+//! evidence in docs/PERFORMANCE.md.
 //!
 //! Run: `cargo bench --bench linalg_hotpath`
+//! (CI smoke-runs it via `BENCH_SMOKE=1 cargo test --benches`.)
 
+use qep::linalg::micro::{dot1_sub_f64, syrk_row_sub_f64};
 use qep::linalg::{
     cholesky_in_place_with, cholesky_unblocked, fwht_inplace, matmul, matmul_nt, matmul_nt_serial,
     matmul_nt_with, matmul_tn, matmul_tn_serial, matmul_tn_with, spd_inverse, spd_solve_with,
     upper_cholesky_of_inverse, Mat, Mat64, CHOL_BLOCK,
 };
 use qep::util::bench::{bench, black_box, fmt_time, BenchConfig};
-use qep::util::pool::{available_parallelism, Pool};
+use qep::util::pool::{available_parallelism, chunk, Pool, SendPtr};
 use qep::util::rng::Rng;
 
 fn gflops(flops: f64, secs: f64) -> f64 {
@@ -19,7 +23,7 @@ fn gflops(flops: f64, secs: f64) -> f64 {
 }
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let cfg = BenchConfig::from_env();
     let mut rng = Rng::new(0);
 
     println!("# linalg hot path\n");
@@ -154,6 +158,96 @@ fn main() {
                 sbase.mean_s / r.mean_s
             );
         }
+    }
+
+    // Dispatch engines: the persistent worker pool (parked threads,
+    // mutex-lite injection) vs the scoped-spawn baseline it replaced.
+    // The workload mimics the blocked Cholesky's per-panel row jobs —
+    // many dispatches of n rows × one 64-long dot each — where the
+    // per-dispatch overhead is the dominant cost being amortized.
+    println!("\n# dispatch engines (persistent workers vs scoped spawn)\n");
+    let dthreads = available_parallelism().min(4).max(2);
+    let dpool = Pool::new(dthreads);
+    for n in [512usize, 1024] {
+        let xs = rng.normal_vec(n * 64, 1.0);
+        let ys = rng.normal_vec(n * 64, 1.0);
+        let mut out = vec![0.0f32; n];
+        let base = SendPtr::new(out.as_mut_ptr());
+        let body = |s: usize, e: usize| {
+            for i in s..e {
+                let d =
+                    qep::linalg::gemm::dot(&xs[i * 64..(i + 1) * 64], &ys[i * 64..(i + 1) * 64]);
+                // Sound: chunks are disjoint index ranges of `out`.
+                unsafe { *base.0.add(i) = d };
+            }
+        };
+        let grain = chunk(n, dpool.threads());
+        let rs = bench(&format!("panel job {n} rows scoped-spawn"), cfg, || {
+            dpool.run_scoped(n, grain, &body);
+        });
+        println!("{:<34} {:>10}  (per dispatch)", rs.name, fmt_time(rs.mean_s));
+        let rp = bench(&format!("panel job {n} rows persistent"), cfg, || {
+            dpool.run(n, grain, &body);
+        });
+        println!(
+            "{:<34} {:>10}  (per dispatch, {:.2}x vs scoped, t={dthreads})",
+            rp.name,
+            fmt_time(rp.mean_s),
+            rs.mean_s / rp.mean_s
+        );
+        black_box(&out);
+    }
+
+    // SYRK micro-kernel vs the scalar chain it replaces: a full trailing
+    // update of an n×n lower triangle against a 64-wide panel — the exact
+    // shape `cholesky_in_place_with` runs once per panel. Both variants
+    // compute bit-identical results (gated in tests); only wall-clock
+    // differs.
+    println!("\n# SYRK micro-kernel vs scalar (trailing update, panel width 64)\n");
+    let bw = 64usize;
+    for n in [512usize, 1024] {
+        let panel: Vec<f64> = (0..n * bw).map(|_| rng.normal()).collect();
+        let trail0: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let syrk_flops = (n * n) as f64 * bw as f64; // ~2·(n²/2)·bw
+
+        let rs = bench(&format!("syrk {n}x{bw} scalar"), cfg, || {
+            let mut t = trail0.clone();
+            for i in 0..n {
+                let arow = &panel[i * bw..(i + 1) * bw];
+                for j in 0..=i {
+                    t[i * n + j] = dot1_sub_f64(arow, &panel[j * bw..(j + 1) * bw], t[i * n + j]);
+                }
+            }
+            t
+        });
+        println!(
+            "{:<34} {:>10}  {:6.2} GFLOP/s",
+            rs.name,
+            fmt_time(rs.mean_s),
+            gflops(syrk_flops, rs.mean_s)
+        );
+
+        let rm = bench(&format!("syrk {n}x{bw} micro-kernel"), cfg, || {
+            let mut t = trail0.clone();
+            for i in 0..n {
+                let arow = &panel[i * bw..(i + 1) * bw];
+                // The exact production row kernel the blocked Cholesky's
+                // trailing update dispatches (chol.rs::run_trail).
+                // Sound: `t` (written) and `panel` (read) are disjoint
+                // allocations; row i's output range is [0, i].
+                unsafe {
+                    syrk_row_sub_f64(arow, panel.as_ptr(), bw, t.as_mut_ptr().add(i * n), 0, i + 1);
+                }
+            }
+            t
+        });
+        println!(
+            "{:<34} {:>10}  {:6.2} GFLOP/s  ({:.2}x vs scalar)",
+            rm.name,
+            fmt_time(rm.mean_s),
+            gflops(syrk_flops, rm.mean_s),
+            rs.mean_s / rm.mean_s
+        );
     }
 
     let x = Mat::randn(3072, 256, 1.0, &mut rng);

@@ -10,6 +10,7 @@ use qep::exp::ExpEnv;
 use qep::model::Size;
 use qep::quant::{Method, QuantConfig};
 use qep::text::Flavor;
+use qep::util::bench::smoke;
 use qep::util::{fmt_duration, Stopwatch};
 
 fn main() {
@@ -20,7 +21,11 @@ fn main() {
 
     println!("# end-to-end pipeline (tiny-s, INT3, 24 calib segments, 16k eval tokens)\n");
     println!("{:<22} {:>12} {:>12} {:>12} {:>10}", "config", "quantize", "eval ppl", "total", "ppl");
-    for method in Method::all() {
+    // Smoke mode (CI's `cargo test --benches`): one method proves the
+    // harness runs end to end; the full matrix is for real bench sessions.
+    let all_methods = Method::all();
+    let methods: &[Method] = if smoke() { &all_methods[..1] } else { &all_methods };
+    for method in methods.iter().copied() {
         for qep in [None, Some(0.5)] {
             let t_total = Stopwatch::start();
             let out = Pipeline::new(PipelineConfig {

@@ -7,11 +7,15 @@
 use qep::linalg::Mat;
 use qep::qep::corrected_weight;
 use qep::quant::{quantizer_for, LayerCtx, Method, QuantConfig};
-use qep::util::bench::{bench, fmt_time, BenchConfig};
+use qep::util::bench::{bench, fmt_time, smoke, BenchConfig};
 use qep::util::rng::Rng;
 
 fn main() {
-    let cfg = BenchConfig { measure_time: 2.0, ..Default::default() };
+    let cfg = if smoke() {
+        BenchConfig::from_env()
+    } else {
+        BenchConfig { measure_time: 2.0, ..Default::default() }
+    };
     let mut rng = Rng::new(0);
     let m_tokens = 1024;
 

@@ -11,6 +11,7 @@ use qep::exp::ExpEnv;
 use qep::model::Size;
 use qep::quant::{Method, QuantConfig};
 use qep::text::Flavor;
+use qep::util::bench::smoke;
 use qep::util::fmt_duration;
 
 fn main() {
@@ -20,7 +21,11 @@ fn main() {
         "{:<10} {:>14} {:>14} {:>14} {:>14}",
         "size", "GPTQ", "AWQ", "QEP+RTN", "QEP corr. only"
     );
-    for size in Size::all() {
+    // Smoke mode (CI's `cargo test --benches`): one size is enough to
+    // prove the harness runs; full sweeps are for real bench sessions.
+    let all_sizes = Size::all();
+    let sizes: &[Size] = if smoke() { &all_sizes[..1] } else { &all_sizes };
+    for size in sizes.iter().copied() {
         let model = env.model(size);
         let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
         let mut cells = Vec::new();
@@ -61,9 +66,10 @@ fn main() {
         );
         // Robust ordering at this scale: QEP+RTN < AWQ (our cache-friendly
         // GPTQ column loop undercuts the paper's GPU GPTQ at d ≤ 512 —
-        // see EXPERIMENTS.md Table 3 notes).
+        // see EXPERIMENTS.md Table 3 notes). Timing assertions are
+        // meaningless on a noisy smoke run, so CI skips them.
         assert!(
-            cells[2] < cells[1],
+            smoke() || cells[2] < cells[1],
             "{}: QEP+RTN should be cheaper than AWQ",
             size.name()
         );

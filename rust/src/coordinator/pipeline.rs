@@ -1,12 +1,19 @@
 //! The quantization pipeline driver.
 //!
-//! Parallelism happens at three nested levels, all on the same
-//! work-stealing pool and all bit-identical to serial execution: the
-//! per-layer fan-out here (wq/wk/wv and gate/up share captured inputs),
-//! the row-partitioned GEMM/Hessian kernels (`linalg::par`), and the
-//! blocked SPD engine behind the QEP correction and GPTQ's Cholesky
-//! factor (`linalg::chol`). Nested calls degrade gracefully: work issued
-//! from inside a pool worker runs inline instead of oversubscribing.
+//! Parallelism happens at three nested levels, all on the same persistent
+//! worker pool and all bit-identical to serial execution: the per-layer
+//! fan-out here (wq/wk/wv and gate/up share captured inputs), the
+//! row-partitioned GEMM/Hessian kernels (`linalg::par`), and the blocked
+//! SPD engine behind the QEP correction and GPTQ's Cholesky factor
+//! (`linalg::chol`). Nested calls degrade gracefully: work issued from
+//! inside a pool worker runs inline instead of oversubscribing.
+//!
+//! Pool lifecycle: [`Pipeline::new`] pre-starts the process-wide workers
+//! (`util::pool::prestart`) whenever it will actually dispatch in
+//! parallel, so the first layer's many small per-panel jobs don't pay the
+//! one-time spawn cost; a `threads = 1` pipeline stays fully inline and
+//! never starts them. Workers park between dispatches and survive across
+//! pipeline runs; `repro` joins them on exit (`util::pool::shutdown`).
 
 use super::report::{LayerReport, PipelineReport};
 use crate::linalg::Mat;
@@ -102,6 +109,11 @@ impl Pipeline {
     pub fn new(cfg: PipelineConfig) -> Pipeline {
         let quantizer = quantizer_for(cfg.method);
         let pool = Pool::new(cfg.threads);
+        if pool.threads() > 1 {
+            // Spawn the persistent workers up front so the first layer's
+            // small per-panel dispatches don't pay the one-time cost.
+            crate::util::pool::prestart();
+        }
         Pipeline { cfg, quantizer, pool }
     }
 

@@ -36,23 +36,28 @@
 //!
 //! # Parallelism contract
 //!
-//! Everything hot runs on a dependency-free work-stealing pool
-//! ([`util::pool`]): GEMM/Hessian kernels ([`linalg::par`]), the blocked
-//! Cholesky/SPD engine ([`linalg::chol`]), per-layer pipeline fan-out
+//! Everything hot runs on a dependency-free **persistent worker pool**
+//! ([`util::pool`] — workers spawn once, park between dispatches, and
+//! self-schedule chunks off a lock-free cursor): GEMM/Hessian kernels
+//! ([`linalg::par`]), the blocked Cholesky/SPD engine ([`linalg::chol`],
+//! whose trailing SYRK update runs through the register-tile
+//! micro-kernels in [`linalg::micro`]), per-layer pipeline fan-out
 //! ([`coordinator`]), GPTQ row sweeps, batched perplexity/task evaluation
 //! ([`eval`]), and sharded experiment sweeps ([`exp`]). The invariant
 //! every one of these upholds — and that new code MUST uphold — is:
 //!
 //! > **Results are bit-identical for every thread count** (and, for the
-//! > blocked SPD engine, every block size). Workers own disjoint output
-//! > regions, every floating-point reduction has a fixed order, and all
-//! > randomness derives from stable names ([`util::fnv1a`]), never from
-//! > scheduling.
+//! > blocked SPD engine, every block size; for the micro-kernels, every
+//! > tile width). Workers own disjoint output regions, every
+//! > floating-point reduction has a fixed order, and all randomness
+//! > derives from stable names ([`util::fnv1a`]), never from scheduling.
 //!
-//! `rust/tests/parallel_equivalence.rs` gates the contract; the
-//! `--threads N` CLI knob (0 = all cores) therefore only trades
-//! wall-clock time. See `README.md` and `docs/ARCHITECTURE.md` at the
-//! repo root for the contributor-facing tour.
+//! `rust/tests/parallel_equivalence.rs` gates the contract (including
+//! persistent-pool vs scoped-spawn-baseline equivalence); the
+//! `--threads N` CLI knob (0 = all cores; 1 = fully inline, no workers
+//! ever spawned) therefore only trades wall-clock time. See `README.md`,
+//! `docs/ARCHITECTURE.md`, and `docs/PERFORMANCE.md` at the repo root
+//! for the contributor-facing tour and the benchmarking guide.
 //!
 //! # Feature flags
 //!

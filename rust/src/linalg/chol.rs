@@ -9,10 +9,12 @@
 //! [`cholesky_in_place_with`] is a blocked right-looking factorization:
 //! per panel of `block` columns it (1) factors the small diagonal tile
 //! serially, (2) triangular-solves the panel below the tile with rows
-//! fanned across the work-stealing pool, and (3) applies the trailing
-//! SYRK-shaped update `A₂₂ -= L₂₁·L₂₁ᵀ`, also row-parallel. Multi-RHS
-//! solves ([`spd_solve_with`]) batch the right-hand-side *columns* across
-//! pool workers.
+//! fanned across the persistent worker pool, and (3) applies the trailing
+//! SYRK-shaped update `A₂₂ -= L₂₁·L₂₁ᵀ`, also row-parallel and running
+//! through the SYRK register-tile micro-kernel
+//! ([`super::micro::dot4_sub_f64`]: four independent scalar-order
+//! dot-chains per tile). Multi-RHS solves ([`spd_solve_with`]) batch the
+//! right-hand-side *columns* across pool workers with the f64 axpy tile.
 //!
 //! # Bit-identical parallelism (the repo contract)
 //!
@@ -31,6 +33,7 @@
 //! into these routines by the callers.
 
 use super::mat::Mat64;
+use super::micro;
 use super::par::big_enough;
 use crate::util::pool::{self, Pool, SendPtr};
 use anyhow::{bail, Result};
@@ -153,22 +156,23 @@ pub fn cholesky_in_place_with(a: &mut Mat64, block: usize, pool: &Pool) -> Resul
             // 3. Trailing update A₂₂ -= L₂₁·L₂₁ᵀ (lower triangle only).
             //    Row i writes a[i][p1..=i] and reads panel columns [p0,p1)
             //    of rows ≤ i — finalized in step 2, untouched here — so
-            //    rows again fan out with no synchronization.
+            //    rows again fan out with no synchronization. The inner
+            //    dot-chains run through the SYRK micro-kernel
+            //    (`micro::dot4_sub_f64`): four output columns per register
+            //    tile, each keeping the scalar ascending-k subtraction
+            //    order, so the tiling never changes bits.
             let run_trail = |r0: usize, r1: usize| {
                 for r in r0..r1 {
                     let i = p1 + r;
                     // Sound: disjoint row ranges; reads are of panel columns
-                    // no worker writes during this pass.
+                    // [p0,p1) no worker writes during this pass, and every
+                    // write lands in columns [p1,i] of row i — disjoint from
+                    // all read slices (micro::syrk_row_sub_f64's contract).
                     unsafe {
                         let arow = base.0.add(i * n);
-                        for j2 in p1..=i {
-                            let brow = base.0.add(j2 * n);
-                            let mut v = *arow.add(j2);
-                            for k in p0..p1 {
-                                v -= *arow.add(k) * *brow.add(k);
-                            }
-                            *arow.add(j2) = v;
-                        }
+                        let apan = std::slice::from_raw_parts(arow.add(p0), bw);
+                        // b(j2) = row j2's panel slice = base + j2·n + p0.
+                        micro::syrk_row_sub_f64(apan, base.0.add(p0), n, arow, p1, i + 1);
                     }
                 }
             };
@@ -264,22 +268,25 @@ pub fn solve_lower_transpose_multi_with(l: &Mat64, x: &mut Mat64, pool: &Pool) {
 
 /// Forward substitution restricted to columns [c0,c1) of the row-major RHS
 /// at `x`. Caller guarantees strips are disjoint across concurrent calls.
+/// The per-row axpys run through the 4-wide f64 register tile
+/// (`micro::axpy_sub_f64`) — element-wise, so bit-identical to the plain
+/// loop.
 unsafe fn forward_cols(l: &Mat64, x: *mut f64, m: usize, c0: usize, c1: usize) {
     let n = l.rows;
+    let w = c1 - c0;
     for i in 0..n {
-        let xi = x.add(i * m);
+        // Sound: rows i and k < i are disjoint regions of x.
+        let xi = std::slice::from_raw_parts_mut(x.add(i * m + c0), w);
         let lrow = &l.data[i * n..i * n + i];
         for (k, &lik) in lrow.iter().enumerate() {
             if lik != 0.0 {
-                let xk = x.add(k * m);
-                for c in c0..c1 {
-                    *xi.add(c) -= lik * *xk.add(c);
-                }
+                let xk = std::slice::from_raw_parts(x.add(k * m + c0), w);
+                micro::axpy_sub_f64(lik, xk, xi);
             }
         }
         let inv = 1.0 / l.at(i, i);
-        for c in c0..c1 {
-            *xi.add(c) *= inv;
+        for v in xi.iter_mut() {
+            *v *= inv;
         }
     }
 }
@@ -288,20 +295,20 @@ unsafe fn forward_cols(l: &Mat64, x: *mut f64, m: usize, c0: usize, c1: usize) {
 /// [`forward_cols`] for the soundness contract.
 unsafe fn backward_cols(l: &Mat64, x: *mut f64, m: usize, c0: usize, c1: usize) {
     let n = l.rows;
+    let w = c1 - c0;
     for i in (0..n).rev() {
-        let xi = x.add(i * m);
+        // Sound: rows i and k > i are disjoint regions of x.
+        let xi = std::slice::from_raw_parts_mut(x.add(i * m + c0), w);
         for k in i + 1..n {
             let lki = l.at(k, i);
             if lki != 0.0 {
-                let xk = x.add(k * m);
-                for c in c0..c1 {
-                    *xi.add(c) -= lki * *xk.add(c);
-                }
+                let xk = std::slice::from_raw_parts(x.add(k * m + c0), w);
+                micro::axpy_sub_f64(lki, xk, xi);
             }
         }
         let inv = 1.0 / l.at(i, i);
-        for c in c0..c1 {
-            *xi.add(c) *= inv;
+        for v in xi.iter_mut() {
+            *v *= inv;
         }
     }
 }

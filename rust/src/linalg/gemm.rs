@@ -6,13 +6,17 @@
 //!
 //! The public `matmul` / `matmul_nt` / `matmul_tn` entry points dispatch
 //! large problems to the row-partitioned parallel kernels in
-//! [`super::par`] (work-stealing pool, see `crate::util::pool`). Results
-//! are **bit-identical** to the `*_serial` variants for every thread
-//! count: both paths run the same chunk kernels below, and each output
-//! element's floating-point accumulation order is fixed by construction
-//! (k ascending), independent of how rows are partitioned.
+//! [`super::par`] (persistent worker pool, see `crate::util::pool`).
+//! Results are **bit-identical** to the `*_serial` variants for every
+//! thread count: both paths run the same chunk kernels below, and each
+//! output element's floating-point accumulation order is fixed by
+//! construction (k ascending), independent of how rows are partitioned.
+//! The contiguous inner axpy runs through the shared register-tile
+//! micro-kernel ([`super::micro::axpy_f32`]) — element-wise, so tiling
+//! never changes bits.
 
 use super::mat::Mat;
+use super::micro;
 
 /// k-panel size: 256 k-steps × 4B × (inner j tile) fits comfortably in L2.
 pub(crate) const KC: usize = 256;
@@ -91,10 +95,9 @@ pub(crate) fn matmul_block(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: usize
                     continue;
                 }
                 let brow = &b.data[kk * n..(kk + 1) * n];
-                // Contiguous FMA-friendly inner loop; LLVM vectorizes this.
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
+                // Contiguous FMA-friendly inner axpy via the shared
+                // 8-wide register tile (bit-identical to the plain loop).
+                micro::axpy_f32(av, brow, crow);
             }
         }
     }
@@ -116,9 +119,7 @@ pub(crate) fn matmul_tn_block(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: us
                     continue;
                 }
                 let brow = &b.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
+                micro::axpy_f32(av, brow, crow);
             }
         }
     }

@@ -1,0 +1,324 @@
+//! Fixed-width register-tile micro-kernels for the innermost f32/f64
+//! loops of the hot path — shared by the GEMM chunk kernels
+//! ([`super::gemm`], dispatched in parallel by [`super::par`]), the
+//! blocked Cholesky's trailing SYRK update and triangular substitutions
+//! ([`super::chol`]), and GPTQ's in-block error compensation
+//! (`crate::quant::gptq`).
+//!
+//! # Why hand-written tiles
+//!
+//! The repo's bit-identical-parallelism contract pins every output
+//! element's floating-point operation *order*, which rules out the classic
+//! fast-GEMM tricks (multiple accumulators per element, FMA-tree
+//! reductions, `fast-math`). What it does *not* rule out is reorganizing
+//! work **across** elements: each kernel below processes a fixed-width
+//! tile of independent output elements in straight-line code, so LLVM's
+//! auto-vectorizer sees branch-free, bounds-check-free bodies with one
+//! independent mul-add chain per lane — SIMD across lanes, scalar-exact
+//! order within each lane.
+//!
+//! Two tile shapes cover everything the repo does:
+//!
+//! * **Axpy tiles** (`axpy_*`): `y[j] (+|-)= a·x[j]` over a contiguous
+//!   slice. Purely element-wise, so tiling is *trivially* bit-identical —
+//!   same single rounding per element regardless of tile width. Width 8
+//!   for f32, 4 for f64 (one 256-bit vector register either way).
+//! * **The SYRK dot tile** (`dot4_sub_f64`): four trailing-update
+//!   accumulators `acc[t] -= Σ_k a[k]·b_t[k]` advanced in lock-step over
+//!   `k`. Each accumulator's subtraction chain runs in ascending `k` with
+//!   one rounding per term — exactly the scalar order the unblocked
+//!   Cholesky performs — while the four chains are mutually independent,
+//!   which is what lets the vectorizer keep four FMA lanes busy where the
+//!   scalar loop had one serial dependency chain.
+//!
+//! `benches/linalg_hotpath.rs` reports the micro-kernel-vs-scalar speedup
+//! on the SYRK shapes the compensation hot path actually sees (n = 512 and
+//! 1024); `tests/parallel_equivalence.rs` and the Cholesky property tests
+//! gate bit-identity against the scalar references.
+
+/// f32 axpy tile width: 8 lanes = one 256-bit register of f32.
+pub const F32_TILE: usize = 8;
+/// f64 tile width: 4 lanes = one 256-bit register of f64.
+pub const F64_TILE: usize = 4;
+
+/// `y[j] += a · x[j]` over the whole slice, in fixed 8-wide register
+/// tiles. Element-wise (one rounding per element), so this is
+/// bit-identical to the plain loop for every input.
+#[inline]
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let tiles = n / F32_TILE;
+    for t in 0..tiles {
+        let i = t * F32_TILE;
+        // Fixed-size views: no bounds checks inside the straight-line tile.
+        let xv: &[f32; F32_TILE] = x[i..i + F32_TILE].try_into().unwrap();
+        let yv: &mut [f32; F32_TILE] = (&mut y[i..i + F32_TILE]).try_into().unwrap();
+        for l in 0..F32_TILE {
+            yv[l] += a * xv[l];
+        }
+    }
+    for i in tiles * F32_TILE..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y[j] -= a · x[j]` in 8-wide tiles; the compensation twin of
+/// [`axpy_f32`] (GPTQ's in-block error propagation is a subtraction).
+#[inline]
+pub fn axpy_sub_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let tiles = n / F32_TILE;
+    for t in 0..tiles {
+        let i = t * F32_TILE;
+        let xv: &[f32; F32_TILE] = x[i..i + F32_TILE].try_into().unwrap();
+        let yv: &mut [f32; F32_TILE] = (&mut y[i..i + F32_TILE]).try_into().unwrap();
+        for l in 0..F32_TILE {
+            yv[l] -= a * xv[l];
+        }
+    }
+    for i in tiles * F32_TILE..n {
+        y[i] -= a * x[i];
+    }
+}
+
+/// `y[j] -= a · x[j]` in 4-wide f64 tiles — the substitution kernel for
+/// the multi-RHS triangular solves (each RHS column strip is one `y`).
+#[inline]
+pub fn axpy_sub_f64(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let tiles = n / F64_TILE;
+    for t in 0..tiles {
+        let i = t * F64_TILE;
+        let xv: &[f64; F64_TILE] = x[i..i + F64_TILE].try_into().unwrap();
+        let yv: &mut [f64; F64_TILE] = (&mut y[i..i + F64_TILE]).try_into().unwrap();
+        for l in 0..F64_TILE {
+            yv[l] -= a * xv[l];
+        }
+    }
+    for i in tiles * F64_TILE..n {
+        y[i] -= a * x[i];
+    }
+}
+
+/// The SYRK micro-kernel: four trailing-update dot-chains at once.
+///
+/// Computes `acc[t] -= Σ_k a[k]·b_t[k]` for `t = 0..4`, with every
+/// accumulator's subtractions applied in ascending `k`, one rounding per
+/// term — the exact operation order of the scalar loop
+/// ([`dot1_sub_f64`]), so substituting this kernel for four consecutive
+/// scalar columns is bit-identical. The four chains are independent,
+/// giving the auto-vectorizer four parallel mul-sub lanes.
+///
+/// All of `b0..b3` must be at least `a.len()` long.
+#[inline]
+pub fn dot4_sub_f64(a: &[f64], b0: &[f64], b1: &[f64], b2: &[f64], b3: &[f64], acc: &mut [f64; 4]) {
+    let n = a.len();
+    // Equal-length views so the compiler can hoist all bounds checks.
+    let (b0, b1, b2, b3) = (&b0[..n], &b1[..n], &b2[..n], &b3[..n]);
+    let (mut v0, mut v1, mut v2, mut v3) = (acc[0], acc[1], acc[2], acc[3]);
+    for k in 0..n {
+        let ak = a[k];
+        v0 -= ak * b0[k];
+        v1 -= ak * b1[k];
+        v2 -= ak * b2[k];
+        v3 -= ak * b3[k];
+    }
+    *acc = [v0, v1, v2, v3];
+}
+
+/// Scalar reference chain `acc -= Σ_k a[k]·b[k]` (ascending `k`, one
+/// rounding per term). Handles the ragged tail of a SYRK row and is the
+/// baseline `benches/linalg_hotpath.rs` measures [`dot4_sub_f64`] against.
+#[inline]
+pub fn dot1_sub_f64(a: &[f64], b: &[f64], acc: f64) -> f64 {
+    let n = a.len();
+    let b = &b[..n];
+    let mut v = acc;
+    for k in 0..n {
+        v -= a[k] * b[k];
+    }
+    v
+}
+
+/// One output row of a trailing SYRK update through the
+/// [`dot4_sub_f64`] tile: for every `j` in `[j0, j1)`,
+/// `*out.add(j) -= Σ_k apan[k] · *b(j).add(k)` where `b(j) = b_base +
+/// j·b_stride` is row `j` of the panel. Whole tiles go through the
+/// 4-wide kernel, the ragged tail through [`dot1_sub_f64`]; each
+/// element keeps the scalar ascending-`k` order either way.
+///
+/// Raw-pointer form on purpose: in the blocked Cholesky the `b` rows,
+/// `apan`, and the output row all live in the same matrix allocation
+/// (and `b(j)` may even *be* `apan` when `j` is the output row), which
+/// safe slices cannot express. The bench drives this exact function, so
+/// it measures the production tiling, not a copy.
+///
+/// # Safety
+///
+/// For the whole call: every `b(j)` row (length `apan.len()`) must be
+/// valid to read, `out.add(j0..j1)` valid to write, and the written
+/// range must be disjoint from `apan` and from every `b(j)` row read
+/// (the reads may alias each other and `apan` freely).
+pub unsafe fn syrk_row_sub_f64(
+    apan: &[f64],
+    b_base: *const f64,
+    b_stride: usize,
+    out: *mut f64,
+    j0: usize,
+    j1: usize,
+) {
+    let k = apan.len();
+    let mut j = j0;
+    while j + 4 <= j1 {
+        let b0 = std::slice::from_raw_parts(b_base.add(j * b_stride), k);
+        let b1 = std::slice::from_raw_parts(b_base.add((j + 1) * b_stride), k);
+        let b2 = std::slice::from_raw_parts(b_base.add((j + 2) * b_stride), k);
+        let b3 = std::slice::from_raw_parts(b_base.add((j + 3) * b_stride), k);
+        let mut acc = [*out.add(j), *out.add(j + 1), *out.add(j + 2), *out.add(j + 3)];
+        dot4_sub_f64(apan, b0, b1, b2, b3, &mut acc);
+        *out.add(j) = acc[0];
+        *out.add(j + 1) = acc[1];
+        *out.add(j + 2) = acc[2];
+        *out.add(j + 3) = acc[3];
+        j += 4;
+    }
+    while j < j1 {
+        let bj = std::slice::from_raw_parts(b_base.add(j * b_stride), k);
+        *out.add(j) = dot1_sub_f64(apan, bj, *out.add(j));
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_f32(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn vec_f64(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn axpy_tiles_match_plain_loops_bitwise() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 100] {
+            let x = vec_f32(n, &mut rng);
+            let y0 = vec_f32(n, &mut rng);
+            let a = rng.normal() as f32;
+
+            let mut tiled = y0.clone();
+            axpy_f32(a, &x, &mut tiled);
+            let mut plain = y0.clone();
+            for j in 0..n {
+                plain[j] += a * x[j];
+            }
+            assert_eq!(tiled, plain, "axpy_f32 n={n}");
+
+            let mut tiled = y0.clone();
+            axpy_sub_f32(a, &x, &mut tiled);
+            let mut plain = y0;
+            for j in 0..n {
+                plain[j] -= a * x[j];
+            }
+            assert_eq!(tiled, plain, "axpy_sub_f32 n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_sub_f64_matches_plain_loop_bitwise() {
+        let mut rng = Rng::new(2);
+        for n in [0usize, 1, 3, 4, 5, 11, 64, 97] {
+            let x = vec_f64(n, &mut rng);
+            let y0 = vec_f64(n, &mut rng);
+            let a = rng.normal();
+            let mut tiled = y0.clone();
+            axpy_sub_f64(a, &x, &mut tiled);
+            let mut plain = y0;
+            for j in 0..n {
+                plain[j] -= a * x[j];
+            }
+            assert_eq!(tiled, plain, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot4_matches_four_scalar_chains_bitwise() {
+        let mut rng = Rng::new(3);
+        for k in [0usize, 1, 2, 7, 33, 64, 129] {
+            let a = vec_f64(k, &mut rng);
+            let bs: Vec<Vec<f64>> = (0..4).map(|_| vec_f64(k, &mut rng)).collect();
+            let init: Vec<f64> = vec_f64(4, &mut rng);
+
+            let mut acc = [init[0], init[1], init[2], init[3]];
+            dot4_sub_f64(&a, &bs[0], &bs[1], &bs[2], &bs[3], &mut acc);
+
+            for t in 0..4 {
+                let mut want = init[t];
+                for kk in 0..k {
+                    want -= a[kk] * bs[t][kk];
+                }
+                assert_eq!(acc[t].to_bits(), want.to_bits(), "k={k} lane {t}");
+                assert_eq!(
+                    dot1_sub_f64(&a, &bs[t], init[t]).to_bits(),
+                    want.to_bits(),
+                    "dot1 k={k} lane {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_row_matches_scalar_chains_bitwise() {
+        // The full row helper (4-wide tiles + ragged tail) against plain
+        // scalar chains, across tail lengths 0..=3 and j0 offsets.
+        let mut rng = Rng::new(4);
+        let bw = 5;
+        for rows in [1usize, 2, 4, 5, 7, 8, 11] {
+            for j0 in [0usize, 1, 3] {
+                if j0 >= rows {
+                    continue;
+                }
+                let panel = vec_f64(rows * bw, &mut rng);
+                let apan = vec_f64(bw, &mut rng);
+                let out0 = vec_f64(rows, &mut rng);
+
+                let mut got = out0.clone();
+                unsafe {
+                    syrk_row_sub_f64(&apan, panel.as_ptr(), bw, got.as_mut_ptr(), j0, rows);
+                }
+
+                let mut want = out0;
+                for j in j0..rows {
+                    for k in 0..bw {
+                        want[j] -= apan[k] * panel[j * bw + k];
+                    }
+                }
+                for j in 0..rows {
+                    assert_eq!(
+                        got[j].to_bits(),
+                        want[j].to_bits(),
+                        "rows={rows} j0={j0} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_tolerate_longer_b_slices() {
+        // chol's callers pass row slices that may extend past a.len().
+        let a = [1.0f64, 2.0];
+        let b = [1.0f64, 1.0, 99.0, 99.0];
+        assert_eq!(dot1_sub_f64(&a, &b, 10.0), 10.0 - 1.0 - 2.0);
+        let mut acc = [0.0f64; 4];
+        dot4_sub_f64(&a, &b, &b, &b, &b, &mut acc);
+        assert!(acc.iter().all(|&v| v == -3.0));
+    }
+}

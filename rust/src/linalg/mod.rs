@@ -8,15 +8,20 @@
 //!
 //! Parallel variants live in two places: [`par`] holds the row-partitioned
 //! GEMM kernels, [`chol`] the blocked SPD engine. Both run on the
-//! work-stealing pool (`crate::util::pool`) and both uphold the repo
+//! persistent worker pool (`crate::util::pool`) and both uphold the repo
 //! contract that results are **bit-identical for every thread count** —
 //! plain names (`matmul`, `spd_solve`, …) dispatch on the process-global
-//! pool, `*_with`/`*_serial` variants take it explicitly.
+//! pool, `*_with`/`*_serial` variants take it explicitly. The innermost
+//! loops of both (and of GPTQ's compensation sweep) share the fixed-width
+//! register-tile micro-kernels in [`micro`], which vectorize across
+//! independent output elements while keeping each element's
+//! floating-point operation order exactly scalar.
 
 pub mod chol;
 pub mod gemm;
 pub mod hadamard;
 pub mod mat;
+pub mod micro;
 pub mod par;
 
 pub use chol::{

@@ -19,7 +19,11 @@ use qep::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    if let Err(e) = dispatch(&args) {
+    let result = dispatch(&args);
+    // Gracefully join the persistent pool workers (no-op if no parallel
+    // dispatch ever started them).
+    qep::util::pool::shutdown();
+    if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -71,9 +75,18 @@ THREADS:
                  determinism: `exp table3` runs its cells serially because
                  it measures per-cell runtime.)
 
+                 Pool lifecycle: worker threads are persistent. They spawn
+                 once, on the first parallel dispatch (pre-started by the
+                 quantize pipeline), park between jobs, and are joined
+                 when repro exits. `--threads 1` bypasses them entirely —
+                 every kernel runs inline on the calling thread and no
+                 worker threads are ever created.
+
 DOCS:
-  README.md            quickstart + repo layout map
+  README.md             quickstart + repo layout map
   docs/ARCHITECTURE.md  dataflow and paper-equation pointers
+  docs/PERFORMANCE.md   parallelism contract, pool + micro-kernel design,
+                        how to benchmark (cargo bench)
   cargo doc --no-deps   API reference (kept warning-free in CI)
 ";
 

@@ -11,9 +11,12 @@
 //! are independent throughout — row `r`'s grid refits, rounding decisions,
 //! and in-block compensation touch only row `r` of W and of the error
 //! buffer (the Cholesky factor is shared read-only). Each lazy block
-//! therefore sweeps its rows across the work-stealing pool, and the tail
-//! update runs through the parallel GEMM. Per-row operation order is
-//! untouched, so results stay bit-identical to the serial sweep.
+//! therefore sweeps its rows across the persistent worker pool
+//! (`util::pool`), and the tail update runs through the parallel GEMM.
+//! Per-row operation order is untouched — the in-block compensation axpy
+//! runs through the element-wise register tile
+//! (`linalg::micro::axpy_sub_f32`) — so results stay bit-identical to the
+//! serial sweep.
 
 use super::{grid::GroupGrid, LayerCtx, QuantConfig, Quantizer};
 use crate::linalg::{matmul, upper_cholesky_of_inverse, Mat};
@@ -126,10 +129,14 @@ impl Quantizer for Gptq {
                             wr[j] = q;
                             let e = (v - q) / ujj;
                             er[j - b0] = e;
-                            // Immediate in-block compensation.
-                            for c in j + 1..b1 {
-                                wr[c] -= e * urow[c];
-                            }
+                            // Immediate in-block compensation through the
+                            // shared 8-wide register tile (element-wise,
+                            // bit-identical to the plain loop).
+                            crate::linalg::micro::axpy_sub_f32(
+                                e,
+                                &urow[j + 1..b1],
+                                &mut wr[j + 1..b1],
+                            );
                         }
                     }
                 });

@@ -27,6 +27,33 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// The default config, unless `BENCH_SMOKE` is set in the environment
+    /// — then a minimal one-or-two-iteration config, so `cargo test
+    /// --benches` (CI's bit-rot check for the `harness = false` bench
+    /// binaries) proves every bench still *runs* without paying full
+    /// measurement time. Numbers produced under smoke are meaningless.
+    pub fn from_env() -> BenchConfig {
+        if smoke() {
+            BenchConfig {
+                warmup_time: 0.0,
+                measure_time: 0.0,
+                max_iters: 2,
+                min_iters: 1,
+            }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// True when `BENCH_SMOKE` is set: benches should shrink sweeps to a
+/// just-prove-it-runs size (CI runs them this way via `cargo test
+/// --benches`; see `.github/workflows/ci.yml`).
+pub fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,

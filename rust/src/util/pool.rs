@@ -1,4 +1,4 @@
-//! Work-stealing parallel execution substrate for the PTQ hot path.
+//! Persistent-worker parallel execution substrate for the PTQ hot path.
 //!
 //! Design constraints (in priority order):
 //!
@@ -9,22 +9,85 @@
 //!    region is processed with exactly the serial kernel's floating-point
 //!    operation order. No atomic float reductions, ever.
 //! 2. **No dependencies.** The environment is offline; everything is built
-//!    on `std::thread::scope` + atomics.
+//!    on `std::thread` + `Mutex`/`Condvar` + atomics.
 //! 3. **No oversubscription.** Work executed *inside* a pool worker that
 //!    itself calls into the pool runs inline (a thread-local flag marks
 //!    pool context), so nested parallelism — e.g. a GEMM inside a
 //!    parallel per-layer quantization — degrades gracefully to the serial
 //!    kernel instead of spawning threads quadratically.
 //!
-//! Scheduling is chunked self-stealing: work items `[0, n)` are split into
-//! grain-sized chunks published through a shared atomic cursor, and every
-//! worker (including the calling thread) steals the next chunk when it
-//! finishes its current one. Fast workers therefore take more chunks —
-//! the load balancing of a work-stealing deque without the deque.
+//! # Persistent workers (vs the old scoped-spawn scheduler)
+//!
+//! Through PR 2 every [`Pool::run`] spawned fresh scoped threads and joined
+//! them before returning. That is simple and safe, but the blocked
+//! Cholesky/SPD engine issues *many small per-panel* dispatches per layer,
+//! and at tens of microseconds per spawn+join the scheduling overhead grew
+//! to a measurable fraction of the hot path. The pool now keeps one
+//! process-wide set of worker threads that **park between dispatches**:
+//!
+//! * Workers are spawned lazily on the first parallel dispatch (never for
+//!   `--threads 1` / [`Pool::serial`] work, which runs inline and touches
+//!   no global state) and sized to `available_parallelism() - 1` helpers —
+//!   the submitting thread is always worker 0.
+//! * Job injection is mutex-lite: the submitter publishes one type-erased
+//!   job descriptor under a small `Mutex` + `Condvar` pair, workers wake,
+//!   claim a participation ticket, and then self-schedule grain-sized
+//!   chunks off a **lock-free atomic cursor** exactly as before. One lock
+//!   acquisition per worker per dispatch; the per-chunk path is atomic-only.
+//! * A dispatch that asks for fewer threads than exist hands out fewer
+//!   tickets (the rest keep sleeping); asking for more than exist is fine
+//!   too — stealing means fewer workers simply take more chunks. Results
+//!   are bit-identical in every case, so the worker count is purely a
+//!   wall-clock knob.
+//! * A panic inside a job is caught on the worker, forwarded to the
+//!   submitter (which re-raises it after the job fully drains), and leaves
+//!   the workers parked and reusable — a panicking job never deadlocks nor
+//!   poisons subsequent dispatches.
+//! * [`shutdown`] retires the pool gracefully (workers observe the flag,
+//!   exit, and are joined). The next dispatch after a shutdown simply
+//!   starts a fresh pool, so shutdown is safe to call at any quiescent
+//!   point; the `repro` binary calls it on exit.
+//!
+//! The old scoped-spawn scheduler is kept as [`Pool::run_scoped`]: it is
+//! the baseline `benches/linalg_hotpath.rs` measures dispatch overhead
+//! against, and `tests/parallel_equivalence.rs` proves both engines
+//! execute identical work.
+//!
+//! Scheduling within a job is chunked self-stealing: work items `[0, n)`
+//! are split into grain-sized chunks published through a shared atomic
+//! cursor, and every participant (including the calling thread) steals the
+//! next chunk when it finishes its current one. Fast workers therefore
+//! take more chunks — the load balancing of a work-stealing deque without
+//! the deque.
+//!
+//! ```
+//! use qep::util::pool::Pool;
+//!
+//! // Same surface as the scoped engine: `run` over disjoint chunks …
+//! let pool = Pool::new(2);
+//! let mut hits = vec![0u8; 10];
+//! {
+//!     let base = qep::util::pool::SendPtr::new(hits.as_mut_ptr());
+//!     pool.run(10, 3, |s, e| {
+//!         for i in s..e {
+//!             // Sound: chunks are disjoint index ranges.
+//!             unsafe { *base.0.add(i) += 1 };
+//!         }
+//!     });
+//! }
+//! assert!(hits.iter().all(|&h| h == 1));
+//!
+//! // … and `par_map`, which returns results in index order regardless of
+//! // which worker computed what.
+//! assert_eq!(pool.par_map(4, |i| i * i), vec![0, 1, 4, 9]);
+//! ```
 
+use std::any::Any;
 use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Process-wide default worker count. 0 means "ask the OS"
 /// (`available_parallelism`). Set from the `repro` CLI via `--threads`.
@@ -44,6 +107,12 @@ pub fn available_parallelism() -> usize {
 
 /// Set the process-wide default worker count (0 = auto). This only affects
 /// scheduling; results are bit-identical for every setting.
+///
+/// ```
+/// qep::util::pool::set_global_threads(2);
+/// assert_eq!(qep::util::pool::global_threads(), 2);
+/// qep::util::pool::set_global_threads(0); // back to "all hardware threads"
+/// ```
 pub fn set_global_threads(n: usize) {
     GLOBAL_THREADS.store(n, Ordering::Relaxed);
 }
@@ -72,7 +141,7 @@ pub fn chunk(n: usize, threads: usize) -> usize {
 /// Safety contract: workers may only dereference *disjoint* regions derived
 /// from this pointer (e.g. distinct row ranges of a matrix). The wrapper
 /// exists purely to move the pointer across the `Send`/`Sync` boundary of
-/// scoped threads; every dereference site stays `unsafe` and local.
+/// worker threads; every dereference site stays `unsafe` and local.
 pub struct SendPtr<T>(pub *mut T);
 
 unsafe impl<T: Send> Send for SendPtr<T> {}
@@ -84,8 +153,304 @@ impl<T> SendPtr<T> {
     }
 }
 
-/// A lightweight handle on the execution substrate. Cheap to copy; threads
-/// are spawned scoped per call (no idle spinning between calls).
+// ---------------------------------------------------------------------------
+// The persistent runtime: parked workers + mutex-lite job injection.
+// ---------------------------------------------------------------------------
+
+/// One type-erased job, owned by the submitting stack frame. Workers only
+/// ever see a raw pointer to it, and the submitter does not return (or
+/// unwind past it) until every participant has checked out, so the
+/// pointer never dangles.
+struct JobCtx {
+    /// Lock-free chunk cursor: participants `fetch_add(grain)` until `n`.
+    cursor: AtomicUsize,
+    n: usize,
+    grain: usize,
+    /// `&F` erased to a thin pointer; paired with the monomorphized
+    /// trampoline below.
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+    /// Workers currently inside *this* job (modified under the injector
+    /// lock). Per-job — so a retiring submitter drains exactly its own
+    /// participants and is never held up by a successor's job.
+    active: AtomicUsize,
+    /// First panic payload raised by any participant, re-raised by the
+    /// submitter once the job has drained.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Monomorphized trampoline restoring the erased closure type.
+///
+/// Safety: `data` must be the `&F` the matching [`JobCtx`] was built from,
+/// still alive (guaranteed by the submitter draining before return).
+unsafe fn call_erased<F: Fn(usize, usize) + Sync>(data: *const (), start: usize, end: usize) {
+    (*(data as *const F))(start, end)
+}
+
+/// The chunk-stealing loop both engines run: claim grain-sized chunks off
+/// the shared cursor until `[0, n)` is exhausted. Keeping this in ONE
+/// place is part of the persistent-vs-scoped equivalence story — the two
+/// engines cannot drift apart in how they chunk.
+fn steal_loop<F: Fn(usize, usize)>(cursor: &AtomicUsize, n: usize, grain: usize, f: &F) {
+    loop {
+        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        f(start, (start + grain).min(n));
+    }
+}
+
+/// [`steal_loop`] over a published (type-erased) job. Shared by workers
+/// and the submitting thread.
+fn steal_chunks(job: &JobCtx) {
+    let (call, data) = (job.call, job.data);
+    // Safety: see `call_erased`; the submitter keeps `data` alive until
+    // every participant (including us) has checked out.
+    steal_loop(&job.cursor, job.n, job.grain, &|start, end| unsafe {
+        call(data, start, end)
+    });
+}
+
+/// Run one participant's share of `job`, catching panics so a failing job
+/// can neither kill a persistent worker nor leave the submitter waiting.
+fn participate(job: &JobCtx) {
+    if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| steal_chunks(job))) {
+        let mut slot = job.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+}
+
+/// Everything workers and submitters coordinate through. All fields are
+/// only touched under `state`'s lock except the job's own atomics.
+struct Injector {
+    state: Mutex<InjectorState>,
+    /// Workers park here between dispatches.
+    work_cv: Condvar,
+    /// Submitters park here: queued ones until the current job retires,
+    /// the active one until its last participant checks out.
+    done_cv: Condvar,
+}
+
+struct InjectorState {
+    /// Bumped once per published job so parked workers can tell "new job"
+    /// from a spurious wakeup.
+    epoch: u64,
+    /// The live job, as a pointer-sized integer (`*const JobCtx as usize`;
+    /// stored as `usize` so the state stays `Send`). `None` while idle.
+    /// Participant counts live in each job's own [`JobCtx::active`].
+    job: Option<usize>,
+    /// Helper participation tickets remaining for the live job. A dispatch
+    /// on `t` threads hands out `t - 1` tickets; excess workers go back to
+    /// sleep without touching the job.
+    tickets: usize,
+    shutdown: bool,
+}
+
+impl Injector {
+    fn new() -> Injector {
+        Injector {
+            state: Mutex::new(InjectorState {
+                epoch: 0,
+                job: None,
+                tickets: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+}
+
+/// The persistent pool: parked helper threads plus their injector.
+struct Runtime {
+    inj: Arc<Injector>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Runtime {
+    fn start(helpers: usize) -> Runtime {
+        let inj = Arc::new(Injector::new());
+        let handles = (0..helpers)
+            .map(|i| {
+                let inj = Arc::clone(&inj);
+                std::thread::Builder::new()
+                    .name(format!("qep-pool-{i}"))
+                    .spawn(move || worker_loop(&inj))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Runtime { inj, handles }
+    }
+}
+
+/// `None` until the first parallel dispatch; `Some` while workers exist.
+/// Guarded by a plain mutex: dispatch touches it once (clone an `Arc`), so
+/// contention is irrelevant next to the work being dispatched.
+static RUNTIME: Mutex<Option<Runtime>> = Mutex::new(None);
+
+/// A parked worker's life: wait for a new epoch, claim a ticket, steal
+/// chunks, check out, repeat — until shutdown.
+fn worker_loop(inj: &Injector) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job_ptr = {
+            let mut st = inj.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if st.job.is_some() && st.tickets > 0 {
+                        st.tickets -= 1;
+                        let p = st.job.unwrap();
+                        // Check in under the lock, while the job is still
+                        // published (and therefore alive).
+                        unsafe { &*(p as *const JobCtx) }
+                            .active
+                            .fetch_add(1, Ordering::Relaxed);
+                        break p;
+                    }
+                    // Job already retired or fully ticketed: sleep until
+                    // the next epoch.
+                }
+                st = inj.work_cv.wait(st).unwrap();
+            }
+        };
+        // Safety: we checked in under the lock while the job was still
+        // published, and the submitter drains this job's `active` to zero
+        // before the JobCtx goes out of scope.
+        let job = unsafe { &*(job_ptr as *const JobCtx) };
+        participate(job);
+        // Check out under the lock; the submitter re-reads the count under
+        // the same lock, so the final decrement is never missed.
+        let _st = inj.state.lock().unwrap();
+        if job.active.fetch_sub(1, Ordering::Relaxed) == 1 {
+            inj.done_cv.notify_all();
+        }
+    }
+}
+
+/// Handle on the running injector, starting workers on first use.
+fn injector() -> Arc<Injector> {
+    let mut guard = RUNTIME.lock().unwrap();
+    let rt = guard.get_or_insert_with(|| Runtime::start(available_parallelism().saturating_sub(1)));
+    Arc::clone(&rt.inj)
+}
+
+/// Spawn the persistent workers now (normally they start lazily on the
+/// first parallel dispatch). The pipeline calls this so the first layer's
+/// dispatches don't pay the one-time spawn cost. A no-op when called from
+/// inside a pool worker (e.g. a pipeline constructed by a sharded
+/// experiment cell): workers already exist, and a worker must never block
+/// on the runtime registry.
+pub fn prestart() {
+    if IN_POOL.with(|c| c.get()) {
+        return;
+    }
+    let _ = injector();
+}
+
+/// True once the persistent workers have been spawned. Serial work
+/// (`--threads 1`, [`Pool::serial`], sub-threshold problems) never starts
+/// them — `tests/pool_serial_bypass.rs` holds this as an invariant.
+pub fn workers_started() -> bool {
+    RUNTIME.lock().unwrap().is_some()
+}
+
+/// Gracefully retire the persistent pool: signal shutdown, wake everyone,
+/// and join the worker threads. Safe to call at any quiescent point (the
+/// `repro` binary calls it on exit); a dispatch issued afterwards simply
+/// starts a fresh pool. Workers mid-job finish their job first, so no
+/// in-flight dispatch is ever abandoned.
+///
+/// ```
+/// use qep::util::pool::{self, Pool};
+/// let doubled = Pool::new(2).par_map(3, |i| i * 2);
+/// assert_eq!(doubled, vec![0, 2, 4]);
+/// pool::shutdown(); // joins the workers…
+/// assert!(!pool::workers_started());
+/// // …and the pool restarts transparently on the next dispatch.
+/// assert_eq!(Pool::new(2).par_map(3, |i| i + 1), vec![1, 2, 3]);
+/// ```
+pub fn shutdown() {
+    let mut guard = RUNTIME.lock().unwrap();
+    if let Some(rt) = guard.take() {
+        {
+            let mut st = rt.inj.state.lock().unwrap();
+            st.shutdown = true;
+            rt.inj.work_cv.notify_all();
+        }
+        for h in rt.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Publish `job`, work it from the calling thread, retire it, and wait for
+/// every participating worker to check out before returning (or before
+/// propagating a panic). `helpers` is the maximum number of persistent
+/// workers that may join in.
+fn dispatch(inj: &Injector, helpers: usize, job: &JobCtx) {
+    {
+        let mut st = inj.state.lock().unwrap();
+        // One *published* job at a time: queue behind the live one. (A
+        // predecessor's workers may still be draining — that's fine, they
+        // are counted on the predecessor's own JobCtx, not ours.)
+        while st.job.is_some() {
+            st = inj.done_cv.wait(st).unwrap();
+        }
+        st.job = Some(job as *const JobCtx as usize);
+        st.tickets = helpers;
+        st.epoch = st.epoch.wrapping_add(1);
+        inj.work_cv.notify_all();
+    }
+
+    // The calling thread is worker 0. Mark it as pool context so nested
+    // pool calls inside `f` run inline.
+    IN_POOL.with(|c| c.set(true));
+    participate(job);
+    IN_POOL.with(|c| c.set(false));
+
+    // Retire the job, then drain *our own* participants: after this block
+    // no worker holds a reference into the submitter's stack frame, and a
+    // successor's job can never extend our wait.
+    {
+        let mut st = inj.state.lock().unwrap();
+        st.job = None;
+        st.tickets = 0;
+        // Wake submitters queued on the slot before we drain — they only
+        // need `job` to be `None`, not our workers to be done.
+        inj.done_cv.notify_all();
+        while job.active.load(Ordering::Relaxed) > 0 {
+            st = inj.done_cv.wait(st).unwrap();
+        }
+    }
+
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        panic::resume_unwind(payload);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The public handle.
+// ---------------------------------------------------------------------------
+
+/// A lightweight handle on the execution substrate. Cheap to copy; it only
+/// records *how many* threads a dispatch may use — the worker threads
+/// themselves are process-wide, spawned lazily, and parked between
+/// dispatches (see the module docs).
+///
+/// ```
+/// use qep::util::pool::Pool;
+/// assert_eq!(Pool::new(3).threads(), 3);
+/// assert_eq!(Pool::serial().threads(), 1);
+/// assert!(Pool::new(0).threads() >= 1); // 0 = process-wide default
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct Pool {
     threads: usize,
@@ -109,23 +474,56 @@ impl Pool {
     }
 
     /// Execute `f(start, end)` over every grain-sized chunk of `[0, n)`,
-    /// stealing chunks dynamically across `self.threads()` workers.
+    /// stealing chunks dynamically across up to `self.threads()` workers
+    /// of the persistent pool.
     ///
     /// `f` must only touch state owned by its `[start, end)` range; chunks
     /// are disjoint, so disjoint-range writers need no further
-    /// synchronization. Runs inline when a single worker suffices or when
-    /// already inside a pool worker.
+    /// synchronization. Runs inline — without waking (or even starting)
+    /// any worker — when a single worker suffices or when already inside a
+    /// pool worker. If `f` panics, the panic is re-raised here after the
+    /// job has fully drained; the workers survive for the next dispatch.
     pub fn run<F>(&self, n: usize, grain: usize, f: F)
     where
         F: Fn(usize, usize) + Sync,
     {
-        if n == 0 {
+        let grain = grain.max(1);
+        let workers = self.plan(n, grain);
+        if workers <= 1 {
+            if n > 0 {
+                f(0, n);
+            }
             return;
         }
+        let inj = injector();
+        let job = JobCtx {
+            cursor: AtomicUsize::new(0),
+            n,
+            grain,
+            data: &f as *const F as *const (),
+            call: call_erased::<F>,
+            active: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        };
+        dispatch(&inj, workers - 1, &job);
+    }
+
+    /// The scoped-spawn scheduler the pool used before persistent workers
+    /// (PR 1/2 behavior): identical chunking, stealing, and inline-guard
+    /// semantics, but every call spawns and joins fresh `std::thread::scope`
+    /// threads. Kept as the overhead baseline for
+    /// `benches/linalg_hotpath.rs` and as the reference engine
+    /// `tests/parallel_equivalence.rs` pins [`Pool::run`] against.
+    pub fn run_scoped<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
         let grain = grain.max(1);
-        let workers = self.threads.min(n.div_ceil(grain));
-        if workers <= 1 || IN_POOL.with(|c| c.get()) {
-            f(0, n);
+        let workers = self.plan(n, grain);
+        if workers <= 1 {
+            if n > 0 {
+                f(0, n);
+            }
             return;
         }
         let cursor = AtomicUsize::new(0);
@@ -133,7 +531,7 @@ impl Pool {
         let f_ref = &f;
         std::thread::scope(|s| {
             for _ in 1..workers {
-                s.spawn(move || {
+                s.spawn(|| {
                     IN_POOL.with(|c| c.set(true));
                     steal_loop(cursor_ref, n, grain, f_ref);
                 });
@@ -148,6 +546,13 @@ impl Pool {
     /// Evaluate `f(0), …, f(n-1)` across the pool and return the results in
     /// index order. Each item runs exactly once; output order is
     /// deterministic regardless of which worker computed what.
+    ///
+    /// ```
+    /// use qep::util::pool::Pool;
+    /// let squares = Pool::new(4).par_map(5, |i| i * i);
+    /// assert_eq!(squares, vec![0, 1, 4, 9, 16]);
+    /// assert!(Pool::new(4).par_map(0, |i| i).is_empty());
+    /// ```
     pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -156,56 +561,38 @@ impl Pool {
         if n == 0 {
             return Vec::new();
         }
-        let workers = self.threads.min(n);
-        if workers <= 1 || IN_POOL.with(|c| c.get()) {
+        if self.threads <= 1 || IN_POOL.with(|c| c.get()) {
             return (0..n).map(f).collect();
         }
         let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let cursor = AtomicUsize::new(0);
         let slots_ref = &slots;
-        let cursor_ref = &cursor;
         let f_ref = &f;
-        std::thread::scope(|s| {
-            for _ in 1..workers {
-                s.spawn(move || {
-                    IN_POOL.with(|c| c.set(true));
-                    map_loop(cursor_ref, n, f_ref, slots_ref);
-                });
+        self.run(n, 1, move |start, end| {
+            for i in start..end {
+                let v = f_ref(i);
+                *slots_ref[i].lock().unwrap() = Some(v);
             }
-            IN_POOL.with(|c| c.set(true));
-            map_loop(cursor_ref, n, f_ref, slots_ref);
-            IN_POOL.with(|c| c.set(false));
         });
         slots
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("par_map: unfilled slot"))
             .collect()
     }
-}
 
-fn steal_loop<F: Fn(usize, usize) + Sync>(cursor: &AtomicUsize, n: usize, grain: usize, f: &F) {
-    loop {
-        let start = cursor.fetch_add(grain, Ordering::Relaxed);
-        if start >= n {
-            break;
+    /// How many workers a dispatch of `n` items at `grain` would actually
+    /// use (1 = run inline). Shared by [`run`](Pool::run) and
+    /// [`run_scoped`](Pool::run_scoped) so both engines make identical
+    /// inline-vs-parallel decisions.
+    fn plan(&self, n: usize, grain: usize) -> usize {
+        if n == 0 {
+            return 1;
         }
-        f(start, (start + grain).min(n));
-    }
-}
-
-fn map_loop<T: Send, F: Fn(usize) -> T + Sync>(
-    cursor: &AtomicUsize,
-    n: usize,
-    f: &F,
-    slots: &[Mutex<Option<T>>],
-) {
-    loop {
-        let i = cursor.fetch_add(1, Ordering::Relaxed);
-        if i >= n {
-            break;
+        let workers = self.threads.min(n.div_ceil(grain));
+        if workers <= 1 || IN_POOL.with(|c| c.get()) {
+            1
+        } else {
+            workers
         }
-        let v = f(i);
-        *slots[i].lock().unwrap() = Some(v);
     }
 }
 
@@ -231,9 +618,26 @@ mod tests {
     }
 
     #[test]
+    fn scoped_baseline_covers_every_index_exactly_once() {
+        let n = 513;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let pool = Pool::new(4);
+        let href = &hits;
+        pool.run_scoped(n, 8, |start, end| {
+            for i in start..end {
+                href[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
     fn run_handles_empty_and_tiny_ranges() {
         let pool = Pool::new(4);
         pool.run(0, 8, |_, _| panic!("must not be called"));
+        pool.run_scoped(0, 8, |_, _| panic!("must not be called"));
         let hit = AtomicU64::new(0);
         pool.run(1, 128, |s, e| {
             assert_eq!((s, e), (0, 1));
@@ -259,13 +663,71 @@ mod tests {
         let tref = &total;
         pool.run(8, 1, |s, e| {
             // Nested use of the pool from inside a worker must degrade to
-            // inline execution (and must not spawn recursively).
+            // inline execution (and must not touch the injector again).
             let inner = Pool::new(4);
             inner.run(4, 1, |is, ie| {
                 tref.fetch_add((ie - is) as u64 * (e - s) as u64, Ordering::Relaxed);
             });
         });
         assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panicking_job_reports_and_pool_survives() {
+        let pool = Pool::new(4);
+        let res = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, 1, |s, _| {
+                if s == 13 {
+                    panic!("boom at 13");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // The workers must still be alive and serving jobs.
+        let out = pool.par_map(16, |i| i + 1);
+        assert_eq!(out, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_submitters_queue_cleanly() {
+        // Several OS threads dispatching simultaneously must serialize
+        // through the injector without deadlock or cross-talk.
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let pool = Pool::new(3);
+                    let out = pool.par_map(33, move |i| i * (t + 1));
+                    let want: Vec<usize> = (0..33).map(|i| i * (t + 1)).collect();
+                    assert_eq!(out, want, "submitter {t}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn persistent_and_scoped_engines_do_identical_work() {
+        let n = 257;
+        let run_with = |scoped: bool| -> Vec<u64> {
+            let mut out = vec![0u64; n];
+            let base = SendPtr::new(out.as_mut_ptr());
+            let pool = Pool::new(4);
+            let f = |s: usize, e: usize| {
+                for i in s..e {
+                    // Sound: chunks are disjoint index ranges.
+                    unsafe { *base.0.add(i) = (i * i + 1) as u64 };
+                }
+            };
+            if scoped {
+                pool.run_scoped(n, 5, f);
+            } else {
+                pool.run(n, 5, f);
+            }
+            out
+        };
+        assert_eq!(run_with(false), run_with(true));
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! while the pool is active. The same contract covers the blocked SPD
 //! engine (every thread count AND every block size), the pooled
 //! perplexity/task evaluation, and the sharded experiment sweeps (table
-//! renders must be byte-identical across `--threads`). This is what lets
-//! the repo claim the paper's "lightweight and scalable" axis without
-//! giving up reproducibility.
+//! renders must be byte-identical across `--threads`). Since the pool
+//! became persistent (parked workers instead of per-dispatch scoped
+//! spawns), the suite additionally pins the persistent engine against the
+//! kept scoped-spawn baseline (`Pool::run_scoped`): both must execute the
+//! exact same work. This is what lets the repo claim the paper's
+//! "lightweight and scalable" axis without giving up reproducibility.
 
 use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::eval::perplexity_with;
@@ -180,6 +183,61 @@ fn spd_engine_is_thread_and_block_invariant() {
     for threads in [2usize, 8] {
         let got = upper_cholesky_of_inverse_with(&a, &Pool::new(threads)).unwrap();
         assert_eq!(got.data, want_u.data, "chol_of_inv threads={threads}");
+    }
+}
+
+#[test]
+fn persistent_pool_matches_scoped_spawn_baseline_exactly() {
+    // The persistent-worker engine and the scoped-spawn baseline must
+    // execute identical work: same chunk coverage, same per-index
+    // results, for a mix of sizes, grains, and thread counts.
+    use qep::util::pool::SendPtr;
+    for (n, grain) in [(1usize, 1usize), (13, 4), (256, 16), (1000, 7)] {
+        for threads in [2usize, 4, 7] {
+            let pool = Pool::new(threads);
+            let run_engine = |persistent: bool| -> Vec<u64> {
+                let mut out = vec![u64::MAX; n];
+                {
+                    let base = SendPtr::new(out.as_mut_ptr());
+                    let f = |s: usize, e: usize| {
+                        for i in s..e {
+                            // Sound: chunks are disjoint index ranges.
+                            unsafe { *base.0.add(i) = (i as u64).wrapping_mul(0x9e3779b9) };
+                        }
+                    };
+                    if persistent {
+                        pool.run(n, grain, f);
+                    } else {
+                        pool.run_scoped(n, grain, f);
+                    }
+                }
+                out
+            };
+            let persistent = run_engine(true);
+            let scoped = run_engine(false);
+            assert_eq!(persistent, scoped, "n={n} grain={grain} threads={threads}");
+            assert!(
+                persistent.iter().all(|&v| v != u64::MAX),
+                "n={n} grain={grain} threads={threads}: uncovered index"
+            );
+        }
+    }
+}
+
+#[test]
+fn spd_engine_matches_scoped_dispatch_bit_for_bit() {
+    // The full blocked Cholesky through the persistent pool must equal the
+    // serial reference (and therefore the scoped-spawn engine, which the
+    // pre-persistent suite pinned to the same reference).
+    let mut rng = Rng::new(21);
+    let n = 80;
+    let a = random_spd(n, &mut rng);
+    let mut want = a.clone();
+    cholesky_unblocked(&mut want).unwrap();
+    for threads in [2usize, 8] {
+        let mut got = a.clone();
+        cholesky_in_place_with(&mut got, 32, &Pool::new(threads)).unwrap();
+        assert_eq!(got.data, want.data, "threads={threads}");
     }
 }
 

@@ -1,0 +1,128 @@
+//! Edge-case suite for the persistent worker pool (`util::pool`).
+//!
+//! The pool is the substrate under every parallel kernel in the repo, so
+//! its failure modes must be boring: empty job lists are no-ops, a
+//! panicking job surfaces the panic to the submitter without deadlocking
+//! or poisoning later dispatches, nested `par_map` from a worker thread
+//! runs inline, and shutdown/restart is transparent. (The `--threads 1`
+//! never-spawn invariant lives in its own process-isolated test file,
+//! `pool_serial_bypass.rs`, because these tests *do* start workers.)
+
+use qep::util::pool::{self, Pool};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[test]
+fn zero_size_jobs_are_noops_on_every_engine() {
+    let pool = Pool::new(4);
+    pool.run(0, 16, |_, _| panic!("run must not invoke f for n=0"));
+    pool.run_scoped(0, 16, |_, _| panic!("run_scoped must not invoke f for n=0"));
+    let empty: Vec<usize> = pool.par_map(0, |_| panic!("par_map must not invoke f for n=0"));
+    assert!(empty.is_empty());
+}
+
+#[test]
+fn panicking_job_propagates_without_deadlock_and_pool_stays_usable() {
+    let pool = Pool::new(4);
+
+    // A worker-side panic must reach the submitter…
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(128, 1, |s, _| {
+            if s == 77 {
+                panic!("injected failure at chunk 77");
+            }
+        });
+    }));
+    assert!(res.is_err(), "panic must propagate out of Pool::run");
+
+    // …and must not poison the persistent workers: follow-up dispatches
+    // of both flavors still complete with full coverage.
+    for round in 0..3 {
+        let hits = AtomicUsize::new(0);
+        pool.run(200, 7, |s, e| {
+            hits.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 200, "round {round}");
+        let out = pool.par_map(21, |i| i * 3);
+        assert_eq!(out, (0..21).map(|i| i * 3).collect::<Vec<_>>(), "round {round}");
+    }
+}
+
+#[test]
+fn panicking_par_map_item_propagates_and_pool_survives() {
+    let pool = Pool::new(3);
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        pool.par_map(32, |i| {
+            if i == 9 {
+                panic!("item 9 failed");
+            }
+            i
+        })
+    }));
+    assert!(res.is_err());
+    assert_eq!(pool.par_map(4, |i| i + 10), vec![10, 11, 12, 13]);
+}
+
+#[test]
+fn nested_par_map_from_worker_threads_runs_inline() {
+    // Outer fan-out across workers; each item issues an inner par_map,
+    // which must degrade to inline execution (no re-entrant dispatch, no
+    // deadlock) and still return results in index order.
+    let pool = Pool::new(4);
+    let outer = pool.par_map(6, |i| {
+        let inner = Pool::new(4).par_map(5, move |j| i * 10 + j);
+        inner.iter().sum::<usize>()
+    });
+    let want: Vec<usize> = (0..6)
+        .map(|i| (0..5).map(|j| i * 10 + j).sum())
+        .collect();
+    assert_eq!(outer, want);
+}
+
+#[test]
+fn deeply_nested_run_inside_par_map_inside_run_stays_inline() {
+    let total = AtomicUsize::new(0);
+    let tref = &total;
+    Pool::new(4).run(4, 1, |s, e| {
+        for _ in s..e {
+            let sums = Pool::new(4).par_map(3, |i| {
+                let mut acc = 0usize;
+                Pool::new(4).run(8, 2, |is, ie| {
+                    // Innermost level: runs inline on this worker, so a
+                    // plain non-atomic accumulator would also be fine;
+                    // the atomic keeps the closure Fn.
+                    tref.fetch_add(ie - is, Ordering::Relaxed);
+                });
+                acc += i;
+                acc
+            });
+            assert_eq!(sums, vec![0, 1, 2]);
+        }
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 4 * 3 * 8);
+}
+
+#[test]
+fn shutdown_and_restart_are_transparent() {
+    let pool = Pool::new(2);
+    assert_eq!(pool.par_map(3, |i| i), vec![0, 1, 2]);
+    pool::shutdown();
+    // A fresh dispatch restarts the workers transparently.
+    assert_eq!(pool.par_map(3, |i| i + 1), vec![1, 2, 3]);
+    // Repeated shutdown is a no-op.
+    pool::shutdown();
+    pool::shutdown();
+    assert_eq!(pool.par_map(2, |i| i * 5), vec![0, 5]);
+}
+
+#[test]
+fn oversubscribed_thread_counts_complete() {
+    // Requesting far more threads than exist hands out more tickets than
+    // there are workers; the job must still complete with full coverage.
+    let pool = Pool::new(64);
+    let hits = AtomicUsize::new(0);
+    pool.run(1000, 3, |s, e| {
+        hits.fetch_add(e - s, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 1000);
+}

@@ -1,0 +1,63 @@
+//! `--threads 1` must bypass the persistent workers entirely: every
+//! kernel runs inline on the calling thread and no worker thread is ever
+//! spawned. This file is the *only* test in its integration-test binary
+//! (cargo gives each `tests/*.rs` file its own process), so the
+//! process-global "have workers started?" flag is observable without
+//! interference from other tests.
+
+use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::linalg::{matmul, matmul_serial, spd_solve_with, Mat, Mat64};
+use qep::util::pool::{self, Pool};
+use qep::util::rng::Rng;
+
+#[test]
+fn serial_work_never_starts_the_persistent_workers() {
+    // Pin the process-wide default to 1 thread, like `repro --threads 1`.
+    pool::set_global_threads(1);
+    assert!(!pool::workers_started(), "workers must not exist at startup");
+
+    // Pool-level serial work.
+    let pool = Pool::serial();
+    let sum = std::sync::atomic::AtomicUsize::new(0);
+    pool.run(100, 8, |s, e| {
+        sum.fetch_add(e - s, std::sync::atomic::Ordering::Relaxed);
+    });
+    assert_eq!(sum.load(std::sync::atomic::Ordering::Relaxed), 100);
+    assert_eq!(Pool::new(1).par_map(5, |i| i * 2), vec![0, 2, 4, 6, 8]);
+
+    // Kernel-level work through the global (now 1-thread) pool and an
+    // explicit serial pool.
+    let mut rng = Rng::new(1);
+    let a = Mat::randn(64, 96, 1.0, &mut rng);
+    let b = Mat::randn(96, 48, 1.0, &mut rng);
+    assert_eq!(matmul(&a, &b), matmul_serial(&a, &b));
+
+    let mut h = Mat64::eye(32);
+    h.add_diag(3.0);
+    let rhs = Mat64::eye(32);
+    let x = spd_solve_with(&h, &rhs, &Pool::serial()).unwrap();
+    assert!((x.at(0, 0) - 0.25).abs() < 1e-12);
+
+    // A whole single-threaded pipeline run.
+    let mut cfg = qep::model::ModelConfig::new("unit", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = qep::model::Model::random(&cfg, 1);
+    let tokens: Vec<u32> = (0..8 * 16).map(|i| (i % 256) as u32).collect();
+    let out = Pipeline::new(PipelineConfig { threads: 1, ..Default::default() })
+        .run(&model, &tokens)
+        .unwrap();
+    out.model.validate().unwrap();
+
+    assert!(
+        !pool::workers_started(),
+        "threads=1 must never spawn persistent workers"
+    );
+
+    // Sanity: an actual parallel dispatch *does* start them (and shutdown
+    // joins them again), proving the flag is live in this process.
+    pool::set_global_threads(0);
+    let _ = Pool::new(2).par_map(4, |i| i);
+    assert!(pool::workers_started());
+    pool::shutdown();
+    assert!(!pool::workers_started());
+}

@@ -18,4 +18,4 @@ pub mod pipeline;
 pub mod report;
 
 pub use pipeline::{Pipeline, PipelineConfig, PipelineOutput};
-pub use report::{LayerReport, PipelineReport};
+pub use report::{LayerReport, PhaseTimings, PipelineReport};

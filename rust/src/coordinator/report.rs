@@ -26,7 +26,32 @@ pub struct PipelineReport {
     pub total_s: f64,
 }
 
+/// Flat phase-timing snapshot of a pipeline run — the machine-readable
+/// form carried by experiment result records (`io::results`). Timings
+/// are wall-clock and therefore local to the process that measured them
+/// (a sharded sweep's timings are *shard-local*); everything else in a
+/// record is bit-deterministic.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimings {
+    pub total_s: f64,
+    pub propagation_s: f64,
+    pub hessian_s: f64,
+    pub correction_s: f64,
+    pub quant_s: f64,
+}
+
 impl PipelineReport {
+    /// Snapshot the per-phase timing aggregates (see [`PhaseTimings`]).
+    pub fn timings(&self) -> PhaseTimings {
+        PhaseTimings {
+            total_s: self.total_s,
+            propagation_s: self.propagation_s,
+            hessian_s: self.hessian_s(),
+            correction_s: self.correction_s(),
+            quant_s: self.quant_s(),
+        }
+    }
+
     pub fn correction_s(&self) -> f64 {
         self.layers.iter().map(|l| l.correction.seconds).sum()
     }

@@ -10,16 +10,20 @@
 //! which cell or in what order — sweeps are bit-identical for every
 //! thread count.
 
+use super::plan::{self, CellTask, PlanCell, PlanParams, RecordMap, SweepId};
 use crate::coordinator::{Pipeline, PipelineConfig, PipelineOutput};
-use crate::eval::{perplexity, TaskFamily, TaskSet};
+use crate::eval::{delta_per_block, perplexity, TaskFamily, TaskSet};
+use crate::io::results::CellRecord;
 use crate::model::{Model, Size};
 use crate::qep::AlphaPolicy;
 use crate::quant::{Method, QuantConfig};
 use crate::runtime::ArtifactRegistry;
 use crate::text::{Corpus, Flavor};
-use crate::util::pool::Pool;
+use crate::util::pool::{self, Pool};
+use crate::util::Stopwatch;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::OnceLock;
 
 /// Calibration/eval token budgets (scaled-down analogs of the paper's
 /// 128×2048-token calibration set).
@@ -96,6 +100,7 @@ pub struct ExpEnv {
     models: HashMap<String, Model>,
     corpora: HashMap<Flavor, Corpus>,
     pub used_fallback: bool,
+    fallback_models: BTreeSet<String>,
 }
 
 impl ExpEnv {
@@ -105,6 +110,7 @@ impl ExpEnv {
             models: HashMap::new(),
             corpora: HashMap::new(),
             used_fallback: false,
+            fallback_models: BTreeSet::new(),
         }
     }
 
@@ -117,6 +123,7 @@ impl ExpEnv {
             Ok(m) => m,
             Err(_) => {
                 self.used_fallback = true;
+                self.fallback_models.insert(name.clone());
                 eprintln!("[exp] WARNING: {name}.qtz missing — using random weights (run `make artifacts`)");
                 Model::random(&size.config(), 0xBEEF)
             }
@@ -165,7 +172,12 @@ impl ExpEnv {
         for f in Flavor::all() {
             corpora.insert(f, self.corpus(f));
         }
-        ExpData { models, corpora }
+        ExpData {
+            models,
+            corpora,
+            fallback: self.fallback_models.clone(),
+            task_sets: Default::default(),
+        }
     }
 }
 
@@ -173,13 +185,40 @@ impl ExpEnv {
 pub struct ExpData {
     models: HashMap<String, Model>,
     corpora: HashMap<Flavor, Corpus>,
+    /// Model names that fell back to deterministic random weights
+    /// because the trained artifact was missing (tagged per result
+    /// record so merged sweeps can surface the warning).
+    fallback: BTreeSet<String>,
+    /// Lazily-built shared task sets, one per family (in
+    /// `TaskFamily::all()` order). Task sets are cell-independent pure
+    /// functions of the wiki corpus, so every cell scores against the
+    /// same instance instead of regenerating it.
+    task_sets: [OnceLock<TaskSet>; 3],
 }
 
 impl ExpData {
     /// Assemble a snapshot directly (tests inject custom tiny models under
     /// a size's name to keep sharded-sweep tests fast).
     pub fn from_parts(models: HashMap<String, Model>, corpora: HashMap<Flavor, Corpus>) -> ExpData {
-        ExpData { models, corpora }
+        ExpData { models, corpora, fallback: BTreeSet::new(), task_sets: Default::default() }
+    }
+
+    /// The snapshot's shared task set for `family` (built on first use;
+    /// deterministic, so when a task ran it never matters).
+    pub fn task_set(&self, family: TaskFamily) -> &TaskSet {
+        let idx = TaskFamily::all()
+            .iter()
+            .position(|&f| f == family)
+            .expect("every family is in TaskFamily::all()");
+        self.task_sets[idx].get_or_init(|| {
+            TaskSet::generate(family, self.corpus(Flavor::Wiki), TASKS_PER_FAMILY, 1234)
+        })
+    }
+
+    /// Whether `size`'s model in this snapshot is a random-weight
+    /// fallback (results are structural only).
+    pub fn is_fallback(&self, size: Size) -> bool {
+        self.fallback.contains(size.name())
     }
 
     /// The snapshot's model for `size`. Panics if the snapshot was taken
@@ -207,7 +246,7 @@ impl ExpData {
 }
 
 /// One experiment cell: a (model, method, grid, ±QEP) configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Cell {
     pub size: Size,
     pub method: Method,
@@ -294,39 +333,194 @@ pub fn default_calib(_method: Method) -> Flavor {
     Flavor::C4
 }
 
-/// Quantize + evaluate perplexity on a flavor.
-pub fn cell_ppl(env: &mut ExpEnv, cell: &Cell, eval_flavor: Flavor) -> Result<f64> {
-    let out = cell.run(env)?;
-    let eval = env.eval_tokens(eval_flavor);
-    Ok(perplexity(&out.model, &eval))
-}
-
-/// [`cell_ppl`] against a snapshot (the sharded-sweep path).
-pub fn cell_ppl_on(data: &ExpData, cell: &Cell, eval_flavor: Flavor) -> Result<f64> {
-    let out = cell.run_on(data)?;
-    let eval = data.eval_tokens(eval_flavor);
-    Ok(perplexity(&out.model, &eval))
-}
-
-/// Quantize + evaluate zero-shot accuracy averaged over families.
-pub fn cell_task_acc(env: &mut ExpEnv, cell: &Cell, families: &[TaskFamily]) -> Result<Vec<f64>> {
-    let out = cell.run(env)?;
-    let corpus = env.corpus(Flavor::Wiki);
-    families
-        .iter()
-        .map(|&fam| {
-            let ts = TaskSet::generate(fam, &corpus, TASKS_PER_FAMILY, 1234);
-            Ok(ts.accuracy(&out.model))
-        })
-        .collect()
-}
-
 /// Write table text + csv under `results/`.
 pub fn persist(name: &str, table: &crate::util::table::Table) -> Result<()> {
-    std::fs::create_dir_all("results")?;
-    std::fs::write(format!("results/{name}.txt"), table.render())?;
-    std::fs::write(format!("results/{name}.csv"), table.to_csv())?;
+    persist_to("results", name, table)
+}
+
+/// Write table text + csv under an explicit results directory (the
+/// merge collector and tests render away from the default `results/`).
+pub fn persist_to(dir: &str, name: &str, table: &crate::util::table::Table) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(format!("{dir}/{name}.txt"), table.render())?;
+    std::fs::write(format!("{dir}/{name}.csv"), table.to_csv())?;
     Ok(())
+}
+
+/// Where and how to render sweep outputs.
+#[derive(Clone, Debug)]
+pub struct RenderCfg {
+    /// Directory for the persisted `.txt`/`.csv` artifacts.
+    pub results_dir: String,
+    /// Render wall-clock cells (Table 3) as a stable placeholder so the
+    /// output bytes are machine-independent — the CI determinism gate
+    /// and the local shard/merge tests compare renders byte-for-byte,
+    /// and timings are the one non-deterministic metric.
+    pub stable_timings: bool,
+}
+
+impl Default for RenderCfg {
+    fn default() -> Self {
+        RenderCfg { results_dir: "results".to_string(), stable_timings: false }
+    }
+}
+
+/// Execute one plan cell against a snapshot — the unit of work of the
+/// distributed runner. Pure up to wall-clock: the metrics in the
+/// returned record depend only on (cell identity, snapshot), never on
+/// which process, shard, worker, or schedule ran it.
+pub fn run_plan_cell(
+    data: &ExpData,
+    pc: &PlanCell,
+    shard: usize,
+    n_shards: usize,
+) -> Result<CellRecord> {
+    let sw = Stopwatch::start();
+    let mut rec = CellRecord::new(pc.id(), shard, n_shards);
+    rec.fallback = data.is_fallback(pc.size());
+    match &pc.task {
+        CellTask::Quant(cell) => {
+            let out = cell.run_on(data)?;
+            let (ppl_flavors, families) = plan::wants(pc.sweep);
+            for fl in ppl_flavors {
+                let eval = data.eval_tokens(fl);
+                rec.ppl.push((fl.name().to_string(), perplexity(&out.model, &eval)));
+            }
+            for fam in families {
+                let ts = data.task_set(fam);
+                rec.acc.push((fam.name().to_string(), ts.accuracy(&out.model)));
+            }
+            rec.timings = out.report.timings();
+        }
+        CellTask::Alpha { size, alpha } => {
+            // Mirrors the historical α ablation exactly: RTN INT3, a
+            // uniform α override (α=0 ⇒ effectively BASE via the
+            // pipeline's short-circuit), and the same seed-0 calibration
+            // slice for every α so α is the only moving part.
+            let model = data.model(*size);
+            let calib = data.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
+            let mut cfg =
+                Cell::new(*size, Method::Rtn, QuantConfig::int(3), *alpha > 0.0).pipeline_config();
+            cfg.qep_alpha = Some(*alpha);
+            cfg.alpha_policy = None;
+            let out = Pipeline::new(cfg).run(model, &calib)?;
+            let eval = data.eval_tokens(Flavor::Wiki);
+            rec.ppl.push(("wiki".to_string(), perplexity(&out.model, &eval)));
+            rec.timings = out.report.timings();
+        }
+        CellTask::Fig2 { size, bits, n_blocks, qep } => {
+            let model = data.model(*size);
+            let calib = data.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
+            let probe = data.eval_tokens(Flavor::Wiki);
+            let probe = &probe[..(8 * model.cfg.seq_len).min(probe.len())];
+            let out = Pipeline::new(PipelineConfig {
+                quant: QuantConfig::int(*bits),
+                method: Method::Rtn,
+                qep_alpha: if *qep { Some(0.5) } else { None },
+                max_blocks: Some(*n_blocks),
+                ..Default::default()
+            })
+            .run(model, &calib)?;
+            rec.deltas = delta_per_block(model, &out.model, probe);
+            rec.timings = out.report.timings();
+        }
+    }
+    rec.wall_s = sw.seconds();
+    rec.normalize();
+    Ok(rec)
+}
+
+/// Run a list of plan cells, fanning untimed cells across the pool
+/// ([`run_jobs`] semantics) and running timed cells (Table 3 —
+/// it *measures* per-cell runtime) serially afterwards, each with the
+/// whole machine. Records come back in cell order regardless.
+pub fn run_cells(
+    data: &ExpData,
+    cells: &[PlanCell],
+    pool: &Pool,
+    shard: usize,
+    n_shards: usize,
+) -> Result<Vec<CellRecord>> {
+    let (timed, pooled): (Vec<usize>, Vec<usize>) =
+        (0..cells.len()).partition(|&j| cells[j].sweep.timed());
+    eprintln!(
+        "[exp] running {} cell(s) on {} worker(s){}",
+        cells.len(),
+        pool.threads(),
+        if timed.is_empty() {
+            String::new()
+        } else {
+            format!(" ({} timed cell(s) serially)", timed.len())
+        }
+    );
+    let mut slots: Vec<Option<Result<CellRecord>>> = (0..cells.len()).map(|_| None).collect();
+    let pooled_records = run_jobs(pool, pooled.len(), |i| {
+        let pc = &cells[pooled[i]];
+        let r = run_plan_cell(data, pc, shard, n_shards);
+        eprintln!("[exp] cell done: {}", pc.id());
+        r
+    });
+    for (&j, r) in pooled.iter().zip(pooled_records) {
+        slots[j] = Some(r);
+    }
+    for &j in &timed {
+        let pc = &cells[j];
+        let r = run_plan_cell(data, pc, shard, n_shards);
+        if let Ok(rec) = &r {
+            eprintln!(
+                "[table3] {}: {} (correction {})",
+                pc.id(),
+                crate::util::fmt_duration(rec.timings.total_s),
+                crate::util::fmt_duration(rec.timings.correction_s)
+            );
+        }
+        slots[j] = Some(r);
+    }
+    slots.into_iter().map(|s| s.expect("every cell slot filled")).collect()
+}
+
+/// The single-process sweep driver: enumerate → run → render, returning
+/// the records (in manifest order) so callers can also persist them.
+/// This is the exact pipeline a sharded run splits across processes —
+/// `repro exp <id> --shard i/N` stops after the run stage, and
+/// `repro exp merge` picks up at the render stage.
+pub fn run_sweep(
+    env: &mut ExpEnv,
+    sweep: SweepId,
+    params: &PlanParams,
+    rcfg: &RenderCfg,
+) -> Result<Vec<CellRecord>> {
+    let cells = plan::manifest(sweep, params)?;
+    let data = env.snapshot(&plan::sizes_of(&cells));
+    let records = run_cells(&data, &cells, &pool::global(), 0, 1)?;
+    let map = plan::verify_coverage(&cells, records)?;
+    render_sweep(sweep, params, &map, rcfg)?;
+    map.in_order(&cells)
+}
+
+/// Render a sweep's tables/figures from verified records. `all` renders
+/// each part in the historical driver order.
+pub fn render_sweep(
+    sweep: SweepId,
+    params: &PlanParams,
+    recs: &RecordMap,
+    rcfg: &RenderCfg,
+) -> Result<()> {
+    match sweep {
+        SweepId::Table12 => super::tables::render_table12(params, recs, rcfg),
+        SweepId::Table3 => super::tables::render_table3(params, recs, rcfg),
+        SweepId::Table4 => super::tables::render_table4(params, recs, rcfg),
+        SweepId::AblationAlpha => super::tables::render_ablation_alpha(params, recs, rcfg),
+        SweepId::Fig2 => super::fig2::render(params, recs, rcfg).map(|_| ()),
+        SweepId::Fig3 => super::fig3::render(params, recs, rcfg),
+        SweepId::Appendix => super::tables::render_appendix(params, recs, rcfg),
+        SweepId::All => {
+            for part in SweepId::all_parts() {
+                render_sweep(part, params, recs, rcfg)?;
+            }
+            Ok(())
+        }
+    }
 }
 
 #[cfg(test)]

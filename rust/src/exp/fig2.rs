@@ -1,16 +1,15 @@
 //! Fig. 2: accumulation and growth of quantization error across blocks.
 //! Quantize the first `n` blocks (paper: 10 of 32; we default to half the
-//! model) with RTN, base vs +QEP, and report Δ_m (Eq. 2) per block. Each
-//! run saturates the pool internally (GEMMs, SPD solves, per-layer
-//! fan-out); see the comment at the call sites for why the two variants
-//! are not themselves fanned out.
+//! model) with RTN, base vs +QEP, and report Δ_m (Eq. 2) per block. The
+//! two variants are two plan cells (`fig2/<size>/INT<b>/b<n>/{base,+qep}`)
+//! whose records carry the per-block deltas; the render stage pairs them
+//! back up by identity, so the figure merges byte-identically from any
+//! shard split. Each variant's pipeline saturates the pool internally
+//! (GEMMs, SPD solves, per-layer fan-out).
 
-use super::common::{persist, ExpEnv};
-use crate::coordinator::{Pipeline, PipelineConfig};
-use crate::eval::delta_per_block;
+use super::common::{self, persist_to, ExpEnv, RenderCfg};
+use super::plan::{self, CellTask, PlanCell, PlanParams, RecordMap, SweepId};
 use crate::model::Size;
-use crate::quant::{Method, QuantConfig};
-use crate::text::Flavor;
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -20,38 +19,27 @@ pub struct Fig2Result {
     pub n_quantized: usize,
 }
 
-pub fn run(env: &mut ExpEnv, size: Size, bits: u32, n_blocks: Option<usize>) -> Result<Fig2Result> {
-    let model = env.model(size);
-    let n = n_blocks.unwrap_or(model.cfg.n_layers / 2).min(model.cfg.n_layers);
-    let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
-    let probe = env.eval_tokens(Flavor::Wiki);
-    let probe = &probe[..(8 * model.cfg.seq_len).min(probe.len())];
-
-    let run_one = |qep: Option<f32>| -> Result<Vec<f64>> {
-        let out = Pipeline::new(PipelineConfig {
-            quant: QuantConfig::int(bits),
-            method: Method::Rtn,
-            qep_alpha: qep,
-            max_blocks: Some(n),
-            ..Default::default()
-        })
-        .run(&model, &calib)?;
-        Ok(delta_per_block(&model, &out.model, probe))
+/// Render the Fig. 2 table from the two variant records.
+pub fn render(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<Fig2Result> {
+    let pc = |qep: bool| PlanCell {
+        sweep: SweepId::Fig2,
+        task: CellTask::Fig2 {
+            size: params.fig2_size,
+            bits: params.fig2_bits,
+            n_blocks: params.fig2_blocks,
+            qep,
+        },
     };
-
-    // The two variants run sequentially on purpose: fanning just 2 jobs
-    // across the pool would mark both workers as in-pool and serialize
-    // every GEMM/SPD solve *inside* each pipeline — at ≥4 threads the
-    // inner row-level parallelism is the much wider axis, so each run
-    // gets the whole pool instead.
-    let deltas_base = run_one(None)?;
-    let deltas_qep = run_one(Some(0.5))?;
+    let deltas_base = recs.get(&pc(false))?.deltas.clone();
+    let deltas_qep = recs.get(&pc(true))?.deltas.clone();
+    let n = params.fig2_blocks;
+    let total = deltas_base.len();
 
     let mut t = Table::new(
         &format!(
-            "Figure 2: Δ_m per block ({}, INT{bits}, first {n} of {} blocks quantized, RTN)",
-            size.name(),
-            model.cfg.n_layers
+            "Figure 2: Δ_m per block ({}, INT{}, first {n} of {total} blocks quantized, RTN)",
+            params.fig2_size.name(),
+            params.fig2_bits,
         ),
         &["block m", "quantized?", "Δ_m BASE", "Δ_m +QEP", "ratio"],
     );
@@ -65,8 +53,24 @@ pub fn run(env: &mut ExpEnv, size: Size, bits: u32, n_blocks: Option<usize>) -> 
         ]);
     }
     println!("{}", t.render());
-    persist("fig2", &t)?;
+    persist_to(&rcfg.results_dir, "fig2", &t)?;
     Ok(Fig2Result { deltas_base, deltas_qep, n_quantized: n })
+}
+
+/// Single-process driver (enumerate → run → render in one call).
+pub fn run(env: &mut ExpEnv, size: Size, bits: u32, n_blocks: Option<usize>) -> Result<Fig2Result> {
+    let mut params = PlanParams::for_sizes(&[size]);
+    params.fig2_size = size;
+    params.fig2_bits = bits;
+    params.fig2_blocks = plan::resolve_fig2_blocks(size, n_blocks);
+    // run_sweep renders (and returns records in manifest order: base
+    // first, then +qep); rebuild the typed result from the records.
+    let records = common::run_sweep(env, SweepId::Fig2, &params, &RenderCfg::default())?;
+    Ok(Fig2Result {
+        deltas_base: records[0].deltas.clone(),
+        deltas_qep: records[1].deltas.clone(),
+        n_quantized: params.fig2_blocks,
+    })
 }
 
 #[cfg(test)]

@@ -1,73 +1,43 @@
 //! Fig. 3: seed stability of QuIP ± QEP. Five seeds per configuration;
 //! report mean ± SEM for PPL (wiki) and mean task accuracy. Every
-//! (bits × size × ±QEP × seed) replicate is an independent cell, so the
-//! whole grid shards across the pool; aggregation runs in a fixed order
-//! afterwards, keeping the table bytes thread-count-invariant.
+//! (bits × size × ±QEP × seed) replicate is an independent plan cell
+//! (`fig3/INT<b>/<size>/<±qep>/s<seed>`), so the whole grid shards
+//! across the pool — or across machines; aggregation happens at render
+//! time in a fixed order from the per-replicate records, keeping the
+//! table bytes invariant to thread counts and shard splits alike.
 
-use super::common::{persist, run_jobs, Cell, ExpEnv, TASKS_PER_FAMILY};
-use crate::eval::{perplexity, TaskFamily, TaskSet};
+use super::common::{self, persist_to, ExpEnv, RenderCfg};
+use super::plan::{CellTask, PlanCell, PlanParams, RecordMap, SweepId};
+use crate::eval::TaskFamily;
 use crate::model::Size;
 use crate::quant::{Method, QuantConfig};
-use crate::text::Flavor;
-use crate::util::pool;
 use crate::util::stats::{mean, sem};
 use crate::util::table::Table;
 use anyhow::Result;
 
-pub fn run(env: &mut ExpEnv, sizes: &[Size], bits_list: &[u32], n_seeds: u64) -> Result<()> {
-    let data = env.snapshot(sizes);
-    let eval = data.eval_tokens(Flavor::Wiki);
-
-    // Flat job list in table order; chunks of `n_seeds` aggregate below.
-    let mut jobs: Vec<Cell> = Vec::new();
-    for &bits in bits_list {
-        for &size in sizes {
-            for qep in [false, true] {
-                for seed in 0..n_seeds {
-                    let mut cell = Cell::new(size, Method::Quip, QuantConfig::int(bits), qep);
-                    cell.seed = seed;
-                    jobs.push(cell);
-                }
-            }
-        }
-    }
-
-    // Task sets are replicate-independent: build once, score per cell.
-    let task_corpus = data.corpus(Flavor::Wiki);
-    let task_sets: Vec<TaskSet> = TaskFamily::all()
-        .iter()
-        .map(|&f| TaskSet::generate(f, task_corpus, TASKS_PER_FAMILY, 1234))
-        .collect();
-    let per_seed: Vec<(f64, f64)> =
-        run_jobs(&pool::global(), jobs.len(), |i| -> Result<(f64, f64)> {
-            let cell = &jobs[i];
-            let out = cell.run_on(&data)?;
-            let ppl = perplexity(&out.model, &eval);
-            let fam_accs: Vec<f64> =
-                task_sets.iter().map(|ts| ts.accuracy(&out.model)).collect();
-            let acc = mean(&fam_accs);
-            eprintln!(
-                "[fig3] {} seed={}: ppl={ppl:.3} acc={acc:.4}",
-                cell.label(),
-                cell.seed
-            );
-            Ok((ppl, acc))
-        })
-        .into_iter()
-        .collect::<Result<_>>()?;
-
+/// Render the Fig. 3 table from per-replicate records: per-seed accuracy
+/// is the mean over task families (in `TaskFamily::all()` order, exactly
+/// as the historical driver computed it), then mean ± SEM over seeds.
+pub fn render(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
     let mut t = Table::new(
         "Figure 3 data: QuIP ± QEP over seeds (mean ± SEM)",
         &["bits", "size", "QEP", "ppl mean", "ppl sem", "acc mean", "acc sem"],
     );
-    let mut idx = 0;
-    for &bits in bits_list {
-        for &size in sizes {
+    for &bits in &params.fig3_bits {
+        for &size in &params.sizes {
             for qep in [false, true] {
-                let chunk = &per_seed[idx..idx + n_seeds as usize];
-                idx += n_seeds as usize;
-                let ppls: Vec<f64> = chunk.iter().map(|&(p, _)| p).collect();
-                let accs: Vec<f64> = chunk.iter().map(|&(_, a)| a).collect();
+                let mut ppls = Vec::new();
+                let mut accs = Vec::new();
+                for seed in 0..params.fig3_seeds {
+                    let mut cell = super::Cell::new(size, Method::Quip, QuantConfig::int(bits), qep);
+                    cell.seed = seed;
+                    let pc = PlanCell { sweep: SweepId::Fig3, task: CellTask::Quant(cell) };
+                    let rec = recs.get(&pc)?;
+                    ppls.push(rec.ppl_for("wiki"));
+                    let fam_accs: Vec<f64> =
+                        TaskFamily::all().iter().map(|f| rec.acc_for(f.name())).collect();
+                    accs.push(mean(&fam_accs));
+                }
                 t.row(vec![
                     format!("INT{bits}"),
                     size.name().to_string(),
@@ -81,5 +51,13 @@ pub fn run(env: &mut ExpEnv, sizes: &[Size], bits_list: &[u32], n_seeds: u64) ->
         }
     }
     println!("{}", t.render());
-    persist("fig3", &t)
+    persist_to(&rcfg.results_dir, "fig3", &t)
+}
+
+/// Single-process driver (enumerate → run → render in one call).
+pub fn run(env: &mut ExpEnv, sizes: &[Size], bits_list: &[u32], n_seeds: u64) -> Result<()> {
+    let mut params = PlanParams::for_sizes(sizes);
+    params.fig3_bits = bits_list.to_vec();
+    params.fig3_seeds = n_seeds;
+    common::run_sweep(env, SweepId::Fig3, &params, &RenderCfg::default()).map(|_| ())
 }

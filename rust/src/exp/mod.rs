@@ -1,17 +1,29 @@
-//! Experiment drivers — one per paper table/figure (see DESIGN.md §6).
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §6) —
+//! structured as three composable stages:
 //!
-//! Drivers shard their independent (model × method × grid × ±QEP) cells
-//! across the work-stealing pool: [`ExpEnv`] snapshots its caches into an
-//! immutable [`ExpData`], cells run via [`Cell::run_on`] with per-cell
-//! name-derived seeds, and results are collected in cell order — so
-//! `repro exp all` saturates the machine while every table stays
-//! byte-identical for every `--threads` value. The one exception is
-//! Table 3, which measures per-cell runtime and therefore runs its cells
-//! serially (see `tables::table3`).
+//! 1. **enumerate** ([`plan`]): every sweep expands to a stable, ordered
+//!    manifest of [`PlanCell`]s whose string IDs round-trip through
+//!    [`PlanCell::parse`];
+//! 2. **run** ([`common::run_cells`]): cells execute against an
+//!    immutable [`ExpData`] snapshot with per-cell name-derived seeds,
+//!    fanned across the work-stealing pool (Table 3's timed cells run
+//!    serially because they measure wall-clock), each producing a
+//!    machine-readable [`crate::io::results::CellRecord`];
+//! 3. **render** ([`common::render_sweep`]): tables/figures are formatted
+//!    from records by cell identity.
+//!
+//! Because stage 2 is a pure function of (cell ID, artifacts), the
+//! stages can run in different processes: `repro exp <id> --shard i/N
+//! --out DIR` runs one deterministic slice of the manifest and persists
+//! records, and `repro exp merge <id> --out DIR` verifies exact manifest
+//! coverage and renders output **byte-identical** to the single-process
+//! sweep — for every shard count and every `--threads` value.
 
 pub mod common;
 pub mod fig2;
 pub mod fig3;
+pub mod plan;
 pub mod tables;
 
-pub use common::{Cell, ExpData, ExpEnv};
+pub use common::{Cell, ExpData, ExpEnv, RenderCfg};
+pub use plan::{CellTask, PlanCell, PlanParams, ShardSpec, SweepId};

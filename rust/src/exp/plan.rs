@@ -1,0 +1,657 @@
+//! The experiment **plan layer**: every sweep (`table1/2/3/4`,
+//! `ablation-alpha`, `fig2`, `fig3`, `appendix`, `all`) enumerates to a
+//! stable, ordered **manifest** of [`PlanCell`]s before anything runs.
+//! This is what turns the monolithic sweep drivers into three composable
+//! stages — *enumerate → run → render* — and what a distributed runner
+//! needs: cell identities are strings ([`PlanCell::id`]) that round-trip
+//! through [`PlanCell::parse`], so a cell can be named, shipped to
+//! another process/machine, executed there, and collected back purely by
+//! ID.
+//!
+//! Sharding model: shard `i` of `N` (1-based) owns exactly the manifest
+//! entries whose 0-based index `j` satisfies `j % N == i - 1`
+//! ([`shard_of`]). Assignment depends only on the manifest order — which
+//! is fixed per (sweep, [`PlanParams`]) — so any split of the same plan
+//! covers every cell exactly once ([`verify_coverage`] enforces this at
+//! merge time). Because every cell's seed derives from its own identity
+//! (see `common::Cell::derived_seed`), *results* are independent of the
+//! split: the merged render is byte-identical to the single-process
+//! sweep for every `N`.
+
+use super::common::Cell;
+use crate::eval::TaskFamily;
+use crate::io::results::CellRecord;
+use crate::model::Size;
+use crate::quant::{Method, QuantConfig};
+use crate::text::Flavor;
+use crate::util::cli::Args;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Which experiment sweep a cell (or a CLI invocation) belongs to.
+/// `Table12` covers the shared-cell drivers fig1/table1/table2;
+/// `Appendix` covers tables 5–10 (one cell matrix feeds all six).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepId {
+    Table12,
+    Table3,
+    Table4,
+    AblationAlpha,
+    Fig2,
+    Fig3,
+    Appendix,
+    All,
+}
+
+impl SweepId {
+    /// Canonical name — also the prefix of this sweep's cell IDs and the
+    /// stem of its shard record files.
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepId::Table12 => "table12",
+            SweepId::Table3 => "table3",
+            SweepId::Table4 => "table4",
+            SweepId::AblationAlpha => "ablation-alpha",
+            SweepId::Fig2 => "fig2",
+            SweepId::Fig3 => "fig3",
+            SweepId::Appendix => "appendix",
+            SweepId::All => "all",
+        }
+    }
+
+    /// Accepts every CLI alias (`fig1`/`table1`/`table2` share cells, as
+    /// do `table5`..`table10`/`appendix`).
+    pub fn from_name(s: &str) -> Option<SweepId> {
+        match s {
+            "fig1" | "table1" | "table2" | "table12" => Some(SweepId::Table12),
+            "table3" => Some(SweepId::Table3),
+            "table4" => Some(SweepId::Table4),
+            "ablation-alpha" => Some(SweepId::AblationAlpha),
+            "fig2" => Some(SweepId::Fig2),
+            "fig3" => Some(SweepId::Fig3),
+            "appendix" | "table5" | "table6" | "table7" | "table8" | "table9" | "table10" => {
+                Some(SweepId::Appendix)
+            }
+            "all" => Some(SweepId::All),
+            _ => None,
+        }
+    }
+
+    /// The concrete sweeps `all` expands to, in execution order.
+    pub fn all_parts() -> [SweepId; 6] {
+        [
+            SweepId::Table12,
+            SweepId::Table3,
+            SweepId::Table4,
+            SweepId::Fig2,
+            SweepId::Fig3,
+            SweepId::Appendix,
+        ]
+    }
+
+    /// Timed sweeps run their cells serially (Table 3 measures per-cell
+    /// wall-clock; concurrent cells would contend for cores).
+    pub fn timed(self) -> bool {
+        self == SweepId::Table3
+    }
+}
+
+/// Metrics a sweep computes per quantized cell: perplexity eval flavors
+/// and zero-shot task families. Derived from the sweep (not stored per
+/// cell) so a cell ID alone fully determines the work.
+pub fn wants(sweep: SweepId) -> (Vec<Flavor>, Vec<TaskFamily>) {
+    match sweep {
+        SweepId::Table12 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
+        SweepId::Appendix => (Flavor::all().to_vec(), TaskFamily::all().to_vec()),
+        SweepId::Table4 | SweepId::AblationAlpha => (vec![Flavor::Wiki], vec![]),
+        SweepId::Fig3 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
+        SweepId::Table3 | SweepId::Fig2 | SweepId::All => (vec![], vec![]),
+    }
+}
+
+/// The main-text settings of tables 1/2 (INT4/3/2 per-channel).
+pub fn table12_settings() -> Vec<QuantConfig> {
+    vec![QuantConfig::int(4), QuantConfig::int(3), QuantConfig::int(2)]
+}
+
+/// The methods of the appendix tables (5–10).
+pub fn appendix_methods() -> [Method; 3] {
+    [Method::Rtn, Method::Gptq, Method::Awq]
+}
+
+/// The α grid of the propagation-strength ablation.
+pub fn ablation_alphas() -> [f32; 5] {
+    [0.0, 0.25, 0.5, 0.75, 1.0]
+}
+
+/// Everything that parameterizes a plan besides the sweep ID. Two
+/// processes that build a `PlanParams` from the same CLI flags (see
+/// [`PlanParams::from_args`]) enumerate the identical manifest — the
+/// contract the shard executor and the merge collector rely on.
+#[derive(Clone, Debug)]
+pub struct PlanParams {
+    pub sizes: Vec<Size>,
+    /// Table 4's single model size (first of `sizes`).
+    pub table4_size: Size,
+    /// Fig. 2's model size (standalone: first of `sizes`; under `all`:
+    /// the second, to match the historical driver).
+    pub fig2_size: Size,
+    pub fig2_bits: u32,
+    /// Resolved number of leading blocks Fig. 2 quantizes.
+    pub fig2_blocks: usize,
+    pub fig3_bits: Vec<u32>,
+    pub fig3_seeds: u64,
+    pub appendix_settings: Vec<QuantConfig>,
+}
+
+impl PlanParams {
+    /// Defaults for a size list (full-scale knobs everywhere). Callers
+    /// tweak fields before planning; `from_args` mirrors the CLI.
+    pub fn for_sizes(sizes: &[Size]) -> PlanParams {
+        let first = sizes.first().copied().unwrap_or(Size::TinyS);
+        let fig2_size = sizes.first().copied().unwrap_or(Size::TinyM);
+        PlanParams {
+            sizes: sizes.to_vec(),
+            table4_size: first,
+            fig2_size,
+            fig2_bits: 3,
+            fig2_blocks: resolve_fig2_blocks(fig2_size, None),
+            fig3_bits: vec![4, 3, 2],
+            fig3_seeds: 5,
+            appendix_settings: QuantConfig::appendix_settings(),
+        }
+    }
+
+    /// Build the plan parameters exactly the way the CLI drivers always
+    /// have: `--sizes`/`--fast` pick the model list; Fig. 2 reads
+    /// `--bits`/`--blocks` when run standalone but is pinned to
+    /// (second size, INT3, half the blocks) under `all`; Fig. 3 reads
+    /// `--seeds` standalone and uses the fast/full default under `all`;
+    /// the appendix grid shrinks to two settings under `--fast`.
+    pub fn from_args(sweep: SweepId, args: &Args) -> Result<PlanParams> {
+        let fast = args.has("fast");
+        let sizes: Vec<Size> = match args.get("sizes") {
+            Some(spec) => {
+                // Every name must resolve: a typo'd size silently shrinking
+                // a sharded manifest is exactly the class of bug strict
+                // flag handling exists to prevent.
+                spec.split(',')
+                    .map(|tok| {
+                        Size::from_name(tok).ok_or_else(|| {
+                            anyhow!(
+                                "--sizes: unknown size '{tok}' (want s,m,l / tiny-s,tiny-m,tiny-l)"
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<Size>>>()?
+            }
+            None => {
+                if fast {
+                    vec![Size::TinyS]
+                } else {
+                    Size::all().to_vec()
+                }
+            }
+        };
+        let mut p = PlanParams::for_sizes(&sizes);
+        if sweep == SweepId::All {
+            // Historical `all` driver: fig2 runs on the second size at
+            // INT3/default blocks; fig3 ignores --seeds.
+            p.fig2_size = sizes.get(1).copied().unwrap_or(sizes[0]);
+            p.fig2_bits = 3;
+            p.fig2_blocks = resolve_fig2_blocks(p.fig2_size, None);
+            p.fig3_seeds = if fast { 2 } else { 5 };
+        } else {
+            // Strict numeric flags: a typo'd value must error, never
+            // silently fall back to a default manifest.
+            p.fig2_bits = parse_flag(args, "bits", 3u32)?;
+            let blocks: Option<usize> = args
+                .get("blocks")
+                .map(|b| b.parse())
+                .transpose()
+                .map_err(|_| anyhow!("--blocks expects an integer"))?;
+            p.fig2_blocks = resolve_fig2_blocks(p.fig2_size, blocks);
+            p.fig3_seeds = parse_flag(args, "seeds", if fast { 2u64 } else { 5 })?;
+        }
+        p.fig3_bits = if fast { vec![3] } else { vec![4, 3, 2] };
+        p.appendix_settings = if fast {
+            vec![QuantConfig::int(3), QuantConfig::int_group(2, 32)]
+        } else {
+            QuantConfig::appendix_settings()
+        };
+        Ok(p)
+    }
+}
+
+/// Parse an integer flag strictly: absent → default, present-but-bad →
+/// error (never a silent default — it would change the planned manifest).
+fn parse_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+    }
+}
+
+/// Fig. 2 quantizes the first `n` blocks (default: half the model).
+pub fn resolve_fig2_blocks(size: Size, requested: Option<usize>) -> usize {
+    let n_layers = size.config().n_layers;
+    requested.unwrap_or(n_layers / 2).min(n_layers)
+}
+
+/// The work a single manifest entry stands for. `Quant` covers every
+/// sweep whose unit is "quantize a [`Cell`], then measure"; the α
+/// ablation and Fig. 2 need pipeline overrides a plain `Cell` cannot
+/// express, so they carry their own variants.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellTask {
+    Quant(Cell),
+    /// RTN INT3 with an explicit uniform propagation strength α.
+    Alpha { size: Size, alpha: f32 },
+    /// Quantize the first `n_blocks` blocks with RTN INT`bits`, ±QEP,
+    /// and record the per-block error deltas Δ_m.
+    Fig2 { size: Size, bits: u32, n_blocks: usize, qep: bool },
+}
+
+/// One enumerated unit of sweep work: a sweep tag plus its task. The
+/// string form ([`PlanCell::id`]) is the cell's identity everywhere —
+/// in shard record files, in merge coverage checks, on the CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanCell {
+    pub sweep: SweepId,
+    pub task: CellTask,
+}
+
+fn qep_str(qep: bool) -> &'static str {
+    if qep {
+        "+qep"
+    } else {
+        "base"
+    }
+}
+
+fn parse_qep(s: &str) -> Option<bool> {
+    match s {
+        "+qep" => Some(true),
+        "base" => Some(false),
+        _ => None,
+    }
+}
+
+impl PlanCell {
+    /// Stable, human-readable cell identity. Round-trips through
+    /// [`PlanCell::parse`]: `parse(c.id()) == Some(c)` for every
+    /// manifest cell (gated by `rust/tests/exp_plan.rs`).
+    pub fn id(&self) -> String {
+        match (&self.sweep, &self.task) {
+            (SweepId::Table12, CellTask::Quant(c)) | (SweepId::Appendix, CellTask::Quant(c)) => {
+                format!(
+                    "{}/{}/{}/{}/{}",
+                    self.sweep.name(),
+                    c.quant.label(),
+                    c.method.name(),
+                    qep_str(c.qep),
+                    c.size.name()
+                )
+            }
+            (SweepId::Table3, CellTask::Quant(c)) => {
+                format!("table3/{}/{}/{}", c.method.name(), qep_str(c.qep), c.size.name())
+            }
+            (SweepId::Table4, CellTask::Quant(c)) => format!(
+                "table4/{}/{}/{}/{}",
+                c.method.name(),
+                qep_str(c.qep),
+                c.calib_flavor.name(),
+                c.size.name()
+            ),
+            (SweepId::Fig3, CellTask::Quant(c)) => format!(
+                "fig3/{}/{}/{}/s{}",
+                c.quant.label(),
+                c.size.name(),
+                qep_str(c.qep),
+                c.seed
+            ),
+            (SweepId::AblationAlpha, CellTask::Alpha { size, alpha }) => {
+                format!("ablation-alpha/a{alpha:.2}/{}", size.name())
+            }
+            (SweepId::Fig2, CellTask::Fig2 { size, bits, n_blocks, qep }) => {
+                format!("fig2/{}/INT{bits}/b{n_blocks}/{}", size.name(), qep_str(*qep))
+            }
+            (sweep, task) => unreachable!("no ID form for {sweep:?} / {task:?}"),
+        }
+    }
+
+    /// Inverse of [`PlanCell::id`]. Returns `None` for anything that is
+    /// not a well-formed cell ID (the ID alone fully determines the
+    /// work; no plan parameters needed).
+    pub fn parse(id: &str) -> Option<PlanCell> {
+        let p: Vec<&str> = id.split('/').collect();
+        match p.as_slice() {
+            ["table12", q, m, e, s] | ["appendix", q, m, e, s] => {
+                let sweep =
+                    if p[0] == "table12" { SweepId::Table12 } else { SweepId::Appendix };
+                let cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::from_label(q)?,
+                    parse_qep(e)?,
+                );
+                Some(PlanCell { sweep, task: CellTask::Quant(cell) })
+            }
+            ["table3", m, e, s] => {
+                let cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::int(3),
+                    parse_qep(e)?,
+                );
+                Some(PlanCell { sweep: SweepId::Table3, task: CellTask::Quant(cell) })
+            }
+            ["table4", m, e, f, s] => {
+                let mut cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::int(3),
+                    parse_qep(e)?,
+                );
+                cell.calib_flavor = Flavor::from_name(f)?;
+                Some(PlanCell { sweep: SweepId::Table4, task: CellTask::Quant(cell) })
+            }
+            ["fig3", q, s, e, seed] => {
+                let mut cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::Quip,
+                    QuantConfig::from_label(q)?,
+                    parse_qep(e)?,
+                );
+                cell.seed = seed.strip_prefix('s')?.parse().ok()?;
+                Some(PlanCell { sweep: SweepId::Fig3, task: CellTask::Quant(cell) })
+            }
+            ["ablation-alpha", a, s] => Some(PlanCell {
+                sweep: SweepId::AblationAlpha,
+                task: CellTask::Alpha {
+                    size: Size::from_name(s)?,
+                    alpha: a.strip_prefix('a')?.parse().ok()?,
+                },
+            }),
+            ["fig2", s, q, b, e] => Some(PlanCell {
+                sweep: SweepId::Fig2,
+                task: CellTask::Fig2 {
+                    size: Size::from_name(s)?,
+                    bits: q.strip_prefix("INT")?.parse().ok()?,
+                    n_blocks: b.strip_prefix('b')?.parse().ok()?,
+                    qep: parse_qep(e)?,
+                },
+            }),
+            _ => None,
+        }
+    }
+
+    /// The model size this cell quantizes.
+    pub fn size(&self) -> Size {
+        match &self.task {
+            CellTask::Quant(c) => c.size,
+            CellTask::Alpha { size, .. } => *size,
+            CellTask::Fig2 { size, .. } => *size,
+        }
+    }
+}
+
+/// Enumerate the stable, ordered manifest for a sweep. The order is the
+/// historical driver order (settings-major matrices; `all` concatenates
+/// its parts in run order) and is part of the sharding contract: shard
+/// assignment is by manifest index.
+pub fn manifest(sweep: SweepId, params: &PlanParams) -> Result<Vec<PlanCell>> {
+    if params.sizes.is_empty() {
+        bail!("experiment plan needs at least one model size");
+    }
+    let mut cells = Vec::new();
+    match sweep {
+        SweepId::Table12 => {
+            quant_matrix(
+                &mut cells,
+                SweepId::Table12,
+                &params.sizes,
+                &table12_settings(),
+                &Method::all(),
+            );
+        }
+        SweepId::Table3 => {
+            for (method, qep) in [(Method::Gptq, false), (Method::Awq, false), (Method::Rtn, true)]
+            {
+                for &s in &params.sizes {
+                    cells.push(PlanCell {
+                        sweep: SweepId::Table3,
+                        task: CellTask::Quant(Cell::new(s, method, QuantConfig::int(3), qep)),
+                    });
+                }
+            }
+        }
+        SweepId::Table4 => {
+            let size = params.table4_size;
+            let q = QuantConfig::int(3);
+            // The calibration-free RTN reference first, then method ×
+            // calibration flavor (the table's six delta cells).
+            cells.push(PlanCell {
+                sweep: SweepId::Table4,
+                task: CellTask::Quant(Cell::new(size, Method::Rtn, q, false)),
+            });
+            for (method, qep) in [(Method::Gptq, false), (Method::Rtn, true)] {
+                for fl in [Flavor::C4, Flavor::Ptb, Flavor::Wiki] {
+                    let mut cell = Cell::new(size, method, q, qep);
+                    cell.calib_flavor = fl;
+                    cells.push(PlanCell { sweep: SweepId::Table4, task: CellTask::Quant(cell) });
+                }
+            }
+        }
+        SweepId::AblationAlpha => {
+            for &a in &ablation_alphas() {
+                for &s in &params.sizes {
+                    cells.push(PlanCell {
+                        sweep: SweepId::AblationAlpha,
+                        task: CellTask::Alpha { size: s, alpha: a },
+                    });
+                }
+            }
+        }
+        SweepId::Fig2 => {
+            for qep in [false, true] {
+                cells.push(PlanCell {
+                    sweep: SweepId::Fig2,
+                    task: CellTask::Fig2 {
+                        size: params.fig2_size,
+                        bits: params.fig2_bits,
+                        n_blocks: params.fig2_blocks,
+                        qep,
+                    },
+                });
+            }
+        }
+        SweepId::Fig3 => {
+            for &bits in &params.fig3_bits {
+                for &size in &params.sizes {
+                    for qep in [false, true] {
+                        for seed in 0..params.fig3_seeds {
+                            let mut cell =
+                                Cell::new(size, Method::Quip, QuantConfig::int(bits), qep);
+                            cell.seed = seed;
+                            cells.push(PlanCell {
+                                sweep: SweepId::Fig3,
+                                task: CellTask::Quant(cell),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        SweepId::Appendix => {
+            quant_matrix(
+                &mut cells,
+                SweepId::Appendix,
+                &params.sizes,
+                &params.appendix_settings,
+                &appendix_methods(),
+            );
+        }
+        SweepId::All => {
+            for part in SweepId::all_parts() {
+                cells.extend(manifest(part, params)?);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// The standard `settings × methods × ±QEP × sizes` matrix order shared
+/// by the table 1/2 and appendix drivers.
+fn quant_matrix(
+    out: &mut Vec<PlanCell>,
+    sweep: SweepId,
+    sizes: &[Size],
+    settings: &[QuantConfig],
+    methods: &[Method],
+) {
+    for &q in settings {
+        for &m in methods {
+            for qep in [false, true] {
+                for &s in sizes {
+                    out.push(PlanCell { sweep, task: CellTask::Quant(Cell::new(s, m, q, qep)) });
+                }
+            }
+        }
+    }
+}
+
+/// Distinct model sizes a cell list touches, in first-seen order (the
+/// snapshot the shard executor must load).
+pub fn sizes_of(cells: &[PlanCell]) -> Vec<Size> {
+    let mut sizes = Vec::new();
+    for c in cells {
+        if !sizes.contains(&c.size()) {
+            sizes.push(c.size());
+        }
+    }
+    sizes
+}
+
+/// A parsed `--shard i/N` spec (1-based shard index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let err = || anyhow!("--shard expects i/N with 1 <= i <= N (e.g. --shard 2/3), got '{s}'");
+        let (i, n) = s.split_once('/').ok_or_else(err)?;
+        let index: usize = i.parse().map_err(|_| err())?;
+        let count: usize = n.parse().map_err(|_| err())?;
+        if count == 0 || index == 0 || index > count {
+            return Err(err());
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// The manifest entries this shard owns.
+    pub fn filter(&self, cells: &[PlanCell]) -> Vec<PlanCell> {
+        cells
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| shard_of(*j, self.count) == self.index)
+            .map(|(_, c)| c.clone())
+            .collect()
+    }
+}
+
+/// Deterministic shard assignment: manifest index `j` (0-based) belongs
+/// to shard `(j % count) + 1`. Round-robin keeps mixed-cost sweeps
+/// balanced (adjacent manifest entries tend to cost the same).
+pub fn shard_of(index: usize, count: usize) -> usize {
+    (index % count.max(1)) + 1
+}
+
+/// Result records keyed by cell ID, verified to cover a manifest exactly
+/// once. Renders look cells up by identity, never by position, so shard
+/// files can arrive in any order.
+pub struct RecordMap {
+    by_id: HashMap<String, CellRecord>,
+}
+
+impl RecordMap {
+    pub fn get(&self, cell: &PlanCell) -> Result<&CellRecord> {
+        let id = cell.id();
+        self.by_id.get(&id).ok_or_else(|| anyhow!("no result record for cell '{id}'"))
+    }
+
+    pub fn any_fallback(&self) -> bool {
+        self.by_id.values().any(|r| r.fallback)
+    }
+
+    /// Records in manifest order (the canonical order for record files
+    /// written by an unsharded run).
+    pub fn in_order(&self, cells: &[PlanCell]) -> Result<Vec<CellRecord>> {
+        cells.iter().map(|c| self.get(c).cloned()).collect()
+    }
+}
+
+fn preview(ids: &[String]) -> String {
+    const SHOW: usize = 5;
+    let shown: Vec<&str> = ids.iter().take(SHOW).map(|s| s.as_str()).collect();
+    if ids.len() > SHOW {
+        format!("{} (+{} more)", shown.join(", "), ids.len() - SHOW)
+    } else {
+        shown.join(", ")
+    }
+}
+
+/// Merge-time coverage check: every manifest cell has exactly one record
+/// and every record names a manifest cell. Gaps, duplicates, and unknown
+/// IDs are hard errors — a partial or mixed-up merge must never render.
+pub fn verify_coverage(cells: &[PlanCell], records: Vec<CellRecord>) -> Result<RecordMap> {
+    let mut expected: HashMap<String, usize> = HashMap::new();
+    for (j, c) in cells.iter().enumerate() {
+        if expected.insert(c.id(), j).is_some() {
+            bail!("manifest bug: duplicate cell id '{}'", c.id());
+        }
+    }
+    let mut by_id: HashMap<String, CellRecord> = HashMap::new();
+    let mut unknown = Vec::new();
+    let mut duplicate = Vec::new();
+    for r in records {
+        if !expected.contains_key(&r.id) {
+            unknown.push(r.id.clone());
+        } else if by_id.contains_key(&r.id) {
+            duplicate.push(r.id.clone());
+        } else {
+            by_id.insert(r.id.clone(), r);
+        }
+    }
+    if !unknown.is_empty() {
+        unknown.sort();
+        bail!(
+            "{} record(s) are not in the manifest (wrong sweep, flags, or corrupted id?): {}",
+            unknown.len(),
+            preview(&unknown)
+        );
+    }
+    if !duplicate.is_empty() {
+        duplicate.sort();
+        duplicate.dedup();
+        bail!(
+            "duplicate record(s) for {} cell(s) (overlapping shard files?): {}",
+            duplicate.len(),
+            preview(&duplicate)
+        );
+    }
+    let missing: Vec<String> =
+        cells.iter().map(|c| c.id()).filter(|id| !by_id.contains_key(id)).collect();
+    if !missing.is_empty() {
+        bail!(
+            "{} of {} manifest cell(s) have no record (incomplete shard set?): {}",
+            missing.len(),
+            cells.len(),
+            preview(&missing)
+        );
+    }
+    Ok(RecordMap { by_id })
+}

@@ -1,25 +1,29 @@
-//! Table drivers. Each driver quantizes a matrix of (size × grid × method
-//! × ±QEP) cells and formats the paper's corresponding table. Cells are
-//! quantized once and every requested metric is computed from the same
-//! quantized model, so combined drivers (tables 5–7 share cells; 8–10
-//! share cells) cost no more than a single table.
+//! Table drivers and renderers. Each paper table is now three stages:
+//! the cell matrix is enumerated by `plan::manifest`, executed by
+//! `common::run_cells` (cells quantize once; every requested metric is
+//! computed from the same quantized model, so combined drivers — tables
+//! 1/2 share cells, 5–10 share cells — cost no more than one table),
+//! and formatted here from the result records by cell identity.
 //!
-//! Sharding: independent cells fan out across the work-stealing pool
-//! ([`run_matrix_on`]) against an immutable [`ExpData`] snapshot, with
-//! per-cell name-derived seeds and results collected in cell order — so
-//! every table renders byte-identically for every `--threads` value.
-//! Table 3 is the deliberate exception: it *measures* per-cell runtime,
-//! and concurrent cells would contend for cores and corrupt the timings,
-//! so its cells run serially (each cell still uses the pool internally).
+//! Sharding: untimed cells fan out across the work-stealing pool against
+//! an immutable [`ExpData`] snapshot with per-cell name-derived seeds,
+//! so every table renders byte-identically for every `--threads` value
+//! *and* for every `--shard i/N` split (renders look records up by cell
+//! ID, never by position). Table 3 is the deliberate exception: it
+//! *measures* per-cell runtime, so its cells run serially in whichever
+//! process owns them and its timing cells are shard-local wall-clock —
+//! the one non-deterministic column (render with `--stable-timings` to
+//! make even those bytes machine-independent).
 
-use super::common::{cell_ppl_on, persist, run_jobs, Cell, ExpData, ExpEnv, TASKS_PER_FAMILY};
-use crate::eval::{perplexity, TaskFamily, TaskSet};
+use super::common::{self, persist_to, run_jobs, Cell, ExpData, ExpEnv, RenderCfg};
+use super::plan::{self, CellTask, PlanCell, PlanParams, RecordMap, SweepId};
+use crate::eval::{perplexity, TaskFamily};
 use crate::model::Size;
 use crate::quant::{Method, QuantConfig};
 use crate::text::Flavor;
-use crate::util::pool::{self, Pool};
+use crate::util::pool::Pool;
 use crate::util::stats;
-use crate::util::table::{fmt_acc, fmt_ppl, Table};
+use crate::util::table::{fmt_acc, fmt_ppl, fmt_runtime, Table};
 use anyhow::Result;
 use std::collections::HashMap;
 
@@ -41,23 +45,12 @@ pub struct CellResult {
     pub correction_s: f64,
 }
 
-/// Run a matrix of cells on the process-global pool, computing all
-/// requested metrics per quantized model (quantize once, evaluate many).
-pub fn run_matrix(env: &mut ExpEnv, cells: &[Cell], wants: &Wants) -> Result<Vec<CellResult>> {
-    let mut sizes: Vec<Size> = Vec::new();
-    for c in cells {
-        if !sizes.contains(&c.size) {
-            sizes.push(c.size);
-        }
-    }
-    let data = env.snapshot(&sizes);
-    run_matrix_on(&data, cells, wants, &pool::global())
-}
-
-/// [`run_matrix`] against a snapshot on an explicit pool: one pool task
-/// per cell, results collected in cell order. Cells derive their seeds
-/// from their own identity, so the output is bit-identical for every
-/// thread count and every stealing schedule.
+/// Run a matrix of cells against a snapshot on an explicit pool: one
+/// pool task per cell, results collected in cell order. Cells derive
+/// their seeds from their own identity, so the output is bit-identical
+/// for every thread count and every stealing schedule. (Kept as the
+/// parallel-equivalence suite's direct harness; the CLI drivers go
+/// through the plan/record pipeline instead.)
 pub fn run_matrix_on(
     data: &ExpData,
     cells: &[Cell],
@@ -65,13 +58,6 @@ pub fn run_matrix_on(
     pool: &Pool,
 ) -> Result<Vec<CellResult>> {
     eprintln!("[exp] running {} cells on {} worker(s)", cells.len(), pool.threads());
-    // Task sets are cell-independent: build them once, score per cell.
-    let task_corpus = data.corpus(Flavor::Wiki);
-    let task_sets: Vec<(TaskFamily, TaskSet)> = wants
-        .tasks
-        .iter()
-        .map(|&fam| (fam, TaskSet::generate(fam, task_corpus, TASKS_PER_FAMILY, 1234)))
-        .collect();
     let results = run_jobs(pool, cells.len(), |i| -> Result<CellResult> {
         let cell = &cells[i];
         let out = cell.run_on(data)?;
@@ -81,8 +67,10 @@ pub fn run_matrix_on(
             ppl.insert(fl, perplexity(&out.model, &eval));
         }
         let mut acc = HashMap::new();
-        for (fam, ts) in &task_sets {
-            acc.insert(*fam, ts.accuracy(&out.model));
+        for &fam in &wants.tasks {
+            // Task sets are cell-independent: the snapshot builds each
+            // family's set once and every cell scores against it.
+            acc.insert(fam, data.task_set(fam).accuracy(&out.model));
         }
         eprintln!("[exp] cell {}/{} done: {}", i + 1, cells.len(), cell.label());
         Ok(CellResult {
@@ -205,14 +193,52 @@ pub fn format_acc_table(
     t
 }
 
-/// Table 1 (+ Fig. 1 data): WikiText-analog PPL, per-channel INT4/3/2.
-/// Table 2: zero-shot average accuracy for the same cells.
-pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
-    let settings = [QuantConfig::int(4), QuantConfig::int(3), QuantConfig::int(2)];
+fn family_from_name(name: &str) -> Option<TaskFamily> {
+    TaskFamily::all().into_iter().find(|f| f.name() == name)
+}
+
+/// Reassemble [`CellResult`]s (the formatters' input) from the result
+/// records of a sweep's `Quant` cells, looked up by cell identity.
+fn quant_results(
+    sweep: SweepId,
+    params: &PlanParams,
+    recs: &RecordMap,
+) -> Result<Vec<CellResult>> {
+    let cells = plan::manifest(sweep, params)?;
+    let mut out = Vec::new();
+    for pc in &cells {
+        if let CellTask::Quant(cell) = &pc.task {
+            let rec = recs.get(pc)?;
+            let mut ppl = HashMap::new();
+            for (k, v) in &rec.ppl {
+                if let Some(fl) = Flavor::from_name(k) {
+                    ppl.insert(fl, *v);
+                }
+            }
+            let mut acc = HashMap::new();
+            for (k, v) in &rec.acc {
+                if let Some(fam) = family_from_name(k) {
+                    acc.insert(fam, *v);
+                }
+            }
+            out.push(CellResult {
+                cell: cell.clone(),
+                ppl,
+                acc,
+                runtime_s: rec.timings.total_s,
+                correction_s: rec.timings.correction_s,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render Table 1 (+ Fig. 1 data) and Table 2 from records.
+pub fn render_table12(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
+    let settings = plan::table12_settings();
     let methods = Method::all();
-    let cells = matrix(sizes, &settings, &methods);
-    let wants = Wants { ppl: vec![Flavor::Wiki], tasks: TaskFamily::all().to_vec() };
-    let results = run_matrix(env, &cells, &wants)?;
+    let sizes = &params.sizes;
+    let results = quant_results(SweepId::Table12, params, recs)?;
 
     let t1 = format_ppl_table(
         "Table 1: perplexity (wiki analog) — lower is better",
@@ -223,7 +249,7 @@ pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
         Flavor::Wiki,
     );
     println!("{}", t1.render());
-    persist("table1", &t1)?;
+    persist_to(&rcfg.results_dir, "table1", &t1)?;
 
     let t2 = format_acc_table(
         "Table 2: zero-shot average accuracy (cloze/completion/pattern) — higher is better",
@@ -234,7 +260,7 @@ pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
         None,
     );
     println!("{}", t2.render());
-    persist("table2", &t2)?;
+    persist_to(&rcfg.results_dir, "table2", &t2)?;
 
     // Fig. 1 is the bar-chart view of Table 1; emit its CSV series.
     let mut fig1 = Table::new(
@@ -243,12 +269,15 @@ pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
     );
     for &q in &settings {
         for &m in &methods {
-            for &s in sizes {
+            for &s in sizes.iter() {
                 let find = |qep: bool| {
                     results
                         .iter()
                         .find(|r| {
-                            r.cell.size == s && r.cell.method == m && r.cell.quant == q && r.cell.qep == qep
+                            r.cell.size == s
+                                && r.cell.method == m
+                                && r.cell.quant == q
+                                && r.cell.qep == qep
                         })
                         .and_then(|r| r.ppl.get(&Flavor::Wiki))
                         .copied()
@@ -265,21 +294,19 @@ pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
         }
     }
     println!("{}", fig1.render());
-    persist("fig1", &fig1)?;
+    persist_to(&rcfg.results_dir, "fig1", &fig1)?;
     Ok(())
 }
 
-/// Table 3: quantization runtime comparison (GPTQ vs AWQ vs QEP+RTN).
-///
-/// Cells run *serially* on purpose: this table's metric is the wall-clock
-/// of each quantization, and fanning cells out would make them contend
-/// for the same cores. The pipeline inside each cell still uses the full
-/// pool, so the reported times reflect the parallel engine.
-pub fn table3(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+/// Render Table 3 from records: quantization runtime comparison (GPTQ vs
+/// AWQ vs QEP+RTN). Timing cells are the wall-clock of whichever process
+/// ran the cell serially (shard-local); `--stable-timings` renders them
+/// as a placeholder so the bytes are machine-independent.
+pub fn render_table3(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
     let mut hdr = vec!["Runtime".to_string()];
-    hdr.extend(sizes.iter().map(|s| s.name().to_string()));
+    hdr.extend(params.sizes.iter().map(|s| s.name().to_string()));
     let mut t = Table::new(
-        "Table 3: quantization-process runtime",
+        "Table 3: quantization-process runtime (shard-local wall-clock)",
         &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let rows: Vec<(&str, Method, bool)> = vec![
@@ -287,120 +314,90 @@ pub fn table3(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
         ("AWQ", Method::Awq, false),
         ("QEP + RTN", Method::Rtn, true),
     ];
-    let q = QuantConfig::int(3);
     for (label, method, qep) in rows {
         let mut row = vec![label.to_string()];
-        for &s in sizes {
-            let cell = Cell::new(s, method, q, qep);
-            let out = cell.run(env)?;
-            row.push(crate::util::fmt_duration(out.report.total_s));
-            eprintln!(
-                "[table3] {} {}: {} (correction {})",
-                s.name(),
-                label,
-                crate::util::fmt_duration(out.report.total_s),
-                crate::util::fmt_duration(out.report.correction_s())
-            );
+        for &s in &params.sizes {
+            let pc = PlanCell {
+                sweep: SweepId::Table3,
+                task: CellTask::Quant(Cell::new(s, method, QuantConfig::int(3), qep)),
+            };
+            let rec = recs.get(&pc)?;
+            row.push(fmt_runtime(rec.timings.total_s, rcfg.stable_timings));
         }
         t.row(row);
     }
     println!("{}", t.render());
-    persist("table3", &t)
+    persist_to(&rcfg.results_dir, "table3", &t)
 }
 
-/// Table 4: robustness to the calibration dataset. PPL (wiki eval) deltas
-/// vs base RTN for GPTQ and QEP+RTN calibrated on c4/ptb/wiki. All seven
-/// cells (the RTN reference plus method × calibration flavor) shard
-/// across the pool.
-pub fn table4(env: &mut ExpEnv, size: Size) -> Result<()> {
+/// Render Table 4 from records: PPL (wiki eval) deltas vs base RTN for
+/// GPTQ and QEP+RTN calibrated on c4/ptb/wiki.
+pub fn render_table4(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
+    let size = params.table4_size;
     let q = QuantConfig::int(3);
-    let data = env.snapshot(&[size]);
+    let ref_pc = PlanCell {
+        sweep: SweepId::Table4,
+        task: CellTask::Quant(Cell::new(size, Method::Rtn, q, false)),
+    };
+    let rtn = recs.get(&ref_pc)?.ppl_for("wiki");
     let flavors = [Flavor::C4, Flavor::Ptb, Flavor::Wiki];
     let variants = [("GPTQ", Method::Gptq, false), ("QEP + RTN", Method::Rtn, true)];
-    // cells[0] = the calibration-free RTN reference, then method × flavor.
-    let mut cells = vec![Cell::new(size, Method::Rtn, q, false)];
-    for &(_, method, qep) in &variants {
-        for &fl in &flavors {
-            let mut cell = Cell::new(size, method, q, qep);
-            cell.calib_flavor = fl;
-            cells.push(cell);
-        }
-    }
-    let pool = pool::global();
-    let ppls: Vec<f64> =
-        run_jobs(&pool, cells.len(), |i| cell_ppl_on(&data, &cells[i], Flavor::Wiki))
-            .into_iter()
-            .collect::<Result<_>>()?;
-    let rtn = ppls[0];
     let mut t = Table::new(
         &format!("Table 4: PPL relative to RTN ({}; eval=wiki; RTN={:.3})", size.name(), rtn),
         &["Method", "calib=C4", "calib=PTB", "calib=WikiText2"],
     );
-    for (vi, &(label, _, _)) in variants.iter().enumerate() {
+    for &(label, method, qep) in &variants {
         let mut row = vec![label.to_string()];
-        for fi in 0..flavors.len() {
-            let ppl = ppls[1 + vi * flavors.len() + fi];
+        for &fl in &flavors {
+            let mut cell = Cell::new(size, method, q, qep);
+            cell.calib_flavor = fl;
+            let pc = PlanCell { sweep: SweepId::Table4, task: CellTask::Quant(cell) };
+            let ppl = recs.get(&pc)?.ppl_for("wiki");
             row.push(format!("{:+.3}", ppl - rtn));
         }
         t.row(row);
     }
     println!("{}", t.render());
-    persist("table4", &t)
+    persist_to(&rcfg.results_dir, "table4", &t)
 }
 
-/// Ablation (DESIGN.md §6, Prop. 5.4 empirically): PPL as a function of
-/// the propagation strength α for RTN INT3 — the knob §5.3 introduces.
-/// The α × size grid shards across the pool; every cell draws the same
-/// seed-0 calibration slice so α is the only moving part.
-pub fn ablation_alpha(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
-    let alphas = [0.0f32, 0.25, 0.5, 0.75, 1.0];
-    let data = env.snapshot(sizes);
-    let mut jobs = Vec::new();
-    for &a in &alphas {
-        for &s in sizes {
-            jobs.push((a, s));
-        }
-    }
-    let pool = pool::global();
-    let vals: Vec<f64> = run_jobs(&pool, jobs.len(), |i| -> Result<f64> {
-            let (a, s) = jobs[i];
-            let model = data.model(s);
-            let calib = data.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
-            let mut cfg = Cell::new(s, Method::Rtn, QuantConfig::int(3), a > 0.0).pipeline_config();
-            cfg.qep_alpha = Some(a); // α=0 ⇒ effectively BASE via short-circuit
-            cfg.alpha_policy = None; // uniform α even for tiny-l here
-            let out = crate::coordinator::Pipeline::new(cfg).run(model, &calib)?;
-            let eval = data.eval_tokens(Flavor::Wiki);
-            Ok(perplexity(&out.model, &eval))
-        })
-        .into_iter()
-        .collect::<Result<_>>()?;
-
+/// Render the α ablation from records (DESIGN.md §6, Prop. 5.4
+/// empirically): PPL as a function of the propagation strength α for
+/// RTN INT3 — the knob §5.3 introduces.
+pub fn render_ablation_alpha(
+    params: &PlanParams,
+    recs: &RecordMap,
+    rcfg: &RenderCfg,
+) -> Result<()> {
     let mut hdr = vec!["alpha".to_string()];
-    hdr.extend(sizes.iter().map(|s| s.name().to_string()));
+    hdr.extend(params.sizes.iter().map(|s| s.name().to_string()));
     let mut t = Table::new(
         "Ablation: wiki PPL vs propagation strength α (RTN INT3)",
         &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
-    for (ai, &a) in alphas.iter().enumerate() {
+    for &a in &plan::ablation_alphas() {
         let mut row = vec![format!("{a:.2}")];
-        for si in 0..sizes.len() {
-            row.push(fmt_ppl(vals[ai * sizes.len() + si]));
+        for &s in &params.sizes {
+            let pc = PlanCell {
+                sweep: SweepId::AblationAlpha,
+                task: CellTask::Alpha { size: s, alpha: a },
+            };
+            row.push(fmt_ppl(recs.get(&pc)?.ppl_for("wiki")));
         }
         t.row(row);
     }
     println!("{}", t.render());
-    persist("ablation_alpha", &t)
+    persist_to(&rcfg.results_dir, "ablation_alpha", &t)
 }
 
-/// Tables 5–7: PPL under the eight grid settings on wiki/ptb/c4 evals.
-/// Tables 8–10: per-task accuracy for the same cells.
-/// One pass covers all six tables (methods: RTN/GPTQ/AWQ as in appendix).
-pub fn appendix_tables(env: &mut ExpEnv, sizes: &[Size], settings: &[QuantConfig]) -> Result<()> {
-    let methods = [Method::Rtn, Method::Gptq, Method::Awq];
-    let cells = matrix(sizes, settings, &methods);
-    let wants = Wants { ppl: Flavor::all().to_vec(), tasks: TaskFamily::all().to_vec() };
-    let results = run_matrix(env, &cells, &wants)?;
+/// Render tables 5–7 (PPL under the appendix grid settings on
+/// wiki/ptb/c4 evals) and 8–10 (per-task accuracy for the same cells)
+/// from records. One cell matrix covers all six tables.
+pub fn render_appendix(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
+    let settings = &params.appendix_settings;
+    let methods = plan::appendix_methods();
+    let sizes = &params.sizes;
+    let results = quant_results(SweepId::Appendix, params, recs)?;
 
     for (idx, flavor, label) in [
         (5, Flavor::Wiki, "WikiText-2 analog"),
@@ -416,7 +413,7 @@ pub fn appendix_tables(env: &mut ExpEnv, sizes: &[Size], settings: &[QuantConfig
             flavor,
         );
         println!("{}", t.render());
-        persist(&format!("table{idx}"), &t)?;
+        persist_to(&rcfg.results_dir, &format!("table{idx}"), &t)?;
     }
     for (idx, family) in [
         (8, TaskFamily::Cloze),
@@ -436,7 +433,42 @@ pub fn appendix_tables(env: &mut ExpEnv, sizes: &[Size], settings: &[QuantConfig
             Some(family),
         );
         println!("{}", t.render());
-        persist(&format!("table{idx}"), &t)?;
+        persist_to(&rcfg.results_dir, &format!("table{idx}"), &t)?;
     }
     Ok(())
+}
+
+/// Table 1 (+ Fig. 1 data) and Table 2: single-process convenience
+/// driver (enumerate → run → render in one call).
+pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+    let params = PlanParams::for_sizes(sizes);
+    common::run_sweep(env, SweepId::Table12, &params, &RenderCfg::default()).map(|_| ())
+}
+
+/// Table 3: single-process driver. Cells run *serially* on purpose —
+/// the metric is per-cell wall-clock (each cell still uses the full
+/// pool internally).
+pub fn table3(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+    let params = PlanParams::for_sizes(sizes);
+    common::run_sweep(env, SweepId::Table3, &params, &RenderCfg::default()).map(|_| ())
+}
+
+/// Table 4: single-process driver (robustness to the calibration set).
+pub fn table4(env: &mut ExpEnv, size: Size) -> Result<()> {
+    let params = PlanParams::for_sizes(&[size]);
+    common::run_sweep(env, SweepId::Table4, &params, &RenderCfg::default()).map(|_| ())
+}
+
+/// α ablation: single-process driver. Every cell draws the same seed-0
+/// calibration slice so α is the only moving part.
+pub fn ablation_alpha(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {
+    let params = PlanParams::for_sizes(sizes);
+    common::run_sweep(env, SweepId::AblationAlpha, &params, &RenderCfg::default()).map(|_| ())
+}
+
+/// Tables 5–10: single-process driver over explicit grid settings.
+pub fn appendix_tables(env: &mut ExpEnv, sizes: &[Size], settings: &[QuantConfig]) -> Result<()> {
+    let mut params = PlanParams::for_sizes(sizes);
+    params.appendix_settings = settings.to_vec();
+    common::run_sweep(env, SweepId::Appendix, &params, &RenderCfg::default()).map(|_| ())
 }

@@ -1,14 +1,21 @@
 //! On-disk interchange formats shared between the build-time Python side
 //! and the Rust runtime.
 //!
-//! The one format is `.qtz` ([`qtz`]): a minimal little-endian tensor
-//! container (named f32/u8 tensors + JSON-ish metadata) written by
+//! `.qtz` ([`qtz`]) is a minimal little-endian tensor container (named
+//! f32/u8 tensors + JSON-ish metadata) written by
 //! `python/compile/qtz.py` after JAX training and read back here for
 //! quantization, evaluation, and serving. Quantized pipeline outputs
 //! round-trip through the same format, which is what lets
 //! `tests/parallel_equivalence.rs` assert *byte*-identical artifacts
 //! across thread counts.
+//!
+//! [`results`] is the distributed-sweep interchange: JSON-lines files of
+//! per-cell experiment records written by `repro exp --shard i/N` and
+//! collected by `repro exp merge`. Metrics round-trip bit-exactly, so
+//! merged renders match single-process renders byte for byte.
 
 pub mod qtz;
+pub mod results;
 
 pub use qtz::{Dtype, TensorFile, TensorView};
+pub use results::CellRecord;

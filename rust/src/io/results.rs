@@ -1,0 +1,360 @@
+//! Machine-readable experiment result records (JSON lines).
+//!
+//! A sharded sweep persists one [`CellRecord`] per executed cell to
+//! `DIR/<sweep>.shard-<i>-of-<N>.jsonl`; `repro exp merge` reads every
+//! `*.jsonl` in the directory back, verifies manifest coverage
+//! (`exp::plan::verify_coverage`), and renders the tables. The format is
+//! therefore a determinism boundary: every metric must survive the
+//! write→read round trip **bit-exactly**, or merged tables would drift
+//! from single-process renders. Finite floats ride on Rust's shortest
+//! round-trip `f64` formatting; non-finite values (a collapsed cell's
+//! infinite perplexity) are encoded as the strings `"inf"`/`"-inf"`/
+//! `"nan"` because JSON has no literal for them.
+//!
+//! Timings (`timings`, `wall_s`) are wall-clock and *shard-local*: they
+//! describe the process that measured them and are the one part of a
+//! record that is not bit-deterministic across runs.
+
+use crate::coordinator::PhaseTimings;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Everything measured for one executed plan cell.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CellRecord {
+    /// The cell's identity (`exp::plan::PlanCell::id`).
+    pub id: String,
+    /// 1-based shard that produced this record; 0 for unsharded runs
+    /// and single-cell (`repro exp cell`) runs.
+    pub shard: usize,
+    /// Total shard count of the producing run; 1 for unsharded runs.
+    pub n_shards: usize,
+    /// Perplexity per eval flavor name, sorted by flavor name.
+    pub ppl: Vec<(String, f64)>,
+    /// Zero-shot accuracy per task-family name, sorted by family name.
+    pub acc: Vec<(String, f64)>,
+    /// Fig. 2 only: per-block error deltas Δ_m.
+    pub deltas: Vec<f64>,
+    /// Pipeline phase timings (shard-local wall-clock).
+    pub timings: PhaseTimings,
+    /// End-to-end cell wall-clock including evaluation (shard-local).
+    pub wall_s: f64,
+    /// True when the cell ran on fallback random weights because the
+    /// model artifact was missing — results are structural only.
+    pub fallback: bool,
+}
+
+impl CellRecord {
+    pub fn new(id: String, shard: usize, n_shards: usize) -> CellRecord {
+        CellRecord { id, shard, n_shards, ..CellRecord::default() }
+    }
+
+    /// Canonicalize: metric lists sorted by key, matching what a JSON
+    /// round trip produces (objects sort their keys), so `PartialEq`
+    /// means the same thing before and after persistence.
+    pub fn normalize(&mut self) {
+        self.ppl.sort_by(|a, b| a.0.cmp(&b.0));
+        self.acc.sort_by(|a, b| a.0.cmp(&b.0));
+    }
+
+    /// Metric lookup by eval flavor name; NaN when absent (renderers
+    /// format NaN as "N/A", matching the historical drivers).
+    pub fn ppl_for(&self, flavor: &str) -> f64 {
+        lookup(&self.ppl, flavor)
+    }
+
+    /// Metric lookup by task-family name; NaN when absent.
+    pub fn acc_for(&self, family: &str) -> f64 {
+        lookup(&self.acc, family)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::Str(self.id.clone()))
+            .set("shard", Json::Num(self.shard as f64))
+            .set("n_shards", Json::Num(self.n_shards as f64))
+            .set("ppl", metrics_json(&self.ppl))
+            .set("acc", metrics_json(&self.acc))
+            .set("deltas", Json::Arr(self.deltas.iter().map(|&v| f64_json(v)).collect()))
+            .set("timings", timings_json(&self.timings))
+            .set("wall_s", f64_json(self.wall_s))
+            .set("fallback", Json::Bool(self.fallback));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellRecord> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("record has no 'id'"))?
+            .to_string();
+        let mut rec = CellRecord::new(
+            id,
+            j.get("shard").and_then(Json::as_usize).unwrap_or(0),
+            j.get("n_shards").and_then(Json::as_usize).unwrap_or(1),
+        );
+        rec.ppl = metrics_from_json(j.get("ppl"))?;
+        rec.acc = metrics_from_json(j.get("acc"))?;
+        if let Some(arr) = j.get("deltas").and_then(Json::as_arr) {
+            rec.deltas = arr.iter().map(json_f64).collect::<Result<_>>()?;
+        }
+        if let Some(t) = j.get("timings") {
+            rec.timings = timings_from_json(t)?;
+        }
+        rec.wall_s = j.get("wall_s").map(json_f64).transpose()?.unwrap_or(0.0);
+        rec.fallback = matches!(j.get("fallback"), Some(Json::Bool(true)));
+        Ok(rec)
+    }
+}
+
+fn lookup(metrics: &[(String, f64)], key: &str) -> f64 {
+    metrics.iter().find(|(k, _)| k == key).map(|&(_, v)| v).unwrap_or(f64::NAN)
+}
+
+/// Encode an `f64` exactly: finite values round-trip through Rust's
+/// shortest-representation float formatting; non-finite become strings.
+fn f64_json(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".to_string())
+    } else if v > 0.0 {
+        Json::Str("inf".to_string())
+    } else {
+        Json::Str("-inf".to_string())
+    }
+}
+
+fn json_f64(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("bad float value '{other}'"),
+        },
+        other => bail!("expected a float, got {other:?}"),
+    }
+}
+
+fn metrics_json(metrics: &[(String, f64)]) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in metrics {
+        o.set(k, f64_json(*v));
+    }
+    o
+}
+
+fn metrics_from_json(j: Option<&Json>) -> Result<Vec<(String, f64)>> {
+    match j {
+        None => Ok(Vec::new()),
+        Some(Json::Obj(m)) => {
+            // BTreeMap iteration is key-sorted — the normalized order.
+            m.iter().map(|(k, v)| Ok((k.clone(), json_f64(v)?))).collect()
+        }
+        Some(other) => bail!("expected a metrics object, got {other:?}"),
+    }
+}
+
+fn timings_json(t: &PhaseTimings) -> Json {
+    let mut o = Json::obj();
+    o.set("total_s", f64_json(t.total_s))
+        .set("propagation_s", f64_json(t.propagation_s))
+        .set("hessian_s", f64_json(t.hessian_s))
+        .set("correction_s", f64_json(t.correction_s))
+        .set("quant_s", f64_json(t.quant_s));
+    o
+}
+
+fn timings_from_json(j: &Json) -> Result<PhaseTimings> {
+    let field = |k: &str| -> Result<f64> { j.get(k).map(json_f64).transpose().map(|v| v.unwrap_or(0.0)) };
+    Ok(PhaseTimings {
+        total_s: field("total_s")?,
+        propagation_s: field("propagation_s")?,
+        hessian_s: field("hessian_s")?,
+        correction_s: field("correction_s")?,
+        quant_s: field("quant_s")?,
+    })
+}
+
+/// Canonical record-file name for one shard of a sweep.
+pub fn shard_filename(sweep: &str, shard: usize, count: usize) -> String {
+    format!("{sweep}.shard-{shard}-of-{count}.jsonl")
+}
+
+/// Record-file name for a single cell run (`repro exp cell <id>`).
+pub fn cell_filename(cell_id: &str) -> String {
+    let sweep = cell_id.split('/').next().unwrap_or("cell");
+    let rest: String = cell_id
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect();
+    format!("{sweep}.cell-{rest}.jsonl")
+}
+
+/// Write records as JSON lines (one record per line), creating parent
+/// directories as needed.
+pub fn write_records(path: &Path, records: &[CellRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().dump());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Read one JSONL record file (empty files — a shard that owned no
+/// cells — yield an empty vec).
+pub fn read_records(path: &Path) -> Result<Vec<CellRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow!("{}:{}: bad record JSON: {e}", path.display(), i + 1))?;
+        out.push(
+            CellRecord::from_json(&j)
+                .with_context(|| format!("{}:{}", path.display(), i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Load every `*.jsonl` record file in `dir` (sorted by file name for a
+/// deterministic read order). Errors when the directory holds no record
+/// files at all — merging nothing is always a mistake.
+pub fn read_record_dir(dir: &Path) -> Result<Vec<(PathBuf, Vec<CellRecord>)>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading record dir {}", dir.display()))?;
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "jsonl").unwrap_or(false))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!("no .jsonl record files in {}", dir.display());
+    }
+    files
+        .into_iter()
+        .map(|p| {
+            let recs = read_records(&p)?;
+            Ok((p, recs))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CellRecord {
+        let mut r = CellRecord::new("table12/INT3/GPTQ/+qep/tiny-s".into(), 2, 3);
+        r.ppl = vec![("wiki".into(), 6.123456789012345), ("ptb".into(), f64::INFINITY)];
+        r.acc = vec![("cloze".into(), 0.515625)];
+        r.deltas = vec![1.5e-7, 2.0];
+        r.timings = PhaseTimings {
+            total_s: 1.25,
+            propagation_s: 0.5,
+            hessian_s: 0.125,
+            correction_s: 0.0625,
+            quant_s: 0.5,
+        };
+        r.wall_s = 2.0;
+        r.fallback = true;
+        r.normalize();
+        r
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let rec = sample();
+        let back = CellRecord::from_json(&Json::parse(&rec.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.id, rec.id);
+        assert_eq!(back.shard, 2);
+        assert_eq!(back.n_shards, 3);
+        assert_eq!(back.ppl.len(), 2);
+        for ((ka, va), (kb, vb)) in rec.ppl.iter().zip(back.ppl.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ka}");
+        }
+        assert_eq!(back.deltas[0].to_bits(), rec.deltas[0].to_bits());
+        assert_eq!(back.timings, rec.timings);
+        assert!(back.fallback);
+
+        // NaN is representable too (it just isn't PartialEq-comparable).
+        let mut nanrec = CellRecord::new("x".into(), 0, 1);
+        nanrec.deltas = vec![f64::NAN];
+        let back =
+            CellRecord::from_json(&Json::parse(&nanrec.to_json().dump()).unwrap()).unwrap();
+        assert!(back.deltas[0].is_nan());
+    }
+
+    #[test]
+    fn awkward_floats_survive_exactly() {
+        // Shortest-round-trip formatting must reproduce the bits for
+        // values with no short decimal form.
+        // (-0.0 is excluded: the JSON writer's integer fast path prints
+        // it as "0", and no experiment metric can be negative zero.)
+        for v in [
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            1e300,
+            6.02214076e23,
+            f64::NEG_INFINITY,
+        ] {
+            let mut r = CellRecord::new("x".into(), 0, 1);
+            r.ppl = vec![("wiki".into(), v)];
+            let b = CellRecord::from_json(&Json::parse(&r.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(b.ppl[0].1.to_bits(), v.to_bits(), "value {v}");
+        }
+    }
+
+    #[test]
+    fn jsonl_files_round_trip() {
+        let dir = std::env::temp_dir().join("qep_results_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(shard_filename("fig3", 1, 2));
+        let recs = vec![sample(), CellRecord::new("fig3/INT3/tiny-s/base/s0".into(), 1, 2)];
+        write_records(&path, &recs).unwrap();
+        let back = read_records(&path).unwrap();
+        assert_eq!(back, recs);
+        // An empty shard file is valid and yields no records.
+        let empty = dir.join(shard_filename("fig3", 2, 2));
+        write_records(&empty, &[]).unwrap();
+        assert!(read_records(&empty).unwrap().is_empty());
+        let all = read_record_dir(&dir).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].1.len() + all[1].1.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn filenames_are_tidy() {
+        assert_eq!(shard_filename("all", 2, 3), "all.shard-2-of-3.jsonl");
+        assert_eq!(
+            cell_filename("table12/INT3/GPTQ/+qep/tiny-s"),
+            "table12.cell-table12_INT3_GPTQ__qep_tiny-s.jsonl"
+        );
+    }
+
+    #[test]
+    fn corrupt_lines_error_with_location() {
+        let dir = std::env::temp_dir().join("qep_results_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\":\"x\"}\nnot json\n").unwrap();
+        let err = read_records(&path).unwrap_err().to_string();
+        assert!(err.contains(":2"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

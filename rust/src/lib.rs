@@ -43,14 +43,17 @@
 //! whose trailing SYRK update runs through the register-tile
 //! micro-kernels in [`linalg::micro`]), per-layer pipeline fan-out
 //! ([`coordinator`]), GPTQ row sweeps, batched perplexity/task evaluation
-//! ([`eval`]), and sharded experiment sweeps ([`exp`]). The invariant
-//! every one of these upholds — and that new code MUST uphold — is:
+//! ([`eval`]), and sharded experiment sweeps ([`exp`] — staged
+//! enumerate→run→render, distributable across processes/machines via
+//! `repro exp --shard i/N` + `repro exp merge`). The invariant every one
+//! of these upholds — and that new code MUST uphold — is:
 //!
 //! > **Results are bit-identical for every thread count** (and, for the
 //! > blocked SPD engine, every block size; for the micro-kernels, every
-//! > tile width). Workers own disjoint output regions, every
-//! > floating-point reduction has a fixed order, and all randomness
-//! > derives from stable names ([`util::fnv1a`]), never from scheduling.
+//! > tile width; for sharded sweeps, every shard split). Workers own
+//! > disjoint output regions, every floating-point reduction has a fixed
+//! > order, and all randomness derives from stable names
+//! > ([`util::fnv1a`]), never from scheduling.
 //!
 //! `rust/tests/parallel_equivalence.rs` gates the contract (including
 //! persistent-pool vs scoped-spawn-baseline equivalence); the

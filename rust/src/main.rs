@@ -4,18 +4,25 @@
 //! repro gen-data [--out artifacts/data] [--tokens N]
 //! repro quantize --model tiny-s --method gptq --bits 3 [--group 64] [--qep 0.5] [--out q.qtz]
 //! repro eval --model-file q.qtz [--flavor wiki] [--tasks]
-//! repro exp <fig1|fig2|fig3|table1|table2|table3|table4|appendix|all> [--sizes s,m,l] [--fast]
+//! repro exp <fig1|fig2|fig3|table1|table2|table3|table4|ablation-alpha|appendix|all>
+//!           [--sizes s,m,l] [--fast] [--shard i/N --out DIR] [--results DIR]
+//! repro exp plan <id>            # list the sweep's cell manifest
+//! repro exp cell <cell-id> --out DIR
+//! repro exp merge <id> --out DIR [--results DIR]
 //! repro info
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::eval::{perplexity, TaskFamily, TaskSet};
-use qep::exp::{self, ExpEnv};
+use qep::exp::{self, plan, ExpEnv, PlanCell, PlanParams, RenderCfg, ShardSpec, SweepId};
+use qep::io::results;
 use qep::model::{Model, Size};
 use qep::quant::{Method, QuantConfig};
 use qep::text::{Corpus, Flavor};
 use qep::util::cli::Args;
+use qep::util::pool;
+use std::path::Path;
 
 fn main() {
     let args = Args::from_env();
@@ -29,6 +36,53 @@ fn main() {
     }
 }
 
+/// Per-subcommand accepted flags. `reject_unknown` turns a typo'd flag
+/// (e.g. `--shards`) into a usage error instead of silently ignoring it
+/// — which for a sharded sweep would mean quietly running every cell.
+const GEN_DATA_FLAGS: &[&str] = &["threads", "out", "tokens"];
+const QUANTIZE_FLAGS: &[&str] = &[
+    "threads", "model", "method", "bits", "group", "qep", "calib", "seed", "out", "artifacts",
+    "verbose",
+];
+const EVAL_FLAGS: &[&str] = &["threads", "model-file", "flavor", "tasks", "chunk", "artifacts"];
+/// `repro exp <id>` (run / shard-run). Plan flags + execution flags.
+const EXP_RUN_FLAGS: &[&str] = &[
+    "threads",
+    "sizes",
+    "fast",
+    "artifacts",
+    "bits",
+    "blocks",
+    "seeds",
+    "shard",
+    "out",
+    "results",
+    "stable-timings",
+];
+/// `repro exp plan <id>`: plan flags only (nothing runs or renders).
+const EXP_PLAN_FLAGS: &[&str] =
+    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "shard"];
+/// `repro exp cell <cell-id>`: the cell ID carries the whole plan.
+const EXP_CELL_FLAGS: &[&str] = &["threads", "artifacts", "out"];
+/// `repro exp merge <id>`: plan flags + collect/render flags (no --shard
+/// — merge always collects the full manifest).
+const EXP_MERGE_FLAGS: &[&str] = &[
+    "threads",
+    "sizes",
+    "fast",
+    "bits",
+    "blocks",
+    "seeds",
+    "out",
+    "results",
+    "stable-timings",
+];
+const INFO_FLAGS: &[&str] = &["threads"];
+
+fn check_flags(args: &Args, known: &[&str]) -> Result<()> {
+    args.reject_unknown(known).map_err(|e| anyhow!("{e}"))
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     if let Some(t) = args.get("threads") {
         let n: usize = t
@@ -37,15 +91,28 @@ fn dispatch(args: &Args) -> Result<()> {
         qep::util::pool::set_global_threads(n);
     }
     match args.positional.first().map(|s| s.as_str()) {
-        Some("gen-data") => gen_data(args),
-        Some("quantize") => quantize(args),
-        Some("eval") => eval(args),
+        Some("gen-data") => {
+            check_flags(args, GEN_DATA_FLAGS)?;
+            gen_data(args)
+        }
+        Some("quantize") => {
+            check_flags(args, QUANTIZE_FLAGS)?;
+            quantize(args)
+        }
+        Some("eval") => {
+            check_flags(args, EVAL_FLAGS)?;
+            eval(args)
+        }
         Some("exp") => experiment(args),
-        Some("info") => info(),
-        _ => {
+        Some("info") => {
+            check_flags(args, INFO_FLAGS)?;
+            info()
+        }
+        Some("help") | None => {
             println!("{}", HELP);
             Ok(())
         }
+        Some(other) => bail!("unknown command '{other}' (run `repro help` for usage)"),
     }
 }
 
@@ -58,9 +125,46 @@ USAGE:
                  --bits <2|3|4|8> [--group N] [--qep <alpha>] [--calib <wiki|ptb|c4>]
                  [--seed N] [--threads N] [--out out.qtz]
   repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks] [--chunk N]
-  repro exp      <fig1|fig2|fig3|table1|table2|table3|table4|appendix|all>
-                 [--sizes s,m,l] [--fast] [--artifacts DIR]
+  repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|all>
+                 [--sizes s,m,l] [--fast] [--artifacts DIR] [--results DIR]
+                 [--shard i/N --out DIR] [--stable-timings]
+  repro exp plan  <id> [--fast] [--sizes ...] [--shard i/N]
+  repro exp cell  <cell-id> --out DIR
+  repro exp merge <id> --out DIR [--results DIR] [--stable-timings] [--fast] [--sizes ...]
   repro info
+
+Unrecognized --flags are rejected with a usage error (a typo'd flag must
+never silently change what a sweep runs).
+
+SHARDING (distributed experiment sweeps):
+  Every `exp` sweep first enumerates a stable, ordered manifest of cell
+  IDs (see `repro exp plan <id>`), so the grid can split across
+  processes or machines and merge back without losing determinism:
+
+    repro exp all --fast --shard 1/3 --out shards/     # machine 1
+    repro exp all --fast --shard 2/3 --out shards/     # machine 2
+    repro exp all --fast --shard 3/3 --out shards/     # machine 3
+    repro exp merge all --fast --out shards/           # fan-in
+
+  --shard i/N     Run only the manifest cells with index % N == i-1
+                  (1-based i) and write one JSON-lines record per cell
+                  to --out DIR instead of rendering tables. Pass the
+                  same sweep flags (--fast/--sizes/...) to every shard
+                  and to merge: the manifest is a pure function of them.
+  exp merge       Load every *.jsonl record file in --out DIR, verify
+                  the manifest is covered exactly once (gaps, duplicates
+                  and unknown IDs are hard errors), and render tables
+                  into --results DIR (default results/). Merged output
+                  is byte-identical to the unsharded run for every N —
+                  cell seeds derive from cell identity, never from
+                  scheduling (CI enforces this with a 3-shard matrix).
+  exp cell        Run a single cell by ID (IDs round-trip: anything
+                  `repro exp plan` prints is accepted), for external
+                  schedulers and crash recovery.
+  --stable-timings  Render wall-clock cells (Table 3) as a fixed
+                  placeholder: timings are shard-local and are the one
+                  non-deterministic column, so determinism gates enable
+                  this to compare output bytes.
 
 THREADS:
   --threads N    Worker threads for the parallel execution engine (GEMMs,
@@ -83,8 +187,9 @@ THREADS:
                  worker threads are ever created.
 
 DOCS:
-  README.md             quickstart + repo layout map
-  docs/ARCHITECTURE.md  dataflow and paper-equation pointers
+  README.md             quickstart + repo layout map + distributed sweeps
+  docs/ARCHITECTURE.md  dataflow (enumerate→run→render) and paper-equation
+                        pointers
   docs/PERFORMANCE.md   parallelism contract, pool + micro-kernel design,
                         how to benchmark (cargo bench)
   cargo doc --no-deps   API reference (kept warning-free in CI)
@@ -177,75 +282,186 @@ fn eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn parse_sizes(args: &Args) -> Vec<Size> {
-    match args.get("sizes") {
-        Some(spec) => spec.split(',').filter_map(Size::from_name).collect(),
-        None => {
-            if args.has("fast") {
-                vec![Size::TinyS]
-            } else {
-                Size::all().to_vec()
-            }
+/// Resolve `<id>` at `positional[pos]` into a sweep + its plan params.
+fn sweep_from(args: &Args, pos: usize) -> Result<(SweepId, PlanParams)> {
+    let name = args.positional.get(pos).ok_or_else(|| {
+        anyhow!("missing experiment id (fig1..fig3, table1..table10, ablation-alpha, appendix, all)")
+    })?;
+    let sweep = SweepId::from_name(name)
+        .ok_or_else(|| anyhow!("unknown experiment '{name}'"))?;
+    let params = PlanParams::from_args(sweep, args)?;
+    Ok((sweep, params))
+}
+
+fn render_cfg(args: &Args) -> RenderCfg {
+    RenderCfg {
+        results_dir: args.get_or("results", "results").to_string(),
+        stable_timings: args.has("stable-timings"),
+    }
+}
+
+const FALLBACK_NOTE: &str =
+    "[exp] NOTE: ran with RANDOM weights (artifacts missing). Results are structural only.";
+
+fn experiment(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro exp <id|plan|cell|merge> (see `repro help`)"))?
+        .as_str();
+    match sub {
+        "plan" => {
+            check_flags(args, EXP_PLAN_FLAGS)?;
+            exp_plan(args)
+        }
+        "cell" => {
+            check_flags(args, EXP_CELL_FLAGS)?;
+            exp_cell(args)
+        }
+        "merge" => {
+            check_flags(args, EXP_MERGE_FLAGS)?;
+            exp_merge(args)
+        }
+        _ => {
+            check_flags(args, EXP_RUN_FLAGS)?;
+            exp_run(args)
         }
     }
 }
 
-fn experiment(args: &Args) -> Result<()> {
-    let which = args
+/// `repro exp plan <id>`: print the manifest, one cell ID per line
+/// (restricted to one shard's slice with `--shard i/N`).
+fn exp_plan(args: &Args) -> Result<()> {
+    let (sweep, params) = sweep_from(args, 2)?;
+    let mut cells = plan::manifest(sweep, &params)?;
+    let total = cells.len();
+    if let Some(spec) = args.get("shard") {
+        let spec = ShardSpec::parse(spec)?;
+        cells = spec.filter(&cells);
+        eprintln!(
+            "[plan] '{}': {} of {} cell(s) on shard {}/{}",
+            sweep.name(),
+            cells.len(),
+            total,
+            spec.index,
+            spec.count
+        );
+    } else {
+        eprintln!("[plan] '{}': {} cell(s)", sweep.name(), total);
+    }
+    for c in &cells {
+        println!("{}", c.id());
+    }
+    Ok(())
+}
+
+/// `repro exp cell <cell-id> --out DIR`: run one cell by identity and
+/// persist its record — the primitive external schedulers build on.
+fn exp_cell(args: &Args) -> Result<()> {
+    let id = args
         .positional
-        .get(1)
-        .ok_or_else(|| anyhow!("usage: repro exp <id>"))?
-        .as_str();
+        .get(2)
+        .ok_or_else(|| anyhow!("usage: repro exp cell <cell-id> --out DIR"))?;
+    let pc = PlanCell::parse(id).ok_or_else(|| {
+        anyhow!("unparseable cell id '{id}' (run `repro exp plan <id>` to list valid cells)")
+    })?;
+    let out_dir = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out DIR required (where the record file goes)"))?;
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
-    let sizes = parse_sizes(args);
-    let fast = args.has("fast");
-    match which {
-        "fig1" | "table1" | "table2" => exp::tables::table1_and_2(&mut env, &sizes)?,
-        "fig2" => {
-            let size = sizes.first().copied().unwrap_or(Size::TinyM);
-            let bits = args.get_usize("bits", 3) as u32;
-            let n = args.get("blocks").map(|b| b.parse()).transpose()?;
-            exp::fig2::run(&mut env, size, bits, n)?;
+    let data = env.snapshot(&[pc.size()]);
+    let rec = exp::common::run_plan_cell(&data, &pc, 0, 1)?;
+    let path = Path::new(out_dir).join(results::cell_filename(id));
+    results::write_records(&path, &[rec])?;
+    println!("wrote 1 cell record to {}", path.display());
+    if env.used_fallback {
+        eprintln!("{FALLBACK_NOTE}");
+    }
+    Ok(())
+}
+
+/// `repro exp merge <id> --out DIR`: the collector. Loads every record
+/// file a shard run wrote into DIR, verifies the manifest is covered
+/// exactly once, and renders — byte-identical to the unsharded sweep.
+fn exp_merge(args: &Args) -> Result<()> {
+    let (sweep, params) = sweep_from(args, 2)?;
+    let dir = args.get("out").ok_or_else(|| {
+        anyhow!("merge needs --out DIR (the directory the shard runs wrote records into)")
+    })?;
+    let rcfg = render_cfg(args);
+    let cells = plan::manifest(sweep, &params)?;
+    let mut records = Vec::new();
+    for (path, recs) in results::read_record_dir(Path::new(dir))? {
+        eprintln!("[merge] {}: {} record(s)", path.display(), recs.len());
+        records.extend(recs);
+    }
+    let map = plan::verify_coverage(&cells, records)?;
+    let fallback = map.any_fallback();
+    exp::common::render_sweep(sweep, &params, &map, &rcfg)?;
+    println!(
+        "[merge] rendered '{}' from {} cell record(s) into {}/",
+        sweep.name(),
+        cells.len(),
+        rcfg.results_dir
+    );
+    if fallback {
+        eprintln!("{FALLBACK_NOTE}");
+    }
+    Ok(())
+}
+
+/// `repro exp <id>`: the sweep driver. Unsharded it runs the whole
+/// manifest and renders (optionally also persisting records with
+/// `--out`); with `--shard i/N` it runs one deterministic slice and
+/// only persists records (rendering needs every cell — use `merge`).
+fn exp_run(args: &Args) -> Result<()> {
+    let (sweep, params) = sweep_from(args, 1)?;
+    let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
+    match args.get("shard") {
+        Some(spec) => {
+            let spec = ShardSpec::parse(spec)?;
+            let out_dir = args.get("out").ok_or_else(|| {
+                anyhow!("--shard requires --out DIR (where this shard's record file goes)")
+            })?;
+            // A shard run persists records and never renders — reject
+            // render-only flags instead of silently ignoring them.
+            for render_flag in ["results", "stable-timings"] {
+                if args.has(render_flag) {
+                    bail!(
+                        "--{render_flag} has no effect with --shard (rendering happens at \
+                         `repro exp merge`); pass it there instead"
+                    );
+                }
+            }
+            let cells = plan::manifest(sweep, &params)?;
+            let mine = spec.filter(&cells);
+            let data = env.snapshot(&plan::sizes_of(&mine));
+            let records =
+                exp::common::run_cells(&data, &mine, &pool::global(), spec.index, spec.count)?;
+            let path = Path::new(out_dir)
+                .join(results::shard_filename(sweep.name(), spec.index, spec.count));
+            results::write_records(&path, &records)?;
+            println!(
+                "[shard {}/{}] wrote {} of {} cell record(s) to {}",
+                spec.index,
+                spec.count,
+                records.len(),
+                cells.len(),
+                path.display()
+            );
         }
-        "fig3" => {
-            let seeds = args.get_usize("seeds", if fast { 2 } else { 5 }) as u64;
-            let bits: Vec<u32> = if fast { vec![3] } else { vec![4, 3, 2] };
-            exp::fig3::run(&mut env, &sizes, &bits, seeds)?;
+        None => {
+            let records = exp::common::run_sweep(&mut env, sweep, &params, &render_cfg(args))?;
+            if let Some(out_dir) = args.get("out") {
+                let path =
+                    Path::new(out_dir).join(results::shard_filename(sweep.name(), 1, 1));
+                results::write_records(&path, &records)?;
+                println!("wrote {} cell record(s) to {}", records.len(), path.display());
+            }
         }
-        "table3" => exp::tables::table3(&mut env, &sizes)?,
-        "ablation-alpha" => exp::tables::ablation_alpha(&mut env, &sizes)?,
-        "table4" => {
-            let size = sizes.first().copied().unwrap_or(Size::TinyS);
-            exp::tables::table4(&mut env, size)?;
-        }
-        "appendix" | "table5" | "table6" | "table7" | "table8" | "table9" | "table10" => {
-            let settings = if fast {
-                vec![QuantConfig::int(3), QuantConfig::int_group(2, 32)]
-            } else {
-                QuantConfig::appendix_settings()
-            };
-            exp::tables::appendix_tables(&mut env, &sizes, &settings)?;
-        }
-        "all" => {
-            exp::tables::table1_and_2(&mut env, &sizes)?;
-            exp::tables::table3(&mut env, &sizes)?;
-            exp::tables::table4(&mut env, sizes.first().copied().unwrap_or(Size::TinyS))?;
-            let size = sizes.get(1).copied().unwrap_or(sizes[0]);
-            exp::fig2::run(&mut env, size, 3, None)?;
-            let seeds = if fast { 2u64 } else { 5u64 };
-            let bits: &[u32] = if fast { &[3] } else { &[4, 3, 2] };
-            exp::fig3::run(&mut env, &sizes, bits, seeds)?;
-            let settings = if fast {
-                vec![QuantConfig::int(3), QuantConfig::int_group(2, 32)]
-            } else {
-                QuantConfig::appendix_settings()
-            };
-            exp::tables::appendix_tables(&mut env, &sizes, &settings)?;
-        }
-        other => bail!("unknown experiment '{other}'"),
     }
     if env.used_fallback {
-        eprintln!("[exp] NOTE: ran with RANDOM weights (artifacts missing). Results are structural only.");
+        eprintln!("{FALLBACK_NOTE}");
     }
     Ok(())
 }

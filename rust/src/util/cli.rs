@@ -59,6 +59,53 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Reject flags outside `known` with a usage error. Every subcommand
+    /// calls this with its accepted flag set, so a typo (`--shards` for
+    /// `--shard`) fails loudly instead of being silently ignored — which
+    /// for a sharded sweep would mean quietly running *every* cell.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), String> {
+        for flag in self.flags.keys() {
+            if !known.contains(&flag.as_str()) {
+                let mut msg = format!("unknown flag '--{flag}'");
+                if let Some(near) = close_match(flag, known) {
+                    msg.push_str(&format!(" (did you mean '--{near}'?)"));
+                }
+                let mut sorted: Vec<&str> = known.to_vec();
+                sorted.sort_unstable();
+                msg.push_str(&format!("; accepted flags: {}", sorted.join(", ")));
+                return Err(msg);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The closest known flag within edit distance 2 (plain
+/// insert/delete/substitute), for typo hints.
+fn close_match<'a>(flag: &str, known: &[&'a str]) -> Option<&'a str> {
+    known
+        .iter()
+        .map(|k| (edit_distance(flag, k), *k))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + sub);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -90,5 +137,29 @@ mod tests {
     fn bare_flag_at_end() {
         let a = parse(&["--qep"]);
         assert_eq!(a.get("qep"), Some("true"));
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_a_hint() {
+        let a = parse(&["exp", "all", "--shards", "2/3"]);
+        let err = a.reject_unknown(&["shard", "out", "fast"]).unwrap_err();
+        assert!(err.contains("unknown flag '--shards'"), "{err}");
+        assert!(err.contains("did you mean '--shard'?"), "{err}");
+        assert!(err.contains("accepted flags"), "{err}");
+        // Exact flags pass.
+        let ok = parse(&["exp", "all", "--shard", "2/3", "--fast"]);
+        assert!(ok.reject_unknown(&["shard", "out", "fast"]).is_ok());
+        // No hint when nothing is close.
+        let far = parse(&["--zzzzzz"]);
+        let err = far.reject_unknown(&["shard"]).unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("shard", "shards"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
     }
 }

@@ -106,6 +106,19 @@ pub fn fmt_acc(a: f64) -> String {
     format!("{a:.4}")
 }
 
+/// Format a runtime cell (Table 3). Wall-clock is the one metric that
+/// is not bit-deterministic across runs/machines, so determinism gates
+/// (CI's shard-matrix merge diff, the shard/merge integration tests)
+/// render with `stable = true`, which replaces the measurement with a
+/// fixed placeholder.
+pub fn fmt_runtime(seconds: f64, stable: bool) -> String {
+    if stable {
+        "n/a".to_string()
+    } else {
+        crate::util::fmt_duration(seconds)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +140,13 @@ mod tests {
         assert_eq!(fmt_ppl(6.1234), "6.123");
         assert_eq!(fmt_ppl(17783.9), "17784");
         assert_eq!(fmt_ppl(f64::NAN), "N/A");
+    }
+
+    #[test]
+    fn runtime_formatting_has_a_stable_mode() {
+        assert_eq!(fmt_runtime(90.0, false), "90.0s");
+        assert_eq!(fmt_runtime(90.0, true), "n/a");
+        assert_eq!(fmt_runtime(0.5, true), "n/a");
     }
 
     #[test]

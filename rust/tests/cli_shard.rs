@@ -1,0 +1,195 @@
+//! End-to-end CLI tests through the real `repro` binary: strict flag
+//! rejection, and the distributed shard → merge flow across *separate
+//! processes* (the strongest local form of the determinism gate — every
+//! process rebuilds its own snapshot from scratch).
+
+use qep::exp::PlanCell;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn repro(args: &[&str], cwd: &Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(cwd)
+        .output()
+        .expect("repro binary runs")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qep_cli_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn unknown_flags_commands_and_ids_are_rejected() {
+    let dir = tmp("reject");
+
+    // The classic typo: --shards for --shard. Must fail with a hint, not
+    // silently run every cell.
+    let out = repro(&["exp", "table4", "--shards", "2/3"], &dir);
+    assert!(!out.status.success(), "typo'd flag must fail");
+    let err = stderr_of(&out);
+    assert!(err.contains("unknown flag '--shards'"), "{err}");
+    assert!(err.contains("did you mean '--shard'?"), "{err}");
+
+    let out = repro(&["frobnicate"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown command"), "{}", stderr_of(&out));
+
+    let out = repro(&["exp", "bogus"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown experiment"), "{}", stderr_of(&out));
+
+    let out = repro(&["quantize", "--model", "tiny-s", "--quiet"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown flag '--quiet'"), "{}", stderr_of(&out));
+
+    // --shard needs --out, and the spec is validated.
+    let out = repro(&["exp", "fig2", "--fast", "--shard", "1/2"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--out"), "{}", stderr_of(&out));
+    let out = repro(&["exp", "fig2", "--fast", "--shard", "0/3", "--out", "s"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--shard expects i/N"), "{}", stderr_of(&out));
+    // Render-only flags are meaningless on a shard run (it never
+    // renders) — reject rather than silently ignore.
+    let out = repro(
+        &["exp", "fig2", "--fast", "--shard", "1/2", "--out", "s", "--stable-timings"],
+        &dir,
+    );
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("no effect with --shard"), "{}", stderr_of(&out));
+
+    // Flags a subcommand never reads are rejected, not silently ignored:
+    // merge always collects the full manifest, so --shard is invalid there.
+    let out = repro(&["exp", "merge", "all", "--fast", "--shard", "1/3", "--out", "s"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("unknown flag '--shard'"), "{}", stderr_of(&out));
+
+    // Merging an empty directory is an error, not an empty render.
+    let out = repro(
+        &["exp", "merge", "fig2", "--fast", "--out", dir.to_str().unwrap()],
+        &dir,
+    );
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("no .jsonl record files"), "{}", stderr_of(&out));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_lists_parseable_cell_ids() {
+    let dir = tmp("plan");
+    let out = repro(&["exp", "plan", "all", "--fast"], &dir);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    let ids: Vec<String> = stdout_of(&out).lines().map(|l| l.to_string()).collect();
+    assert!(ids.len() > 20, "expected a full manifest, got {}", ids.len());
+    for id in &ids {
+        assert!(PlanCell::parse(id).is_some(), "unparseable manifest id '{id}'");
+    }
+    // A shard slice is a strict subset in manifest order.
+    let out = repro(&["exp", "plan", "all", "--fast", "--shard", "2/3"], &dir);
+    assert!(out.status.success());
+    let slice: Vec<String> = stdout_of(&out).lines().map(|l| l.to_string()).collect();
+    assert!(slice.len() < ids.len());
+    let mut cursor = 0usize;
+    for id in &slice {
+        let pos = ids[cursor..].iter().position(|x| x == id).expect("slice id in manifest");
+        cursor += pos + 1;
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The cross-process gate on a small sweep: two shard processes + a merge
+/// process render the same bytes as one unsharded process, and the
+/// cell-level runner (`repro exp cell`) reproduces it a third way.
+#[test]
+fn shard_merge_across_processes_matches_unsharded_run() {
+    let work = tmp("e2e");
+    let shards = work.join("shards");
+    let res_single = work.join("res_single");
+    let res_merged = work.join("res_merged");
+    let res_cells = work.join("res_cells");
+    let s = |p: &PathBuf| p.to_str().unwrap().to_string();
+
+    // Unsharded reference run.
+    let out = repro(
+        &["exp", "fig2", "--fast", "--stable-timings", "--results", &s(&res_single)],
+        &work,
+    );
+    assert!(out.status.success(), "unsharded: {}", stderr_of(&out));
+
+    // Two shard processes, then a merge process.
+    for spec in ["1/2", "2/2"] {
+        let out = repro(
+            &["exp", "fig2", "--fast", "--shard", spec, "--out", &s(&shards)],
+            &work,
+        );
+        assert!(out.status.success(), "shard {spec}: {}", stderr_of(&out));
+    }
+    let out = repro(
+        &[
+            "exp", "merge", "fig2", "--fast", "--stable-timings", "--out", &s(&shards),
+            "--results", &s(&res_merged),
+        ],
+        &work,
+    );
+    assert!(out.status.success(), "merge: {}", stderr_of(&out));
+    assert!(stdout_of(&out).contains("rendered 'fig2'"), "{}", stdout_of(&out));
+
+    for name in ["fig2.txt", "fig2.csv"] {
+        let a = std::fs::read(res_single.join(name)).unwrap();
+        let b = std::fs::read(res_merged.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs between unsharded and merged runs");
+    }
+
+    // Third way: drive every cell by name alone, then merge the cell
+    // record files from a different directory.
+    let cells_dir = work.join("cells");
+    let plan_out = repro(&["exp", "plan", "fig2", "--fast"], &work);
+    assert!(plan_out.status.success());
+    let ids: Vec<String> = stdout_of(&plan_out).lines().map(|l| l.to_string()).collect();
+    assert_eq!(ids.len(), 2);
+    for id in &ids {
+        let out = repro(&["exp", "cell", id, "--out", &s(&cells_dir)], &work);
+        assert!(out.status.success(), "cell {id}: {}", stderr_of(&out));
+    }
+    let out = repro(
+        &[
+            "exp", "merge", "fig2", "--fast", "--stable-timings", "--out", &s(&cells_dir),
+            "--results", &s(&res_cells),
+        ],
+        &work,
+    );
+    assert!(out.status.success(), "cell merge: {}", stderr_of(&out));
+    for name in ["fig2.txt", "fig2.csv"] {
+        let a = std::fs::read(res_single.join(name)).unwrap();
+        let b = std::fs::read(res_cells.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs between unsharded and cell-driven runs");
+    }
+
+    // Merging with a duplicated shard file is a hard error.
+    std::fs::copy(
+        shards.join("fig2.shard-1-of-2.jsonl"),
+        shards.join("fig2.shard-1-of-2-copy.jsonl"),
+    )
+    .unwrap();
+    let out = repro(
+        &["exp", "merge", "fig2", "--fast", "--out", &s(&shards), "--results", &s(&res_merged)],
+        &work,
+    );
+    assert!(!out.status.success(), "duplicate records must fail the merge");
+    assert!(stderr_of(&out).contains("duplicate"), "{}", stderr_of(&out));
+
+    std::fs::remove_dir_all(&work).ok();
+}

@@ -1,0 +1,259 @@
+//! Plan-layer invariants for the distributed experiment runner.
+//!
+//! The contracts under test:
+//! * every sweep enumerates a stable manifest of unique cell IDs;
+//! * `PlanCell::parse ∘ PlanCell::id` is the identity for every cell of
+//!   every sweep, under fast and full plan parameters;
+//! * for every shard count N ∈ {1, 2, 3, 7}, the union of the shard
+//!   assignments equals the full manifest with no duplicates;
+//! * merge coverage verification rejects gaps, duplicates, and IDs that
+//!   are not in the manifest, each with a clear error;
+//! * `PlanParams::from_args` mirrors the historical CLI defaults.
+
+use qep::exp::plan::{
+    self, manifest, shard_of, verify_coverage, PlanCell, PlanParams, ShardSpec, SweepId,
+};
+use qep::io::results::CellRecord;
+use qep::model::Size;
+use qep::util::cli::Args;
+
+fn all_sweeps() -> [SweepId; 8] {
+    [
+        SweepId::Table12,
+        SweepId::Table3,
+        SweepId::Table4,
+        SweepId::AblationAlpha,
+        SweepId::Fig2,
+        SweepId::Fig3,
+        SweepId::Appendix,
+        SweepId::All,
+    ]
+}
+
+fn param_variants() -> Vec<PlanParams> {
+    let mut fastish = PlanParams::for_sizes(&[Size::TinyS]);
+    fastish.fig3_bits = vec![3];
+    fastish.fig3_seeds = 2;
+    let full = PlanParams::for_sizes(&Size::all());
+    vec![fastish, full]
+}
+
+#[test]
+fn manifests_are_nonempty_with_unique_ids() {
+    for params in param_variants() {
+        for sweep in all_sweeps() {
+            let cells = manifest(sweep, &params).unwrap();
+            assert!(!cells.is_empty(), "{sweep:?} enumerated nothing");
+            let mut ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+            let n = ids.len();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "{sweep:?} has duplicate cell ids");
+        }
+    }
+}
+
+#[test]
+fn cell_ids_round_trip_through_parse() {
+    for params in param_variants() {
+        for sweep in all_sweeps() {
+            for cell in manifest(sweep, &params).unwrap() {
+                let id = cell.id();
+                let back = PlanCell::parse(&id)
+                    .unwrap_or_else(|| panic!("'{id}' does not parse"));
+                assert_eq!(back, cell, "parse∘id is not the identity for '{id}'");
+                assert_eq!(back.id(), id, "id∘parse is not the identity for '{id}'");
+            }
+        }
+    }
+}
+
+#[test]
+fn garbage_ids_do_not_parse() {
+    for bad in [
+        "",
+        "table12",
+        "table12/INT3/GPTQ/+qep",               // missing size
+        "table12/INT3/GPTQ/+qep/tiny-s/extra",  // trailing segment
+        "table12/INT3/NOPE/+qep/tiny-s",        // unknown method
+        "table12/INT3/GPTQ/maybe/tiny-s",       // bad qep marker
+        "fig3/INT3/tiny-s/+qep/7",              // seed missing 's' prefix
+        "ablation-alpha/0.25/tiny-s",           // alpha missing 'a' prefix
+        "fig2/tiny-s/INT3/4/+qep",              // blocks missing 'b' prefix
+        "nonsense/INT3/GPTQ/base/tiny-s",
+    ] {
+        assert!(PlanCell::parse(bad).is_none(), "'{bad}' should not parse");
+    }
+}
+
+#[test]
+fn every_shard_split_covers_the_manifest_exactly_once() {
+    for params in param_variants() {
+        for sweep in all_sweeps() {
+            let cells = manifest(sweep, &params).unwrap();
+            for n in [1usize, 2, 3, 7] {
+                let mut seen: Vec<String> = Vec::new();
+                for i in 1..=n {
+                    let spec = ShardSpec { index: i, count: n };
+                    for c in spec.filter(&cells) {
+                        seen.push(c.id());
+                    }
+                }
+                assert_eq!(seen.len(), cells.len(), "{sweep:?} N={n}: union size");
+                let mut sorted = seen.clone();
+                sorted.sort();
+                sorted.dedup();
+                assert_eq!(sorted.len(), cells.len(), "{sweep:?} N={n}: duplicates");
+                let mut want: Vec<String> = cells.iter().map(|c| c.id()).collect();
+                want.sort();
+                assert_eq!(sorted, want, "{sweep:?} N={n}: union != manifest");
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_assignment_is_round_robin_by_index() {
+    assert_eq!(shard_of(0, 3), 1);
+    assert_eq!(shard_of(1, 3), 2);
+    assert_eq!(shard_of(2, 3), 3);
+    assert_eq!(shard_of(3, 3), 1);
+    // N=1 owns everything.
+    for j in 0..10 {
+        assert_eq!(shard_of(j, 1), 1);
+    }
+}
+
+#[test]
+fn shard_specs_parse_strictly() {
+    assert_eq!(ShardSpec::parse("1/3").unwrap(), ShardSpec { index: 1, count: 3 });
+    assert_eq!(ShardSpec::parse("3/3").unwrap(), ShardSpec { index: 3, count: 3 });
+    for bad in ["0/3", "4/3", "x/3", "3/0", "3", "", "1/3/5", "-1/3"] {
+        assert!(ShardSpec::parse(bad).is_err(), "'{bad}' should be rejected");
+    }
+}
+
+fn records_for(cells: &[PlanCell]) -> Vec<CellRecord> {
+    cells.iter().map(|c| CellRecord::new(c.id(), 1, 1)).collect()
+}
+
+#[test]
+fn merge_accepts_exact_coverage_in_any_order() {
+    let params = PlanParams::for_sizes(&[Size::TinyS]);
+    let cells = manifest(SweepId::Table4, &params).unwrap();
+    let mut records = records_for(&cells);
+    records.reverse();
+    let map = verify_coverage(&cells, records).unwrap();
+    for c in &cells {
+        assert_eq!(map.get(c).unwrap().id, c.id());
+    }
+}
+
+#[test]
+fn merge_rejects_gaps_duplicates_and_aliens() {
+    let params = PlanParams::for_sizes(&[Size::TinyS]);
+    let cells = manifest(SweepId::Table4, &params).unwrap();
+
+    // Gap: drop one record.
+    let mut missing = records_for(&cells);
+    let dropped = missing.remove(3);
+    let err = verify_coverage(&cells, missing).unwrap_err().to_string();
+    assert!(err.contains("no record"), "{err}");
+    assert!(err.contains(&dropped.id), "{err}");
+
+    // Duplicate: one cell recorded twice.
+    let mut doubled = records_for(&cells);
+    doubled.push(CellRecord::new(cells[2].id(), 2, 2));
+    let err = verify_coverage(&cells, doubled).unwrap_err().to_string();
+    assert!(err.contains("duplicate"), "{err}");
+    assert!(err.contains(&cells[2].id()), "{err}");
+
+    // Alien: a record whose ID is not in this manifest (e.g. merged the
+    // wrong sweep's directory).
+    let mut alien = records_for(&cells);
+    alien.push(CellRecord::new("fig3/INT3/tiny-s/base/s0".into(), 1, 1));
+    let err = verify_coverage(&cells, alien).unwrap_err().to_string();
+    assert!(err.contains("not in the manifest"), "{err}");
+    assert!(err.contains("fig3/INT3/tiny-s/base/s0"), "{err}");
+}
+
+#[test]
+fn all_manifest_is_the_ordered_concatenation_of_its_parts() {
+    let params = PlanParams::for_sizes(&[Size::TinyS]);
+    let all = manifest(SweepId::All, &params).unwrap();
+    let mut concat = Vec::new();
+    for part in SweepId::all_parts() {
+        concat.extend(manifest(part, &params).unwrap());
+    }
+    assert_eq!(all, concat);
+}
+
+fn parse_args(argv: &[&str]) -> Args {
+    Args::parse(argv.iter().map(|s| s.to_string()))
+}
+
+#[test]
+fn from_args_mirrors_the_historical_cli_defaults() {
+    // --fast: one size, 2 fig3 seeds, INT3-only fig3 bits, 2 appendix settings.
+    let a = parse_args(&["exp", "all", "--fast"]);
+    let p = PlanParams::from_args(SweepId::All, &a).unwrap();
+    assert_eq!(p.sizes, vec![Size::TinyS]);
+    assert_eq!(p.fig3_seeds, 2);
+    assert_eq!(p.fig3_bits, vec![3]);
+    assert_eq!(p.appendix_settings.len(), 2);
+    // Under `all`, fig2 uses the second size when present.
+    let a = parse_args(&["exp", "all", "--sizes", "s,m,l"]);
+    let p = PlanParams::from_args(SweepId::All, &a).unwrap();
+    assert_eq!(p.fig2_size, Size::TinyM);
+    assert_eq!(p.table4_size, Size::TinyS);
+    assert_eq!(p.fig3_seeds, 5);
+    assert_eq!(p.appendix_settings.len(), 8);
+    // Standalone fig2/fig3 read their own knobs.
+    let a = parse_args(&["exp", "fig2", "--sizes", "m", "--bits", "2", "--blocks", "3"]);
+    let p = PlanParams::from_args(SweepId::Fig2, &a).unwrap();
+    assert_eq!(p.fig2_size, Size::TinyM);
+    assert_eq!(p.fig2_bits, 2);
+    assert_eq!(p.fig2_blocks, 3);
+    let a = parse_args(&["exp", "fig3", "--fast", "--seeds", "4"]);
+    let p = PlanParams::from_args(SweepId::Fig3, &a).unwrap();
+    assert_eq!(p.fig3_seeds, 4);
+    // Garbage --sizes is a hard error, not an empty sweep.
+    let a = parse_args(&["exp", "all", "--sizes", "gigantic"]);
+    assert!(PlanParams::from_args(SweepId::All, &a).is_err());
+    // ... and so is a single typo'd size among valid ones (silently
+    // dropping it would shrink a sharded manifest).
+    let a = parse_args(&["exp", "all", "--sizes", "tiny-s,tiny-x"]);
+    let err = PlanParams::from_args(SweepId::All, &a).unwrap_err().to_string();
+    assert!(err.contains("tiny-x"), "{err}");
+    // Unparseable numeric plan flags error instead of silently
+    // planning the default manifest.
+    let a = parse_args(&["exp", "fig3", "--seeds", "1O"]);
+    assert!(PlanParams::from_args(SweepId::Fig3, &a).is_err());
+    let a = parse_args(&["exp", "fig2", "--bits", "three"]);
+    assert!(PlanParams::from_args(SweepId::Fig2, &a).is_err());
+    let a = parse_args(&["exp", "fig2", "--blocks", "x"]);
+    assert!(PlanParams::from_args(SweepId::Fig2, &a).is_err());
+}
+
+#[test]
+fn sweep_names_resolve_with_aliases() {
+    for (alias, want) in [
+        ("fig1", SweepId::Table12),
+        ("table1", SweepId::Table12),
+        ("table2", SweepId::Table12),
+        ("table3", SweepId::Table3),
+        ("table4", SweepId::Table4),
+        ("ablation-alpha", SweepId::AblationAlpha),
+        ("fig2", SweepId::Fig2),
+        ("fig3", SweepId::Fig3),
+        ("appendix", SweepId::Appendix),
+        ("table7", SweepId::Appendix),
+        ("all", SweepId::All),
+    ] {
+        assert_eq!(SweepId::from_name(alias), Some(want), "{alias}");
+    }
+    assert_eq!(SweepId::from_name("table11"), None);
+    // Fig. 2's plan resolves block counts statically from the size.
+    assert_eq!(plan::resolve_fig2_blocks(Size::TinyS, None), 2);
+    assert_eq!(plan::resolve_fig2_blocks(Size::TinyS, Some(99)), 4);
+}

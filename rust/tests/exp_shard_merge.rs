@@ -1,0 +1,212 @@
+//! Shard/merge determinism gate (library level): for every sweep, running
+//! the manifest in shard slices — each against a freshly-built snapshot,
+//! with records round-tripped through the JSONL format — and merging must
+//! render **byte-identical** artifacts to the single-process sweep. This
+//! is the local counterpart of CI's 3-way shard-matrix + merge fan-in job
+//! (which additionally proves it across real processes; so does
+//! `tests/cli_shard.rs` for a small sweep).
+
+use qep::exp::common::{run_cells, render_sweep, RenderCfg};
+use qep::exp::plan::{manifest, sizes_of, verify_coverage, PlanParams, ShardSpec, SweepId};
+use qep::exp::ExpData;
+use qep::io::results::{read_records, shard_filename, write_records, CellRecord};
+use qep::model::{Model, ModelConfig, Size};
+use qep::text::{Corpus, Flavor};
+use qep::util::pool::Pool;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A fresh snapshot with a tiny injected model under the `tiny-s` name.
+/// Built per "process" (per shard) from the same deterministic inputs —
+/// exactly what independent shard processes do with fallback weights.
+fn fresh_data() -> ExpData {
+    let mut cfg = ModelConfig::new("tiny-s", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 3);
+    let mut models = HashMap::new();
+    models.insert(Size::TinyS.name().to_string(), model);
+    let mut corpora = HashMap::new();
+    for f in Flavor::all() {
+        corpora.insert(f, Corpus::generate(f, 24 * 1024, 0));
+    }
+    ExpData::from_parts(models, corpora)
+}
+
+/// Reduced-size plan params: one size, one fig3 bit width, two seeds,
+/// one appendix setting. The *shapes* of every sweep survive; only the
+/// grid is trimmed so the full matrix stays test-sized.
+fn tiny_params() -> PlanParams {
+    let mut p = PlanParams::for_sizes(&[Size::TinyS]);
+    p.fig3_bits = vec![3];
+    p.fig3_seeds = 2;
+    p.appendix_settings = vec![qep::quant::QuantConfig::int(3)];
+    p
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qep_shard_merge_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Every persisted artifact in a results dir, name → bytes.
+fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let p = e.unwrap().path();
+            (p.file_name().unwrap().to_string_lossy().into_owned(), std::fs::read(&p).unwrap())
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+fn render_into(sweep: SweepId, params: &PlanParams, records: Vec<CellRecord>, tag: &str) -> PathBuf {
+    let cells = manifest(sweep, params).unwrap();
+    let map = verify_coverage(&cells, records).unwrap();
+    let dir = tmp_dir(tag);
+    let rcfg =
+        RenderCfg { results_dir: dir.to_string_lossy().into_owned(), stable_timings: true };
+    render_sweep(sweep, params, &map, &rcfg).unwrap();
+    dir
+}
+
+/// The gate: direct run vs sharded runs (fresh snapshot per shard,
+/// records through JSONL files, shard files read back in reverse order)
+/// must render the same bytes, for every sweep and several shard counts.
+#[test]
+fn sharded_merge_renders_byte_identical_tables() {
+    let params = tiny_params();
+    let pool = Pool::new(4);
+    // `All` exercises the table12/table3/table4/fig2/fig3/appendix
+    // renderers in one pass; ablation-alpha is not part of `all`.
+    for sweep in [SweepId::All, SweepId::AblationAlpha] {
+        let cells = manifest(sweep, &params).unwrap();
+        let direct_data = fresh_data();
+        let direct_records = run_cells(&direct_data, &cells, &pool, 0, 1).unwrap();
+        let want_dir = render_into(sweep, &params, direct_records, "direct");
+        let want = dir_bytes(&want_dir);
+        assert!(!want.is_empty());
+
+        let n_shards = if sweep == SweepId::All { 3 } else { 2 };
+        let shard_dir = tmp_dir("shards");
+        for i in 1..=n_shards {
+            let spec = ShardSpec { index: i, count: n_shards };
+            let mine = spec.filter(&cells);
+            // Fresh snapshot per shard — what an independent process sees.
+            let data = fresh_data();
+            assert!(sizes_of(&mine).len() <= 1);
+            let recs = run_cells(&data, &mine, &pool, i, n_shards).unwrap();
+            write_records(&shard_dir.join(shard_filename(sweep.name(), i, n_shards)), &recs)
+                .unwrap();
+        }
+        // Read shard files back newest-name-first to prove order freedom.
+        let mut merged = Vec::new();
+        for i in (1..=n_shards).rev() {
+            merged.extend(
+                read_records(&shard_dir.join(shard_filename(sweep.name(), i, n_shards)))
+                    .unwrap(),
+            );
+        }
+        let got_dir = render_into(sweep, &params, merged, "merged");
+        let got = dir_bytes(&got_dir);
+        assert_eq!(
+            want.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            got.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            "{sweep:?}: artifact sets differ"
+        );
+        for ((name, a), (_, b)) in want.iter().zip(got.iter()) {
+            assert_eq!(a, b, "{sweep:?}: '{name}' bytes differ between direct and merged");
+        }
+        for d in [want_dir, got_dir, shard_dir.clone()] {
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+}
+
+/// Oversharding (more shards than cells) leaves some shards empty; empty
+/// record files must merge cleanly and change nothing.
+#[test]
+fn empty_shards_merge_cleanly() {
+    let params = tiny_params();
+    let pool = Pool::new(2);
+    let cells = manifest(SweepId::Fig2, &params).unwrap();
+    assert_eq!(cells.len(), 2);
+    let want_dir = {
+        let data = fresh_data();
+        let recs = run_cells(&data, &cells, &pool, 0, 1).unwrap();
+        render_into(SweepId::Fig2, &params, recs, "fig2_direct")
+    };
+    let n = 7usize;
+    let mut merged = Vec::new();
+    for i in 1..=n {
+        let spec = ShardSpec { index: i, count: n };
+        let mine = spec.filter(&cells);
+        if i <= 2 {
+            assert_eq!(mine.len(), 1);
+        } else {
+            assert!(mine.is_empty());
+        }
+        let data = fresh_data();
+        merged.extend(run_cells(&data, &mine, &pool, i, n).unwrap());
+    }
+    let got_dir = render_into(SweepId::Fig2, &params, merged, "fig2_merged");
+    assert_eq!(dir_bytes(&want_dir), dir_bytes(&got_dir));
+    std::fs::remove_dir_all(&want_dir).ok();
+    std::fs::remove_dir_all(&got_dir).ok();
+}
+
+/// Records must survive the JSONL round trip bit-exactly — metric drift
+/// here would silently break merged-vs-direct byte identity.
+#[test]
+fn executed_records_round_trip_bit_exactly() {
+    let params = tiny_params();
+    let pool = Pool::new(2);
+    let cells = manifest(SweepId::Table4, &params).unwrap();
+    let data = fresh_data();
+    let recs = run_cells(&data, &cells, &pool, 2, 5).unwrap();
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join(shard_filename("table4", 2, 5));
+    write_records(&path, &recs).unwrap();
+    let back = read_records(&path).unwrap();
+    assert_eq!(back.len(), recs.len());
+    for (a, b) in recs.iter().zip(back.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.shard, 2);
+        assert_eq!(a.n_shards, 5);
+        assert_eq!(a.ppl.len(), b.ppl.len());
+        for ((ka, va), (kb, vb)) in a.ppl.iter().zip(b.ppl.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits(), "{}: ppl[{ka}]", a.id);
+        }
+        for ((ka, va), (kb, vb)) in a.acc.iter().zip(b.acc.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits(), "{}: acc[{ka}]", a.id);
+        }
+        assert_eq!(a.deltas.len(), b.deltas.len());
+        for (va, vb) in a.deltas.iter().zip(b.deltas.iter()) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{}: deltas", a.id);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Shard results are independent of *which* shard ran a cell: the same
+/// cell executed under two different shard labels produces identical
+/// metrics (only the shard bookkeeping differs).
+#[test]
+fn cell_results_do_not_depend_on_shard_identity() {
+    let params = tiny_params();
+    let pool = Pool::new(2);
+    let cells = manifest(SweepId::Fig3, &params).unwrap();
+    let one = &cells[..1];
+    let a = run_cells(&fresh_data(), one, &pool, 1, 3).unwrap().remove(0);
+    let b = run_cells(&fresh_data(), one, &pool, 3, 7).unwrap().remove(0);
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.ppl, b.ppl, "metrics depend on shard identity");
+    assert_eq!(a.acc, b.acc);
+    assert_eq!((a.shard, a.n_shards), (1, 3));
+    assert_eq!((b.shard, b.n_shards), (3, 7));
+}

@@ -13,7 +13,7 @@
 use super::plan::{self, CellTask, PlanCell, PlanParams, RecordMap, SweepId};
 use crate::coordinator::{Pipeline, PipelineConfig, PipelineOutput};
 use crate::eval::{delta_per_block, perplexity, TaskFamily, TaskSet};
-use crate::io::results::CellRecord;
+use crate::io::results::{read_records_tolerant, CellRecord, RecordAppender, TornTail};
 use crate::model::{Model, Size};
 use crate::qep::AlphaPolicy;
 use crate::quant::{Method, QuantConfig};
@@ -21,9 +21,10 @@ use crate::runtime::ArtifactRegistry;
 use crate::text::{Corpus, Flavor};
 use crate::util::pool::{self, Pool};
 use crate::util::Stopwatch;
-use anyhow::Result;
-use std::collections::{BTreeSet, HashMap};
-use std::sync::OnceLock;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
 
 /// Calibration/eval token budgets (scaled-down analogs of the paper's
 /// 128×2048-token calibration set).
@@ -430,6 +431,45 @@ pub fn run_plan_cell(
     Ok(rec)
 }
 
+/// In-manifest-order durable flush state shared by the workers of one
+/// [`run_cells_durable`] call. Records are appended (and fsynced) only
+/// once every earlier cell's record has been appended, so the file on
+/// disk is at all times an intact prefix of the uninterrupted run's file
+/// — which is what makes a killed-and-resumed file byte-identical to an
+/// uninterrupted one.
+struct Flush {
+    /// Next cell index (into the run's cell slice) to append.
+    next: usize,
+    /// Completed records waiting for their predecessors.
+    ready: BTreeMap<usize, CellRecord>,
+    sink: RecordAppender,
+    /// First append failure; later offers become no-ops.
+    err: Option<anyhow::Error>,
+}
+
+/// Offer cell `idx`'s record to the flush: stash it, then drain every
+/// consecutively-ready record to disk.
+fn offer(flush: &Mutex<Flush>, stable_timings: bool, idx: usize, rec: &CellRecord) {
+    let mut rec = rec.clone();
+    if stable_timings {
+        rec.stabilize();
+    }
+    let mut fl = flush.lock().unwrap();
+    if fl.err.is_some() {
+        return;
+    }
+    fl.ready.insert(idx, rec);
+    loop {
+        let next = fl.next;
+        let Some(r) = fl.ready.remove(&next) else { break };
+        if let Err(e) = fl.sink.append(&r) {
+            fl.err = Some(e);
+            return;
+        }
+        fl.next += 1;
+    }
+}
+
 /// Run a list of plan cells, fanning untimed cells across the pool
 /// ([`run_jobs`] semantics) and running timed cells (Table 3 —
 /// it *measures* per-cell runtime) serially afterwards, each with the
@@ -440,6 +480,69 @@ pub fn run_cells(
     pool: &Pool,
     shard: usize,
     n_shards: usize,
+) -> Result<Vec<CellRecord>> {
+    run_cells_inner(data, cells, pool, shard, n_shards, None)
+}
+
+/// How a [`run_cells_durable`] call persists its progress.
+pub struct DurableRun<'a> {
+    /// Cell IDs already recorded by an interrupted run — skipped.
+    pub skip: &'a HashSet<String>,
+    /// Open appender on this run's record file (torn tail already
+    /// truncated by the caller).
+    pub sink: RecordAppender,
+    /// Zero the shard-local wall-clock fields at write time
+    /// (`--stable-timings`), making record files byte-comparable.
+    pub stable_timings: bool,
+}
+
+/// Like [`run_cells`], but crash-safe: each record is durably appended to
+/// `opts.sink` in manifest order as soon as its predecessors have flushed
+/// (via the internal in-order flush buffer), and cells whose IDs are in `opts.skip` — already
+/// recorded by an interrupted run — are not re-run. Timed (Table 3)
+/// cells still run serially after the pooled ones, so pooled records
+/// *later in the manifest than an unfinished timed cell* flush only once
+/// the timed cells complete — a durability-granularity cost, never a
+/// correctness one. Returns only the newly-run records, in cell order.
+pub fn run_cells_durable(
+    data: &ExpData,
+    cells: &[PlanCell],
+    pool: &Pool,
+    shard: usize,
+    n_shards: usize,
+    opts: DurableRun,
+) -> Result<Vec<CellRecord>> {
+    let DurableRun { skip, sink, stable_timings } = opts;
+    let todo: Vec<PlanCell> =
+        cells.iter().filter(|c| !skip.contains(&c.id())).cloned().collect();
+    if todo.len() < cells.len() {
+        eprintln!(
+            "[exp] resume: {} of {} cell(s) already recorded — running the remaining {}",
+            cells.len() - todo.len(),
+            cells.len(),
+            todo.len()
+        );
+    }
+    let n_todo = todo.len();
+    let flush =
+        Mutex::new(Flush { next: 0, ready: BTreeMap::new(), sink, err: None });
+    let records =
+        run_cells_inner(data, &todo, pool, shard, n_shards, Some((&flush, stable_timings)))?;
+    let mut fl = flush.into_inner().expect("flush lock never poisoned: offer() cannot panic");
+    if let Some(e) = fl.err.take() {
+        return Err(e);
+    }
+    assert_eq!(fl.next, n_todo, "every record flushed in manifest order");
+    Ok(records)
+}
+
+fn run_cells_inner(
+    data: &ExpData,
+    cells: &[PlanCell],
+    pool: &Pool,
+    shard: usize,
+    n_shards: usize,
+    sink: Option<(&Mutex<Flush>, bool)>,
 ) -> Result<Vec<CellRecord>> {
     let (timed, pooled): (Vec<usize>, Vec<usize>) =
         (0..cells.len()).partition(|&j| cells[j].sweep.timed());
@@ -457,6 +560,9 @@ pub fn run_cells(
     let pooled_records = run_jobs(pool, pooled.len(), |i| {
         let pc = &cells[pooled[i]];
         let r = run_plan_cell(data, pc, shard, n_shards);
+        if let (Some((flush, stable)), Ok(rec)) = (sink, &r) {
+            offer(flush, stable, pooled[i], rec);
+        }
         eprintln!("[exp] cell done: {}", pc.id());
         r
     });
@@ -467,6 +573,9 @@ pub fn run_cells(
         let pc = &cells[j];
         let r = run_plan_cell(data, pc, shard, n_shards);
         if let Ok(rec) = &r {
+            if let Some((flush, stable)) = sink {
+                offer(flush, stable, j, rec);
+            }
             eprintln!(
                 "[table3] {}: {} (correction {})",
                 pc.id(),
@@ -520,6 +629,242 @@ pub fn render_sweep(
             }
             Ok(())
         }
+    }
+}
+
+/// One record directory scanned tolerantly — the raw material of both
+/// `--resume` and `repro exp status`. Every complete record in every
+/// `*.jsonl` file, plus any torn tails (crash-mid-append fragments, which
+/// the readers drop). A missing or record-free directory scans to an
+/// empty result: nothing recorded yet.
+pub struct DirScan {
+    /// Every `*.jsonl` file found, in sorted order (an existing-but-empty
+    /// record file appears here and nowhere else).
+    pub files: Vec<PathBuf>,
+    pub records: Vec<(PathBuf, CellRecord)>,
+    pub torn: Vec<(PathBuf, TornTail)>,
+}
+
+impl DirScan {
+    /// IDs of every scanned record (duplicates included).
+    pub fn ids(&self) -> impl Iterator<Item = &str> {
+        self.records.iter().map(|(_, r)| r.id.as_str())
+    }
+}
+
+/// Scan `dir` for record files, in sorted file order, tolerating torn
+/// tails. Unlike `io::results::read_record_dir` this treats a *missing*
+/// directory as "no progress yet" rather than an error — resume and
+/// status must work before the first record lands. Any other read
+/// failure (permissions, I/O) is a hard error: treating it as empty
+/// would hand `--resume` an empty skip set and make it re-run — and
+/// duplicate — every already-recorded cell.
+pub fn scan_record_dir(dir: &Path) -> Result<DirScan> {
+    let mut scan = DirScan { files: Vec::new(), records: Vec::new(), torn: Vec::new() };
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(scan),
+        Err(e) => {
+            return Err(e).with_context(|| format!("scanning record dir {}", dir.display()))
+        }
+    };
+    scan.files = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "jsonl").unwrap_or(false))
+        .collect();
+    scan.files.sort();
+    for path in &scan.files {
+        let out = read_records_tolerant(path)?;
+        if let Some(t) = out.torn {
+            scan.torn.push((path.clone(), t));
+        }
+        for r in out.records {
+            scan.records.push((path.clone(), r));
+        }
+    }
+    Ok(scan)
+}
+
+/// `--resume` validation: every record already on disk must name a cell
+/// of THIS manifest, exactly once. Hard errors: an ID that is not a
+/// well-formed cell ID (corruption), a well-formed ID that is not in the
+/// manifest (a **parameter mismatch** — the records were written under
+/// different plan flags, and resuming over them would weld two different
+/// sweeps together), and duplicate IDs across files. Torn tails are fine
+/// (their cells simply count as missing). Returns the completed-cell ID
+/// set — the skip set for [`run_cells_durable`].
+pub fn validate_resume(cells: &[PlanCell], scan: &DirScan) -> Result<HashSet<String>> {
+    let index = plan::index_manifest(cells)?;
+    let mut done: HashMap<&str, &Path> = HashMap::new();
+    for (path, rec) in &scan.records {
+        if !index.contains_key(&rec.id) {
+            if PlanCell::parse(&rec.id).is_some() {
+                bail!(
+                    "{}: record '{}' is a valid cell id but not in this manifest — parameter \
+                     mismatch: were the existing records written with different flags \
+                     (--fast/--sizes/--seeds/--bits/--blocks)? Re-run `repro exp status` with \
+                     the original flags, or point --out at a fresh directory",
+                    path.display(),
+                    rec.id
+                );
+            }
+            bail!(
+                "{}: record id '{}' is not a well-formed cell id (corrupted or foreign file \
+                 in the output directory)",
+                path.display(),
+                rec.id
+            );
+        }
+        if let Some(prev) = done.get(rec.id.as_str()) {
+            bail!(
+                "duplicate records for cell '{}' (in {} and {}) — cannot resume over an \
+                 ambiguous directory; delete one copy or start a fresh --out",
+                rec.id,
+                prev.display(),
+                path.display()
+            );
+        }
+        done.insert(rec.id.as_str(), path.as_path());
+    }
+    Ok(done.into_keys().map(|id| id.to_string()).collect())
+}
+
+/// Completion picture of a record directory against a manifest slice —
+/// what `repro exp status` prints. Built tolerantly: torn tails and
+/// unknown/duplicate IDs are *reported*, never errors, so status works
+/// on exactly the directories that need triage. [`StatusReport::clean`]
+/// implies `verify_coverage` would accept the same records.
+pub struct StatusReport {
+    pub total: usize,
+    pub done: usize,
+    /// Missing cell IDs, in manifest order.
+    pub missing: Vec<String>,
+    /// (sweep name, done, total) per constituent sweep, in manifest order.
+    pub per_sweep: Vec<(String, usize, usize)>,
+    pub torn: Vec<(PathBuf, TornTail)>,
+    /// Record IDs not in the manifest (sorted, deduped).
+    pub unknown: Vec<String>,
+    /// Manifest IDs recorded more than once (sorted, deduped).
+    pub duplicates: Vec<String>,
+}
+
+/// Build a [`StatusReport`] for `cells` (the full manifest or one shard's
+/// slice) from a tolerant directory scan.
+pub fn status_report(cells: &[PlanCell], scan: &DirScan) -> StatusReport {
+    let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+    let in_manifest: HashSet<&str> = ids.iter().map(|s| s.as_str()).collect();
+    let mut seen: HashMap<&str, usize> = HashMap::new();
+    let mut unknown: Vec<String> = Vec::new();
+    for id in scan.ids() {
+        if in_manifest.contains(id) {
+            *seen.entry(id).or_insert(0) += 1;
+        } else {
+            unknown.push(id.to_string());
+        }
+    }
+    unknown.sort();
+    unknown.dedup();
+    let mut duplicates: Vec<String> =
+        seen.iter().filter(|&(_, &n)| n > 1).map(|(id, _)| id.to_string()).collect();
+    duplicates.sort();
+    let missing: Vec<String> =
+        ids.iter().filter(|id| !seen.contains_key(id.as_str())).cloned().collect();
+    let mut per_sweep: Vec<(String, usize, usize)> = Vec::new();
+    for (c, id) in cells.iter().zip(ids.iter()) {
+        let name = c.sweep.name().to_string();
+        if per_sweep.last().map(|(n, _, _)| n != &name).unwrap_or(true) {
+            per_sweep.push((name, 0, 0));
+        }
+        let last = per_sweep.last_mut().expect("entry just ensured");
+        last.2 += 1;
+        if seen.contains_key(id.as_str()) {
+            last.1 += 1;
+        }
+    }
+    StatusReport {
+        total: cells.len(),
+        done: seen.len(),
+        missing,
+        per_sweep,
+        torn: scan.torn.clone(),
+        unknown,
+        duplicates,
+    }
+}
+
+/// Status lines preview at most 3 IDs (coverage errors show 5).
+fn preview_ids(ids: &[String]) -> String {
+    plan::preview(ids, 3)
+}
+
+impl StatusReport {
+    /// True when the directory is fully healthy: every cell recorded
+    /// exactly once, nothing foreign, nothing torn. `clean()` implies
+    /// `verify_coverage` over the same slice succeeds (status is the
+    /// stricter check: a torn tail fails `clean()` even when the torn
+    /// cell's record exists intact elsewhere).
+    pub fn clean(&self) -> bool {
+        self.done == self.total
+            && self.unknown.is_empty()
+            && self.duplicates.is_empty()
+            && self.torn.is_empty()
+    }
+
+    /// Human-readable report. `label` names the slice (e.g. `'all'` or
+    /// `'all' shard 2/3`). Deterministic given the same directory state.
+    pub fn render(&self, label: &str) -> String {
+        let mut out = format!(
+            "[status] {label}: {}/{} cell(s) done, {} missing\n",
+            self.done,
+            self.total,
+            self.missing.len()
+        );
+        // Per-sweep breakdown only when there is more than one part
+        // (i.e. the `all` sweep) — for a single sweep the header says it.
+        if self.per_sweep.len() > 1 {
+            for (name, done, total) in &self.per_sweep {
+                out.push_str(&format!("  {name:<15} {done:>3}/{total:<3} done\n"));
+            }
+        }
+        if !self.missing.is_empty() {
+            out.push_str(&format!(
+                "  next missing: {}\n",
+                preview_ids(&self.missing)
+            ));
+        }
+        for (path, t) in &self.torn {
+            out.push_str(&format!(
+                "  torn tail: {} ({} byte(s) after the last complete record — dropped; \
+                 --resume re-runs that cell)\n",
+                path.display(),
+                t.fragment_bytes
+            ));
+        }
+        if !self.unknown.is_empty() {
+            out.push_str(&format!(
+                "  PROBLEM: {} record(s) not in this manifest (different flags, or a foreign \
+                 file?): {}\n",
+                self.unknown.len(),
+                preview_ids(&self.unknown)
+            ));
+        }
+        if !self.duplicates.is_empty() {
+            out.push_str(&format!(
+                "  PROBLEM: duplicate records for {} cell(s): {}\n",
+                self.duplicates.len(),
+                preview_ids(&self.duplicates)
+            ));
+        }
+        out.push_str(if self.clean() {
+            "  complete — ready to `repro exp merge`\n"
+        } else if !self.unknown.is_empty() || !self.duplicates.is_empty() {
+            // --resume would hard-error on these; point at the real fix.
+            "  broken — remove the foreign/duplicate record(s) above (or start a fresh \
+             --out), then merge\n"
+        } else {
+            "  incomplete — finish or `--resume` the missing shard run(s), then merge\n"
+        });
+        out
     }
 }
 

@@ -18,6 +18,14 @@
 //! records, and `repro exp merge <id> --out DIR` verifies exact manifest
 //! coverage and renders output **byte-identical** to the single-process
 //! sweep — for every shard count and every `--threads` value.
+//!
+//! The run stage is also **crash-safe**: `--out` runs append each record
+//! durably in manifest order ([`common::run_cells_durable`]), a SIGKILL
+//! leaves at most a torn final line the readers drop, `repro exp <id>
+//! ... --resume` validates the directory ([`common::validate_resume`])
+//! and runs only the missing cells, and `repro exp status` reports
+//! done/missing/torn per sweep ([`common::status_report`]) — with
+//! resumed runs byte-identical to uninterrupted ones.
 
 pub mod common;
 pub mod fig2;

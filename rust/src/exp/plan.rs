@@ -594,26 +594,37 @@ impl RecordMap {
     }
 }
 
-fn preview(ids: &[String]) -> String {
-    const SHOW: usize = 5;
-    let shown: Vec<&str> = ids.iter().take(SHOW).map(|s| s.as_str()).collect();
-    if ids.len() > SHOW {
-        format!("{} (+{} more)", shown.join(", "), ids.len() - SHOW)
+/// First `show` IDs joined, with a `(+N more)` suffix — shared by the
+/// coverage-error messages here and `exp status` rendering.
+pub(crate) fn preview(ids: &[String], show: usize) -> String {
+    let shown: Vec<&str> = ids.iter().take(show).map(|s| s.as_str()).collect();
+    if ids.len() > show {
+        format!("{} (+{} more)", shown.join(", "), ids.len() - show)
     } else {
         shown.join(", ")
     }
 }
 
-/// Merge-time coverage check: every manifest cell has exactly one record
-/// and every record names a manifest cell. Gaps, duplicates, and unknown
-/// IDs are hard errors — a partial or mixed-up merge must never render.
-pub fn verify_coverage(cells: &[PlanCell], records: Vec<CellRecord>) -> Result<RecordMap> {
+/// Manifest cells indexed by ID (value = position in manifest order),
+/// verifying ID uniqueness. Shared by the merge-time coverage check and
+/// the resume executor's record-directory validation so "is this record
+/// part of this plan?" means the same thing everywhere.
+pub fn index_manifest(cells: &[PlanCell]) -> Result<HashMap<String, usize>> {
     let mut expected: HashMap<String, usize> = HashMap::new();
     for (j, c) in cells.iter().enumerate() {
         if expected.insert(c.id(), j).is_some() {
             bail!("manifest bug: duplicate cell id '{}'", c.id());
         }
     }
+    Ok(expected)
+}
+
+/// Merge-time coverage check: every manifest cell has exactly one record
+/// and every record names a manifest cell. Gaps, duplicates, and unknown
+/// IDs are hard errors — a partial or mixed-up merge must never render
+/// (`repro exp status` shows the same counts without erroring).
+pub fn verify_coverage(cells: &[PlanCell], records: Vec<CellRecord>) -> Result<RecordMap> {
+    let expected = index_manifest(cells)?;
     let mut by_id: HashMap<String, CellRecord> = HashMap::new();
     let mut unknown = Vec::new();
     let mut duplicate = Vec::new();
@@ -631,7 +642,7 @@ pub fn verify_coverage(cells: &[PlanCell], records: Vec<CellRecord>) -> Result<R
         bail!(
             "{} record(s) are not in the manifest (wrong sweep, flags, or corrupted id?): {}",
             unknown.len(),
-            preview(&unknown)
+            preview(&unknown, 5)
         );
     }
     if !duplicate.is_empty() {
@@ -640,7 +651,7 @@ pub fn verify_coverage(cells: &[PlanCell], records: Vec<CellRecord>) -> Result<R
         bail!(
             "duplicate record(s) for {} cell(s) (overlapping shard files?): {}",
             duplicate.len(),
-            preview(&duplicate)
+            preview(&duplicate, 5)
         );
     }
     let missing: Vec<String> =
@@ -650,7 +661,7 @@ pub fn verify_coverage(cells: &[PlanCell], records: Vec<CellRecord>) -> Result<R
             "{} of {} manifest cell(s) have no record (incomplete shard set?): {}",
             missing.len(),
             cells.len(),
-            preview(&missing)
+            preview(&missing, 5)
         );
     }
     Ok(RecordMap { by_id })

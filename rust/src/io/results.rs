@@ -13,11 +13,23 @@
 //!
 //! Timings (`timings`, `wall_s`) are wall-clock and *shard-local*: they
 //! describe the process that measured them and are the one part of a
-//! record that is not bit-deterministic across runs.
+//! record that is not bit-deterministic across runs. `repro exp ...
+//! --stable-timings --out DIR` zeroes them at write time
+//! ([`CellRecord::stabilize`]) so determinism gates can compare record
+//! files byte-for-byte.
+//!
+//! Crash safety: record files are written either atomically as a whole
+//! ([`write_records`]: temp file + rename) or line-by-line through a
+//! [`RecordAppender`] (one `write` per record, fsynced), so a SIGKILL can
+//! only ever leave a *torn final line* — an unterminated trailing
+//! fragment. [`read_records`] drops such a fragment with a warning
+//! instead of erroring (the resume executor re-runs the cell), and
+//! [`truncate_torn`] physically removes it before appending resumes.
 
 use crate::coordinator::PhaseTimings;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 /// Everything measured for one executed plan cell.
@@ -67,6 +79,24 @@ impl CellRecord {
     /// Metric lookup by task-family name; NaN when absent.
     pub fn acc_for(&self, family: &str) -> f64 {
         lookup(&self.acc, family)
+    }
+
+    /// Zero the shard-local wall-clock fields (`timings`, `wall_s`) — the
+    /// only non-deterministic bytes in a record. Applied at write time
+    /// under `--stable-timings` so a killed-and-resumed run's record file
+    /// can be compared byte-for-byte against an uninterrupted one.
+    pub fn stabilize(&mut self) {
+        self.timings = PhaseTimings::default();
+        self.wall_s = 0.0;
+    }
+
+    /// The serialized JSONL form: one JSON object, newline-terminated.
+    /// The trailing `\n` is the completeness marker — an appended record
+    /// missing it is a torn tail from a crash mid-write.
+    pub fn to_line(&self) -> String {
+        let mut line = self.to_json().dump();
+        line.push('\n');
+        line
     }
 
     pub fn to_json(&self) -> Json {
@@ -194,8 +224,11 @@ pub fn cell_filename(cell_id: &str) -> String {
     format!("{sweep}.cell-{rest}.jsonl")
 }
 
-/// Write records as JSON lines (one record per line), creating parent
-/// directories as needed.
+/// Write records as JSON lines (one record per line) **atomically**:
+/// the file is assembled in a sibling `.tmp` (which the `*.jsonl` readers
+/// never pick up), fsynced, and renamed into place — a crash mid-write
+/// can never leave a half-written `.jsonl` behind. Parent directories are
+/// created as needed.
 pub fn write_records(path: &Path, records: &[CellRecord]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)
@@ -203,31 +236,150 @@ pub fn write_records(path: &Path, records: &[CellRecord]) -> Result<()> {
     }
     let mut out = String::new();
     for r in records {
-        out.push_str(&r.to_json().dump());
-        out.push('\n');
+        out.push_str(&r.to_line());
     }
-    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    let tmp = path.with_extension("jsonl.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(out.as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_data().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
     Ok(())
 }
 
-/// Read one JSONL record file (empty files — a shard that owned no
-/// cells — yield an empty vec).
-pub fn read_records(path: &Path) -> Result<Vec<CellRecord>> {
+/// Incremental, crash-safe record writer: each [`append`](Self::append)
+/// issues a single `write` of one newline-terminated line and fsyncs it,
+/// so after a SIGKILL the file holds every appended record intact plus at
+/// most one torn (unterminated) fragment — which the tolerant readers
+/// drop and [`truncate_torn`] removes. This is the durability primitive
+/// under `repro exp ... --out DIR`: progress survives cell by cell.
+pub struct RecordAppender {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl RecordAppender {
+    /// Open `path` for appending (creating it, and parent directories, if
+    /// needed). The caller is responsible for having truncated any torn
+    /// tail first — appending after a fragment would corrupt the next line.
+    pub fn open(path: &Path) -> Result<RecordAppender> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        Ok(RecordAppender { file, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Durably append one record: single write, then fsync.
+    pub fn append(&mut self, rec: &CellRecord) -> Result<()> {
+        let line = rec.to_line();
+        self.file
+            .write_all(line.as_bytes())
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("syncing {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// A torn trailing fragment: bytes after the last newline-terminated
+/// line, left by a process killed mid-append. The complete prefix
+/// (`valid_bytes` long) is intact by the single-write append contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TornTail {
+    /// Length in bytes of the valid (newline-terminated) prefix.
+    pub valid_bytes: u64,
+    /// Length in bytes of the dropped fragment.
+    pub fragment_bytes: usize,
+}
+
+/// Everything a tolerant read recovers from one record file: the complete
+/// records, plus the torn tail (if any) that was dropped.
+pub struct ReadOutcome {
+    pub records: Vec<CellRecord>,
+    pub torn: Option<TornTail>,
+}
+
+/// Read one JSONL record file, tolerating a torn final line (no trailing
+/// newline — the signature of a crash mid-append): the fragment is
+/// reported, not parsed. Corruption anywhere else — a *terminated* line
+/// that fails to parse — stays a hard error, because the append path can
+/// never produce it. Empty files (a shard that owned no cells) yield no
+/// records.
+pub fn read_records_tolerant(path: &Path) -> Result<ReadOutcome> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
-    let mut out = Vec::new();
-    for (i, line) in text.lines().enumerate() {
+    let valid_end = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+    let torn = if valid_end < text.len() {
+        Some(TornTail { valid_bytes: valid_end as u64, fragment_bytes: text.len() - valid_end })
+    } else {
+        None
+    };
+    let mut records = Vec::new();
+    for (i, line) in text[..valid_end].lines().enumerate() {
         if line.trim().is_empty() {
             continue;
         }
         let j = Json::parse(line)
             .map_err(|e| anyhow!("{}:{}: bad record JSON: {e}", path.display(), i + 1))?;
-        out.push(
+        records.push(
             CellRecord::from_json(&j)
                 .with_context(|| format!("{}:{}", path.display(), i + 1))?,
         );
     }
-    Ok(out)
+    Ok(ReadOutcome { records, torn })
+}
+
+/// Read one JSONL record file. A torn final line (crash mid-append) is
+/// dropped with a warning — never an error, so one killed shard cannot
+/// poison an output directory; `repro exp <id> --resume` re-runs the
+/// dropped cell.
+pub fn read_records(path: &Path) -> Result<Vec<CellRecord>> {
+    let out = read_records_tolerant(path)?;
+    if let Some(t) = &out.torn {
+        eprintln!(
+            "[records] WARNING: {}: dropping torn final line ({} byte(s) after the last \
+             complete record — a crash mid-append); the cell will count as missing",
+            path.display(),
+            t.fragment_bytes
+        );
+    }
+    Ok(out.records)
+}
+
+/// Physically truncate a torn trailing fragment, leaving only complete
+/// records. Returns `true` when bytes were cut. Must run before a resumed
+/// run re-opens the file for append — appending after a fragment would
+/// weld two records into one corrupt line.
+pub fn truncate_torn(path: &Path) -> Result<bool> {
+    let outcome = read_records_tolerant(path)?;
+    match outcome.torn {
+        None => Ok(false),
+        Some(t) => {
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(path)
+                .with_context(|| format!("opening {} to truncate torn tail", path.display()))?;
+            f.set_len(t.valid_bytes)
+                .with_context(|| format!("truncating {}", path.display()))?;
+            f.sync_data()?;
+            Ok(true)
+        }
+    }
 }
 
 /// Load every `*.jsonl` record file in `dir` (sorted by file name for a
@@ -345,6 +497,67 @@ mod tests {
             cell_filename("table12/INT3/GPTQ/+qep/tiny-s"),
             "table12.cell-table12_INT3_GPTQ__qep_tiny-s.jsonl"
         );
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_reported_and_truncatable() {
+        let dir = std::env::temp_dir().join(format!("qep_results_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        let complete = sample().to_line();
+        let mut bytes = complete.clone().into_bytes();
+        bytes.extend_from_slice(b"{\"id\":\"fig3/INT3/ti"); // killed mid-write
+        std::fs::write(&path, &bytes).unwrap();
+
+        let out = read_records_tolerant(&path).unwrap();
+        assert_eq!(out.records.len(), 1);
+        let torn = out.torn.expect("fragment detected");
+        assert_eq!(torn.valid_bytes as usize, complete.len());
+        assert_eq!(torn.fragment_bytes, bytes.len() - complete.len());
+        // The lenient reader drops it too (warning only).
+        assert_eq!(read_records(&path).unwrap().len(), 1);
+
+        assert!(truncate_torn(&path).unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), complete.as_bytes());
+        let clean = read_records_tolerant(&path).unwrap();
+        assert_eq!(clean.records.len(), 1);
+        assert!(clean.torn.is_none());
+        assert!(!truncate_torn(&path).unwrap(), "second truncate is a no-op");
+
+        // Appending after truncation yields two clean records.
+        let mut app = RecordAppender::open(&path).unwrap();
+        app.append(&CellRecord::new("fig3/INT3/tiny-s/base/s0".into(), 1, 2)).unwrap();
+        assert_eq!(read_records(&path).unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn appender_matches_whole_file_writer_byte_for_byte() {
+        let dir = std::env::temp_dir().join(format!("qep_results_app_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let recs = vec![sample(), CellRecord::new("fig3/INT3/tiny-s/base/s1".into(), 2, 3)];
+        let whole = dir.join("whole.jsonl");
+        write_records(&whole, &recs).unwrap();
+        let appended = dir.join("appended.jsonl");
+        let mut app = RecordAppender::open(&appended).unwrap();
+        for r in &recs {
+            app.append(r).unwrap();
+        }
+        assert_eq!(std::fs::read(&whole).unwrap(), std::fs::read(&appended).unwrap());
+        // No stray .tmp left behind, and the dir reader sees both files.
+        assert!(!whole.with_extension("jsonl.tmp").exists());
+        assert_eq!(read_record_dir(&dir).unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stabilize_zeroes_only_wall_clock_fields() {
+        let mut r = sample();
+        r.stabilize();
+        assert_eq!(r.timings, PhaseTimings::default());
+        assert_eq!(r.wall_s, 0.0);
+        assert_eq!(r.ppl_for("wiki"), 6.123456789012345, "metrics untouched");
+        assert!(r.fallback);
     }
 
     #[test]

@@ -5,14 +5,15 @@
 //! repro quantize --model tiny-s --method gptq --bits 3 [--group 64] [--qep 0.5] [--out q.qtz]
 //! repro eval --model-file q.qtz [--flavor wiki] [--tasks]
 //! repro exp <fig1|fig2|fig3|table1|table2|table3|table4|ablation-alpha|appendix|all>
-//!           [--sizes s,m,l] [--fast] [--shard i/N --out DIR] [--results DIR]
+//!           [--sizes s,m,l] [--fast] [--shard i/N --out DIR [--resume]] [--results DIR]
 //! repro exp plan <id>            # list the sweep's cell manifest
 //! repro exp cell <cell-id> --out DIR
+//! repro exp status <id> --out DIR [--shard i/N]
 //! repro exp merge <id> --out DIR [--results DIR]
 //! repro info
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::eval::{perplexity, TaskFamily, TaskSet};
 use qep::exp::{self, plan, ExpEnv, PlanCell, PlanParams, RenderCfg, ShardSpec, SweepId};
@@ -22,7 +23,8 @@ use qep::quant::{Method, QuantConfig};
 use qep::text::{Corpus, Flavor};
 use qep::util::cli::Args;
 use qep::util::pool;
-use std::path::Path;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::from_env();
@@ -46,6 +48,10 @@ const QUANTIZE_FLAGS: &[&str] = &[
 ];
 const EVAL_FLAGS: &[&str] = &["threads", "model-file", "flavor", "tasks", "chunk", "artifacts"];
 /// `repro exp <id>` (run / shard-run). Plan flags + execution flags.
+/// `--stable-timings` is accepted both when rendering (placeholder
+/// wall-clock cells) and when persisting records with `--out` (records
+/// written with zeroed timings, so determinism gates can byte-compare
+/// record files); `--resume` continues an interrupted `--out` run.
 const EXP_RUN_FLAGS: &[&str] = &[
     "threads",
     "sizes",
@@ -58,10 +64,15 @@ const EXP_RUN_FLAGS: &[&str] = &[
     "out",
     "results",
     "stable-timings",
+    "resume",
 ];
 /// `repro exp plan <id>`: plan flags only (nothing runs or renders).
 const EXP_PLAN_FLAGS: &[&str] =
     &["threads", "sizes", "fast", "bits", "blocks", "seeds", "shard"];
+/// `repro exp status <id>`: plan flags + the record directory (+ an
+/// optional shard slice to report on).
+const EXP_STATUS_FLAGS: &[&str] =
+    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "shard", "out"];
 /// `repro exp cell <cell-id>`: the cell ID carries the whole plan.
 const EXP_CELL_FLAGS: &[&str] = &["threads", "artifacts", "out"];
 /// `repro exp merge <id>`: plan flags + collect/render flags (no --shard
@@ -127,9 +138,10 @@ USAGE:
   repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks] [--chunk N]
   repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|all>
                  [--sizes s,m,l] [--fast] [--artifacts DIR] [--results DIR]
-                 [--shard i/N --out DIR] [--stable-timings]
+                 [--shard i/N] [--out DIR] [--resume] [--stable-timings]
   repro exp plan  <id> [--fast] [--sizes ...] [--shard i/N]
   repro exp cell  <cell-id> --out DIR
+  repro exp status <id> --out DIR [--shard i/N] [--fast] [--sizes ...]
   repro exp merge <id> --out DIR [--results DIR] [--stable-timings] [--fast] [--sizes ...]
   repro info
 
@@ -144,6 +156,9 @@ SHARDING (distributed experiment sweeps):
     repro exp all --fast --shard 1/3 --out shards/     # machine 1
     repro exp all --fast --shard 2/3 --out shards/     # machine 2
     repro exp all --fast --shard 3/3 --out shards/     # machine 3
+    # machine 2 died mid-sweep? nothing is lost:
+    repro exp status all --fast --out shards/          # who owes what
+    repro exp all --fast --shard 2/3 --out shards/ --resume
     repro exp merge all --fast --out shards/           # fan-in
 
   --shard i/N     Run only the manifest cells with index % N == i-1
@@ -151,9 +166,32 @@ SHARDING (distributed experiment sweeps):
                   to --out DIR instead of rendering tables. Pass the
                   same sweep flags (--fast/--sizes/...) to every shard
                   and to merge: the manifest is a pure function of them.
+  --out DIR       Durable record mode (with or without --shard): every
+                  cell's record is appended to DIR in manifest order and
+                  fsynced the moment it completes, so a crash or SIGKILL
+                  loses at most the cells in flight — never the file. A
+                  fresh run refuses records that already exist for its
+                  cells (and an unsharded run refuses any non-empty DIR):
+                  that is interrupted progress; continue it with --resume
+                  or use a fresh directory.
+  --resume        Continue an interrupted --out run: existing records are
+                  validated against the manifest (unknown, duplicate, or
+                  parameter-mismatched records — written under different
+                  flags — are hard errors), a torn final line from a
+                  mid-write kill is truncated and re-run, and only the
+                  missing cells execute. A resumed run's records and
+                  merged tables are byte-identical to an uninterrupted
+                  run's (with --stable-timings; CI enforces this with a
+                  kill-and-resume gate).
+  exp status      Report completion of a record directory without running
+                  anything: done/missing/torn counts per sweep (optionally
+                  for one --shard slice), the next missing cell IDs, and
+                  any records that would fail a merge or resume.
+                    repro exp status all --fast --out shards/
   exp merge       Load every *.jsonl record file in --out DIR, verify
                   the manifest is covered exactly once (gaps, duplicates
-                  and unknown IDs are hard errors), and render tables
+                  and unknown IDs are hard errors — `exp status` shows
+                  which shards still owe cells), and render tables
                   into --results DIR (default results/). Merged output
                   is byte-identical to the unsharded run for every N —
                   cell seeds derive from cell identity, never from
@@ -161,10 +199,11 @@ SHARDING (distributed experiment sweeps):
   exp cell        Run a single cell by ID (IDs round-trip: anything
                   `repro exp plan` prints is accepted), for external
                   schedulers and crash recovery.
-  --stable-timings  Render wall-clock cells (Table 3) as a fixed
-                  placeholder: timings are shard-local and are the one
-                  non-deterministic column, so determinism gates enable
-                  this to compare output bytes.
+  --stable-timings  Determinism-gate mode for the one non-deterministic
+                  metric, shard-local wall-clock: rendering shows Table
+                  3's timing cells as a fixed placeholder, and records
+                  written with --out carry zeroed timing fields so two
+                  runs of the same cells are byte-identical files.
 
 THREADS:
   --threads N    Worker threads for the parallel execution engine (GEMMs,
@@ -307,7 +346,7 @@ fn experiment(args: &Args) -> Result<()> {
     let sub = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: repro exp <id|plan|cell|merge> (see `repro help`)"))?
+        .ok_or_else(|| anyhow!("usage: repro exp <id|plan|cell|status|merge> (see `repro help`)"))?
         .as_str();
     match sub {
         "plan" => {
@@ -317,6 +356,10 @@ fn experiment(args: &Args) -> Result<()> {
         "cell" => {
             check_flags(args, EXP_CELL_FLAGS)?;
             exp_cell(args)
+        }
+        "status" => {
+            check_flags(args, EXP_STATUS_FLAGS)?;
+            exp_status(args)
         }
         "merge" => {
             check_flags(args, EXP_MERGE_FLAGS)?;
@@ -366,8 +409,8 @@ fn exp_cell(args: &Args) -> Result<()> {
         anyhow!("unparseable cell id '{id}' (run `repro exp plan <id>` to list valid cells)")
     })?;
     let out_dir = args
-        .get("out")
-        .ok_or_else(|| anyhow!("--out DIR required (where the record file goes)"))?;
+        .require("out", "where the cell's record file goes")
+        .map_err(|e| anyhow!("{e}"))?;
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
     let data = env.snapshot(&[pc.size()]);
     let rec = exp::common::run_plan_cell(&data, &pc, 0, 1)?;
@@ -380,28 +423,73 @@ fn exp_cell(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro exp status <id> --out DIR [--shard i/N]`: completion triage
+/// for a record directory — done/missing/torn counts per sweep (and per
+/// shard slice), next missing cell IDs, and any records that would make
+/// a merge or resume fail. Purely informational: problems are printed,
+/// never exit codes; `exp merge` stays the gate.
+fn exp_status(args: &Args) -> Result<()> {
+    let (sweep, params) = sweep_from(args, 2)?;
+    let dir = args
+        .require("out", "the directory holding the record files to inspect")
+        .map_err(|e| anyhow!("{e}"))?;
+    let mut cells = plan::manifest(sweep, &params)?;
+    let mut label = format!("'{}'", sweep.name());
+    if let Some(spec) = args.get("shard") {
+        let spec = ShardSpec::parse(spec)?;
+        cells = spec.filter(&cells);
+        label = format!("'{}' shard {}/{}", sweep.name(), spec.index, spec.count);
+    }
+    let scan = exp::common::scan_record_dir(Path::new(dir))?;
+    let report = exp::common::status_report(&cells, &scan);
+    print!("{}", report.render(&label));
+    Ok(())
+}
+
+/// Load every record file in `dir`, verify exact manifest coverage, and
+/// render. Shared by `exp merge` and the durable (`--out`) run path so a
+/// resumed run renders through exactly the records it persisted.
+fn render_from_dir(
+    sweep: SweepId,
+    params: &PlanParams,
+    dir: &Path,
+    rcfg: &RenderCfg,
+) -> Result<bool> {
+    let cells = plan::manifest(sweep, params)?;
+    let mut records = Vec::new();
+    for (path, recs) in results::read_record_dir(dir)? {
+        eprintln!("[records] {}: {} record(s)", path.display(), recs.len());
+        records.extend(recs);
+    }
+    let map = plan::verify_coverage(&cells, records).with_context(|| {
+        format!(
+            "records in {} do not cover the '{}' manifest (run `repro exp status {} --out {} \
+             <same flags>` for per-shard completion and torn-tail triage)",
+            dir.display(),
+            sweep.name(),
+            sweep.name(),
+            dir.display()
+        )
+    })?;
+    let fallback = map.any_fallback();
+    exp::common::render_sweep(sweep, params, &map, rcfg)?;
+    Ok(fallback)
+}
+
 /// `repro exp merge <id> --out DIR`: the collector. Loads every record
 /// file a shard run wrote into DIR, verifies the manifest is covered
 /// exactly once, and renders — byte-identical to the unsharded sweep.
 fn exp_merge(args: &Args) -> Result<()> {
     let (sweep, params) = sweep_from(args, 2)?;
-    let dir = args.get("out").ok_or_else(|| {
-        anyhow!("merge needs --out DIR (the directory the shard runs wrote records into)")
-    })?;
+    let dir = args
+        .require("out", "the directory the shard runs wrote records into")
+        .map_err(|e| anyhow!("{e}"))?;
     let rcfg = render_cfg(args);
-    let cells = plan::manifest(sweep, &params)?;
-    let mut records = Vec::new();
-    for (path, recs) in results::read_record_dir(Path::new(dir))? {
-        eprintln!("[merge] {}: {} record(s)", path.display(), recs.len());
-        records.extend(recs);
-    }
-    let map = plan::verify_coverage(&cells, records)?;
-    let fallback = map.any_fallback();
-    exp::common::render_sweep(sweep, &params, &map, &rcfg)?;
+    let fallback = render_from_dir(sweep, &params, Path::new(dir), &rcfg)?;
     println!(
-        "[merge] rendered '{}' from {} cell record(s) into {}/",
+        "[merge] rendered '{}' from cell records in {} into {}/",
         sweep.name(),
-        cells.len(),
+        dir,
         rcfg.results_dir
     );
     if fallback {
@@ -410,53 +498,210 @@ fn exp_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the record file + skip set for a durable (`--out`) run.
+///
+/// Fresh runs refuse to touch records that already exist for this run —
+/// the target file itself, or any record in the directory naming one of
+/// this run's cells — because silently re-running them would either
+/// clobber durable progress or hand `merge` duplicates. `--resume` is
+/// the explicit opt-in: the directory is scanned and validated against
+/// the manifest (unknown / parameter-mismatched / duplicate records are
+/// hard errors), a torn tail on this run's own file is physically
+/// truncated, and everything already recorded lands in the skip set.
+fn prepare_records(
+    dir: &Path,
+    file_name: &str,
+    all_cells: &[PlanCell],
+    mine: &[PlanCell],
+    resume: bool,
+    require_empty: bool,
+) -> Result<(HashSet<String>, PathBuf)> {
+    let path = dir.join(file_name);
+    let scan = exp::common::scan_record_dir(dir)?;
+    if !resume {
+        // Unsharded runs render from the whole directory afterwards, so
+        // they need it genuinely fresh; sibling shards of the same run
+        // legitimately share a directory, so a shard run only refuses
+        // records that collide with *its* slice (or its own file).
+        if require_empty && !scan.files.is_empty() {
+            bail!(
+                "--out {} already holds {} record file(s) — pass --resume to continue an \
+                 interrupted run of this sweep, or point --out at a fresh directory; \
+                 `repro exp status` shows its completion",
+                dir.display(),
+                scan.files.len()
+            );
+        }
+        if path.exists() {
+            bail!(
+                "{} already exists — pass --resume to continue that run (finished cells are \
+                 skipped), or point --out at a fresh directory; `repro exp status` shows \
+                 its completion",
+                path.display()
+            );
+        }
+        let mine_ids: HashSet<String> = mine.iter().map(|c| c.id()).collect();
+        if let Some((p, rec)) = scan.records.iter().find(|(_, r)| mine_ids.contains(&r.id)) {
+            bail!(
+                "--out already holds a record for this run's cell '{}' (in {}) — pass \
+                 --resume to skip finished cells, or use a fresh directory",
+                rec.id,
+                p.display()
+            );
+        }
+        return Ok((HashSet::new(), path));
+    }
+    let done = exp::common::validate_resume(all_cells, &scan)?;
+    for (p, _) in &scan.torn {
+        if *p == path {
+            if results::truncate_torn(p)? {
+                eprintln!(
+                    "[exp] resume: truncated torn tail in {} (that cell re-runs)",
+                    p.display()
+                );
+            }
+        } else {
+            eprintln!(
+                "[exp] resume: ignoring torn tail in {} (another run's file — resume it \
+                 separately)",
+                p.display()
+            );
+        }
+    }
+    Ok((done, path))
+}
+
+/// One durable (`--out`) run, shared by the `--shard` and unsharded
+/// branches of [`exp_run`]: guard/validate the directory
+/// ([`prepare_records`]), snapshot, and execute with per-cell durable
+/// appends. Returns (newly-run count, record file path).
+struct DurableCli<'a> {
+    env: &'a mut ExpEnv,
+    /// Full manifest (resume validation context).
+    cells: &'a [PlanCell],
+    /// The slice this run executes.
+    mine: &'a [PlanCell],
+    dir: &'a Path,
+    file_name: String,
+    /// Record bookkeeping (shard, n_shards); (0, 1) for unsharded runs.
+    shard: (usize, usize),
+    resume: bool,
+    require_empty: bool,
+    stable: bool,
+}
+
+fn run_durable(cli: DurableCli) -> Result<(usize, PathBuf)> {
+    let (skip, path) = prepare_records(
+        cli.dir,
+        &cli.file_name,
+        cli.cells,
+        cli.mine,
+        cli.resume,
+        cli.require_empty,
+    )?;
+    let data = cli.env.snapshot(&plan::sizes_of(cli.mine));
+    let opts = exp::common::DurableRun {
+        skip: &skip,
+        sink: results::RecordAppender::open(&path)?,
+        stable_timings: cli.stable,
+    };
+    let new = exp::common::run_cells_durable(
+        &data,
+        cli.mine,
+        &pool::global(),
+        cli.shard.0,
+        cli.shard.1,
+        opts,
+    )?;
+    Ok((new.len(), path))
+}
+
 /// `repro exp <id>`: the sweep driver. Unsharded it runs the whole
-/// manifest and renders (optionally also persisting records with
-/// `--out`); with `--shard i/N` it runs one deterministic slice and
-/// only persists records (rendering needs every cell — use `merge`).
+/// manifest and renders; with `--shard i/N` it runs one deterministic
+/// slice and only persists records (rendering needs every cell — use
+/// `merge`). Whenever `--out DIR` is given, records are appended durably
+/// cell-by-cell (fsynced, manifest order) so a killed run loses at most
+/// the cell in flight, and `--resume` picks up exactly the missing
+/// cells — bit-identical to never having been interrupted.
 fn exp_run(args: &Args) -> Result<()> {
     let (sweep, params) = sweep_from(args, 1)?;
+    let resume = args.has("resume");
+    let stable = args.has("stable-timings");
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
     match args.get("shard") {
         Some(spec) => {
             let spec = ShardSpec::parse(spec)?;
-            let out_dir = args.get("out").ok_or_else(|| {
-                anyhow!("--shard requires --out DIR (where this shard's record file goes)")
-            })?;
+            let out_dir = args
+                .require("out", "the directory this shard's record file goes to")
+                .map_err(|e| anyhow!("{e}"))?;
             // A shard run persists records and never renders — reject
             // render-only flags instead of silently ignoring them.
-            for render_flag in ["results", "stable-timings"] {
-                if args.has(render_flag) {
-                    bail!(
-                        "--{render_flag} has no effect with --shard (rendering happens at \
-                         `repro exp merge`); pass it there instead"
-                    );
-                }
+            // (--stable-timings *is* meaningful here: it zeroes the
+            // shard-local wall-clock fields in the persisted records.)
+            if args.has("results") {
+                bail!(
+                    "--results has no effect with --shard (rendering happens at \
+                     `repro exp merge`); pass it there instead"
+                );
             }
             let cells = plan::manifest(sweep, &params)?;
             let mine = spec.filter(&cells);
-            let data = env.snapshot(&plan::sizes_of(&mine));
-            let records =
-                exp::common::run_cells(&data, &mine, &pool::global(), spec.index, spec.count)?;
-            let path = Path::new(out_dir)
-                .join(results::shard_filename(sweep.name(), spec.index, spec.count));
-            results::write_records(&path, &records)?;
+            let (new_count, path) = run_durable(DurableCli {
+                env: &mut env,
+                cells: &cells,
+                mine: &mine,
+                dir: Path::new(out_dir),
+                file_name: results::shard_filename(sweep.name(), spec.index, spec.count),
+                shard: (spec.index, spec.count),
+                resume,
+                require_empty: false,
+                stable,
+            })?;
             println!(
-                "[shard {}/{}] wrote {} of {} cell record(s) to {}",
+                "[shard {}/{}] {} cell record(s) in {} ({} newly run; manifest has {} cells)",
                 spec.index,
                 spec.count,
-                records.len(),
-                cells.len(),
-                path.display()
+                mine.len(),
+                path.display(),
+                new_count,
+                cells.len()
             );
         }
         None => {
-            let records = exp::common::run_sweep(&mut env, sweep, &params, &render_cfg(args))?;
-            if let Some(out_dir) = args.get("out") {
-                let path =
-                    Path::new(out_dir).join(results::shard_filename(sweep.name(), 1, 1));
-                results::write_records(&path, &records)?;
-                println!("wrote {} cell record(s) to {}", records.len(), path.display());
+            let rcfg = render_cfg(args);
+            match args.get("out") {
+                None => {
+                    if resume {
+                        bail!(
+                            "--resume requires --out DIR: records are what a resumed run \
+                             continues from"
+                        );
+                    }
+                    exp::common::run_sweep(&mut env, sweep, &params, &rcfg)?;
+                }
+                Some(out_dir) => {
+                    let cells = plan::manifest(sweep, &params)?;
+                    let (new_count, path) = run_durable(DurableCli {
+                        env: &mut env,
+                        cells: &cells,
+                        mine: &cells,
+                        dir: Path::new(out_dir),
+                        file_name: results::shard_filename(sweep.name(), 1, 1),
+                        shard: (0, 1),
+                        resume,
+                        require_empty: true,
+                        stable,
+                    })?;
+                    println!(
+                        "wrote {} cell record(s) to {} ({} newly run)",
+                        cells.len(),
+                        path.display(),
+                        new_count
+                    );
+                    // Render through the persisted records — exactly what
+                    // a merge of this directory would see.
+                    render_from_dir(sweep, &params, Path::new(out_dir), &rcfg)?;
+                }
             }
         }
     }

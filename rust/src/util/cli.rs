@@ -60,6 +60,13 @@ impl Args {
         self.flags.contains_key(key)
     }
 
+    /// Fetch a required `--key value` flag, turning absence into a usage
+    /// error that says *why* the flag is needed (the subcommands that
+    /// persist records all require `--out DIR`, each for its own reason).
+    pub fn require(&self, key: &str, why: &str) -> Result<&str, String> {
+        self.get(key).ok_or_else(|| format!("--{key} required: {why}"))
+    }
+
     /// Reject flags outside `known` with a usage error. Every subcommand
     /// calls this with its accepted flag set, so a typo (`--shards` for
     /// `--shard`) fails loudly instead of being silently ignored — which
@@ -153,6 +160,15 @@ mod tests {
         let far = parse(&["--zzzzzz"]);
         let err = far.reject_unknown(&["shard"]).unwrap_err();
         assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn require_reports_the_reason() {
+        let a = parse(&["exp", "table4", "--out", "shards"]);
+        assert_eq!(a.require("out", "records go here"), Ok("shards"));
+        let err = a.require("results", "tables go here").unwrap_err();
+        assert!(err.contains("--results required"), "{err}");
+        assert!(err.contains("tables go here"), "{err}");
     }
 
     #[test]

@@ -573,10 +573,7 @@ impl Pool {
                 *slots_ref[i].lock().unwrap() = Some(v);
             }
         });
-        slots
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("par_map: unfilled slot"))
-            .collect()
+        collect_par_map_slots(slots, self.threads)
     }
 
     /// How many workers a dispatch of `n` items at `grain` would actually
@@ -594,6 +591,37 @@ impl Pool {
             workers
         }
     }
+}
+
+/// Collect `par_map`'s per-item result slots into the output vector,
+/// panicking **with a diagnostic** — which job index, out of how many,
+/// and the pool state — when a slot is unfilled or poisoned. An unfilled
+/// slot can only mean the chunk cursor skipped an index (a scheduler
+/// bug); a poisoned one that a job panicked while publishing its result
+/// (job panics are normally caught on the worker *before* the slot lock
+/// is taken). Both are unreachable in correct operation, which is
+/// exactly why the failure must name the culprit instead of dying in a
+/// bare `unwrap`.
+#[doc(hidden)] // public only so tests/pool_edge_cases.rs can cover the diagnostics
+pub fn collect_par_map_slots<T>(slots: Vec<Mutex<Option<T>>>, threads: usize) -> Vec<T> {
+    let n = slots.len();
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| match slot.into_inner() {
+            Ok(Some(v)) => v,
+            Ok(None) => panic!(
+                "par_map: job {i} of {n} never produced a result (pool threads={threads}, \
+                 persistent workers started={}) — the chunk cursor skipped an index",
+                workers_started()
+            ),
+            Err(_) => panic!(
+                "par_map: result slot {i} of {n} is poisoned (pool threads={threads}, \
+                 persistent workers started={}) — a job panicked while publishing its result",
+                workers_started()
+            ),
+        })
+        .collect()
 }
 
 #[cfg(test)]

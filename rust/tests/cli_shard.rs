@@ -62,13 +62,24 @@ fn unknown_flags_commands_and_ids_are_rejected() {
     assert!(!out.status.success());
     assert!(stderr_of(&out).contains("--shard expects i/N"), "{}", stderr_of(&out));
     // Render-only flags are meaningless on a shard run (it never
-    // renders) — reject rather than silently ignore.
+    // renders) — reject rather than silently ignore. (--stable-timings
+    // is NOT render-only anymore: with --out it zeroes record timings.)
     let out = repro(
-        &["exp", "fig2", "--fast", "--shard", "1/2", "--out", "s", "--stable-timings"],
+        &["exp", "fig2", "--fast", "--shard", "1/2", "--out", "s", "--results", "r"],
         &dir,
     );
     assert!(!out.status.success());
     assert!(stderr_of(&out).contains("no effect with --shard"), "{}", stderr_of(&out));
+
+    // --resume without --out has nothing to resume from.
+    let out = repro(&["exp", "fig2", "--fast", "--resume"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--resume requires --out"), "{}", stderr_of(&out));
+
+    // exp status needs the record directory.
+    let out = repro(&["exp", "status", "fig2", "--fast"], &dir);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--out required"), "{}", stderr_of(&out));
 
     // Flags a subcommand never reads are rejected, not silently ignored:
     // merge always collects the full manifest, so --shard is invalid there.

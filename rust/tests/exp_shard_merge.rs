@@ -6,14 +6,19 @@
 //! (which additionally proves it across real processes; so does
 //! `tests/cli_shard.rs` for a small sweep).
 
-use qep::exp::common::{run_cells, render_sweep, RenderCfg};
+use qep::exp::common::{
+    run_cells, run_cells_durable, render_sweep, scan_record_dir, validate_resume, DurableRun,
+    RenderCfg,
+};
 use qep::exp::plan::{manifest, sizes_of, verify_coverage, PlanParams, ShardSpec, SweepId};
 use qep::exp::ExpData;
-use qep::io::results::{read_records, shard_filename, write_records, CellRecord};
+use qep::io::results::{
+    read_records, shard_filename, truncate_torn, write_records, CellRecord, RecordAppender,
+};
 use qep::model::{Model, ModelConfig, Size};
 use qep::text::{Corpus, Flavor};
 use qep::util::pool::Pool;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 
 /// A fresh snapshot with a tiny injected model under the `tiny-s` name.
@@ -209,4 +214,96 @@ fn cell_results_do_not_depend_on_shard_identity() {
     assert_eq!(a.acc, b.acc);
     assert_eq!((a.shard, a.n_shards), (1, 3));
     assert_eq!((b.shard, b.n_shards), (3, 7));
+}
+
+/// The durable executor's contract, library level: per-cell fsynced
+/// appends produce the same bytes as the whole-file writer, and an
+/// interrupted file (complete prefix + torn tail) resumed with the
+/// validated skip set finishes byte-identical to never having crashed.
+#[test]
+fn durable_appends_and_resume_are_byte_identical_to_uninterrupted() {
+    let params = tiny_params();
+    let pool = Pool::new(2);
+    let cells = manifest(SweepId::Table4, &params).unwrap();
+    assert!(cells.len() >= 4, "need enough cells to interrupt meaningfully");
+
+    // Reference: plain in-memory run, stabilized, whole-file write.
+    let mut reference = run_cells(&fresh_data(), &cells, &pool, 0, 1).unwrap();
+    for r in reference.iter_mut() {
+        r.stabilize();
+    }
+    let dir = tmp_dir("durable");
+    let want_path = dir.join(shard_filename("table4", 1, 1));
+    write_records(&want_path, &reference).unwrap();
+    let want_bytes = std::fs::read(&want_path).unwrap();
+
+    // Leg 1: the durable appender, fresh, must reproduce those bytes.
+    let durable_dir = tmp_dir("durable_fresh");
+    let got_path = durable_dir.join(shard_filename("table4", 1, 1));
+    let empty_skip = HashSet::new();
+    let new = run_cells_durable(
+        &fresh_data(),
+        &cells,
+        &pool,
+        0,
+        1,
+        DurableRun {
+            skip: &empty_skip,
+            sink: RecordAppender::open(&got_path).unwrap(),
+            stable_timings: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(new.len(), cells.len());
+    assert_eq!(std::fs::read(&got_path).unwrap(), want_bytes, "durable vs whole-file bytes");
+
+    // Leg 2: interrupt after 3 records (plus a torn fragment), then
+    // resume with the validated skip set.
+    let resume_dir = tmp_dir("durable_resume");
+    let resume_path = resume_dir.join(shard_filename("table4", 1, 1));
+    {
+        let mut app = RecordAppender::open(&resume_path).unwrap();
+        for r in &reference[..3] {
+            app.append(r).unwrap();
+        }
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&resume_path).unwrap();
+        f.write_all(b"{\"id\":\"table4/RT").unwrap();
+    }
+    let scan = scan_record_dir(&resume_dir).unwrap();
+    assert_eq!(scan.records.len(), 3);
+    assert_eq!(scan.torn.len(), 1);
+    let skip = validate_resume(&cells, &scan).unwrap();
+    assert_eq!(skip.len(), 3);
+    assert!(truncate_torn(&resume_path).unwrap());
+    let new = run_cells_durable(
+        &fresh_data(),
+        &cells,
+        &pool,
+        0,
+        1,
+        DurableRun {
+            skip: &skip,
+            sink: RecordAppender::open(&resume_path).unwrap(),
+            stable_timings: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(new.len(), cells.len() - 3, "only the missing cells re-run");
+    assert_eq!(
+        std::fs::read(&resume_path).unwrap(),
+        want_bytes,
+        "interrupted + resumed file differs from uninterrupted"
+    );
+
+    // The resumed directory merges to the same render as the reference
+    // records (closing the loop through verify_coverage).
+    let merged = read_records(&resume_path).unwrap();
+    let want_dir = render_into(SweepId::Table4, &params, reference, "durable_want");
+    let got_dir = render_into(SweepId::Table4, &params, merged, "durable_got");
+    assert_eq!(dir_bytes(&want_dir), dir_bytes(&got_dir));
+
+    for d in [dir, durable_dir, resume_dir, want_dir, got_dir] {
+        std::fs::remove_dir_all(&d).ok();
+    }
 }

@@ -1,0 +1,244 @@
+//! Persistence round-trip gates for the two on-disk formats:
+//!
+//! * `.qtz` tensor containers (`io::qtz`): write → read → write must be
+//!   **byte-identical** — the format is the boundary every quantized
+//!   model and the parallel-equivalence gates compare across.
+//! * `CellRecord` JSON lines (`io::results`): every `f64` — including
+//!   non-finite and subnormal values — must survive bit-exactly, torn
+//!   tails (SIGKILL mid-append) must be recoverable, and the `--resume`
+//!   validation must reject records that do not belong to the manifest.
+
+use qep::exp::common::{scan_record_dir, status_report, validate_resume};
+use qep::exp::plan::{manifest, verify_coverage, PlanParams, SweepId};
+use qep::io::results::{
+    read_records, read_records_tolerant, truncate_torn, write_records, CellRecord,
+    RecordAppender,
+};
+use qep::io::TensorFile;
+use qep::linalg::Mat;
+use qep::model::Size;
+use qep::util::json::Json;
+use qep::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qep_io_rt_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn qtz_write_read_write_is_byte_identical() {
+    let mut rng = Rng::new(1);
+    let mut tf = TensorFile::new();
+    tf.meta.set("model", Json::Str("tiny-s".into()));
+    tf.meta.set("bits", Json::Num(3.0));
+    tf.put_mat("blocks.0.attn.wq", &Mat::randn(16, 16, 1.0, &mut rng));
+    tf.put_i8("blocks.0.attn.wq.codes", &[16, 16], &vec![-8i8; 256]);
+    tf.put_f32("blocks.0.attn.wq.scales", &[16], &vec![0.125f32; 16]);
+    // Awkward f32 payloads: subnormal, max, negative zero, tiny.
+    tf.put_f32(
+        "edge",
+        &[4],
+        &[f32::MIN_POSITIVE, f32::MAX, -0.0f32, 1.0e-45],
+    );
+
+    let first = tf.serialize();
+    let back = TensorFile::deserialize(&first).unwrap();
+    let second = back.serialize();
+    assert_eq!(first, second, "qtz write→read→write must reproduce the bytes");
+
+    // Same through the filesystem.
+    let dir = tmp("qtz");
+    let path = dir.join("model.qtz");
+    tf.save(&path).unwrap();
+    let loaded = TensorFile::load(&path).unwrap();
+    assert_eq!(loaded.serialize(), first);
+    // The f32 payload is bit-exact, -0.0 and subnormals included.
+    let (_, edge) = loaded.get_f32("edge").unwrap();
+    let want = [f32::MIN_POSITIVE, f32::MAX, -0.0f32, 1.0e-45];
+    for (a, b) in edge.iter().zip(want.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "f32 payload drifted");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn record_round_trip_preserves_non_finite_and_subnormal_f64s() {
+    let subnormal_min = f64::from_bits(1); // 5e-324, the smallest subnormal
+    let almost_normal = f64::from_bits(0x000F_FFFF_FFFF_FFFF); // largest subnormal
+    let values = [
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        subnormal_min,
+        almost_normal,
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        1.0 / 3.0,
+    ];
+    let mut rec = CellRecord::new("fig3/INT3/tiny-s/base/s0".into(), 1, 2);
+    rec.ppl = values.iter().enumerate().map(|(i, &v)| (format!("m{i}"), v)).collect();
+    rec.deltas = values.to_vec();
+    rec.deltas.push(f64::NAN);
+    rec.normalize();
+
+    let line = rec.to_line();
+    assert!(line.ends_with('\n'), "lines are newline-terminated");
+    let back = CellRecord::from_json(&Json::parse(line.trim_end()).unwrap()).unwrap();
+    for ((k, a), (_, b)) in rec.ppl.iter().zip(back.ppl.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "ppl[{k}] drifted");
+    }
+    for (i, (a, b)) in rec.deltas.iter().zip(back.deltas.iter()).enumerate() {
+        if a.is_nan() {
+            assert!(b.is_nan(), "deltas[{i}]: NaN lost");
+        } else {
+            assert_eq!(a.to_bits(), b.to_bits(), "deltas[{i}] drifted");
+        }
+    }
+}
+
+#[test]
+fn torn_tail_recovery_through_appender_and_scan() {
+    let dir = tmp("torn");
+    let path = dir.join("fig2.shard-1-of-2.jsonl");
+    let a = CellRecord::new("fig2/tiny-s/INT3/b1/base".into(), 1, 2);
+    let b = CellRecord::new("fig2/tiny-s/INT3/b1/+qep".into(), 1, 2);
+    {
+        let mut app = RecordAppender::open(&path).unwrap();
+        app.append(&a).unwrap();
+        app.append(&b).unwrap();
+    }
+    let clean_bytes = std::fs::read(&path).unwrap();
+
+    // Simulate a SIGKILL mid-append of a third record: a partial line
+    // with no terminating newline.
+    let mut torn_bytes = clean_bytes.clone();
+    torn_bytes.extend_from_slice(br#"{"id":"fig2/tiny-s/INT"#);
+    std::fs::write(&path, &torn_bytes).unwrap();
+
+    // Tolerant readers drop exactly the fragment.
+    let out = read_records_tolerant(&path).unwrap();
+    assert_eq!(out.records.len(), 2);
+    assert_eq!(out.torn.as_ref().unwrap().valid_bytes as usize, clean_bytes.len());
+    assert_eq!(read_records(&path).unwrap(), vec![a.clone(), b.clone()]);
+
+    // The directory scan reports the torn file; truncation restores the
+    // clean prefix byte-for-byte and the scan comes back clean.
+    let scan = scan_record_dir(&dir).unwrap();
+    assert_eq!(scan.files.len(), 1);
+    assert_eq!(scan.records.len(), 2);
+    assert_eq!(scan.torn.len(), 1);
+    assert!(truncate_torn(&path).unwrap());
+    assert_eq!(std::fs::read(&path).unwrap(), clean_bytes);
+    let scan = scan_record_dir(&dir).unwrap();
+    assert!(scan.torn.is_empty());
+
+    // A *terminated* garbage line is corruption, not a torn tail: hard
+    // error even for the tolerant reader.
+    std::fs::write(&path, b"not json at all\n").unwrap();
+    assert!(read_records_tolerant(&path).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Build the 2-cell Fig. 2 manifest and a matching record per cell.
+fn fig2_manifest_and_records() -> (Vec<qep::exp::PlanCell>, Vec<CellRecord>) {
+    let params = PlanParams::for_sizes(&[Size::TinyS]);
+    let cells = manifest(SweepId::Fig2, &params).unwrap();
+    assert_eq!(cells.len(), 2);
+    let recs = cells.iter().map(|c| CellRecord::new(c.id(), 1, 1)).collect();
+    (cells, recs)
+}
+
+#[test]
+fn resume_validation_rejects_foreign_duplicate_and_malformed_records() {
+    let (cells, recs) = fig2_manifest_and_records();
+    let dir = tmp("resume_validate");
+
+    // A complete, matching directory validates to the full skip set.
+    write_records(&dir.join("fig2.shard-1-of-1.jsonl"), &recs).unwrap();
+    let scan = scan_record_dir(&dir).unwrap();
+    let done = validate_resume(&cells, &scan).unwrap();
+    assert_eq!(done.len(), 2);
+    assert!(done.contains(&cells[0].id()));
+
+    // Parameter mismatch: a *valid* cell id from a different sweep/flags
+    // is a hard error that says so.
+    let foreign = CellRecord::new("table12/INT3/GPTQ/+qep/tiny-s".into(), 1, 1);
+    write_records(&dir.join("stray.jsonl"), &[foreign]).unwrap();
+    let err = validate_resume(&cells, &scan_record_dir(&dir).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not in this manifest"), "{err}");
+    assert!(err.contains("parameter mismatch"), "{err}");
+    std::fs::remove_file(dir.join("stray.jsonl")).unwrap();
+
+    // Malformed id: also a hard error, different diagnosis.
+    let junk = CellRecord::new("bogus/nonsense".into(), 1, 1);
+    write_records(&dir.join("junk.jsonl"), &[junk]).unwrap();
+    let err = validate_resume(&cells, &scan_record_dir(&dir).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not a well-formed cell id"), "{err}");
+    std::fs::remove_file(dir.join("junk.jsonl")).unwrap();
+
+    // Duplicate records across files: hard error naming the cell.
+    write_records(&dir.join("dupe.jsonl"), &recs[..1].to_vec()).unwrap();
+    let err = validate_resume(&cells, &scan_record_dir(&dir).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("duplicate records"), "{err}");
+    assert!(err.contains(&cells[0].id()), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn status_report_agrees_with_verify_coverage() {
+    let (cells, recs) = fig2_manifest_and_records();
+    let dir = tmp("status");
+
+    // Empty directory: everything missing, nothing clean.
+    let report = status_report(&cells, &scan_record_dir(&dir).unwrap());
+    assert_eq!((report.done, report.total), (0, 2));
+    assert_eq!(report.missing.len(), 2);
+    assert!(!report.clean());
+
+    // Half done: the missing id is named, coverage still fails.
+    write_records(&dir.join("fig2.shard-1-of-2.jsonl"), &recs[..1].to_vec()).unwrap();
+    let scan = scan_record_dir(&dir).unwrap();
+    let report = status_report(&cells, &scan);
+    assert_eq!((report.done, report.total), (1, 2));
+    assert_eq!(report.missing, vec![cells[1].id()]);
+    assert!(!report.clean());
+    let coverage =
+        verify_coverage(&cells, scan.records.into_iter().map(|(_, r)| r).collect::<Vec<_>>());
+    assert!(coverage.is_err(), "status says missing ⇒ coverage must fail");
+
+    // Complete: clean() ⇔ verify_coverage succeeds.
+    write_records(&dir.join("fig2.shard-2-of-2.jsonl"), &recs[1..].to_vec()).unwrap();
+    let scan = scan_record_dir(&dir).unwrap();
+    let report = status_report(&cells, &scan);
+    assert_eq!((report.done, report.total), (2, 2));
+    assert!(report.clean());
+    let rendered = report.render("'fig2'");
+    assert!(rendered.contains("2/2 cell(s) done"), "{rendered}");
+    assert!(rendered.contains("ready to `repro exp merge`"), "{rendered}");
+    verify_coverage(&cells, scan.records.into_iter().map(|(_, r)| r).collect::<Vec<_>>())
+        .expect("status says clean ⇒ coverage must pass");
+
+    // A duplicate flips both: status reports it, coverage rejects it.
+    write_records(&dir.join("dupe.jsonl"), &recs[..1].to_vec()).unwrap();
+    let scan = scan_record_dir(&dir).unwrap();
+    let report = status_report(&cells, &scan);
+    assert_eq!(report.duplicates, vec![cells[0].id()]);
+    assert!(!report.clean());
+    assert!(verify_coverage(
+        &cells,
+        scan.records.into_iter().map(|(_, r)| r).collect::<Vec<_>>()
+    )
+    .is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

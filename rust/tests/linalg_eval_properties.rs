@@ -1,0 +1,203 @@
+//! Dedicated property suites for the last linalg/eval modules without
+//! one: `linalg/hadamard.rs` (the fast Walsh–Hadamard transform under
+//! QuIP's incoherence processing) and `eval/delta.rs` (the Fig. 2
+//! per-block error diagnostic).
+
+use qep::eval::delta_per_block;
+use qep::linalg::{fwht_inplace, hadamard_conjugate, Mat, SignedHadamard};
+use qep::model::{Model, ModelConfig};
+use qep::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+// ---------------------------------------------------------------- hadamard
+
+/// Dense unnormalized Hadamard matrix H_n from the transform itself
+/// (columns = FWHT of basis vectors).
+fn dense_h(n: usize) -> Vec<Vec<f32>> {
+    let mut h = vec![vec![0.0f32; n]; n];
+    for j in 0..n {
+        let mut e = vec![0.0f32; n];
+        e[j] = 1.0;
+        fwht_inplace(&mut e);
+        for (row, &v) in h.iter_mut().zip(e.iter()) {
+            row[j] = v;
+        }
+    }
+    h
+}
+
+#[test]
+fn fwht_involution_applies_twice_to_n_times_identity() {
+    for n in [1usize, 2, 4, 8, 64] {
+        let mut rng = Rng::new(n as u64);
+        let orig = rng.normal_vec(n, 1.0);
+        let mut x = orig.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (i, (a, b)) in x.iter().zip(orig.iter()).enumerate() {
+            assert!(
+                (a - b * n as f32).abs() < 1e-3 * (1.0 + b.abs() * n as f32),
+                "n={n} index {i}: {a} vs {}",
+                b * n as f32
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_hadamard_satisfies_h_h_transpose_equals_n_identity() {
+    // All entries of H are ±1 and every dot product is a sum of ±1
+    // terms, so f32 arithmetic is exact here: assert exactly n·I.
+    for n in [2usize, 4, 8, 16] {
+        let h = dense_h(n);
+        for i in 0..n {
+            for j in 0..n {
+                assert!(h[i][j] == 1.0 || h[i][j] == -1.0, "n={n}: H[{i}][{j}]={}", h[i][j]);
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let dot: f32 = (0..n).map(|k| h[i][k] * h[j][k]).sum();
+                let want = if i == j { n as f32 } else { 0.0 };
+                assert_eq!(dot, want, "n={n}: (H·Hᵀ)[{i}][{j}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_lengths_are_rejected() {
+    for n in [0usize, 3, 6, 12, 100] {
+        let n_copy = n;
+        let r = catch_unwind(AssertUnwindSafe(move || {
+            let mut x = vec![1.0f32; n_copy];
+            fwht_inplace(&mut x);
+        }));
+        assert!(r.is_err(), "fwht_inplace must reject length {n}");
+        let r = catch_unwind(AssertUnwindSafe(move || {
+            let mut rng = Rng::new(1);
+            SignedHadamard::new(n_copy, &mut rng)
+        }));
+        assert!(r.is_err(), "SignedHadamard must reject dimension {n}");
+    }
+}
+
+#[test]
+fn signed_hadamard_is_orthogonal_for_every_size_and_seed() {
+    for n in [2usize, 8, 64] {
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(seed);
+            let q = SignedHadamard::new(n, &mut rng);
+            let orig = rng.normal_vec(n, 1.0);
+            // Norm preservation (orthogonality on a random vector)…
+            let mut x = orig.clone();
+            q.apply(&mut x);
+            let n0: f32 = orig.iter().map(|v| v * v).sum();
+            let n1: f32 = x.iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-3 * n0.max(1.0), "n={n} seed={seed}: norm drift");
+            // …and exact inversion: Qᵀ(Q x) = x.
+            q.apply_t(&mut x);
+            for (a, b) in x.iter().zip(orig.iter()) {
+                assert!((a - b).abs() < 1e-4, "n={n} seed={seed}: QᵀQ ≠ I ({a} vs {b})");
+            }
+        }
+    }
+}
+
+#[test]
+fn matrix_rotations_round_trip() {
+    let mut rng = Rng::new(7);
+    let q = SignedHadamard::new(16, &mut rng);
+    let m = Mat::randn(5, 16, 1.0, &mut rng);
+    let mut r = m.clone();
+    q.right_mul(&mut r); // M·Q
+    q.right_mul_t(&mut r); // (M·Q)·Qᵀ = M
+    for (a, b) in r.data.iter().zip(m.data.iter()) {
+        assert!((a - b).abs() < 1e-4, "right_mul/right_mul_t round trip: {a} vs {b}");
+    }
+    let m2 = Mat::randn(16, 5, 1.0, &mut rng);
+    let mut r2 = m2.clone();
+    q.left_mul(&mut r2); // Q·M
+    q.left_mul_t(&mut r2); // Qᵀ·(Q·M) = M
+    for (a, b) in r2.data.iter().zip(m2.data.iter()) {
+        assert!((a - b).abs() < 1e-4, "left_mul/left_mul_t round trip: {a} vs {b}");
+    }
+}
+
+#[test]
+fn conjugation_preserves_frobenius_norm() {
+    // Qᵀ·A·Q with orthogonal Q preserves ‖A‖_F (and, as the inline unit
+    // tests already check, the trace).
+    let mut rng = Rng::new(9);
+    let q = SignedHadamard::new(32, &mut rng);
+    let b = Mat::randn(32, 32, 1.0, &mut rng);
+    let a = qep::linalg::matmul_nt(&b, &b); // SPD-ish, symmetric
+    let c = hadamard_conjugate(&a, &q);
+    let fa = a.frob();
+    let fc = c.frob();
+    assert!((fa - fc).abs() < 1e-2 * fa, "‖A‖_F {fa} vs ‖QᵀAQ‖_F {fc}");
+}
+
+// ------------------------------------------------------------------ delta
+
+fn tiny_model(seed: u64) -> (Model, Vec<u32>) {
+    let mut cfg = ModelConfig::new("unit", 16, 4, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, seed);
+    let mut rng = Rng::new(seed ^ 0xD137);
+    let tokens: Vec<u32> = (0..8 * 8).map(|_| rng.below(256) as u32).collect();
+    (model, tokens)
+}
+
+#[test]
+fn delta_is_zero_iff_models_agree_and_is_symmetric() {
+    let (model, tokens) = tiny_model(1);
+    let d = delta_per_block(&model, &model, &tokens);
+    assert_eq!(d.len(), 4, "one Δ per block");
+    assert!(d.iter().all(|&v| v == 0.0));
+
+    let mut other = model.clone();
+    for v in other.blocks[1].wq.data.iter_mut() {
+        *v += 0.01;
+    }
+    let ab = delta_per_block(&model, &other, &tokens);
+    let ba = delta_per_block(&other, &model, &tokens);
+    assert_eq!(ab.len(), ba.len());
+    for (i, (x, y)) in ab.iter().zip(ba.iter()).enumerate() {
+        assert_eq!(x, y, "Δ_{i} not symmetric");
+    }
+    // Non-negativity comes with the squared Frobenius norm.
+    assert!(ab.iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn delta_localizes_to_the_perturbed_block_and_after() {
+    let (model, tokens) = tiny_model(2);
+    for k in 0..4usize {
+        let mut pert = model.clone();
+        let mut rng = Rng::new(100 + k as u64);
+        for v in pert.blocks[k].wq.data.iter_mut() {
+            *v += 0.05 * rng.normal_f32();
+        }
+        let d = delta_per_block(&model, &pert, &tokens);
+        for (j, &v) in d.iter().enumerate() {
+            if j < k {
+                assert_eq!(v, 0.0, "perturbing block {k} leaked into earlier Δ_{j}");
+            } else {
+                assert!(v > 0.0, "perturbing block {k} left Δ_{j} at exactly zero");
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_is_deterministic() {
+    let (model, tokens) = tiny_model(3);
+    let mut pert = model.clone();
+    for v in pert.blocks[0].wv.data.iter_mut() {
+        *v += 0.02;
+    }
+    let a = delta_per_block(&model, &pert, &tokens);
+    let b = delta_per_block(&model, &pert, &tokens);
+    assert_eq!(a, b);
+}

@@ -126,3 +126,46 @@ fn oversubscribed_thread_counts_complete() {
     });
     assert_eq!(hits.load(Ordering::Relaxed), 1000);
 }
+
+/// Best-effort extraction of a panic payload's message (panics raised via
+/// `panic!("...")` carry a `String`; literal-only panics carry `&str`).
+fn panic_message(err: &(dyn std::any::Any + Send)) -> String {
+    err.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+#[test]
+fn par_map_slot_diagnostics_name_the_job_and_pool_state() {
+    use std::sync::Mutex;
+
+    // The happy path is a plain in-order collect.
+    let slots: Vec<Mutex<Option<usize>>> = (0..4).map(|i| Mutex::new(Some(i * i))).collect();
+    assert_eq!(pool::collect_par_map_slots(slots, 8), vec![0, 1, 4, 9]);
+
+    // An unfilled slot must fail with the job index, the job count, and
+    // the pool state — not a bare `unwrap`.
+    let slots: Vec<Mutex<Option<usize>>> =
+        vec![Mutex::new(Some(10)), Mutex::new(None), Mutex::new(Some(30))];
+    let err = catch_unwind(AssertUnwindSafe(|| pool::collect_par_map_slots(slots, 4)))
+        .expect_err("unfilled slot must panic");
+    let msg = panic_message(err.as_ref());
+    assert!(msg.contains("job 1 of 3"), "{msg}");
+    assert!(msg.contains("threads=4"), "{msg}");
+    assert!(msg.contains("workers started="), "{msg}");
+
+    // A poisoned slot (a job panicked while publishing) gets its own
+    // diagnostic.
+    let slots: Vec<Mutex<Option<usize>>> = vec![Mutex::new(Some(1))];
+    let _ = catch_unwind(AssertUnwindSafe(|| {
+        let _guard = slots[0].lock().unwrap();
+        panic!("poison the slot lock");
+    }));
+    assert!(slots[0].lock().is_err(), "lock must be poisoned for this test");
+    let err = catch_unwind(AssertUnwindSafe(|| pool::collect_par_map_slots(slots, 2)))
+        .expect_err("poisoned slot must panic");
+    let msg = panic_message(err.as_ref());
+    assert!(msg.contains("slot 0 of 1 is poisoned"), "{msg}");
+    assert!(msg.contains("publishing its result"), "{msg}");
+}

@@ -1,0 +1,246 @@
+//! RTN/AWQ/QuIP counterparts to `gptq_edge_cases.rs`, plus the QEP
+//! correction's own degenerate inputs: dead calibration columns, all-zero
+//! weights, ragged group sizes, extreme weight scales, every production
+//! bit width, and the ±QEP correction path — all must produce finite
+//! outputs, and identical bytes for every global thread count (the
+//! repo's core invariant; see docs/PERFORMANCE.md).
+
+use qep::linalg::Mat;
+use qep::qep::correction::corrected_weight;
+use qep::quant::awq::Awq;
+use qep::quant::quip::Quip;
+use qep::quant::rtn::Rtn;
+use qep::quant::{LayerCtx, QuantConfig, Quantizer};
+use qep::util::pool;
+use qep::util::rng::Rng;
+
+fn gaussian_ctx(m: usize, d: usize, seed: u64) -> LayerCtx {
+    let mut rng = Rng::new(seed);
+    let x = Mat::randn(m, d, 1.0, &mut rng);
+    LayerCtx::from_activations(&x, seed, "edge")
+}
+
+/// Activations with dead (always-zero) channels — the regime that breaks
+/// naive per-channel scaling and Hessian inversion.
+fn dead_column_ctx(m: usize, d: usize, dead: &[usize], seed: u64) -> LayerCtx {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::randn(m, d, 1.0, &mut rng);
+    for t in 0..m {
+        for &c in dead {
+            *x.at_mut(t, c) = 0.0;
+        }
+    }
+    LayerCtx::from_activations(&x, seed, "dead")
+}
+
+/// Rows at wildly different magnitudes (1e-6 … 1e6), plus one zero row —
+/// per-row grids must absorb the scale spread without overflow.
+fn extreme_scale_weights(d: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut w = Mat::randn(6, d, 1.0, &mut rng);
+    let scales = [1e-6f32, 1e-2, 1.0, 1e2, 1e6, 0.0];
+    for (r, &s) in scales.iter().enumerate() {
+        for v in w.row_mut(r) {
+            *v *= s;
+        }
+    }
+    w
+}
+
+fn assert_finite(m: &Mat, label: &str) {
+    for (i, v) in m.data.iter().enumerate() {
+        assert!(v.is_finite(), "{label}: non-finite value {v} at flat index {i}");
+    }
+}
+
+fn quantizers() -> Vec<(&'static str, Box<dyn Quantizer>)> {
+    vec![
+        ("rtn", Box::new(Rtn) as Box<dyn Quantizer>),
+        ("awq", Box::new(Awq::default())),
+        ("quip", Box::new(Quip::default())),
+    ]
+}
+
+#[test]
+fn all_zero_weights_quantize_to_zero_for_every_method() {
+    // d = 32: power of two so QuIP's rotation path runs too.
+    let ctx = gaussian_ctx(128, 32, 1);
+    let w = Mat::zeros(8, 32);
+    for (name, q) in quantizers() {
+        for bits in [2u32, 3, 4] {
+            let out = q.quantize(&w, &QuantConfig::int(bits), &ctx).unwrap();
+            assert_eq!((out.rows, out.cols), (8, 32), "{name} INT{bits}");
+            assert!(
+                out.data.iter().all(|&v| v == 0.0),
+                "{name} INT{bits}: zero weights must stay exactly zero"
+            );
+        }
+    }
+}
+
+#[test]
+fn dead_calibration_columns_stay_finite_and_deterministic() {
+    let ctx = dead_column_ctx(192, 32, &[0, 7, 31], 2);
+    let mut rng = Rng::new(3);
+    let w = Mat::randn(6, 32, 1.0, &mut rng);
+    for (name, q) in quantizers() {
+        for bits in [2u32, 3, 4] {
+            let cfg = QuantConfig::int(bits);
+            let a = q.quantize(&w, &cfg, &ctx).unwrap();
+            assert_finite(&a, &format!("{name} INT{bits} dead-columns"));
+            let b = q.quantize(&w, &cfg, &ctx).unwrap();
+            assert_eq!(a, b, "{name} INT{bits}: repeat run must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn fully_dead_activations_do_not_crash_any_method() {
+    // Every calibration activation zero: the Hessian is all zeros and
+    // AWQ's channel saliencies all hit their floor. RTN ignores the ctx
+    // entirely; AWQ degenerates to (normalized) RTN; QuIP's rotated
+    // Hessian is still all-zero, so its GPTQ core pins everything to 0.
+    let x = Mat::zeros(96, 16);
+    let ctx = LayerCtx::from_activations(&x, 0, "allzero");
+    let mut rng = Rng::new(4);
+    let w = Mat::randn(5, 16, 1.0, &mut rng);
+    for (name, q) in quantizers() {
+        let out = q.quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+        assert_finite(&out, &format!("{name} fully-dead ctx"));
+        if name == "quip" {
+            assert!(
+                out.data.iter().all(|&v| v == 0.0),
+                "quip: all-dead rotated Hessian must pin every column to zero"
+            );
+        }
+    }
+}
+
+#[test]
+fn ragged_group_sizes_are_finite_and_idempotent_for_rtn() {
+    // Group length 12 on d = 32: the last group holds only 8 columns.
+    let ctx = gaussian_ctx(160, 32, 5);
+    let mut rng = Rng::new(6);
+    let w = Mat::randn(6, 32, 1.0, &mut rng);
+    for bits in [2u32, 3, 4] {
+        let cfg = QuantConfig::int_group(bits, 12);
+        for (name, q) in quantizers() {
+            let out = q.quantize(&w, &cfg, &ctx).unwrap();
+            assert_finite(&out, &format!("{name} {} ragged groups", cfg.label()));
+        }
+        // RTN's output must already lie on the ragged grid: re-quantizing
+        // is a fixed point (the per-group grids refit identically).
+        let r1 = Rtn.quantize(&w, &cfg, &ctx).unwrap();
+        let r2 = Rtn.quantize(&r1, &cfg, &ctx).unwrap();
+        for (a, b) in r1.data.iter().zip(r2.data.iter()) {
+            assert!((a - b).abs() < 1e-5, "RTN INT{bits}/g12 not a fixed point: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn extreme_weight_scales_survive_every_method() {
+    let ctx = gaussian_ctx(160, 32, 7);
+    let w = extreme_scale_weights(32, 8);
+    for (name, q) in quantizers() {
+        for bits in [2u32, 3, 4] {
+            let out = q.quantize(&w, &QuantConfig::int(bits), &ctx).unwrap();
+            assert_finite(&out, &format!("{name} INT{bits} extreme scales"));
+        }
+    }
+    // The zero row must quantize to exactly zero under RTN (its grid
+    // degenerates to a single level).
+    let r = Rtn.quantize(&w, &QuantConfig::int(3), &ctx).unwrap();
+    assert!(r.row(5).iter().all(|&v| v == 0.0), "zero row must stay zero");
+}
+
+#[test]
+fn correction_handles_degenerate_streams() {
+    let mut rng = Rng::new(9);
+    let w = Mat::randn(6, 16, 1.0, &mut rng);
+
+    // Zero upstream error: the correction term is exactly zero.
+    let x = Mat::randn(200, 16, 1.0, &mut rng);
+    let (w_star, stats) = corrected_weight(&w, &x, &x, 0.5, 1.0).unwrap();
+    assert_eq!(w_star, w, "δ = 0 must leave the weights untouched");
+    assert_eq!(stats.rel_upstream_err, 0.0);
+
+    // All-zero streams: Ĥ is pure damping, δ = 0, still exact identity.
+    let z = Mat::zeros(200, 16);
+    let (w_star, _) = corrected_weight(&w, &z, &z, 1.0, 1.0).unwrap();
+    assert_eq!(w_star, w);
+
+    // Dead columns in the quantized stream only: damping keeps the solve
+    // alive and the output finite.
+    let mut x_hat = x.clone();
+    for t in 0..x_hat.rows {
+        *x_hat.at_mut(t, 3) = 0.0;
+        *x_hat.at_mut(t, 11) = 0.0;
+    }
+    let (w_star, stats) = corrected_weight(&w, &x, &x_hat, 0.5, 1.0).unwrap();
+    assert_finite(&w_star, "correction with dead x̂ columns");
+    assert!(stats.rel_correction.is_finite());
+
+    // Extreme-magnitude streams stay inside f32/f64 range end to end.
+    let mut x_big = x.clone();
+    let mut xh_big = x_hat.clone();
+    for v in x_big.data.iter_mut() {
+        *v *= 1e4;
+    }
+    for v in xh_big.data.iter_mut() {
+        *v *= 1e4;
+    }
+    let (w_star, _) = corrected_weight(&w, &x_big, &xh_big, 1.0, 1.0).unwrap();
+    assert_finite(&w_star, "correction with 1e4-scaled streams");
+}
+
+/// The ONLY test in this binary that touches the process-wide thread
+/// setting (the GEMMs under every method and under the correction's
+/// Hessian/solve read the global pool). Keeping every
+/// `set_global_threads` call inside one `#[test]` means the forced-serial
+/// leg cannot be overwritten by a concurrently running test (cargo's
+/// default harness runs tests in parallel threads of one process).
+#[test]
+fn methods_and_correction_are_bit_identical_across_thread_counts() {
+    let ctx = dead_column_ctx(256, 32, &[5], 10);
+    let mut rng = Rng::new(11);
+    let w = Mat::randn(8, 32, 1.0, &mut rng);
+    let x = Mat::randn(256, 32, 1.0, &mut rng);
+    let mut x_hat = x.clone();
+    for v in x_hat.data.iter_mut() {
+        *v += 0.05 * rng.normal_f32();
+    }
+
+    let run_all = || {
+        let mut outs: Vec<(String, Mat)> = Vec::new();
+        for (name, q) in quantizers() {
+            for bits in [2u32, 3] {
+                let cfg = QuantConfig::int(bits);
+                // Base path…
+                outs.push((
+                    format!("{name} INT{bits} base"),
+                    q.quantize(&w, &cfg, &ctx).unwrap(),
+                ));
+                // …and the +QEP path: correct first, then quantize, as
+                // the pipeline does.
+                let (w_star, _) = corrected_weight(&w, &x, &x_hat, 0.5, 1.0).unwrap();
+                outs.push((
+                    format!("{name} INT{bits} +qep"),
+                    q.quantize(&w_star, &cfg, &ctx).unwrap(),
+                ));
+            }
+        }
+        outs
+    };
+
+    pool::set_global_threads(1);
+    let serial = run_all();
+    pool::set_global_threads(4);
+    let pooled = run_all();
+    pool::set_global_threads(0);
+
+    assert_eq!(serial.len(), pooled.len());
+    for ((label, a), (_, b)) in serial.iter().zip(pooled.iter()) {
+        assert_eq!(a, b, "{label}: output differs between --threads 1 and --threads 4");
+    }
+}

@@ -1,70 +1,44 @@
-//! **What this example demonstrates:** the *serving* story — batched
-//! greedy generation from a QEP-quantized tiny-s model, reported like a
-//! serving-paper harness (per-request latency, aggregate throughput).
-//! Block-0's attention projections are wrapped as quantized
-//! codes+grids layers; with the `pjrt` cargo feature (and `make
-//! artifacts`) every step additionally runs them through the **Pallas
-//! fused dequant×matmul artifact on PJRT** and cross-checks it against
-//! the pure-Rust dequant·matmul — Python nowhere in sight. The default
-//! (feature-less) build serves through the pure-Rust path alone, so the
-//! example builds and runs everywhere.
+//! **What this example demonstrates:** the *serving* story end to end —
+//! a QEP-quantized tiny-s model served by the batched KV-cache engine
+//! (`qep::serve`): continuous-batching scheduler over per-session caches,
+//! every block linear running the fused dequantize×GEMM micro-kernels
+//! straight off the packed codes, and the bit-identity cross-check that
+//! makes the speedup trustworthy — the same prompts are re-served through
+//! the engine's *dense twin* (identical grid weights, materialized to
+//! f32) and the generated tokens must match exactly. Quantization here
+//! buys memory traffic, never bits.
 //!
-//! The generation loop itself runs on the persistent worker pool
-//! (GEMMs dispatch through `util::pool`), so this is also the latency
-//! profile of the parallel engine end to end.
+//! Greedy sampling uses the shared NaN-safe argmax (`qep::serve::argmax`)
+//! and special tokens end a request explicitly ([`FinishReason`]) instead
+//! of being clamped into byte range — both former footguns of this
+//! example.
 //!
 //! Run: `cargo run --release --example serve_generate`
-//! (PJRT path: `make artifacts && cargo run --release --features pjrt
-//! --example serve_generate`.)
+//! (the Pallas/PJRT cross-check of the same fused-qmm math lives in
+//! `tests/pjrt_crosscheck.rs` behind `--features pjrt`).
 
 use anyhow::Result;
 use qep::coordinator::{Pipeline, PipelineConfig};
-use qep::linalg::Mat;
-use qep::model::{Forward, Size};
-use qep::quant::{Method, QuantConfig, QuantizedTensor};
+use qep::model::Size;
+use qep::quant::{Method, QuantConfig};
 use qep::runtime::ArtifactRegistry;
-#[cfg(feature = "pjrt")]
-use qep::runtime::executor::{literal_to_mat, mat_to_literal};
-#[cfg(feature = "pjrt")]
-use qep::runtime::{HloExecutable, PjrtRuntime};
+use qep::serve::{Completion, FinishReason, Scheduler, ServeConfig, ServeModel};
 use qep::text::{ByteTokenizer, Flavor};
-use qep::util::{stats, Stopwatch};
+use qep::util::pool::Pool;
+use qep::util::Stopwatch;
 
-/// One attention projection served from quantized codes + per-group
-/// grids (the `.qtz`/Pallas storage layout).
-#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
-struct QmmLayer {
-    codes: Mat,
-    scales: Mat,
-    zeros: Mat,
-    /// Dequantized reference weights (what the codes decode to) — the
-    /// pure-Rust serving path and the PJRT cross-check target.
-    dequant: Mat,
-}
-
-impl QmmLayer {
-    fn new(w: &Mat, cfg: &QuantConfig) -> QmmLayer {
-        let qt = QuantizedTensor::from_mat(w, cfg);
-        let ng = qt.n_groups();
-        QmmLayer {
-            codes: Mat::from_vec(qt.rows, qt.cols, qt.codes.iter().map(|&c| c as f32).collect()),
-            scales: Mat::from_vec(qt.rows, ng, qt.scales.clone()),
-            zeros: Mat::from_vec(qt.rows, ng, qt.zeros.clone()),
-            dequant: qt.dequantize(),
-        }
+fn serve(model: ServeModel, prompts: &[Vec<u32>]) -> Result<(Vec<Completion>, f64)> {
+    let mut sched = Scheduler::new(
+        model,
+        ServeConfig { max_batch: 4, max_new_tokens: 48 },
+        Pool::new(0), // process-global default (all cores)
+    );
+    for p in prompts {
+        sched.submit(p)?;
     }
-
-    /// Serve through the compiled Pallas fused dequant×matmul artifact.
-    #[cfg(feature = "pjrt")]
-    fn run(&self, exe: &HloExecutable, x: &Mat) -> Result<Mat> {
-        let out = exe.run(&[
-            mat_to_literal(x)?,
-            mat_to_literal(&self.codes)?,
-            mat_to_literal(&self.scales)?,
-            mat_to_literal(&self.zeros)?,
-        ])?;
-        literal_to_mat(&out[0])
-    }
+    let t = Stopwatch::start();
+    let done = sched.run();
+    Ok((done, t.seconds()))
 }
 
 fn main() -> Result<()> {
@@ -72,7 +46,7 @@ fn main() -> Result<()> {
     let model = reg.load_model(Size::TinyS.name())?;
     let corpus = reg.load_corpus(Flavor::Wiki)?;
 
-    // Quantize with QEP+GPTQ INT4g32 (the qmm artifact's group contract).
+    // Quantize with QEP+GPTQ INT4g32, then pack the result for serving.
     let calib = &corpus.tokens[..16 * model.cfg.seq_len];
     let qcfg = QuantConfig::int_group(4, 32);
     let out = Pipeline::new(PipelineConfig {
@@ -82,109 +56,53 @@ fn main() -> Result<()> {
         ..Default::default()
     })
     .run(&model, calib)?;
-    let qmodel = out.model;
+    let packed = ServeModel::quantized(&out.model, &qcfg);
+    let dense = packed.dequantized();
 
-    // With the `pjrt` feature + artifacts, bind the Pallas qmm executable
-    // for the per-step cross-check; the default build serves pure-Rust.
-    #[cfg(feature = "pjrt")]
-    let (_rt, qmm) = {
-        let rt = PjrtRuntime::cpu()?;
-        let exe = rt.load(reg.qmm_hlo(&model.cfg.name))?;
-        println!("PJRT platform: {}; qmm artifact: {}", rt.platform(), exe.name);
-        (rt, exe)
-    };
-    #[cfg(not(feature = "pjrt"))]
-    println!("PJRT disabled at build time (enable with --features pjrt); pure-Rust serving only");
-
-    // Wrap block-0's q/k/v/o projections as quantized served layers.
-    let b0 = &qmodel.blocks[0];
-    let layers = [
-        ("wq", QmmLayer::new(&b0.wq, &qcfg)),
-        ("wk", QmmLayer::new(&b0.wk, &qcfg)),
-        ("wv", QmmLayer::new(&b0.wv, &qcfg)),
-        ("wo", QmmLayer::new(&b0.wo, &qcfg)),
-    ];
-
-    // Batched "requests": prompts drawn from the corpus; generation is
-    // greedy over the full quantized model (pure-Rust forward) while the
-    // served path handles block-0 attention projections every step.
+    // Batched "requests": prompts drawn from the corpus.
     let tok = ByteTokenizer;
-    let prompts: Vec<String> = (0..8)
-        .map(|i| corpus.text[i * 500..i * 500 + 64].to_string())
+    let prompts: Vec<Vec<u32>> = (0..8)
+        .map(|i| tok.encode(&corpus.text[i * 500..i * 500 + 64]))
         .collect();
-    let f = Forward::new(&qmodel.cfg);
-    let gen_len = 32;
-    let mut latencies = Vec::new();
-    let total = Stopwatch::start();
-    let mut generated_tokens = 0usize;
 
-    for (ri, prompt) in prompts.iter().enumerate() {
-        let t = Stopwatch::start();
-        let mut ids = tok.encode(prompt);
-        for _ in 0..gen_len {
-            // Build one full segment (pad with PAD after current ids).
-            let real = ids.len().min(qmodel.cfg.seq_len);
-            let mut seg = ids[ids.len() - real..].to_vec();
-            seg.resize(qmodel.cfg.seq_len, qep::text::PAD);
+    let (quant_done, quant_s) = serve(packed, &prompts)?;
+    let (dense_done, dense_s) = serve(dense, &prompts)?;
 
-            // Serve block-0's q-projection from the quantized layer (and,
-            // with `pjrt`, cross-check it against the Pallas artifact).
-            let x = f.embed(&qmodel, &seg);
-            let attn_in = qep::model::ops::rmsnorm(&x, &qmodel.blocks[0].attn_norm);
-            let q_rust = qep::model::ops::linear(&attn_in, &layers[0].1.dequant);
-            #[cfg(feature = "pjrt")]
-            {
-                let q_pjrt = layers[0].1.run(&qmm, &attn_in)?;
-                let rel = q_pjrt.sub(&q_rust).frob() / q_rust.frob().max(1e-12);
-                assert!(rel < 1e-4, "Pallas/Rust divergence: {rel}");
-            }
-            qep::util::bench::black_box(&q_rust);
+    // The cross-check: packed serving must generate EXACTLY the dense
+    // twin's tokens (the fused kernel is bitwise dequantize-then-matmul).
+    for (q, d) in quant_done.iter().zip(dense_done.iter()) {
+        assert_eq!(q.tokens, d.tokens, "req {}: packed/dense divergence", q.id);
+        assert_eq!(q.finish, d.finish, "req {}", q.id);
+    }
 
-            // Greedy next token from the full forward.
-            let logits = f.forward(&qmodel, &seg);
-            let row = logits.row(real - 1);
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as u32)
-                .unwrap();
-            if next == qep::text::EOS {
-                break;
-            }
-            ids.push(next.min(255));
-            generated_tokens += 1;
-        }
-        let ms = t.millis();
-        latencies.push(ms);
-        let text = tok.decode(&ids[prompt.len()..]);
+    let generated: usize = quant_done.iter().map(|c| c.tokens.len()).sum();
+    for c in &quant_done {
+        let text = tok.decode(&c.tokens);
+        let fin = match c.finish {
+            FinishReason::Eos => "eos".to_string(),
+            FinishReason::Special(id) => format!("special({id})"),
+            FinishReason::Length => "length".to_string(),
+        };
         println!(
-            "req {ri}: {:5.0}ms  …{}",
-            ms,
+            "req {}: {:2} tokens [{fin}]  …{}",
+            c.id,
+            c.tokens.len(),
             text.chars().take(48).collect::<String>().replace('\n', "¶")
         );
     }
 
-    let wall = total.seconds();
     println!("\n— serving report ————————————————————————");
     println!("requests:        {}", prompts.len());
-    println!("generated:       {generated_tokens} tokens");
-    println!("throughput:      {:.1} tok/s", generated_tokens as f64 / wall);
+    println!("generated:       {generated} tokens (packed ≡ dense, cross-checked)");
     println!(
-        "latency:         mean {:.0}ms  p50 {:.0}ms  p90 {:.0}ms",
-        stats::mean(&latencies),
-        stats::percentile(&latencies, 50.0),
-        stats::percentile(&latencies, 90.0)
+        "quantized INT4g32: {:6.1} tok/s  ({quant_s:.2}s wall)",
+        generated as f64 / quant_s
     );
-    #[cfg(feature = "pjrt")]
     println!(
-        "(every step cross-checked Pallas qmm vs pure-Rust dequant·matmul, {} layers bound)",
-        layers.len()
+        "dense f32 twin:    {:6.1} tok/s  ({dense_s:.2}s wall)",
+        generated as f64 / dense_s
     );
-    #[cfg(not(feature = "pjrt"))]
-    println!(
-        "(served via pure-Rust dequant·matmul, {} layers bound; `--features pjrt` adds the Pallas cross-check)",
-        layers.len()
-    );
+    println!("speedup:           {:.2}×", dense_s / quant_s);
+    qep::util::pool::shutdown();
     Ok(())
 }

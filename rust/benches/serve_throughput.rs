@@ -1,0 +1,136 @@
+//! Serving throughput: batched KV-cache decode, dense f32 vs packed
+//! INT4g32 through the fused dequantize×GEMM kernels, at batch widths
+//! N ∈ {1, 4, 16}. Reports single-stream and aggregate tokens/sec plus
+//! the quantized-vs-f32 single-stream speedup, and persists the
+//! machine-readable trajectory point to `BENCH_serve.json` (schema
+//! self-validated by re-parsing before exit; CI runs this under
+//! `BENCH_SMOKE=1` and gates on the file).
+//!
+//! Measurement is at the *engine* level — `decode_step_batch` in a loop
+//! feeding fixed synthetic tokens, sampling bypassed — so the dense and
+//! quantized engines do byte-for-byte the same amount of decoding work
+//! regardless of what random-weight logits would sample. Weights come
+//! from `Model::random` (tiny-l by default): serving throughput depends
+//! on shapes and memory traffic, not on training.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use qep::model::{Model, Size};
+use qep::quant::QuantConfig;
+use qep::serve::{KvCache, ServeModel};
+use qep::util::bench::{black_box, smoke};
+use qep::util::json::Json;
+use qep::util::pool::Pool;
+use qep::util::Stopwatch;
+
+/// Decode-phase seconds for `gen` batched steps over `n` sessions
+/// (prefill excluded from the timed region).
+fn decode_secs(sm: &ServeModel, n: usize, prompt_len: usize, gen: usize, pool: &Pool) -> f64 {
+    let prompt: Vec<u32> = (0..prompt_len).map(|i| (i % 200) as u32).collect();
+    let mut caches: Vec<KvCache> = (0..n).map(|_| sm.new_cache()).collect();
+    for c in caches.iter_mut() {
+        sm.prefill(c, &prompt, pool);
+    }
+    let t = Stopwatch::start();
+    for step in 0..gen {
+        let toks = vec![(step % 200) as u32; n];
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        black_box(sm.decode_step_batch(&mut refs, &toks, pool));
+    }
+    t.seconds()
+}
+
+/// Best-of-`reps` tokens/sec (fresh caches each rep).
+fn tok_s(sm: &ServeModel, n: usize, prompt_len: usize, gen: usize, reps: usize, pool: &Pool) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        best = best.min(decode_secs(sm, n, prompt_len, gen, pool));
+    }
+    (n * gen) as f64 / best.max(1e-9)
+}
+
+fn main() {
+    let smoke = smoke();
+    // Smoke shrinks everything to prove-it-runs size; real sessions use
+    // tiny-l, whose f32 weights (~21 MB) actually spill cache so the
+    // INT4 traffic saving shows up in the clock.
+    let (size, prompt_len, gen, reps, widths): (Size, usize, usize, usize, &[usize]) = if smoke {
+        (Size::TinyS, 4, 4, 1, &[1, 4])
+    } else {
+        (Size::TinyL, 16, 96, 3, &[1, 4, 16])
+    };
+    let model = Model::random(&size.config(), 1);
+    let qcfg = QuantConfig::int_group(4, 32);
+    let engines = [
+        ("f32", ServeModel::from_model(&model)),
+        ("int4g32", ServeModel::quantized(&model, &qcfg)),
+    ];
+    let pool = Pool::new(0);
+
+    println!(
+        "# serve_throughput: {} (dim={} layers={} seq={}), prefill {prompt_len} + {gen} decode steps, best of {reps}",
+        model.cfg.name, model.cfg.dim, model.cfg.n_layers, model.cfg.seq_len
+    );
+    if smoke {
+        println!("# BENCH_SMOKE: shrunk sizes — numbers are meaningless");
+    }
+    println!("{:<22} {:>10} {:>14} {:>14}", "config", "sessions", "agg tok/s", "tok/s/stream");
+
+    let mut results = Vec::new();
+    let mut single = [0.0f64; 2]; // [f32, quantized] @ n=1
+    for (qi, (qname, sm)) in engines.iter().enumerate() {
+        for &n in widths {
+            let rate = tok_s(sm, n, prompt_len, gen, reps, &pool);
+            println!("{:<22} {:>10} {:>14.1} {:>14.1}", *qname, n, rate, rate / n as f64);
+            if n == 1 {
+                single[qi] = rate;
+            }
+            let mut r = Json::obj();
+            r.set("name", Json::Str(format!("{qname} n={n}")));
+            r.set("sessions", Json::Num(n as f64));
+            r.set("quantized", Json::Bool(qi == 1));
+            r.set("tok_s", Json::Num(rate));
+            results.push(r);
+        }
+    }
+    let speedup = single[1] / single[0].max(1e-9);
+    println!("\nsingle-stream speedup (int4g32 vs f32): {speedup:.2}×");
+
+    // Trajectory point: schema gated by CI (smoke numbers are flagged so
+    // downstream tooling never treats them as measurements).
+    let mut doc = Json::obj();
+    doc.set("schema_version", Json::Num(1.0));
+    doc.set("bench", Json::Str("serve_throughput".into()));
+    doc.set("model", Json::Str(model.cfg.name.clone()));
+    doc.set("quant", Json::Str("int4g32".into()));
+    doc.set("smoke", Json::Bool(smoke));
+    doc.set("prompt_len", Json::Num(prompt_len as f64));
+    doc.set("gen", Json::Num(gen as f64));
+    doc.set("results", Json::Arr(results));
+    doc.set("speedup_single_stream", Json::Num(speedup));
+    let text = doc.dump();
+    std::fs::write("BENCH_serve.json", &text).expect("write BENCH_serve.json");
+
+    // Self-validate: re-parse and check the keys CI's gate relies on, so
+    // a schema break fails here first (exit code, not just a log line).
+    let back = Json::parse(&text).expect("BENCH_serve.json must re-parse");
+    for key in [
+        "schema_version",
+        "bench",
+        "model",
+        "smoke",
+        "results",
+        "speedup_single_stream",
+    ] {
+        assert!(back.get(key).is_some(), "BENCH_serve.json missing key '{key}'");
+    }
+    let n_results = back.get("results").and_then(|r| r.as_arr()).map_or(0, |a| a.len());
+    assert_eq!(n_results, 2 * widths.len(), "one result per engine × width");
+    let sp = back
+        .get("speedup_single_stream")
+        .and_then(Json::as_f64)
+        .expect("speedup must be a number");
+    assert!(sp.is_finite() && sp > 0.0, "speedup must be positive, got {sp}");
+    println!("wrote BENCH_serve.json ({} bytes, schema ok)", text.len());
+    qep::util::pool::shutdown();
+}

@@ -43,14 +43,18 @@
 //! whose trailing SYRK update runs through the register-tile
 //! micro-kernels in [`linalg::micro`]), per-layer pipeline fan-out
 //! ([`coordinator`]), GPTQ row sweeps, batched perplexity/task evaluation
-//! ([`eval`]), and sharded experiment sweeps ([`exp`] — staged
+//! ([`eval`]), sharded experiment sweeps ([`exp`] — staged
 //! enumerate→run→render, distributable across processes/machines via
-//! `repro exp --shard i/N` + `repro exp merge`). The invariant every one
-//! of these upholds — and that new code MUST uphold — is:
+//! `repro exp --shard i/N` + `repro exp merge`), and the batched serving
+//! engine ([`serve`] — KV-cached continuous batching whose quantized
+//! linears run the fused dequantize×GEMM kernels in [`linalg::qgemm`]).
+//! The invariant every one of these upholds — and that new code MUST
+//! uphold — is:
 //!
 //! > **Results are bit-identical for every thread count** (and, for the
 //! > blocked SPD engine, every block size; for the micro-kernels, every
-//! > tile width; for sharded sweeps, every shard split). Workers own
+//! > tile width; for sharded sweeps, every shard split; for serving,
+//! > every batch composition). Workers own
 //! > disjoint output regions, every floating-point reduction has a fixed
 //! > order, and all randomness derives from stable names
 //! > ([`util::fnv1a`]), never from scheduling.
@@ -82,5 +86,6 @@ pub mod model;
 pub mod qep;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod text;
 pub mod util;

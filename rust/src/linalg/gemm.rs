@@ -59,8 +59,12 @@ pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
 /// accumulator chains defeat the vectorizer); transposing B once and
 /// dispatching to the axpy-style [`matmul_serial`] kernel runs at
 /// ~7.5 GFLOP/s. The transpose is O(n·k) against O(m·n·k) multiply work,
-/// negligible for every shape the model uses (m ≥ 128). For tiny m we keep
-/// the dot path.
+/// negligible for every shape the model uses (m ≥ 128). For tiny m
+/// (serving's single-token decode rows) we keep a GEMV-style path —
+/// canonicalized onto the same per-element operation order as the wide
+/// path, so both produce identical bits for every row (the KV-cache
+/// decode ≡ full-recompute gate in `tests/serve_engine.rs` rests on
+/// this).
 pub fn matmul_nt_serial(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
     if a.rows >= 8 {
@@ -125,17 +129,31 @@ pub(crate) fn matmul_tn_block(a: &Mat, b: &Mat, c: &mut [f32], r0: usize, r1: us
     }
 }
 
-/// Dot-product path for skinny `matmul_nt` (m < 8), where the transpose
-/// overhead is not amortized.
+/// GEMV path for skinny `matmul_nt` (m < 8), where the transpose
+/// overhead is not amortized. Runs through the 8-wide GEMV dot tile
+/// ([`micro::dot8_f32`] + the [`micro::dot1_f32`] tail), whose
+/// per-element chain — ascending `k`, skipping `a[i][k] == 0.0` — is
+/// exactly [`matmul_block`]'s. `matmul_nt` therefore has ONE canonical
+/// per-element order for every `m`: a 1-row decode step and a
+/// seq_len-row training pass produce identical bits row-for-row.
 pub(crate) fn matmul_nt_small(a: &Mat, b: &Mat) -> Mat {
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Mat::zeros(m, n);
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            crow[j] = dot(arow, brow);
+        let mut j = 0;
+        while j + 8 <= n {
+            let bv: [&[f32]; 8] =
+                std::array::from_fn(|l| &b.data[(j + l) * k..(j + l + 1) * k]);
+            let mut acc = [0.0f32; 8];
+            micro::dot8_f32(arow, bv, &mut acc);
+            crow[j..j + 8].copy_from_slice(&acc);
+            j += 8;
+        }
+        while j < n {
+            crow[j] = micro::dot1_f32(arow, &b.data[j * k..(j + 1) * k], 0.0);
+            j += 1;
         }
     }
     c
@@ -231,6 +249,33 @@ mod tests {
         assert_eq!(matmul_nt(&a, &bt), matmul_nt_serial(&a, &bt));
         let x = Mat::randn(300, 72, 1.0, &mut rng);
         assert_eq!(matmul_tn(&x, &x), matmul_tn_serial(&x, &x));
+    }
+
+    #[test]
+    fn nt_small_path_matches_wide_path_per_row_bitwise() {
+        // The keystone of KV-cache decode ≡ full recompute: the skinny
+        // GEMV path (m < 8) and the wide transpose path (m ≥ 8) must
+        // produce identical bits row-for-row, so a 1-row decode linear
+        // reproduces the corresponding row of the full-segment linear.
+        let mut rng = Rng::new(9);
+        let mut a = Mat::randn(8, 40, 1.0, &mut rng);
+        // Plant exact zeros to exercise the shared skip branch.
+        for (i, v) in a.data.iter_mut().enumerate() {
+            if i % 6 == 1 {
+                *v = 0.0;
+            }
+        }
+        let b = Mat::randn(29, 40, 1.0, &mut rng);
+        let wide = matmul_nt_serial(&a, &b); // m = 8 → transpose path
+        for i in 0..a.rows {
+            let ai = Mat::from_vec(1, a.cols, a.data[i * a.cols..(i + 1) * a.cols].to_vec());
+            let got = matmul_nt_serial(&ai, &b); // m = 1 → GEMV path
+            assert_eq!(&got.data[..], &wide.data[i * b.rows..(i + 1) * b.rows], "row {i}");
+        }
+        // And a mid-size skinny m, exercising both tile and tail columns.
+        let a3 = Mat::from_vec(3, a.cols, a.data[..3 * a.cols].to_vec());
+        let got3 = matmul_nt_serial(&a3, &b);
+        assert_eq!(&got3.data[..], &wide.data[..3 * b.rows]);
     }
 
     #[test]

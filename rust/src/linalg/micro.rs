@@ -17,7 +17,7 @@
 //! independent mul-add chain per lane — SIMD across lanes, scalar-exact
 //! order within each lane.
 //!
-//! Two tile shapes cover everything the repo does:
+//! Three tile shapes cover everything the repo does:
 //!
 //! * **Axpy tiles** (`axpy_*`): `y[j] (+|-)= a·x[j]` over a contiguous
 //!   slice. Purely element-wise, so tiling is *trivially* bit-identical —
@@ -30,6 +30,15 @@
 //!   Cholesky performs — while the four chains are mutually independent,
 //!   which is what lets the vectorizer keep four FMA lanes busy where the
 //!   scalar loop had one serial dependency chain.
+//! * **GEMV dot tiles** (`dot8_f32` / `qdot8_f32`): eight output-column
+//!   accumulators of an `x·Wᵀ` row advanced in lock-step over `k`, each
+//!   chain in the *exact* per-element order of [`super::gemm`]'s blocked
+//!   kernel — ascending `k` with the `x[k] == 0.0` skip — so the skinny
+//!   decode path (`m < 8`) produces the same bits as the wide training
+//!   path for every row. The `qdot*` twins fuse dequantization of packed
+//!   low-bit codes (`(code − zero)·scale`) into the same chain, making
+//!   the fused quantized GEMM ([`super::qgemm`]) bit-identical to
+//!   dequantize-then-matmul by construction.
 //!
 //! `benches/linalg_hotpath.rs` reports the micro-kernel-vs-scalar speedup
 //! on the SYRK shapes the compensation hot path actually sees (n = 512 and
@@ -139,6 +148,96 @@ pub fn dot1_sub_f64(a: &[f64], b: &[f64], acc: f64) -> f64 {
     let mut v = acc;
     for k in 0..n {
         v -= a[k] * b[k];
+    }
+    v
+}
+
+/// Eight `x·Wᵀ` output elements at once: `acc[l] += Σ_k x[k]·b_l[k]`
+/// with every chain in ascending `k`, one rounding per term, and terms
+/// where `x[k] == 0.0` skipped — the exact per-element order of the
+/// blocked GEMM kernel (`gemm::matmul_block` runs `if av == 0.0 {
+/// continue; }` before its inner axpy). Substituting this tile for
+/// eight consecutive output columns of a skinny `x·Wᵀ` row is therefore
+/// bit-identical to the wide transpose path for every input, which is
+/// what makes a 1-row decode step reproduce the training-path bits.
+///
+/// All of `b` must be at least `x.len()` long.
+#[inline]
+pub fn dot8_f32(x: &[f32], b: [&[f32]; 8], acc: &mut [f32; 8]) {
+    let n = x.len();
+    // Equal-length views so the compiler can hoist all bounds checks.
+    let b = b.map(|bl| &bl[..n]);
+    let mut v = *acc;
+    for k in 0..n {
+        let xk = x[k];
+        if xk == 0.0 {
+            continue;
+        }
+        for l in 0..8 {
+            v[l] += xk * b[l][k];
+        }
+    }
+    *acc = v;
+}
+
+/// Scalar twin of [`dot8_f32`] for the ragged column tail: one chain
+/// `acc += Σ_k x[k]·b[k]`, ascending `k`, skipping `x[k] == 0.0`.
+#[inline]
+pub fn dot1_f32(x: &[f32], b: &[f32], acc: f32) -> f32 {
+    let n = x.len();
+    let b = &b[..n];
+    let mut v = acc;
+    for k in 0..n {
+        let xk = x[k];
+        if xk == 0.0 {
+            continue;
+        }
+        v += xk * b[k];
+    }
+    v
+}
+
+/// The fused dequantize×GEMV tile: eight output elements of `x·dq(W)ᵀ`
+/// where row `l` of the weight tile is stored as packed codes `c[l]`
+/// with one `(scale, zero)` pair for the whole `k` range (one
+/// quantization group — [`super::qgemm`] walks groups in ascending-`k`
+/// order and calls this once per group).
+///
+/// Each lane's chain is `acc[l] += x[k] · ((c[l][k] as f32 − z[l]) ·
+/// s[l])` in ascending `k`, skipping `x[k] == 0.0` — term-for-term the
+/// bits of first materializing `dq = (code − zero)·scale` (exactly
+/// `QuantizedTensor::dequantize`'s expression) and then running the
+/// dense kernel's chain `acc += x[k]·dq`. Rust never contracts `a·b + c`
+/// into an FMA on its own, so the rounding sequence is identical.
+#[inline]
+pub fn qdot8_f32(x: &[f32], c: [&[u8]; 8], s: &[f32; 8], z: &[f32; 8], acc: &mut [f32; 8]) {
+    let n = x.len();
+    let c = c.map(|cl| &cl[..n]);
+    let mut v = *acc;
+    for k in 0..n {
+        let xk = x[k];
+        if xk == 0.0 {
+            continue;
+        }
+        for l in 0..8 {
+            v[l] += xk * ((c[l][k] as f32 - z[l]) * s[l]);
+        }
+    }
+    *acc = v;
+}
+
+/// Scalar twin of [`qdot8_f32`] for the ragged column tail.
+#[inline]
+pub fn qdot1_f32(x: &[f32], c: &[u8], s: f32, z: f32, acc: f32) -> f32 {
+    let n = x.len();
+    let c = &c[..n];
+    let mut v = acc;
+    for k in 0..n {
+        let xk = x[k];
+        if xk == 0.0 {
+            continue;
+        }
+        v += xk * ((c[k] as f32 - z) * s);
     }
     v
 }
@@ -307,6 +406,83 @@ mod tests {
                         "rows={rows} j0={j0} j={j}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dot8_matches_eight_scalar_chains_bitwise() {
+        let mut rng = Rng::new(5);
+        for k in [0usize, 1, 2, 7, 33, 64, 129] {
+            let mut x = vec_f32(k, &mut rng);
+            // Plant exact zeros so the skip branch is exercised.
+            for (i, v) in x.iter_mut().enumerate() {
+                if i % 5 == 2 {
+                    *v = 0.0;
+                }
+            }
+            let bs: Vec<Vec<f32>> = (0..8).map(|_| vec_f32(k, &mut rng)).collect();
+            let init = vec_f32(8, &mut rng);
+
+            let mut acc: [f32; 8] = init.clone().try_into().unwrap();
+            let views: [&[f32]; 8] = std::array::from_fn(|l| bs[l].as_slice());
+            dot8_f32(&x, views, &mut acc);
+
+            for (l, b) in bs.iter().enumerate() {
+                let mut want = init[l];
+                for kk in 0..k {
+                    if x[kk] == 0.0 {
+                        continue;
+                    }
+                    want += x[kk] * b[kk];
+                }
+                assert_eq!(acc[l].to_bits(), want.to_bits(), "k={k} lane {l}");
+                assert_eq!(
+                    dot1_f32(&x, b, init[l]).to_bits(),
+                    want.to_bits(),
+                    "dot1 k={k} lane {l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qdot8_matches_dequantize_then_scalar_chain_bitwise() {
+        let mut rng = Rng::new(6);
+        for k in [0usize, 1, 3, 8, 32, 65, 100] {
+            let mut x = vec_f32(k, &mut rng);
+            for (i, v) in x.iter_mut().enumerate() {
+                if i % 7 == 3 {
+                    *v = 0.0;
+                }
+            }
+            let codes: Vec<Vec<u8>> =
+                (0..8).map(|_| (0..k).map(|_| rng.below(16) as u8).collect()).collect();
+            let s: [f32; 8] = std::array::from_fn(|_| rng.normal().abs() as f32 + 0.01);
+            let z: [f32; 8] = std::array::from_fn(|_| rng.below(16) as f32);
+            let init = vec_f32(8, &mut rng);
+
+            let mut acc: [f32; 8] = init.clone().try_into().unwrap();
+            let views: [&[u8]; 8] = std::array::from_fn(|l| codes[l].as_slice());
+            qdot8_f32(&x, views, &s, &z, &mut acc);
+
+            for (l, c) in codes.iter().enumerate() {
+                // Reference: materialize the dequantized row, then run the
+                // dense kernel's chain over it.
+                let dq: Vec<f32> = c.iter().map(|&q| (q as f32 - z[l]) * s[l]).collect();
+                let mut want = init[l];
+                for kk in 0..k {
+                    if x[kk] == 0.0 {
+                        continue;
+                    }
+                    want += x[kk] * dq[kk];
+                }
+                assert_eq!(acc[l].to_bits(), want.to_bits(), "k={k} lane {l}");
+                assert_eq!(
+                    qdot1_f32(&x, c, s[l], z[l], init[l]).to_bits(),
+                    want.to_bits(),
+                    "qdot1 k={k} lane {l}"
+                );
             }
         }
     }

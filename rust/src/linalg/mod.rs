@@ -23,6 +23,7 @@ pub mod hadamard;
 pub mod mat;
 pub mod micro;
 pub mod par;
+pub mod qgemm;
 
 pub use chol::{
     cholesky_in_place, cholesky_in_place_with, cholesky_unblocked, solve_lower,
@@ -34,3 +35,4 @@ pub use gemm::{matmul, matmul_nt, matmul_nt_serial, matmul_serial, matmul_tn, ma
 pub use hadamard::{fwht_inplace, hadamard_conjugate, hadamard_rows, SignedHadamard};
 pub use mat::{Mat, Mat64};
 pub use par::{matmul_nt_with, matmul_tn_with, matmul_with};
+pub use qgemm::{qgemm_nt, qgemm_nt_serial, qgemm_nt_with, QWeightView};

@@ -53,7 +53,9 @@ pub fn matmul_with(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
 
 /// C = A[m,k] · B[n,k]ᵀ on `pool`. Bit-identical to
 /// [`gemm::matmul_nt_serial`]: both transpose B once (m ≥ 8) and reuse the
-/// row-chunk matmul kernel; the skinny dot path stays serial.
+/// row-chunk matmul kernel; the skinny GEMV path (m < 8) stays serial and
+/// shares the same canonical per-element order, so results are identical
+/// bits whichever path a shape takes.
 pub fn matmul_nt_with(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
     if a.rows >= 8 {

@@ -1,0 +1,216 @@
+//! Fused dequantize×GEMM: `y = x · dq(W)ᵀ` computed directly from packed
+//! low-bit codes plus per-group scales/zeros, never materializing the f32
+//! weight matrix. This is the serving-path speed unlock: at INT4g32 a
+//! weight row streams ~4× fewer bytes than its f32 form, and single-token
+//! decode is memory-bandwidth-bound, so tokens/sec follows the traffic.
+//!
+//! Bit-identity contract: every output element accumulates in ascending
+//! `k` with the `x[k] == 0.0` skip — term-for-term the chain that
+//! [`super::gemm`]'s canonical kernels run over the *dequantized* matrix,
+//! with the dequantization expression `(code − zero)·scale` (exactly
+//! `QuantizedTensor::dequantize`'s) fused into each term. Quantization
+//! groups are walked in ascending-`k` order, so group boundaries never
+//! reorder the chain; see [`super::micro::qdot8_f32`]. The result is
+//! bitwise-identical to dequantize-then-`matmul_nt` for every shape,
+//! thread count, and group length — gated here and in
+//! `tests/parallel_equivalence.rs`.
+//!
+//! Parallelism: the serial kernel is column-major over output columns
+//! (weight rows), so the pooled path partitions *columns* across workers —
+//! decode batches are short (`m` = number of in-flight sessions) and wide
+//! (`n` = dim or ffn), the opposite aspect ratio of the training GEMMs.
+//! Each worker writes a disjoint set of `y[i·n + j]` elements through a
+//! shared base pointer, exactly the [`crate::util::pool::SendPtr`] idiom
+//! of the row-partitioned kernels.
+
+use super::mat::Mat;
+use super::micro;
+use crate::util::pool::{chunk, Pool, SendPtr};
+
+/// Borrowed view of a packed quantized weight matrix, row-major codes
+/// (`rows × cols`) with `rows × n_groups` scale/zero pairs — the layout
+/// of `crate::quant::QuantizedTensor`, decoupled so `linalg` does not
+/// depend on `quant`. Obtain one via `QuantizedTensor::view()`.
+#[derive(Clone, Copy, Debug)]
+pub struct QWeightView<'a> {
+    /// Output features (weight rows; `y` columns).
+    pub rows: usize,
+    /// Input features (weight columns; the contraction dimension).
+    pub cols: usize,
+    /// Quantization group length along `cols`.
+    pub group_len: usize,
+    /// Packed codes, one byte per weight, row-major `[rows × cols]`.
+    pub codes: &'a [u8],
+    /// Per-group scales, `[rows × n_groups]`.
+    pub scales: &'a [f32],
+    /// Per-group zero points, `[rows × n_groups]`.
+    pub zeros: &'a [f32],
+}
+
+impl QWeightView<'_> {
+    /// Number of quantization groups per row.
+    pub fn n_groups(&self) -> usize {
+        self.cols.div_ceil(self.group_len)
+    }
+
+    fn validate(&self) {
+        assert!(self.group_len > 0, "qgemm: zero group length");
+        assert_eq!(self.codes.len(), self.rows * self.cols, "qgemm: codes length");
+        let ng = self.n_groups();
+        assert_eq!(self.scales.len(), self.rows * ng, "qgemm: scales length");
+        assert_eq!(self.zeros.len(), self.rows * ng, "qgemm: zeros length");
+    }
+}
+
+/// `y = x[m,k] · dq(W)[n,k]ᵀ` on the global pool — the quantized twin of
+/// [`super::gemm::matmul_nt`].
+pub fn qgemm_nt(x: &Mat, w: &QWeightView) -> Mat {
+    qgemm_nt_with(x, w, &crate::util::pool::global())
+}
+
+/// Single-threaded `y = x · dq(W)ᵀ` — the reference the pooled path must
+/// match bit-for-bit (and the bench baseline).
+pub fn qgemm_nt_serial(x: &Mat, w: &QWeightView) -> Mat {
+    w.validate();
+    assert_eq!(x.cols, w.cols, "qgemm shape mismatch: {}x{} · ({}x{})ᵀ", x.rows, x.cols, w.rows, w.cols);
+    let mut y = Mat::zeros(x.rows, w.rows);
+    // Sound: exclusive access to all of y.
+    unsafe { qgemm_cols(x, w, y.data.as_mut_ptr(), 0, w.rows) };
+    y
+}
+
+/// `y = x · dq(W)ᵀ` on `pool`. Bit-identical to [`qgemm_nt_serial`] for
+/// every thread count: workers run the same column kernel over disjoint
+/// column ranges, and each element's chain is fixed by construction.
+pub fn qgemm_nt_with(x: &Mat, w: &QWeightView, pool: &Pool) -> Mat {
+    w.validate();
+    assert_eq!(x.cols, w.cols, "qgemm shape mismatch: {}x{} · ({}x{})ᵀ", x.rows, x.cols, w.rows, w.cols);
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut y = Mat::zeros(m, n);
+    if pool.threads() > 1 && m >= 1 && n >= 2 && super::par::big_enough(m, k, n) {
+        let base = SendPtr::new(y.data.as_mut_ptr());
+        pool.run(n, chunk(n, pool.threads()), |j0, j1| {
+            // Sound: chunks are disjoint column ranges of y.
+            unsafe { qgemm_cols(x, w, base.0, j0, j1) };
+        });
+    } else {
+        unsafe { qgemm_cols(x, w, y.data.as_mut_ptr(), 0, n) };
+    }
+    y
+}
+
+/// Output columns `[j0, j1)` of `y = x · dq(W)ᵀ`, all rows, written to
+/// `y_base[i·n + j]`. Whole 8-column tiles run through
+/// [`micro::qdot8_f32`], the ragged tail through [`micro::qdot1_f32`];
+/// groups advance in ascending `k`, so every element keeps the canonical
+/// scalar chain either way.
+///
+/// Raw-pointer output on purpose: column partitions write interleaved
+/// (non-contiguous) element sets of `y`, which disjoint `&mut` slices
+/// cannot express.
+///
+/// # Safety
+///
+/// `y_base[i·n + j]` must be valid to write for all `i < x.rows`,
+/// `j ∈ [j0, j1)`, and concurrent callers must use disjoint `j` ranges.
+unsafe fn qgemm_cols(x: &Mat, w: &QWeightView, y_base: *mut f32, j0: usize, j1: usize) {
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let glen = w.group_len;
+    let ng = w.n_groups();
+    for i in 0..m {
+        let xrow = &x.data[i * k..(i + 1) * k];
+        let yrow = y_base.add(i * n);
+        let mut j = j0;
+        while j + 8 <= j1 {
+            let mut acc = [0.0f32; 8];
+            for g in 0..ng {
+                let c0 = g * glen;
+                let c1 = (c0 + glen).min(k);
+                let cv: [&[u8]; 8] =
+                    std::array::from_fn(|l| &w.codes[(j + l) * k + c0..(j + l) * k + c1]);
+                let s: [f32; 8] = std::array::from_fn(|l| w.scales[(j + l) * ng + g]);
+                let z: [f32; 8] = std::array::from_fn(|l| w.zeros[(j + l) * ng + g]);
+                micro::qdot8_f32(&xrow[c0..c1], cv, &s, &z, &mut acc);
+            }
+            for (l, &v) in acc.iter().enumerate() {
+                *yrow.add(j + l) = v;
+            }
+            j += 8;
+        }
+        while j < j1 {
+            let mut v = 0.0f32;
+            for g in 0..ng {
+                let c0 = g * glen;
+                let c1 = (c0 + glen).min(k);
+                v = micro::qdot1_f32(
+                    &xrow[c0..c1],
+                    &w.codes[j * k + c0..j * k + c1],
+                    w.scales[j * ng + g],
+                    w.zeros[j * ng + g],
+                    v,
+                );
+            }
+            *yrow.add(j) = v;
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_nt_serial;
+    use crate::quant::{QuantConfig, QuantizedTensor};
+    use crate::util::rng::Rng;
+
+    fn planted(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut x = Mat::randn(rows, cols, 1.0, rng);
+        // Exact zeros exercise the canonical skip branch.
+        for (i, v) in x.data.iter_mut().enumerate() {
+            if i % 5 == 2 {
+                *v = 0.0;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn fused_matches_dequantize_then_matmul_bitwise() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1usize, 32usize, 24usize), (3, 48, 20), (8, 40, 3), (17, 64, 33)] {
+            for cfg in [QuantConfig::int_group(4, 16), QuantConfig::int(3)] {
+                let x = planted(m, k, &mut rng);
+                let w = Mat::randn(n, k, 1.0, &mut rng);
+                let qt = QuantizedTensor::from_mat(&w, &cfg);
+                let want = matmul_nt_serial(&x, &qt.dequantize());
+                let got = qgemm_nt_serial(&x, &qt.view());
+                assert_eq!(got, want, "m={m} k={k} n={n} cfg={}", cfg.label());
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_fused_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(12);
+        // Big enough to clear the FLOP threshold so the pool really runs.
+        let x = planted(4, 512, &mut rng);
+        let w = Mat::randn(1024, 512, 1.0, &mut rng);
+        let qt = QuantizedTensor::from_mat(&w, &QuantConfig::int_group(4, 32));
+        let view = qt.view();
+        let want = qgemm_nt_serial(&x, &view);
+        for threads in [1usize, 2, 3, 4, 8] {
+            let got = qgemm_nt_with(&x, &view, &Pool::new(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert_eq!(want, matmul_nt_serial(&x, &qt.dequantize()));
+    }
+
+    #[test]
+    fn degenerate_shapes_survive() {
+        let x = Mat::zeros(0, 16);
+        let w = Mat::zeros(4, 16);
+        let qt = QuantizedTensor::from_mat(&w, &QuantConfig::int_group(4, 8));
+        let y = qgemm_nt_serial(&x, &qt.view());
+        assert_eq!((y.rows, y.cols), (0, 4));
+    }
+}

@@ -10,6 +10,7 @@
 //! repro exp cell <cell-id> --out DIR
 //! repro exp status <id> --out DIR [--shard i/N]
 //! repro exp merge <id> --out DIR [--results DIR]
+//! repro serve-bench [--model tiny-s] [--sessions 4] [--gen 32] [--bits 4] [--group 32]
 //! repro info
 //! ```
 
@@ -89,6 +90,10 @@ const EXP_MERGE_FLAGS: &[&str] = &[
     "stable-timings",
 ];
 const INFO_FLAGS: &[&str] = &["threads"];
+/// `repro serve-bench`: batched KV-cache serving throughput, quantized
+/// vs dense f32, on one process.
+const SERVE_BENCH_FLAGS: &[&str] =
+    &["threads", "model", "artifacts", "sessions", "gen", "prompt-len", "bits", "group", "seed"];
 
 fn check_flags(args: &Args, known: &[&str]) -> Result<()> {
     args.reject_unknown(known).map_err(|e| anyhow!("{e}"))
@@ -115,6 +120,10 @@ fn dispatch(args: &Args) -> Result<()> {
             eval(args)
         }
         Some("exp") => experiment(args),
+        Some("serve-bench") => {
+            check_flags(args, SERVE_BENCH_FLAGS)?;
+            serve_bench(args)
+        }
         Some("info") => {
             check_flags(args, INFO_FLAGS)?;
             info()
@@ -143,6 +152,8 @@ USAGE:
   repro exp cell  <cell-id> --out DIR
   repro exp status <id> --out DIR [--shard i/N] [--fast] [--sizes ...]
   repro exp merge <id> --out DIR [--results DIR] [--stable-timings] [--fast] [--sizes ...]
+  repro serve-bench [--model <tiny-s|tiny-m|tiny-l|path.qtz>] [--sessions 4] [--gen 32]
+                 [--prompt-len 16] [--bits 4] [--group 32] [--seed 0] [--threads N]
   repro info
 
 Unrecognized --flags are rejected with a usage error (a typo'd flag must
@@ -204,6 +215,18 @@ SHARDING (distributed experiment sweeps):
                   3's timing cells as a fixed placeholder, and records
                   written with --out carry zeroed timing fields so two
                   runs of the same cells are byte-identical files.
+
+SERVING:
+  serve-bench    Batched KV-cache serving throughput on this machine:
+                 the same model is served dense f32 and packed
+                 INT<bits>g<group> (fused dequantize×GEMM), greedy
+                 decode under the continuous-batching scheduler, and the
+                 single-stream + aggregate tokens/sec are reported with
+                 the quantized-vs-f32 speedup. Sizes resolve through
+                 artifacts/ with a random-weights fallback (timing is
+                 weight-independent). `cargo bench --bench
+                 serve_throughput` is the multi-point version (N ∈
+                 {1,4,16}) that persists BENCH_serve.json.
 
 THREADS:
   --threads N    Worker threads for the parallel execution engine (GEMMs,
@@ -318,6 +341,68 @@ fn eval(args: &Args) -> Result<()> {
             println!("{} ({}): {:.4}", fam.name(), fam.paper_analog(), ts.accuracy(&model));
         }
     }
+    Ok(())
+}
+
+/// `repro serve-bench`: throughput of the batched KV-cache serving
+/// engine, dense f32 vs packed low-bit, on synthetic prompts. Greedy
+/// decode through the continuous-batching scheduler; reports tokens/sec
+/// for both engines and the speedup.
+fn serve_bench(args: &Args) -> Result<()> {
+    use qep::serve::{Scheduler, ServeConfig, ServeModel};
+    use qep::util::rng::Rng;
+    use qep::util::Stopwatch;
+
+    let spec = args.get_or("model", "tiny-s");
+    let model = if let Some(size) = Size::from_name(spec) {
+        let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
+        env.model(size)
+    } else {
+        Model::load(spec)?
+    };
+    let sessions = args.get_usize("sessions", 4).max(1);
+    let gen = args.get_usize("gen", 32).max(1);
+    let prompt_len = args.get_usize("prompt-len", 16).clamp(1, model.cfg.seq_len);
+    let bits = args.get_usize("bits", 4) as u32;
+    let group = args.get_usize("group", 32);
+    let seed = args.get_usize("seed", 0) as u64;
+    let qcfg = QuantConfig::int_group(bits, group);
+
+    // Synthetic byte prompts: serving throughput does not depend on the
+    // weights being trained, only on shapes and batch composition.
+    let mut rng = Rng::new(seed);
+    let prompts: Vec<Vec<u32>> = (0..sessions)
+        .map(|_| (0..prompt_len).map(|_| rng.below(256) as u32).collect())
+        .collect();
+
+    let mut run = |sm: ServeModel, label: &str| -> Result<f64> {
+        let mut sched = Scheduler::new(
+            sm,
+            ServeConfig { max_batch: sessions, max_new_tokens: gen },
+            pool::global(),
+        );
+        for p in &prompts {
+            sched.submit(p)?;
+        }
+        let t = Stopwatch::start();
+        let done = sched.run();
+        let secs = t.seconds();
+        let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+        let tok_s = tokens as f64 / secs.max(1e-9);
+        println!(
+            "{label:18} {tokens:6} tokens in {secs:7.3}s  = {tok_s:8.1} tok/s  \
+             ({sessions} sessions × ≤{gen} new)",
+        );
+        Ok(tok_s)
+    };
+
+    println!(
+        "serve-bench: {} (dim={} layers={} seq={}), prompts {}×{}",
+        model.cfg.name, model.cfg.dim, model.cfg.n_layers, model.cfg.seq_len, sessions, prompt_len
+    );
+    let f32_tok_s = run(ServeModel::from_model(&model), "dense f32")?;
+    let q_tok_s = run(ServeModel::quantized(&model, &qcfg), &format!("int{bits}g{group}"))?;
+    println!("speedup (quantized vs f32): {:.2}×", q_tok_s / f32_tok_s.max(1e-9));
     Ok(())
 }
 

@@ -4,9 +4,22 @@
 //! `crate::runtime`).
 
 use super::config::ModelConfig;
-use super::ops::{causal_attention, linear, next_token_nll, rmsnorm, swiglu};
+use super::ops::{attend_one, causal_attention, linear, next_token_nll, rmsnorm, swiglu};
 use super::store::{BlockWeights, Model};
 use crate::linalg::Mat;
+use crate::serve::KvCache;
+
+/// Reject an out-of-vocab token with a message naming the token, its
+/// position, and the vocab size — serving validates requests against this
+/// same bound up front (`serve::sched`), so a bad id is refused at submit
+/// time instead of aborting mid-batch deep inside `Mat::row`.
+#[inline]
+pub(crate) fn check_token(tok: u32, pos: usize, vocab: usize) {
+    assert!(
+        (tok as usize) < vocab,
+        "out-of-vocab token {tok} at position {pos} (vocab size {vocab})"
+    );
+}
 
 /// Activations captured at the inputs of each quantizable linear in one
 /// block. `attn_in` feeds wq/wk/wv, `attn_ctx` feeds wo, `mlp_in` feeds
@@ -50,6 +63,7 @@ impl<'a> Forward<'a> {
         assert_eq!(tokens.len() % c.seq_len, 0, "tokens must tile seq_len");
         let mut x = Mat::zeros(tokens.len(), c.dim);
         for (t, &tok) in tokens.iter().enumerate() {
+            check_token(tok, t, c.vocab);
             let e = model.embed.row(tok as usize);
             let p = model.pos.row(t % c.seq_len);
             let row = x.row_mut(t);
@@ -118,6 +132,60 @@ impl<'a> Forward<'a> {
     pub fn forward(&self, model: &Model, tokens: &[u32]) -> Mat {
         let h = self.backbone(model, tokens);
         self.logits(model, &h)
+    }
+
+    /// One incremental decode step: feed a single token at the cache's
+    /// current position, appending its per-block K/V rows instead of
+    /// recomputing the whole segment. Returns the `[1, vocab]` logits row.
+    ///
+    /// Bit-identical to the full-recompute [`Self::forward`]: every
+    /// per-row op (`rmsnorm`, the linears via the canonical skinny GEMV
+    /// path, `swiglu`, residual adds) is row-independent with a fixed
+    /// per-element order, and [`attend_one`] replicates
+    /// [`causal_attention`]'s position body over the cached K/V rows — so
+    /// the logits equal row `t` of `forward` over any segment sharing the
+    /// prefix (`tests/serve_engine.rs` gates this for every prefix
+    /// length). Panics if the cache is full (`t == seq_len`); the
+    /// scheduler retires such sessions instead.
+    pub fn decode_step(&self, model: &Model, cache: &mut KvCache, tok: u32) -> Mat {
+        let c = self.cfg;
+        let t = cache.len();
+        assert!(t < c.seq_len, "decode_step: context full ({t} == seq_len)");
+        assert_eq!(cache.n_layers(), model.blocks.len(), "cache/model layer mismatch");
+        check_token(tok, t, c.vocab);
+        let mut x = Mat::zeros(1, c.dim);
+        {
+            let e = model.embed.row(tok as usize);
+            let p = model.pos.row(t);
+            let row = x.row_mut(0);
+            for i in 0..c.dim {
+                row[i] = e[i] + p[i];
+            }
+        }
+        for (li, b) in model.blocks.iter().enumerate() {
+            let attn_in = rmsnorm(&x, &b.attn_norm);
+            let q = linear(&attn_in, &b.wq);
+            let k = linear(&attn_in, &b.wk);
+            let v = linear(&attn_in, &b.wv);
+            cache.write_row(li, t, k.row(0), v.row(0));
+            let mut ctx = Mat::zeros(1, c.dim);
+            {
+                let (kc, vc) = cache.layer(li);
+                attend_one(q.row(0), kc, vc, c.n_heads, t, ctx.row_mut(0));
+            }
+            let attn_out = linear(&ctx, &b.wo);
+            let x1 = x.add(&attn_out);
+
+            let mlp_in = rmsnorm(&x1, &b.mlp_norm);
+            let g = linear(&mlp_in, &b.gate);
+            let u = linear(&mlp_in, &b.up);
+            let mlp_act = swiglu(&g, &u);
+            let mlp_out = linear(&mlp_act, &b.down);
+            x = x1.add(&mlp_out);
+        }
+        cache.advance(1);
+        let h = rmsnorm(&x, &model.final_norm);
+        linear(&h, &model.embed)
     }
 
     /// Perplexity over tokens (exp of mean next-token NLL in nats).
@@ -219,6 +287,31 @@ mod tests {
         let a = f.forward(&m, &toks);
         let b = f.forward(&m, &toks);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_steps_match_full_forward_bitwise() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let toks = tokens(cfg.seq_len, 9);
+        let full = f.forward(&m, &toks);
+        let mut cache = KvCache::new(cfg.n_layers, cfg.seq_len, cfg.dim);
+        for (t, &tok) in toks.iter().enumerate() {
+            let row = f.decode_step(&m, &mut cache, tok);
+            assert_eq!((row.rows, row.cols), (1, cfg.vocab));
+            assert_eq!(row.row(0), full.row(t), "position {t}");
+            assert_eq!(cache.len(), t + 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-vocab token 9999 at position 3")]
+    fn embed_rejects_out_of_vocab_tokens_loudly() {
+        let (cfg, m) = small();
+        let f = Forward::new(&cfg);
+        let mut toks = tokens(cfg.seq_len, 10);
+        toks[3] = 9999;
+        f.embed(&m, &toks);
     }
 
     #[test]

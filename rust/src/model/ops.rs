@@ -92,6 +92,45 @@ pub fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize, seq_len: usiz
     ctx
 }
 
+/// One query position of multi-head causal attention against cached K/V —
+/// the incremental-decode twin of [`causal_attention`].
+///
+/// `q` is the position-`t` query row `[d]`; `k`/`v` hold the segment's
+/// key/value rows with rows `0..=t` valid (a KV-cache; later rows are
+/// never read). Accumulates the context into `out` (which the caller
+/// zero-initializes, exactly like the full pass's fresh `ctx`).
+///
+/// Operation order is kept term-for-term identical to the position-`t`
+/// body of [`causal_attention`]: scores via [`crate::linalg::gemm::dot`]
+/// times the same scale, [`softmax_inplace`] over `0..=t`, then
+/// ascending-position `*o += p·v` accumulation — so one decode step is
+/// bit-identical to recomputing the whole prefix (the gate in
+/// `tests/serve_engine.rs`).
+pub fn attend_one(q: &[f32], k: &Mat, v: &Mat, n_heads: usize, t: usize, out: &mut [f32]) {
+    let d = q.len();
+    assert_eq!(d, out.len());
+    assert!(t < k.rows && t < v.rows, "attend_one: position {t} outside cache");
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; t + 1];
+    for h in 0..n_heads {
+        let h0 = h * hd;
+        let qrow = &q[h0..h0 + hd];
+        for (u, sc) in scores.iter_mut().enumerate() {
+            let krow = &k.row(u)[h0..h0 + hd];
+            *sc = crate::linalg::gemm::dot(qrow, krow) * scale;
+        }
+        softmax_inplace(&mut scores);
+        let orow = &mut out[h0..h0 + hd];
+        for (u, &p) in scores.iter().enumerate() {
+            let vrow = &v.row(u)[h0..h0 + hd];
+            for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                *o += p * vv;
+            }
+        }
+    }
+}
+
 /// Linear layer y = x·Wᵀ for weight W [out, in] and x [m, in].
 #[inline]
 pub fn linear(x: &Mat, w: &Mat) -> Mat {
@@ -228,6 +267,32 @@ mod tests {
         let a = causal_attention(&q, &k, &v, 1, 4);
         for c in 0..4 {
             assert!((a.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attend_one_matches_causal_attention_bitwise() {
+        // The decode-path attention must reproduce the full pass to the
+        // bit at every position, for both even and ragged head widths.
+        let mut rng = Rng::new(5);
+        let seq = 8;
+        let d = 8;
+        for n_heads in [1usize, 2, 4] {
+            let q = Mat::randn(seq, d, 1.0, &mut rng);
+            let k = Mat::randn(seq, d, 1.0, &mut rng);
+            let v = Mat::randn(seq, d, 1.0, &mut rng);
+            let full = causal_attention(&q, &k, &v, n_heads, seq);
+            for t in 0..seq {
+                let mut out = vec![0.0f32; d];
+                attend_one(q.row(t), &k, &v, n_heads, t, &mut out);
+                for c in 0..d {
+                    assert_eq!(
+                        out[c].to_bits(),
+                        full.at(t, c).to_bits(),
+                        "heads={n_heads} t={t} c={c}"
+                    );
+                }
+            }
         }
     }
 

@@ -168,6 +168,22 @@ impl QuantizedTensor {
         }
     }
 
+    /// Borrowed packed view for the fused dequantize×GEMM kernels
+    /// (`linalg::qgemm`), which consume codes + per-group grids directly —
+    /// `qgemm_nt(x, &t.view())` is bitwise-identical to
+    /// `matmul_nt(x, &t.dequantize())` without materializing the f32
+    /// matrix.
+    pub fn view(&self) -> crate::linalg::QWeightView<'_> {
+        crate::linalg::QWeightView {
+            rows: self.rows,
+            cols: self.cols,
+            group_len: self.group_len,
+            codes: &self.codes,
+            scales: &self.scales,
+            zeros: &self.zeros,
+        }
+    }
+
     pub fn dequantize(&self) -> Mat {
         let ngroups = self.n_groups();
         let mut m = Mat::zeros(self.rows, self.cols);

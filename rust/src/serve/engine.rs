@@ -1,0 +1,338 @@
+//! The serving forward engine: prefill + batched incremental decode over
+//! per-session KV-caches, with every linear held either dense (f32) or
+//! packed low-bit (routed through the fused dequantize×GEMM kernels in
+//! `crate::linalg::qgemm`).
+//!
+//! Batching model: one decode step gathers the current token of every
+//! in-flight session into an `[n, dim]` activation matrix, so the seven
+//! per-block linears each run as ONE pooled GEMM across the whole batch —
+//! the continuous-batching scheduler (`super::sched`) keeps `n` full as
+//! sessions retire. Attention stays per-session (each has its own cache
+//! and position) and is cheap relative to the linears.
+//!
+//! Determinism: every row of the batch is computed with the canonical
+//! per-element operation order (skinny and wide GEMM paths share it, all
+//! other ops are row-independent), so a session's logits are **bitwise
+//! independent of batch composition** — the same prompt yields the same
+//! tokens whether it runs alone or packed with fifteen strangers, for any
+//! thread count. `tests/serve_engine.rs` and
+//! `tests/parallel_equivalence.rs` gate this.
+
+use crate::linalg::{matmul_nt_with, qgemm_nt_with, Mat};
+use crate::model::config::ModelConfig;
+use crate::model::forward::check_token;
+use crate::model::ops::{attend_one, rmsnorm, swiglu};
+use crate::model::Model;
+use crate::quant::{QuantConfig, QuantizedTensor};
+use crate::util::pool::Pool;
+
+use super::kv::KvCache;
+
+/// One serving weight matrix: dense f32, or packed codes + per-group
+/// grids consumed in place by the fused kernel.
+#[derive(Clone, Debug)]
+pub enum LinearW {
+    Dense(Mat),
+    Quant(QuantizedTensor),
+}
+
+impl LinearW {
+    /// `x·Wᵀ` on `pool`. Both arms are bitwise-identical for every
+    /// thread count; the `Quant` arm is additionally bitwise-identical
+    /// to densifying first (`qgemm`'s contract).
+    fn apply(&self, x: &Mat, pool: &Pool) -> Mat {
+        match self {
+            LinearW::Dense(w) => matmul_nt_with(x, w, pool),
+            LinearW::Quant(q) => qgemm_nt_with(x, &q.view(), pool),
+        }
+    }
+
+    /// Dense twin: `Quant` weights are materialized via `dequantize()`.
+    /// Serving the twin produces bit-identical logits (and therefore
+    /// identical generations) to the packed path — the cross-check the
+    /// serving example runs end-to-end.
+    fn dequantized(&self) -> LinearW {
+        match self {
+            LinearW::Dense(w) => LinearW::Dense(w.clone()),
+            LinearW::Quant(q) => LinearW::Dense(q.dequantize()),
+        }
+    }
+}
+
+/// One block's serving weights (norms always f32).
+#[derive(Clone, Debug)]
+pub struct ServeBlock {
+    pub attn_norm: Vec<f32>,
+    pub wq: LinearW,
+    pub wk: LinearW,
+    pub wv: LinearW,
+    pub wo: LinearW,
+    pub mlp_norm: Vec<f32>,
+    pub gate: LinearW,
+    pub up: LinearW,
+    pub down: LinearW,
+}
+
+/// A model prepared for serving. Embedding / position / tied logits head
+/// stay dense f32 (they are a sliver of the weight traffic at this vocab
+/// size); the seven per-block linears carry the quantization.
+#[derive(Clone, Debug)]
+pub struct ServeModel {
+    pub cfg: ModelConfig,
+    pub embed: Mat,
+    pub pos: Mat,
+    pub blocks: Vec<ServeBlock>,
+    pub final_norm: Vec<f32>,
+}
+
+impl ServeModel {
+    /// Dense f32 serving weights (the baseline engine).
+    pub fn from_model(m: &Model) -> ServeModel {
+        Self::build(m, |w| LinearW::Dense(w.clone()))
+    }
+
+    /// Pack every block linear onto `cfg`'s grid (RTN) for the fused
+    /// low-bit path. Apply this to a pipeline-quantized model — its
+    /// weights already sit on grid points, so packing is lossless in
+    /// practice — or to a raw model for a pure-RTN serving baseline.
+    pub fn quantized(m: &Model, cfg: &QuantConfig) -> ServeModel {
+        Self::build(m, |w| LinearW::Quant(QuantizedTensor::from_mat(w, cfg)))
+    }
+
+    fn build(m: &Model, mk: impl Fn(&Mat) -> LinearW) -> ServeModel {
+        ServeModel {
+            cfg: m.cfg.clone(),
+            embed: m.embed.clone(),
+            pos: m.pos.clone(),
+            blocks: m
+                .blocks
+                .iter()
+                .map(|b| ServeBlock {
+                    attn_norm: b.attn_norm.clone(),
+                    wq: mk(&b.wq),
+                    wk: mk(&b.wk),
+                    wv: mk(&b.wv),
+                    wo: mk(&b.wo),
+                    mlp_norm: b.mlp_norm.clone(),
+                    gate: mk(&b.gate),
+                    up: mk(&b.up),
+                    down: mk(&b.down),
+                })
+                .collect(),
+            final_norm: m.final_norm.clone(),
+        }
+    }
+
+    /// Dense twin of this engine (packed linears densified). Bitwise the
+    /// same logits as `self` — the serving cross-check.
+    pub fn dequantized(&self) -> ServeModel {
+        ServeModel {
+            cfg: self.cfg.clone(),
+            embed: self.embed.clone(),
+            pos: self.pos.clone(),
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| ServeBlock {
+                    attn_norm: b.attn_norm.clone(),
+                    wq: b.wq.dequantized(),
+                    wk: b.wk.dequantized(),
+                    wv: b.wv.dequantized(),
+                    wo: b.wo.dequantized(),
+                    mlp_norm: b.mlp_norm.clone(),
+                    gate: b.gate.dequantized(),
+                    up: b.up.dequantized(),
+                    down: b.down.dequantized(),
+                })
+                .collect(),
+            final_norm: self.final_norm.clone(),
+        }
+    }
+
+    /// Fresh KV-cache sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.blocks.len(), self.cfg.seq_len, self.cfg.dim)
+    }
+
+    /// Process a whole prompt into an empty cache, returning the
+    /// `[prompt.len(), vocab]` logits (row `i` = logits after prompt
+    /// token `i`). Row-for-row bit-identical to feeding the prompt
+    /// through [`Self::decode_step_batch`] one token at a time — prefill
+    /// is just the wide-GEMM formulation of the same chains.
+    pub fn prefill(&self, cache: &mut KvCache, prompt: &[u32], pool: &Pool) -> Mat {
+        let c = &self.cfg;
+        assert!(cache.is_empty(), "prefill into a non-empty cache");
+        assert!(!prompt.is_empty(), "prefill: empty prompt");
+        assert!(
+            prompt.len() <= c.seq_len,
+            "prefill: prompt length {} exceeds seq_len {}",
+            prompt.len(),
+            c.seq_len
+        );
+        let l = prompt.len();
+        let mut x = Mat::zeros(l, c.dim);
+        for (t, &tok) in prompt.iter().enumerate() {
+            check_token(tok, t, c.vocab);
+            embed_row(self, tok, t, x.row_mut(t));
+        }
+        for (li, b) in self.blocks.iter().enumerate() {
+            let attn_in = rmsnorm(&x, &b.attn_norm);
+            let q = b.wq.apply(&attn_in, pool);
+            let k = b.wk.apply(&attn_in, pool);
+            let v = b.wv.apply(&attn_in, pool);
+            for t in 0..l {
+                cache.write_row(li, t, k.row(t), v.row(t));
+            }
+            let mut ctx = Mat::zeros(l, c.dim);
+            let (kc, vc) = cache.layer(li);
+            for t in 0..l {
+                attend_one(q.row(t), kc, vc, c.n_heads, t, ctx.row_mut(t));
+            }
+            x = self.finish_block(b, &x, &ctx, pool);
+        }
+        cache.advance(l);
+        self.head(&x, pool)
+    }
+
+    /// One batched decode step: session `i` feeds `toks[i]` at its own
+    /// cache frontier. Returns `[n, vocab]` logits, row per session.
+    /// Each row is bitwise independent of the other rows (batch
+    /// composition, ordering, and thread count never change a session's
+    /// bits). Panics if any cache is full — callers retire full sessions
+    /// first ([`super::sched`]).
+    pub fn decode_step_batch(
+        &self,
+        caches: &mut [&mut KvCache],
+        toks: &[u32],
+        pool: &Pool,
+    ) -> Mat {
+        let c = &self.cfg;
+        let n = toks.len();
+        assert_eq!(caches.len(), n, "one cache per token");
+        let mut x = Mat::zeros(n, c.dim);
+        for (i, (&tok, cache)) in toks.iter().zip(caches.iter()).enumerate() {
+            let t = cache.len();
+            assert!(t < c.seq_len, "decode: session {i} context full ({t} == seq_len)");
+            assert_eq!(cache.n_layers(), self.blocks.len(), "cache/model layer mismatch");
+            check_token(tok, t, c.vocab);
+            embed_row(self, tok, t, x.row_mut(i));
+        }
+        for (li, b) in self.blocks.iter().enumerate() {
+            let attn_in = rmsnorm(&x, &b.attn_norm);
+            let q = b.wq.apply(&attn_in, pool);
+            let k = b.wk.apply(&attn_in, pool);
+            let v = b.wv.apply(&attn_in, pool);
+            let mut ctx = Mat::zeros(n, c.dim);
+            for i in 0..n {
+                let cache = &mut *caches[i];
+                let t = cache.len();
+                cache.write_row(li, t, k.row(i), v.row(i));
+                let (kc, vc) = cache.layer(li);
+                attend_one(q.row(i), kc, vc, c.n_heads, t, ctx.row_mut(i));
+            }
+            x = self.finish_block(b, &x, &ctx, pool);
+        }
+        for cache in caches.iter_mut() {
+            cache.advance(1);
+        }
+        self.head(&x, pool)
+    }
+
+    /// Residual + MLP tail shared by prefill and decode (identical op
+    /// order to `Forward::block`).
+    fn finish_block(&self, b: &ServeBlock, x: &Mat, ctx: &Mat, pool: &Pool) -> Mat {
+        let attn_out = b.wo.apply(ctx, pool);
+        let x1 = x.add(&attn_out);
+        let mlp_in = rmsnorm(&x1, &b.mlp_norm);
+        let g = b.gate.apply(&mlp_in, pool);
+        let u = b.up.apply(&mlp_in, pool);
+        let mlp_act = swiglu(&g, &u);
+        let mlp_out = b.down.apply(&mlp_act, pool);
+        x1.add(&mlp_out)
+    }
+
+    /// Tied logits head: rmsnorm then `x·Embedᵀ` (always dense).
+    fn head(&self, x: &Mat, pool: &Pool) -> Mat {
+        let h = rmsnorm(x, &self.final_norm);
+        matmul_nt_with(&h, &self.embed, pool)
+    }
+}
+
+/// Token + position embedding for one row (the decode-path twin of
+/// `Forward::embed`'s per-token body).
+fn embed_row(m: &ServeModel, tok: u32, t: usize, out: &mut [f32]) {
+    let e = m.embed.row(tok as usize);
+    let p = m.pos.row(t);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = e[i] + p[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Forward, ModelConfig};
+    use crate::util::rng::Rng;
+
+    fn small() -> (ModelConfig, Model) {
+        let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 8;
+        let m = Model::random(&cfg, 1);
+        (cfg, m)
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(200) as u32).collect()
+    }
+
+    #[test]
+    fn dense_engine_matches_forward_bitwise() {
+        let (cfg, m) = small();
+        let sm = ServeModel::from_model(&m);
+        let f = Forward::new(&cfg);
+        let pool = Pool::serial();
+        let toks = tokens(cfg.seq_len, 2);
+        let full = f.forward(&m, &toks);
+        // Prefill path.
+        let mut cache = sm.new_cache();
+        let pre = sm.prefill(&mut cache, &toks, &pool);
+        assert_eq!(pre, full);
+        // Decode path, one token at a time.
+        let mut cache = sm.new_cache();
+        for (t, &tok) in toks.iter().enumerate() {
+            let mut caches = [&mut cache];
+            let row = sm.decode_step_batch(&mut caches, &[tok], &pool);
+            assert_eq!(row.row(0), full.row(t), "position {t}");
+        }
+    }
+
+    #[test]
+    fn quantized_engine_matches_its_dense_twin_bitwise() {
+        let (cfg, m) = small();
+        let qm = ServeModel::quantized(&m, &QuantConfig::int_group(4, 8));
+        let dm = qm.dequantized();
+        let pool = Pool::new(3);
+        let toks = tokens(6, 3);
+        let mut qc = qm.new_cache();
+        let mut dc = dm.new_cache();
+        let ql = qm.prefill(&mut qc, &toks, &pool);
+        let dl = dm.prefill(&mut dc, &toks, &pool);
+        assert_eq!(ql, dl);
+        let next = 42u32;
+        let q2 = qm.decode_step_batch(&mut [&mut qc], &[next], &pool);
+        let d2 = dm.decode_step_batch(&mut [&mut dc], &[next], &pool);
+        assert_eq!(q2, d2);
+        let _ = cfg;
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-vocab token")]
+    fn decode_rejects_out_of_vocab_tokens() {
+        let (_cfg, m) = small();
+        let sm = ServeModel::from_model(&m);
+        let mut cache = sm.new_cache();
+        let pool = Pool::serial();
+        sm.decode_step_batch(&mut [&mut cache], &[100_000], &pool);
+    }
+}

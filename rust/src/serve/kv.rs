@@ -1,0 +1,96 @@
+//! Per-session KV-cache: the K and V projections of every processed
+//! position, per block, so a decode step touches one new row per layer
+//! instead of recomputing the whole segment (O(t·d) attention work per
+//! token instead of an O(t·d²) re-forward).
+//!
+//! Storage is preallocated at `seq_len` rows per layer — sessions are
+//! bounded by the model's context length and retire when they reach it
+//! (no sliding-window rebuilds), so the cache never reallocates and row
+//! writes are cheap `copy_from_slice`s. Rows at positions `>= len()` are
+//! uninitialized-by-convention (zeros); attention only ever reads
+//! `0..=t`, mirroring the causal mask of the full pass.
+
+use crate::linalg::Mat;
+
+/// KV rows for one session across all blocks. `len()` positions are
+/// valid in every layer; the engine writes each layer's new row at the
+/// *same* position during a step and then calls [`KvCache::advance`]
+/// once, so the per-layer views stay mutually consistent mid-step.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache for `n_layers` blocks with room for `seq_len`
+    /// positions of `dim`-wide K/V rows.
+    pub fn new(n_layers: usize, seq_len: usize, dim: usize) -> KvCache {
+        KvCache {
+            k: (0..n_layers).map(|_| Mat::zeros(seq_len, dim)).collect(),
+            v: (0..n_layers).map(|_| Mat::zeros(seq_len, dim)).collect(),
+            len: 0,
+        }
+    }
+
+    /// Positions cached so far (uniform across layers).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache can hold (the model's seq_len).
+    pub fn capacity(&self) -> usize {
+        self.k.first().map_or(0, |m| m.rows)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Write layer `layer`'s K/V rows for position `t`. `t` may be at
+    /// most `len()` (the position currently being decoded); the write
+    /// becomes visible to `len()` only via [`Self::advance`].
+    pub fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert!(t <= self.len, "write_row at {t} past frontier {}", self.len);
+        self.k[layer].row_mut(t).copy_from_slice(krow);
+        self.v[layer].row_mut(t).copy_from_slice(vrow);
+    }
+
+    /// The K and V matrices for one layer (rows `0..len()` valid, plus
+    /// any row written this step).
+    pub fn layer(&self, layer: usize) -> (&Mat, &Mat) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// Commit `n` newly written positions.
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+        debug_assert!(self.len <= self.capacity());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip_and_len_advances() {
+        let mut c = KvCache::new(2, 4, 3);
+        assert_eq!((c.n_layers(), c.capacity(), c.len()), (2, 4, 0));
+        assert!(c.is_empty());
+        c.write_row(0, 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        c.write_row(1, 0, &[7.0, 8.0, 9.0], &[1.5, 2.5, 3.5]);
+        c.advance(1);
+        assert_eq!(c.len(), 1);
+        let (k0, v0) = c.layer(0);
+        assert_eq!(k0.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(v0.row(0), &[4.0, 5.0, 6.0]);
+        let (k1, _) = c.layer(1);
+        assert_eq!(k1.row(0), &[7.0, 8.0, 9.0]);
+    }
+}

@@ -1,0 +1,56 @@
+//! Batched quantized serving: KV-cached incremental decode
+//! ([`kv`] + [`engine`]) under a continuous-batching request scheduler
+//! ([`sched`]), with block linears served either dense (f32) or packed
+//! low-bit through the fused dequantize×GEMM kernels
+//! (`crate::linalg::qgemm`).
+//!
+//! The whole stack upholds the repo's bit-identity contract end-to-end:
+//! a decode step equals the full-recompute forward, the fused quantized
+//! path equals dequantize-then-matmul, and a session's generated tokens
+//! are independent of batch composition and thread count. See
+//! `tests/serve_engine.rs`, `tests/parallel_equivalence.rs`, and
+//! `benches/serve_throughput.rs` for the gates and the tokens/sec
+//! numbers (docs/PERFORMANCE.md §6).
+
+pub mod engine;
+pub mod kv;
+pub mod sched;
+
+pub use engine::{LinearW, ServeBlock, ServeModel};
+pub use kv::KvCache;
+pub use sched::{Completion, FinishReason, Scheduler, ServeConfig};
+
+/// Greedy argmax over a logits row with a NaN-losing total-order fold:
+/// strictly-greater comparisons from `(index 0, −∞)`, so a NaN logit
+/// never wins (every comparison against NaN is false), ties keep the
+/// lowest index, and an all-NaN or empty row returns 0. This is the one
+/// shared argmax for everything that samples from logits — the previous
+/// serving example's `partial_cmp(..).unwrap()` panicked outright on a
+/// NaN logit.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_is_nan_safe_with_lowest_index_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 1.0, 1.0]), 1, "NaN loses, tie keeps lowest");
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN falls back to 0");
+        assert_eq!(argmax(&[]), 0, "empty falls back to 0");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -1.0]), 1);
+    }
+}

@@ -1,0 +1,337 @@
+//! Continuous-batching request scheduler: admits up to `max_batch`
+//! concurrent sessions, runs ONE batched engine step per tick (so the
+//! per-block GEMMs amortize across every in-flight session on the
+//! persistent pool), and retires finished sequences immediately —
+//! freeing their batch slot for the next queued request without
+//! stalling the survivors.
+//!
+//! Determinism: admission is FIFO, the active order is stable under
+//! retirement, and — because the engine's rows are bitwise independent
+//! of batch composition — a request's generated tokens depend only on
+//! its own prompt, never on `max_batch`, queue pressure, retirement
+//! timing, or thread count. `tests/serve_engine.rs` gates solo-vs-packed
+//! equality directly.
+//!
+//! Special tokens are handled explicitly, never clamped: sampling EOS
+//! finishes a session with [`FinishReason::Eos`]; sampling any other
+//! non-text id (BOS/PAD) finishes it with [`FinishReason::Special`] —
+//! the previous serving example's `next.min(255)` silently rewrote such
+//! ids to byte 255 and corrupted the decoded text.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::text::EOS;
+use crate::util::pool::Pool;
+
+use super::engine::ServeModel;
+use super::kv::KvCache;
+
+/// Scheduler knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Maximum concurrently decoding sessions (the batch width).
+    pub max_batch: usize,
+    /// Per-request cap on generated tokens.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { max_batch: 8, max_new_tokens: 64 }
+    }
+}
+
+/// Why a session stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Sampled the EOS token.
+    Eos,
+    /// Sampled a non-EOS special token (BOS/PAD) — reported, not clamped.
+    Special(u32),
+    /// Hit `max_new_tokens` or the model's context length.
+    Length,
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// Submission id (FIFO order).
+    pub id: usize,
+    pub prompt_len: usize,
+    /// Generated token ids — prompt and terminating special excluded.
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+}
+
+/// One in-flight session. `ids` holds prompt + generated tokens; the
+/// invariant between steps is `cache.len() == ids.len() − 1` (the most
+/// recently sampled token has not been fed through the model yet).
+struct Session {
+    id: usize,
+    prompt_len: usize,
+    ids: Vec<u32>,
+    cache: KvCache,
+    new_tokens: usize,
+}
+
+/// Greedy continuous-batching scheduler over one [`ServeModel`].
+pub struct Scheduler {
+    model: ServeModel,
+    pool: Pool,
+    cfg: ServeConfig,
+    queue: VecDeque<(usize, Vec<u32>)>,
+    active: Vec<Session>,
+    finished: Vec<Completion>,
+    next_id: usize,
+    steps: usize,
+    tokens_generated: usize,
+}
+
+impl Scheduler {
+    pub fn new(model: ServeModel, cfg: ServeConfig, pool: Pool) -> Scheduler {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        Scheduler {
+            model,
+            pool,
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            next_id: 0,
+            steps: 0,
+            tokens_generated: 0,
+        }
+    }
+
+    /// Enqueue a prompt, validating it up front so a bad request is
+    /// refused here — with the offending token named — instead of
+    /// aborting the whole batch deep inside the engine. Returns the
+    /// request id.
+    pub fn submit(&mut self, prompt: &[u32]) -> Result<usize> {
+        let c = &self.model.cfg;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > c.seq_len {
+            bail!("prompt length {} exceeds context length {}", prompt.len(), c.seq_len);
+        }
+        for (pos, &tok) in prompt.iter().enumerate() {
+            if tok as usize >= c.vocab {
+                bail!("out-of-vocab token {tok} at position {pos} (vocab size {})", c.vocab);
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, prompt.to_vec()));
+        Ok(id)
+    }
+
+    /// Admit queued requests into free batch slots: prefill each prompt
+    /// and sample its first token. A request that finishes on that very
+    /// token (EOS, special, or a context-filling prompt) retires without
+    /// ever occupying a decode slot.
+    fn admit(&mut self) {
+        while self.active.len() < self.cfg.max_batch {
+            let Some((id, prompt)) = self.queue.pop_front() else { break };
+            let mut cache = self.model.new_cache();
+            let logits = self.model.prefill(&mut cache, &prompt, &self.pool);
+            let next = super::argmax(logits.row(logits.rows - 1)) as u32;
+            let prompt_len = prompt.len();
+            let mut sess = Session { id, prompt_len, ids: prompt, cache, new_tokens: 0 };
+            match absorb(&mut sess, next, &self.cfg, self.model.cfg.seq_len) {
+                Some(fin) => self.retire(sess, fin),
+                None => self.active.push(sess),
+            }
+        }
+    }
+
+    fn retire(&mut self, sess: Session, finish: FinishReason) {
+        let tokens = sess.ids[sess.prompt_len..].to_vec();
+        self.tokens_generated += tokens.len();
+        self.finished.push(Completion {
+            id: sess.id,
+            prompt_len: sess.prompt_len,
+            tokens,
+            finish,
+        });
+    }
+
+    /// One scheduler tick: admit into free slots, then one batched
+    /// decode step across every active session, absorbing each row's
+    /// sampled token and retiring finished sessions in place. Returns
+    /// `false` when no work remains.
+    pub fn step(&mut self) -> bool {
+        self.admit();
+        if self.active.is_empty() {
+            return !self.queue.is_empty();
+        }
+        let toks: Vec<u32> = self.active.iter().map(|s| *s.ids.last().unwrap()).collect();
+        let mut caches: Vec<&mut KvCache> =
+            self.active.iter_mut().map(|s| &mut s.cache).collect();
+        let logits = self.model.decode_step_batch(&mut caches, &toks, &self.pool);
+        drop(caches);
+        self.steps += 1;
+        let fins: Vec<Option<FinishReason>> = self
+            .active
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| {
+                let next = super::argmax(logits.row(i)) as u32;
+                absorb(s, next, &self.cfg, self.model.cfg.seq_len)
+            })
+            .collect();
+        // Stable retirement: survivors keep their relative (FIFO) order.
+        let retiring: Vec<(Session, FinishReason)> = {
+            let mut survivors = Vec::with_capacity(self.active.len());
+            let mut out = Vec::new();
+            for (s, fin) in self.active.drain(..).zip(fins) {
+                match fin {
+                    Some(f) => out.push((s, f)),
+                    None => survivors.push(s),
+                }
+            }
+            self.active = survivors;
+            out
+        };
+        for (s, f) in retiring {
+            self.retire(s, f);
+        }
+        !self.active.is_empty() || !self.queue.is_empty()
+    }
+
+    /// Drive to completion and return all completions in submission
+    /// order.
+    pub fn run(&mut self) -> Vec<Completion> {
+        while self.step() {}
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|c| c.id);
+        self.steps = 0;
+        self.tokens_generated = 0;
+        out
+    }
+
+    /// Requests waiting for a batch slot.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Sessions currently decoding.
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Batched decode steps taken since the last [`Self::run`].
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Tokens generated (across retired sessions) since the last
+    /// [`Self::run`].
+    pub fn tokens_generated(&self) -> usize {
+        self.tokens_generated
+    }
+}
+
+/// Fold one sampled token into a session; `Some(reason)` retires it.
+/// Specials end the session explicitly (satellite of the `next.min(255)`
+/// clamp bug); text tokens extend it until `max_new_tokens` or the
+/// context fills.
+fn absorb(
+    s: &mut Session,
+    next: u32,
+    cfg: &ServeConfig,
+    seq_len: usize,
+) -> Option<FinishReason> {
+    if next == EOS {
+        return Some(FinishReason::Eos);
+    }
+    if next as usize >= 256 {
+        return Some(FinishReason::Special(next));
+    }
+    s.ids.push(next);
+    s.new_tokens += 1;
+    if s.new_tokens >= cfg.max_new_tokens {
+        return Some(FinishReason::Length);
+    }
+    if s.cache.len() >= seq_len {
+        // The new token has no context slot left to be fed into.
+        return Some(FinishReason::Length);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Model, ModelConfig};
+
+    fn sched(max_batch: usize, max_new: usize) -> Scheduler {
+        let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 8;
+        let m = Model::random(&cfg, 1);
+        Scheduler::new(
+            ServeModel::from_model(&m),
+            ServeConfig { max_batch, max_new_tokens: max_new },
+            Pool::serial(),
+        )
+    }
+
+    #[test]
+    fn submit_rejects_bad_requests_with_reasons() {
+        let mut s = sched(2, 4);
+        let err = s.submit(&[]).unwrap_err().to_string();
+        assert!(err.contains("empty prompt"), "{err}");
+        let err = s.submit(&[1; 9]).unwrap_err().to_string();
+        assert!(err.contains("exceeds context length"), "{err}");
+        let err = s.submit(&[5, 100_000, 7]).unwrap_err().to_string();
+        assert!(err.contains("out-of-vocab token 100000 at position 1"), "{err}");
+        // Valid prompts get FIFO ids.
+        assert_eq!(s.submit(&[1, 2]).unwrap(), 0);
+        assert_eq!(s.submit(&[3]).unwrap(), 1);
+        assert_eq!(s.queued(), 2);
+    }
+
+    #[test]
+    fn completions_respect_limits_and_order() {
+        let mut s = sched(2, 3);
+        for p in [&[10u32, 20][..], &[30u32][..], &[40u32, 50, 60][..]] {
+            s.submit(p).unwrap();
+        }
+        let done = s.run();
+        assert_eq!(done.len(), 3);
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.id, i, "submission order");
+            assert!(c.tokens.len() <= 3);
+            assert!(c.tokens.iter().all(|&t| t < 256), "specials never leak");
+            match c.finish {
+                FinishReason::Length => assert!(
+                    c.tokens.len() == 3 || c.prompt_len + c.tokens.len() >= 8
+                ),
+                FinishReason::Eos | FinishReason::Special(_) => {}
+            }
+        }
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn batch_width_never_changes_outputs() {
+        let prompts: Vec<Vec<u32>> =
+            vec![vec![10, 20, 30], vec![40], vec![50, 60], vec![70, 80, 90, 100]];
+        let mut reference: Option<Vec<(usize, Vec<u32>, FinishReason)>> = None;
+        for max_batch in [1usize, 2, 4] {
+            let mut s = sched(max_batch, 4);
+            for p in &prompts {
+                s.submit(p).unwrap();
+            }
+            let got: Vec<(usize, Vec<u32>, FinishReason)> =
+                s.run().into_iter().map(|c| (c.id, c.tokens, c.finish)).collect();
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "max_batch={max_batch}"),
+            }
+        }
+    }
+}

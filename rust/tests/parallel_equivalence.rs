@@ -294,6 +294,75 @@ fn exp_tables_are_byte_identical_across_thread_counts() {
 }
 
 #[test]
+fn fused_qgemm_is_thread_invariant_and_matches_dequantize_matmul() {
+    // The fused dequantize×GEMM path must equal dequantize-then-matmul
+    // bit-for-bit, at every thread count — it is the serving engine's
+    // quantized hot loop.
+    use qep::linalg::{matmul_nt_serial, qgemm_nt_with, Mat};
+    use qep::quant::QuantizedTensor;
+    let mut rng = Rng::new(33);
+    for (m, k, n) in [(1usize, 64usize, 48usize), (4, 96, 96), (9, 64, 31)] {
+        let x = Mat::randn(m, k, 1.0, &mut rng);
+        let w = Mat::randn(n, k, 1.0, &mut rng);
+        let q = QuantizedTensor::from_mat(&w, &QuantConfig::int_group(4, 32));
+        let want = matmul_nt_serial(&x, &q.dequantize());
+        for threads in [1usize, 2, 5, 8] {
+            let got = qgemm_nt_with(&x, &q.view(), &Pool::new(threads));
+            assert_eq!(got.data, want.data, "m={m} k={k} n={n} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn serving_completions_are_thread_invariant() {
+    // End-to-end: the continuous-batching scheduler over the quantized
+    // engine produces identical completions for every thread count.
+    use qep::serve::{FinishReason, Scheduler, ServeConfig, ServeModel};
+    let (model, _) = setup();
+    let qm = ServeModel::quantized(&model, &QuantConfig::int_group(4, 8));
+    let prompts: Vec<Vec<u32>> = vec![vec![10, 20, 30], vec![40], vec![50, 60, 70, 80]];
+    let run = |threads: usize| -> Vec<(usize, Vec<u32>, FinishReason)> {
+        let mut s = Scheduler::new(
+            qm.clone(),
+            ServeConfig { max_batch: 2, max_new_tokens: 4 },
+            Pool::new(threads),
+        );
+        for p in &prompts {
+            s.submit(p).unwrap();
+        }
+        s.run().into_iter().map(|c| (c.id, c.tokens, c.finish)).collect()
+    };
+    let want = run(1);
+    for threads in [2usize, 4, 7] {
+        assert_eq!(run(threads), want, "threads={threads}");
+    }
+}
+
+#[test]
+fn kv_decode_matches_full_forward_across_thread_counts() {
+    // decode_step's KV-cached incremental path must reproduce the full
+    // recompute bit-for-bit; the full forward itself must not depend on
+    // the global pool width either (linears route through it).
+    use qep::model::Forward;
+    use qep::serve::KvCache;
+    use qep::util::pool::set_global_threads;
+    let (model, tokens) = setup();
+    let cfg = &model.cfg;
+    let f = Forward::new(cfg);
+    let seg = &tokens[..cfg.seq_len];
+    let want = f.forward(&model, seg);
+    for threads in [1usize, 4] {
+        set_global_threads(threads);
+        let mut cache = KvCache::new(cfg.n_layers, cfg.seq_len, cfg.dim);
+        for (t, &tok) in seg.iter().enumerate() {
+            let logits = f.decode_step(&model, &mut cache, tok);
+            assert_eq!(logits.row(0), want.row(t), "threads={threads} t={t}");
+        }
+    }
+    set_global_threads(0);
+}
+
+#[test]
 fn reports_match_across_thread_counts() {
     // Recon errors and layer ordering in the report are part of the
     // deterministic surface (timings are not).

@@ -1,0 +1,213 @@
+//! Serving-path gates: KV-cache decode ≡ full-recompute forward (every
+//! prefix length), prefill ≡ step-by-step decode, batch-composition
+//! independence (ragged session lengths, single-session batches,
+//! mid-batch retirement), quantized-engine ≡ dense-twin, and explicit
+//! special-token handling.
+
+use qep::linalg::Mat;
+use qep::model::{Forward, Model, ModelConfig};
+use qep::quant::QuantConfig;
+use qep::serve::{FinishReason, Scheduler, ServeConfig, ServeModel};
+use qep::text::{EOS, PAD, VOCAB_SIZE};
+use qep::util::pool::Pool;
+use qep::util::rng::Rng;
+
+fn small() -> (ModelConfig, Model) {
+    let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let m = Model::random(&cfg, 1);
+    (cfg, m)
+}
+
+fn tokens(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(200) as u32).collect()
+}
+
+/// KV-cache decode must equal the full-recompute forward to the bit at
+/// every prefix length — including prefixes shorter than seq_len, where
+/// the reference segment is padded with PAD (trailing rows cannot touch
+/// earlier positions: all ops are row-wise and attention is causal).
+#[test]
+fn decode_matches_padded_full_recompute_for_every_prefix_length() {
+    let (cfg, m) = small();
+    let f = Forward::new(&cfg);
+    let toks = tokens(cfg.seq_len, 11);
+    let sm = ServeModel::from_model(&m);
+    let pool = Pool::serial();
+    for prefix in 1..=cfg.seq_len {
+        let mut padded = toks[..prefix].to_vec();
+        padded.resize(cfg.seq_len, PAD);
+        let full = f.forward(&m, &padded);
+        // Forward::decode_step chain.
+        let mut cache = qep::serve::KvCache::new(cfg.n_layers, cfg.seq_len, cfg.dim);
+        let mut last = Mat::zeros(0, 0);
+        for &tok in &toks[..prefix] {
+            last = f.decode_step(&m, &mut cache, tok);
+        }
+        assert_eq!(last.row(0), full.row(prefix - 1), "decode_step prefix={prefix}");
+        // Engine prefill: every row, not just the last.
+        let mut ecache = sm.new_cache();
+        let pre = sm.prefill(&mut ecache, &toks[..prefix], &pool);
+        for t in 0..prefix {
+            assert_eq!(pre.row(t), full.row(t), "prefill prefix={prefix} t={t}");
+        }
+    }
+}
+
+/// Ragged batch: sessions prefilled to different lengths, then decoded
+/// together — each row must equal the same session decoded alone.
+#[test]
+fn ragged_batch_rows_match_solo_decode_bitwise() {
+    let (cfg, m) = small();
+    let sm = ServeModel::from_model(&m);
+    let pool = Pool::serial();
+    let prompts = [tokens(3, 21), tokens(1, 22), tokens(5, 23)];
+    let feeds = [tokens(2, 31), tokens(2, 32), tokens(2, 33)];
+
+    // Solo reference: each session alone (single-session batches).
+    let mut solo_logits: Vec<Vec<Mat>> = Vec::new();
+    for (p, f) in prompts.iter().zip(feeds.iter()) {
+        let mut cache = sm.new_cache();
+        sm.prefill(&mut cache, p, &pool);
+        let mut rows = Vec::new();
+        for &tok in f {
+            rows.push(sm.decode_step_batch(&mut [&mut cache], &[tok], &pool));
+        }
+        solo_logits.push(rows);
+    }
+
+    // Batched: all three sessions step together at ragged positions.
+    let mut caches: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut c = sm.new_cache();
+            sm.prefill(&mut c, p, &pool);
+            c
+        })
+        .collect();
+    for step in 0..2 {
+        let toks: Vec<u32> = feeds.iter().map(|f| f[step]).collect();
+        let mut refs: Vec<&mut qep::serve::KvCache> = caches.iter_mut().collect();
+        let batched = sm.decode_step_batch(&mut refs, &toks, &pool);
+        for s in 0..3 {
+            assert_eq!(
+                batched.row(s),
+                solo_logits[s][step].row(0),
+                "step={step} session={s}"
+            );
+        }
+    }
+}
+
+/// The quantized engine (fused qgemm path) must produce the same bits as
+/// serving its dense dequantized twin — so quantized generations are
+/// exactly the dense-model generations of the same grid weights.
+#[test]
+fn quantized_scheduler_matches_dense_twin_generations() {
+    let (cfg, m) = small();
+    let qm = ServeModel::quantized(&m, &QuantConfig::int_group(4, 8));
+    let dm = qm.dequantized();
+    let prompts = [tokens(2, 41), tokens(4, 42), tokens(1, 43)];
+    let run = |model: ServeModel| {
+        let mut s = Scheduler::new(
+            model,
+            ServeConfig { max_batch: 2, max_new_tokens: 5 },
+            Pool::new(2),
+        );
+        for p in &prompts {
+            s.submit(p).unwrap();
+        }
+        s.run()
+            .into_iter()
+            .map(|c| (c.id, c.tokens, c.finish))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(qm), run(dm));
+    let _ = cfg;
+}
+
+/// Mid-batch retirement: a session that hits the context limit retires
+/// while the batch keeps decoding, and nobody's tokens change relative
+/// to running alone.
+#[test]
+fn mid_batch_retirement_does_not_disturb_survivors() {
+    let (cfg, m) = small();
+    let sm = ServeModel::from_model(&m);
+    // Prompt of length seq_len−1 retires after one generated token
+    // (context full); the short prompt keeps going.
+    let long = tokens(cfg.seq_len - 1, 51);
+    let short = tokens(1, 52);
+    let solo = |prompt: &[u32]| {
+        let mut s = Scheduler::new(
+            ServeModel::from_model(&m),
+            ServeConfig { max_batch: 1, max_new_tokens: 10 },
+            Pool::serial(),
+        );
+        s.submit(prompt).unwrap();
+        s.run().remove(0)
+    };
+    let solo_long = solo(&long);
+    let solo_short = solo(&short);
+    assert_eq!(solo_long.finish, FinishReason::Length);
+    assert!(solo_long.tokens.len() <= 1, "context-limited session");
+    assert!(solo_short.tokens.len() > solo_long.tokens.len());
+
+    let mut batch = Scheduler::new(
+        sm,
+        ServeConfig { max_batch: 2, max_new_tokens: 10 },
+        Pool::serial(),
+    );
+    batch.submit(&long).unwrap();
+    batch.submit(&short).unwrap();
+    let done = batch.run();
+    assert_eq!(done[0].tokens, solo_long.tokens);
+    assert_eq!(done[0].finish, solo_long.finish);
+    assert_eq!(done[1].tokens, solo_short.tokens);
+    assert_eq!(done[1].finish, solo_short.finish);
+}
+
+/// A model rigged so its first sampled token is a chosen special: zeroed
+/// blocks pass the embedding straight through, and the tied head then
+/// scores the boosted embedding row highest.
+fn rigged_model(winner: u32) -> Model {
+    let mut cfg = ModelConfig::new("rig", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let mut m = Model::random(&cfg, 1);
+    for b in &mut m.blocks {
+        b.attn_norm = vec![1.0; cfg.dim];
+        b.mlp_norm = vec![1.0; cfg.dim];
+        b.wq = Mat::zeros(cfg.dim, cfg.dim);
+        b.wk = Mat::zeros(cfg.dim, cfg.dim);
+        b.wv = Mat::zeros(cfg.dim, cfg.dim);
+        b.wo = Mat::zeros(cfg.dim, cfg.dim);
+        b.gate = Mat::zeros(cfg.ffn, cfg.dim);
+        b.up = Mat::zeros(cfg.ffn, cfg.dim);
+        b.down = Mat::zeros(cfg.dim, cfg.ffn);
+    }
+    m.pos = Mat::zeros(cfg.seq_len, cfg.dim);
+    m.final_norm = vec![1.0; cfg.dim];
+    m.embed = Mat::zeros(VOCAB_SIZE, cfg.dim);
+    m.embed.row_mut(10).fill(1.0);
+    m.embed.row_mut(winner as usize).fill(2.0);
+    m
+}
+
+/// Sampling EOS finishes with Eos; sampling any other special (PAD here)
+/// finishes with Special — reported, never clamped into byte range.
+#[test]
+fn special_tokens_finish_sessions_explicitly() {
+    for (winner, want) in [(EOS, FinishReason::Eos), (PAD, FinishReason::Special(PAD))] {
+        let m = rigged_model(winner);
+        let mut s = Scheduler::new(
+            ServeModel::from_model(&m),
+            ServeConfig { max_batch: 1, max_new_tokens: 4 },
+            Pool::serial(),
+        );
+        s.submit(&[10]).unwrap();
+        let done = s.run();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, want, "winner={winner}");
+        assert!(done[0].tokens.is_empty(), "special is excluded from output");
+    }
+}

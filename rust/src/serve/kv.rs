@@ -13,9 +13,10 @@
 use crate::linalg::Mat;
 
 /// KV rows for one session across all blocks. `len()` positions are
-/// valid in every layer; the engine writes each layer's new row at the
-/// *same* position during a step and then calls [`KvCache::advance`]
-/// once, so the per-layer views stay mutually consistent mid-step.
+/// valid in every layer; the engine writes each layer's new rows at the
+/// *same* positions during a step (one row for decode, the whole prompt
+/// for prefill) and then calls [`KvCache::advance`] once, so the
+/// per-layer views stay mutually consistent mid-step.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     k: Vec<Mat>,
@@ -52,11 +53,17 @@ impl KvCache {
         self.k.len()
     }
 
-    /// Write layer `layer`'s K/V rows for position `t`. `t` may be at
-    /// most `len()` (the position currently being decoded); the write
-    /// becomes visible to `len()` only via [`Self::advance`].
+    /// Write layer `layer`'s K/V rows for position `t`. Writes may land
+    /// anywhere in `len()..capacity()` before being committed — prefill
+    /// stages a whole prompt's rows per layer while `len()` is still 0 —
+    /// and become visible to `len()` only via [`Self::advance`].
     pub fn write_row(&mut self, layer: usize, t: usize, krow: &[f32], vrow: &[f32]) {
-        debug_assert!(t <= self.len, "write_row at {t} past frontier {}", self.len);
+        debug_assert!(
+            t >= self.len && t < self.capacity(),
+            "write_row at {t} outside staging range {}..{}",
+            self.len,
+            self.capacity()
+        );
         self.k[layer].row_mut(t).copy_from_slice(krow);
         self.v[layer].row_mut(t).copy_from_slice(vrow);
     }

@@ -22,7 +22,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
-use crate::text::EOS;
+use crate::text::{is_special, EOS};
 use crate::util::pool::Pool;
 
 use super::engine::ServeModel;
@@ -247,7 +247,7 @@ fn absorb(
     if next == EOS {
         return Some(FinishReason::Eos);
     }
-    if next as usize >= 256 {
+    if is_special(next) {
         return Some(FinishReason::Special(next));
     }
     s.ids.push(next);

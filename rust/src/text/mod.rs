@@ -9,4 +9,4 @@ pub mod gen;
 pub mod tokenizer;
 
 pub use gen::{Corpus, Flavor};
-pub use tokenizer::{ByteTokenizer, BOS, EOS, PAD, VOCAB_SIZE};
+pub use tokenizer::{is_special, ByteTokenizer, BOS, EOS, PAD, VOCAB_SIZE};

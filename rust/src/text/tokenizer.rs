@@ -7,6 +7,12 @@ pub const EOS: u32 = 257;
 pub const PAD: u32 = 258;
 pub const VOCAB_SIZE: usize = 259;
 
+/// True for the non-text control ids (BOS/EOS/PAD occupy the tail of
+/// the vocab, after the 256 byte values).
+pub fn is_special(id: u32) -> bool {
+    id >= BOS
+}
+
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ByteTokenizer;
 
@@ -29,7 +35,7 @@ impl ByteTokenizer {
     pub fn decode(&self, ids: &[u32]) -> String {
         let bytes: Vec<u8> = ids
             .iter()
-            .filter(|&&id| id < 256)
+            .filter(|&&id| !is_special(id))
             .map(|&id| id as u8)
             .collect();
         String::from_utf8_lossy(&bytes).into_owned()
@@ -62,5 +68,14 @@ mod tests {
         assert!((PAD as usize) < VOCAB_SIZE);
         assert_ne!(BOS, EOS);
         assert_ne!(EOS, PAD);
+    }
+
+    #[test]
+    fn is_special_splits_bytes_from_controls() {
+        assert!(!is_special(0));
+        assert!(!is_special(255));
+        assert!(is_special(BOS));
+        assert!(is_special(EOS));
+        assert!(is_special(PAD));
     }
 }

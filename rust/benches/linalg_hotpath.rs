@@ -12,9 +12,10 @@ use qep::linalg::micro::{dot1_sub_f64, syrk_row_sub_f64};
 use qep::linalg::{
     cholesky_in_place_with, cholesky_unblocked, fwht_inplace, matmul, matmul_nt, matmul_nt_serial,
     matmul_nt_with, matmul_tn, matmul_tn_serial, matmul_tn_with, spd_inverse, spd_solve_with,
-    upper_cholesky_of_inverse, Mat, Mat64, CHOL_BLOCK,
+    svd_rank_with, svd_with, upper_cholesky_of_inverse, Mat, Mat64, CHOL_BLOCK,
 };
-use qep::util::bench::{bench, black_box, fmt_time, BenchConfig};
+use qep::util::bench::{bench, black_box, fmt_time, smoke, BenchConfig};
+use qep::util::json::Json;
 use qep::util::pool::{available_parallelism, chunk, Pool, SendPtr};
 use qep::util::rng::Rng;
 
@@ -22,8 +23,19 @@ fn gflops(flops: f64, secs: f64) -> f64 {
     flops / secs / 1e9
 }
 
+/// One machine-readable SVD result for `BENCH_linalg.json`.
+fn svd_entry(name: &str, engine: &str, threads: usize, mean_s: f64) -> Json {
+    let mut r = Json::obj();
+    r.set("name", Json::Str(name.to_string()));
+    r.set("engine", Json::Str(engine.to_string()));
+    r.set("threads", Json::Num(threads as f64));
+    r.set("mean_s", Json::Num(mean_s));
+    r
+}
+
 fn main() {
     let cfg = BenchConfig::from_env();
+    let smoke = smoke();
     let mut rng = Rng::new(0);
 
     println!("# linalg hot path\n");
@@ -272,4 +284,61 @@ fn main() {
             hb.mean_s / r.mean_s
         );
     }
+
+    // SVD engines behind the low-rank adjuncts: full one-sided Jacobi at
+    // adjunct-sized layers, and the seeded randomized range-finder at the
+    // large shapes where it takes over (min dim > 96, small rank). Both
+    // are bit-identical across thread counts and block sizes (gated in
+    // tests/svd_properties.rs) — the pool only moves the clock.
+    println!("\n# SVD engines (one-sided Jacobi / seeded randomized range-finder)\n");
+    let mut results = Vec::new();
+    let jacobi_shapes: &[(usize, usize)] =
+        if smoke { &[(48, 24)] } else { &[(96, 40), (128, 128)] };
+    for &(m, n) in jacobi_shapes {
+        let a = Mat::randn(m, n, 1.0, &mut rng);
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let r = bench(&format!("svd jacobi {m}x{n} t={threads}"), cfg, || svd_with(&a, &pool));
+            println!("{:<34} {:>10}", r.name, fmt_time(r.mean_s));
+            results.push(svd_entry(&r.name, "jacobi", threads, r.mean_s));
+        }
+    }
+    // min(m, n) > 96 with a small rank routes to the randomized engine.
+    let (rm, rn, rank) = if smoke { (128usize, 112usize, 4usize) } else { (512, 256, 8) };
+    let a = Mat::randn(rm, rn, 1.0, &mut rng);
+    for threads in [1usize, 4] {
+        let pool = Pool::new(threads);
+        let r = bench(&format!("svd randomized {rm}x{rn} r={rank} t={threads}"), cfg, || {
+            svd_rank_with(&a, rank, 7, &pool)
+        });
+        println!("{:<34} {:>10}", r.name, fmt_time(r.mean_s));
+        results.push(svd_entry(&r.name, "randomized", threads, r.mean_s));
+    }
+
+    // Trajectory point (same contract as BENCH_serve.json): CI gates on
+    // the schema, and smoke numbers are flagged so downstream tooling
+    // never treats them as measurements.
+    let mut doc = Json::obj();
+    doc.set("schema_version", Json::Num(1.0));
+    doc.set("bench", Json::Str("linalg_hotpath".into()));
+    doc.set("smoke", Json::Bool(smoke));
+    doc.set("results", Json::Arr(results));
+    let text = doc.dump();
+    std::fs::write("BENCH_linalg.json", &text).expect("write BENCH_linalg.json");
+
+    // Self-validate: re-parse and check the keys CI's gate relies on, so
+    // a schema break fails here first (exit code, not just a log line).
+    let back = Json::parse(&text).expect("BENCH_linalg.json must re-parse");
+    for key in ["schema_version", "bench", "smoke", "results"] {
+        assert!(back.get(key).is_some(), "BENCH_linalg.json missing key '{key}'");
+    }
+    let entries = back.get("results").and_then(|r| r.as_arr()).expect("results must be an array");
+    assert!(!entries.is_empty(), "results must be non-empty");
+    for e in entries {
+        let t = e.get("mean_s").and_then(Json::as_f64).expect("mean_s must be a number");
+        assert!(t.is_finite() && t > 0.0, "mean_s must be positive, got {t}");
+        assert!(e.get("engine").and_then(Json::as_str).is_some(), "engine must be a string");
+    }
+    println!("\nwrote BENCH_linalg.json ({} bytes, schema ok)", text.len());
+    qep::util::pool::shutdown();
 }

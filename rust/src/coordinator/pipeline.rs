@@ -19,11 +19,12 @@ use super::report::{LayerReport, PipelineReport};
 use crate::linalg::Mat;
 use crate::model::ops::{causal_attention, linear, rmsnorm, swiglu};
 use crate::model::{Forward, Model};
-use crate::qep::{AlphaPolicy, CorrectionStats};
+use crate::qep::{adjunct_from_residual, AlphaPolicy, CorrectionStats, LowRankAdjunct};
 use crate::quant::{quantizer_for, LayerCtx, Method, QuantConfig, Quantizer};
 use crate::util::pool::Pool;
 use crate::util::Stopwatch;
 use anyhow::Result;
+use std::collections::BTreeMap;
 
 /// Linears that share one captured input stream and therefore quantize
 /// independently of each other: their Hessian builds, QEP corrections, and
@@ -47,6 +48,13 @@ pub struct PipelineConfig {
     /// Quantize only the first `n` blocks, leaving the rest full precision
     /// (the Fig. 2 error-accumulation setup).
     pub max_blocks: Option<usize>,
+    /// Rank of the low-rank error-reconstruction adjunct (LQER/QERA):
+    /// after the base method runs, the residual `W* − Q(W*)` is
+    /// approximated by a rank-`r` term `U·V` in the calibration-Hessian
+    /// metric and carried alongside the quantized weights. `0` disables
+    /// the adjunct. Orthogonal to `qep_alpha` — every method × ±QEP cell
+    /// gains a `±lowrank` twin.
+    pub lowrank_rank: usize,
     pub seed: u64,
     pub verbose: bool,
     /// Worker threads for this pipeline's per-layer fan-out (0 = the
@@ -68,6 +76,7 @@ impl Default for PipelineConfig {
             alpha_policy: None,
             damp_rel: 1.0,
             max_blocks: None,
+            lowrank_rank: 0,
             seed: 0,
             verbose: false,
             threads: 0,
@@ -77,12 +86,16 @@ impl Default for PipelineConfig {
 
 impl PipelineConfig {
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{} {} {}",
             self.quant.label(),
             self.method.name(),
             if self.qep_alpha.is_some() { "+QEP" } else { "base" }
-        )
+        );
+        if self.lowrank_rank > 0 {
+            label.push_str(&format!(" +LR{}", self.lowrank_rank));
+        }
+        label
     }
 
     fn policy(&self) -> Option<AlphaPolicy> {
@@ -95,7 +108,18 @@ impl PipelineConfig {
 }
 
 pub struct PipelineOutput {
+    /// The effective quantized model. When low-rank adjuncts were
+    /// requested they are already folded into these dense weights, so
+    /// evaluation and the pipeline's own propagation stream both see the
+    /// corrected network.
     pub model: Model,
+    /// The on-grid model (adjunct layers hold `Q(W*)` without `U·V`);
+    /// `None` when the run produced no adjuncts. The `.qtz` artifact
+    /// stores this plus the factors so serving can keep the factored form.
+    pub base_model: Option<Model>,
+    /// Per-layer low-rank factors, keyed by canonical layer name
+    /// (`blocks.{i}.{short}`). Empty unless `lowrank_rank > 0`.
+    pub adjuncts: BTreeMap<String, LowRankAdjunct>,
     pub report: PipelineReport,
 }
 
@@ -125,6 +149,8 @@ impl Pipeline {
         let policy = self.cfg.policy();
         let mut report = PipelineReport::default();
         let mut qmodel = model.clone();
+        let mut adjuncts: BTreeMap<String, LowRankAdjunct> = BTreeMap::new();
+        let mut base_weights: Vec<(usize, String, Mat)> = Vec::new();
 
         let prop = Stopwatch::start();
         let mut x_full = f.embed(model, calib_tokens);
@@ -155,8 +181,8 @@ impl Pipeline {
                 self.compute_layer(&qmodel, bi, ATTN_QKV[i], &cap.attn_in, &attn_in_hat, policy.as_ref())
             });
             for (short, out) in ATTN_QKV.iter().zip(outs) {
-                let (w_hat, layer_report) = out?;
-                *qmodel.blocks[bi].linear_mut(short) = w_hat;
+                let (w_hat, adj, layer_report) = out?;
+                Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, short, w_hat, adj);
                 report.layers.push(layer_report);
             }
             let prop = Stopwatch::start();
@@ -168,9 +194,9 @@ impl Pipeline {
             );
             let ctx_hat = causal_attention(&q, &k, &v, model.cfg.n_heads, model.cfg.seq_len);
             report.propagation_s += prop.seconds();
-            let (w_hat, layer_report) =
+            let (w_hat, adj, layer_report) =
                 self.compute_layer(&qmodel, bi, "attn.wo", &cap.attn_ctx, &ctx_hat, policy.as_ref())?;
-            *qmodel.blocks[bi].linear_mut("attn.wo") = w_hat;
+            Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, "attn.wo", w_hat, adj);
             report.layers.push(layer_report);
 
             // -- MLP -------------------------------------------------------
@@ -184,17 +210,17 @@ impl Pipeline {
                 self.compute_layer(&qmodel, bi, MLP_GATE_UP[i], &cap.mlp_in, &mlp_in_hat, policy.as_ref())
             });
             for (short, out) in MLP_GATE_UP.iter().zip(outs) {
-                let (w_hat, layer_report) = out?;
-                *qmodel.blocks[bi].linear_mut(short) = w_hat;
+                let (w_hat, adj, layer_report) = out?;
+                Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, short, w_hat, adj);
                 report.layers.push(layer_report);
             }
             let prop = Stopwatch::start();
             let b = &qmodel.blocks[bi];
             let act_hat = swiglu(&linear(&mlp_in_hat, &b.gate), &linear(&mlp_in_hat, &b.up));
             report.propagation_s += prop.seconds();
-            let (w_hat, layer_report) =
+            let (w_hat, adj, layer_report) =
                 self.compute_layer(&qmodel, bi, "mlp.down", &cap.mlp_act, &act_hat, policy.as_ref())?;
-            *qmodel.blocks[bi].linear_mut("mlp.down") = w_hat;
+            Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, "mlp.down", w_hat, adj);
             report.layers.push(layer_report);
 
             let prop = Stopwatch::start();
@@ -212,7 +238,41 @@ impl Pipeline {
         }
 
         report.total_s = total.seconds();
-        Ok(PipelineOutput { model: qmodel, report })
+        let base_model = if base_weights.is_empty() {
+            None
+        } else {
+            let mut base = qmodel.clone();
+            for (bi, short, w) in base_weights {
+                *base.blocks[bi].linear_mut(&short) = w;
+            }
+            Some(base)
+        };
+        Ok(PipelineOutput { model: qmodel, base_model, adjuncts, report })
+    }
+
+    /// Install one quantized linear into the streaming model. The adjunct
+    /// (if any) is folded into the propagated weight so downstream layers
+    /// calibrate against the corrected stream; the on-grid base weight and
+    /// the factors themselves are kept aside for the artifact.
+    fn install(
+        qmodel: &mut Model,
+        adjuncts: &mut BTreeMap<String, LowRankAdjunct>,
+        base_weights: &mut Vec<(usize, String, Mat)>,
+        block: usize,
+        short: &str,
+        w_hat: Mat,
+        adj: Option<LowRankAdjunct>,
+    ) {
+        match adj {
+            Some(adj) => {
+                let name = format!("blocks.{block}.{short}");
+                let w_eff = adj.add_to(&w_hat);
+                base_weights.push((block, short.to_string(), w_hat));
+                adjuncts.insert(name, adj);
+                *qmodel.blocks[block].linear_mut(short) = w_eff;
+            }
+            None => *qmodel.blocks[block].linear_mut(short) = w_hat,
+        }
     }
 
     /// Quantize one linear, returning the dequantized weights plus the
@@ -229,7 +289,7 @@ impl Pipeline {
         x_full_cap: &Mat,
         x_hat_cap: &Mat,
         policy: Option<&AlphaPolicy>,
-    ) -> Result<(Mat, LayerReport)> {
+    ) -> Result<(Mat, Option<LowRankAdjunct>, LayerReport)> {
         let name = format!("blocks.{block}.{short}");
         let w = qmodel.blocks[block].linear(short).clone();
 
@@ -269,9 +329,28 @@ impl Pipeline {
         let w_hat = self.quantizer.quantize(&w_target, &self.cfg.quant, &ctx)?;
         let quant_s = qt.seconds();
 
+        // 4. Low-rank reconstruction of whatever residual the grid left
+        //    (LQER/QERA — orthogonal to the α correction above). The seed
+        //    is the same name-derived value as the quantizer's, so shards
+        //    and thread counts sketch with identical Ω.
+        let adjunct = if self.cfg.lowrank_rank > 0 {
+            let residual = w_target.sub(&w_hat);
+            Some(adjunct_from_residual(
+                &residual,
+                Some(&ctx.hessian),
+                self.cfg.lowrank_rank,
+                self.cfg.damp_rel,
+                layer_seed,
+                &self.pool,
+            ))
+        } else {
+            None
+        };
+
         let recon_error = ctx.recon_error(&w_target, &w_hat);
         Ok((
             w_hat,
+            adjunct,
             LayerReport { name, recon_error, correction, hessian_s, quant_s, alpha },
         ))
     }
@@ -401,6 +480,30 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn lowrank_rank_produces_adjuncts_and_effective_weights() {
+        let (model, tokens) = setup();
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig { quant: QuantConfig::int(3), lowrank_rank: 2, ..Default::default() },
+        );
+        assert_eq!(out.adjuncts.len(), 2 * 7);
+        let base = out.base_model.as_ref().unwrap();
+        let adj = &out.adjuncts["blocks.0.attn.wq"];
+        assert_eq!(adj.rank(), 2);
+        // Effective weight = on-grid base + U·V, exactly.
+        assert_eq!(out.model.blocks[0].wq, adj.add_to(&base.blocks[0].wq));
+        // Rank 0 leaves no adjunct section at all.
+        let plain = run(
+            &model,
+            &tokens,
+            PipelineConfig { quant: QuantConfig::int(3), ..Default::default() },
+        );
+        assert!(plain.adjuncts.is_empty());
+        assert!(plain.base_model.is_none());
     }
 
     #[test]

@@ -257,11 +257,24 @@ pub struct Cell {
     /// into [`Cell::derived_seed`] for the actual streams.
     pub seed: u64,
     pub calib_flavor: Flavor,
+    /// Rank of the low-rank error-reconstruction adjunct (LQER/QERA);
+    /// 0 = none. A compared axis like method/bits/±QEP: deliberately NOT
+    /// part of [`Cell::derived_seed`], so `±lowrank` twins share their
+    /// calibration stream.
+    pub lowrank_rank: usize,
 }
 
 impl Cell {
     pub fn new(size: Size, method: Method, quant: QuantConfig, qep: bool) -> Cell {
-        Cell { size, method, quant, qep, seed: 0, calib_flavor: default_calib(method) }
+        Cell {
+            size,
+            method,
+            quant,
+            qep,
+            seed: 0,
+            calib_flavor: default_calib(method),
+            lowrank_rank: 0,
+        }
     }
 
     /// Scheduling-independent seed for this cell's calibration draw and
@@ -293,6 +306,7 @@ impl Cell {
             alpha_policy,
             damp_rel: 1.0,
             max_blocks: None,
+            lowrank_rank: self.lowrank_rank,
             seed: self.derived_seed(),
             verbose: false,
             threads: 0,
@@ -317,13 +331,17 @@ impl Cell {
     }
 
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{} {} {} {}",
             self.size.name(),
             self.quant.label(),
             self.method.name(),
             if self.qep { "+QEP" } else { "base" }
-        )
+        );
+        if self.lowrank_rank > 0 {
+            label.push_str(&format!(" +LR{}", self.lowrank_rank));
+        }
+        label
     }
 }
 
@@ -623,6 +641,7 @@ pub fn render_sweep(
         SweepId::Fig2 => super::fig2::render(params, recs, rcfg).map(|_| ()),
         SweepId::Fig3 => super::fig3::render(params, recs, rcfg),
         SweepId::Appendix => super::tables::render_appendix(params, recs, rcfg),
+        SweepId::Lowrank => super::tables::render_lowrank(params, recs, rcfg),
         SweepId::All => {
             for part in SweepId::all_parts() {
                 render_sweep(part, params, recs, rcfg)?;
@@ -917,6 +936,9 @@ mod tests {
         assert_eq!(a.derived_seed(), base.derived_seed(), "±QEP must share calibration");
         let rtn = Cell::new(Size::TinyS, Method::Rtn, QuantConfig::int(2), false);
         assert_eq!(a.derived_seed(), rtn.derived_seed(), "methods must share calibration");
+        let mut lr = a.clone();
+        lr.lowrank_rank = 8;
+        assert_eq!(a.derived_seed(), lr.derived_seed(), "±lowrank must share calibration");
         // Data identity and replicates must split streams.
         let mut c = a.clone();
         c.calib_flavor = Flavor::Wiki;
@@ -962,6 +984,9 @@ mod tests {
     fn cell_labels_are_informative() {
         let cell = Cell::new(Size::TinyS, Method::Gptq, QuantConfig::int(3), true);
         assert_eq!(cell.label(), "tiny-s INT3 GPTQ +QEP");
+        let mut lr = cell;
+        lr.lowrank_rank = 4;
+        assert_eq!(lr.label(), "tiny-s INT3 GPTQ +QEP +LR4");
     }
 
     #[test]

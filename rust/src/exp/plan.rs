@@ -40,6 +40,7 @@ pub enum SweepId {
     Fig2,
     Fig3,
     Appendix,
+    Lowrank,
     All,
 }
 
@@ -55,6 +56,7 @@ impl SweepId {
             SweepId::Fig2 => "fig2",
             SweepId::Fig3 => "fig3",
             SweepId::Appendix => "appendix",
+            SweepId::Lowrank => "lowrank",
             SweepId::All => "all",
         }
     }
@@ -72,13 +74,14 @@ impl SweepId {
             "appendix" | "table5" | "table6" | "table7" | "table8" | "table9" | "table10" => {
                 Some(SweepId::Appendix)
             }
+            "lowrank" | "lqer" | "qera" => Some(SweepId::Lowrank),
             "all" => Some(SweepId::All),
             _ => None,
         }
     }
 
     /// The concrete sweeps `all` expands to, in execution order.
-    pub fn all_parts() -> [SweepId; 6] {
+    pub fn all_parts() -> [SweepId; 7] {
         [
             SweepId::Table12,
             SweepId::Table3,
@@ -86,6 +89,7 @@ impl SweepId {
             SweepId::Fig2,
             SweepId::Fig3,
             SweepId::Appendix,
+            SweepId::Lowrank,
         ]
     }
 
@@ -103,7 +107,9 @@ pub fn wants(sweep: SweepId) -> (Vec<Flavor>, Vec<TaskFamily>) {
     match sweep {
         SweepId::Table12 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
         SweepId::Appendix => (Flavor::all().to_vec(), TaskFamily::all().to_vec()),
-        SweepId::Table4 | SweepId::AblationAlpha => (vec![Flavor::Wiki], vec![]),
+        SweepId::Table4 | SweepId::AblationAlpha | SweepId::Lowrank => {
+            (vec![Flavor::Wiki], vec![])
+        }
         SweepId::Fig3 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
         SweepId::Table3 | SweepId::Fig2 | SweepId::All => (vec![], vec![]),
     }
@@ -124,6 +130,43 @@ pub fn ablation_alphas() -> [f32; 5] {
     [0.0, 0.25, 0.5, 0.75, 1.0]
 }
 
+/// The methods of the low-rank reconstruction sweep (LQER/QERA family).
+pub fn lowrank_methods() -> [Method; 2] {
+    [Method::Rtn, Method::Gptq]
+}
+
+/// The variant segment of a lowrank cell ID: `base`, `+qep`, `+lr{r}`,
+/// or `+qep+lr{r}`. Rank 0 (no adjunct) renders as the plain ±QEP
+/// variant — `+lr0` is never emitted and never parses.
+pub fn variant_name(qep: bool, rank: usize) -> String {
+    match (qep, rank) {
+        (false, 0) => "base".to_string(),
+        (true, 0) => "+qep".to_string(),
+        (false, r) => format!("+lr{r}"),
+        (true, r) => format!("+qep+lr{r}"),
+    }
+}
+
+/// Inverse of [`variant_name`]: `(qep, rank)`. Strict — rejects `+lr0`,
+/// empty ranks, and leading zeros so `parse ∘ id` stays the identity.
+fn parse_variant(s: &str) -> Option<(bool, usize)> {
+    if let Some(qep) = parse_qep(s) {
+        return Some((qep, 0));
+    }
+    let (qep, digits) = if let Some(d) = s.strip_prefix("+qep+lr") {
+        (true, d)
+    } else if let Some(d) = s.strip_prefix("+lr") {
+        (false, d)
+    } else {
+        return None;
+    };
+    let rank: usize = digits.parse().ok()?;
+    if rank == 0 || digits != rank.to_string() {
+        return None;
+    }
+    Some((qep, rank))
+}
+
 /// Everything that parameterizes a plan besides the sweep ID. Two
 /// processes that build a `PlanParams` from the same CLI flags (see
 /// [`PlanParams::from_args`]) enumerate the identical manifest — the
@@ -142,6 +185,10 @@ pub struct PlanParams {
     pub fig3_bits: Vec<u32>,
     pub fig3_seeds: u64,
     pub appendix_settings: Vec<QuantConfig>,
+    /// Non-zero adjunct ranks of the lowrank sweep (rank 0 — no adjunct
+    /// — is always enumerated in addition, as the `base`/`+qep` rows).
+    pub lowrank_ranks: Vec<usize>,
+    pub lowrank_settings: Vec<QuantConfig>,
 }
 
 impl PlanParams {
@@ -159,6 +206,8 @@ impl PlanParams {
             fig3_bits: vec![4, 3, 2],
             fig3_seeds: 5,
             appendix_settings: QuantConfig::appendix_settings(),
+            lowrank_ranks: vec![4, 16],
+            lowrank_settings: vec![QuantConfig::int(3), QuantConfig::int(2)],
         }
     }
 
@@ -219,6 +268,21 @@ impl PlanParams {
         } else {
             QuantConfig::appendix_settings()
         };
+        if fast {
+            p.lowrank_ranks = vec![2];
+            p.lowrank_settings = vec![QuantConfig::int(3)];
+        }
+        if let Some(spec) = args.get("ranks") {
+            // Same strictness as --sizes: every token must be a positive
+            // integer (rank 0 is always implied as the base/+qep rows).
+            p.lowrank_ranks = spec
+                .split(',')
+                .map(|tok| match tok.parse::<usize>() {
+                    Ok(r) if r > 0 => Ok(r),
+                    _ => Err(anyhow!("--ranks expects positive integers, got '{tok}'")),
+                })
+                .collect::<Result<Vec<usize>>>()?;
+        }
         Ok(p)
     }
 }
@@ -316,6 +380,13 @@ impl PlanCell {
             (SweepId::Fig2, CellTask::Fig2 { size, bits, n_blocks, qep }) => {
                 format!("fig2/{}/INT{bits}/b{n_blocks}/{}", size.name(), qep_str(*qep))
             }
+            (SweepId::Lowrank, CellTask::Quant(c)) => format!(
+                "lowrank/{}/{}/{}/{}",
+                c.quant.label(),
+                c.method.name(),
+                variant_name(c.qep, c.lowrank_rank),
+                c.size.name()
+            ),
             (sweep, task) => unreachable!("no ID form for {sweep:?} / {task:?}"),
         }
     }
@@ -382,6 +453,17 @@ impl PlanCell {
                     qep: parse_qep(e)?,
                 },
             }),
+            ["lowrank", q, m, v, s] => {
+                let (qep, rank) = parse_variant(v)?;
+                let mut cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::from_label(q)?,
+                    qep,
+                );
+                cell.lowrank_rank = rank;
+                Some(PlanCell { sweep: SweepId::Lowrank, task: CellTask::Quant(cell) })
+            }
             _ => None,
         }
     }
@@ -491,6 +573,28 @@ pub fn manifest(sweep: SweepId, params: &PlanParams) -> Result<Vec<PlanCell>> {
                 &params.appendix_settings,
                 &appendix_methods(),
             );
+        }
+        SweepId::Lowrank => {
+            // settings × methods × ±QEP × (rank 0 then --ranks) × sizes;
+            // rank 0 gives the base/+qep reference rows the table deltas
+            // are read against.
+            for &q in &params.lowrank_settings {
+                for m in lowrank_methods() {
+                    for qep in [false, true] {
+                        for rank in std::iter::once(0).chain(params.lowrank_ranks.iter().copied())
+                        {
+                            for &s in &params.sizes {
+                                let mut cell = Cell::new(s, m, q, qep);
+                                cell.lowrank_rank = rank;
+                                cells.push(PlanCell {
+                                    sweep: SweepId::Lowrank,
+                                    task: CellTask::Quant(cell),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
         }
         SweepId::All => {
             for part in SweepId::all_parts() {

@@ -438,6 +438,45 @@ pub fn render_appendix(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) 
     Ok(())
 }
 
+/// Render the low-rank reconstruction sweep from records: wiki PPL for
+/// `settings × methods × {base, +qep, +lr{r}, +qep+lr{r}}` — the LQER
+/// (plain ±lowrank) and QERA (Hessian-weighted adjunct) family next to
+/// their rank-0 references, orthogonal to QEP's α correction.
+pub fn render_lowrank(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
+    let mut hdr = vec!["Bits".to_string(), "Method".to_string(), "Variant".to_string()];
+    hdr.extend(params.sizes.iter().map(|s| s.name().to_string()));
+    let mut t = Table::new(
+        "Low-rank reconstruction (LQER/QERA): wiki PPL by adjunct rank",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (qi, &q) in params.lowrank_settings.iter().enumerate() {
+        if qi > 0 {
+            t.rule();
+        }
+        for m in plan::lowrank_methods() {
+            for qep in [false, true] {
+                for rank in std::iter::once(0).chain(params.lowrank_ranks.iter().copied()) {
+                    let mut row = vec![
+                        q.label(),
+                        m.name().to_string(),
+                        plan::variant_name(qep, rank),
+                    ];
+                    for &s in &params.sizes {
+                        let mut cell = Cell::new(s, m, q, qep);
+                        cell.lowrank_rank = rank;
+                        let pc =
+                            PlanCell { sweep: SweepId::Lowrank, task: CellTask::Quant(cell) };
+                        row.push(fmt_ppl(recs.get(&pc)?.ppl_for("wiki")));
+                    }
+                    t.row(row);
+                }
+            }
+        }
+    }
+    println!("{}", t.render());
+    persist_to(&rcfg.results_dir, "lowrank", &t)
+}
+
 /// Table 1 (+ Fig. 1 data) and Table 2: single-process convenience
 /// driver (enumerate → run → render in one call).
 pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {

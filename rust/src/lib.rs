@@ -6,7 +6,9 @@
 //!
 //! * **Layer 3 (this crate)** — the quantization *coordinator*: calibration
 //!   stream management, Hessian accumulation, the QEP weight correction, and
-//!   from-scratch implementations of RTN / GPTQ / AWQ / QuIP, plus the full
+//!   from-scratch implementations of RTN / GPTQ / AWQ / QuIP plus the
+//!   LQER/QERA low-rank error adjuncts ([`qep::lowrank`], backed by the
+//!   deterministic SVD kernel in [`linalg::svd`]), the full
 //!   evaluation harness (perplexity, zero-shot tasks, error-accumulation
 //!   diagnostics) and a PJRT runtime that executes AOT-lowered JAX/Pallas
 //!   artifacts with Python never on the request path.

@@ -24,6 +24,7 @@ pub mod mat;
 pub mod micro;
 pub mod par;
 pub mod qgemm;
+pub mod svd;
 
 pub use chol::{
     cholesky_in_place, cholesky_in_place_with, cholesky_unblocked, solve_lower,
@@ -36,3 +37,4 @@ pub use hadamard::{fwht_inplace, hadamard_conjugate, hadamard_rows, SignedHadama
 pub use mat::{Mat, Mat64};
 pub use par::{matmul_nt_with, matmul_tn_with, matmul_with};
 pub use qgemm::{qgemm_nt, qgemm_nt_serial, qgemm_nt_with, QWeightView};
+pub use svd::{svd, svd_rank, svd_rank_with, svd_with, svd_with_block, Svd};

@@ -1,0 +1,423 @@
+//! Deterministic singular value decomposition.
+//!
+//! Two engines behind one surface:
+//!
+//! * **One-sided Jacobi** (Hestenes): rotations orthogonalize column pairs
+//!   of a working copy of `A` in a *fixed cyclic order*, accumulating the
+//!   right singular vectors. All reductions (column dots, norms) run
+//!   serially in f64 in ascending index order; the only pooled work is the
+//!   element-wise rotation update of two disjoint columns, which has no
+//!   cross-element dependency — so the factorization is bit-identical for
+//!   every thread count *and* every pool grain ("block size").
+//! * **Seeded randomized range-finder** (Halko/Martinsson/Tropp) for
+//!   truncated factorizations of large matrices: a name-seeded Gaussian
+//!   sketch `Y = A·Ω`, deterministic modified Gram–Schmidt `Q`, and a small
+//!   Jacobi SVD of `B = Qᵀ·A`. The two GEMMs route through the pooled
+//!   row-partitioned kernels ([`crate::linalg::par`]), which uphold the
+//!   repo-wide bit-identity contract and share the `micro.rs` register
+//!   tiles with the rest of the hot path.
+//!
+//! The seed is the caller's responsibility and is expected to be
+//! name-derived (`fnv1a(layer_name)`-style), exactly like the quantizer
+//! seeds — so a sharded sweep and a local run sketch with identical Ω.
+//!
+//! ```
+//! use qep::linalg::{svd, Mat};
+//! use qep::util::rng::Rng;
+//! let a = Mat::randn(12, 7, 1.0, &mut Rng::new(3));
+//! let f = svd(&a);
+//! assert_eq!(f.rank(), 7);
+//! assert!((a.sub(&f.reconstruct())).frob() < 1e-3 * a.frob().max(1.0));
+//! ```
+
+use super::mat::Mat;
+use super::par::{matmul_tn_with, matmul_with};
+use crate::util::pool::{self, chunk, Pool, SendPtr};
+
+/// Largest `min(m, n)` the truncated path hands to the full Jacobi engine
+/// directly; above it (and when the target rank is small enough for a
+/// sketch to pay off) the randomized range-finder runs first.
+const JACOBI_DIRECT_MAX: usize = 96;
+
+/// Range-finder oversampling columns beyond the requested rank.
+const OVERSAMPLE: usize = 8;
+
+/// Relative off-diagonal tolerance for Jacobi convergence.
+const JACOBI_TOL: f64 = 1e-12;
+
+/// Jacobi sweep cap (each sweep visits every column pair once).
+const MAX_SWEEPS: usize = 64;
+
+/// A (possibly truncated) factorization `A ≈ U · diag(s) · Vᵀ`.
+///
+/// `u` is `[m, r]` with orthonormal columns, `s` holds the `r` singular
+/// values in non-increasing order, `vt` is `[r, n]` with orthonormal rows.
+/// Columns of `u` / rows of `vt` paired with an exactly-zero singular
+/// value are zero vectors (a rank-deficient input has fewer than `r`
+/// meaningful directions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+impl Svd {
+    /// Number of retained singular triplets (including exact zeros).
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Keep only the leading `rank` triplets.
+    pub fn truncate(mut self, rank: usize) -> Svd {
+        let r = rank.min(self.s.len());
+        self.s.truncate(r);
+        self.vt = take_rows(&self.vt, r);
+        self.u = take_cols(&self.u, r);
+        self
+    }
+
+    /// `U · diag(s) · Vᵀ`, accumulated serially in f64 (test/diagnostic
+    /// helper; the hot paths apply the factors without materializing).
+    pub fn reconstruct(&self) -> Mat {
+        let (m, n, r) = (self.u.rows, self.vt.cols, self.s.len());
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let urow = self.u.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..r {
+                    acc += urow[t] as f64 * self.s[t] as f64 * self.vt.at(t, j) as f64;
+                }
+                orow[j] = acc as f32;
+            }
+        }
+        out
+    }
+}
+
+fn take_rows(a: &Mat, r: usize) -> Mat {
+    let mut out = Mat::zeros(r, a.cols);
+    for i in 0..r {
+        out.row_mut(i).copy_from_slice(a.row(i));
+    }
+    out
+}
+
+fn take_cols(a: &Mat, r: usize) -> Mat {
+    let mut out = Mat::zeros(a.rows, r);
+    for i in 0..a.rows {
+        out.row_mut(i).copy_from_slice(&a.row(i)[..r]);
+    }
+    out
+}
+
+/// Full SVD on the process-global pool with the default rotation grain.
+pub fn svd(a: &Mat) -> Svd {
+    svd_with(a, &pool::global())
+}
+
+/// Full SVD on an explicit pool. Bit-identical for every thread count.
+pub fn svd_with(a: &Mat, pool: &Pool) -> Svd {
+    svd_with_block(a, pool, 0)
+}
+
+/// Full SVD with an explicit pool *and* rotation-update grain (`block`;
+/// 0 = auto). The grain only changes how the element-wise column rotation
+/// is chunked across workers — never the arithmetic — so every
+/// `(threads, block)` pair produces identical bits.
+pub fn svd_with_block(a: &Mat, pool: &Pool, block: usize) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    if m == 0 || n == 0 {
+        return Svd { u: Mat::zeros(m, 0), s: Vec::new(), vt: Mat::zeros(0, n) };
+    }
+    if m < n {
+        // One-sided Jacobi wants tall matrices; factor Aᵀ = U'ΣV'ᵀ and
+        // swap: A = V'ΣU'ᵀ.
+        let f = svd_with_block(&a.transpose(), pool, block);
+        let u = f.vt.transpose();
+        let vt = f.u.transpose();
+        return Svd { u, s: f.s, vt };
+    }
+    jacobi_tall(a, pool, block)
+}
+
+/// Truncated rank-`rank` SVD on the process-global pool.
+pub fn svd_rank(a: &Mat, rank: usize, seed: u64) -> Svd {
+    svd_rank_with(a, rank, seed, &pool::global())
+}
+
+/// Truncated rank-`rank` SVD: full Jacobi for small problems, seeded
+/// randomized range-finder for large ones. The engine choice depends only
+/// on the shape and rank (never on the pool), and both engines are
+/// bit-identical across thread counts, so the result is a pure function
+/// of `(a, rank, seed)`.
+pub fn svd_rank_with(a: &Mat, rank: usize, seed: u64, pool: &Pool) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let kmax = m.min(n);
+    let r = rank.min(kmax);
+    if r == 0 {
+        return Svd { u: Mat::zeros(m, 0), s: Vec::new(), vt: Mat::zeros(0, n) };
+    }
+    let sketch = (r + OVERSAMPLE).min(kmax);
+    if kmax <= JACOBI_DIRECT_MAX || sketch * 2 >= kmax {
+        return svd_with(a, pool).truncate(r);
+    }
+    if m < n {
+        let f = svd_rank_with(&a.transpose(), rank, seed, pool);
+        let u = f.vt.transpose();
+        let vt = f.u.transpose();
+        return Svd { u, s: f.s, vt };
+    }
+    // Sketch: Y = A·Ω with a seeded Gaussian Ω — deterministic by seed,
+    // pooled GEMM bit-identical by the par.rs contract.
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let omega = Mat::randn(n, sketch, 1.0, &mut rng);
+    let y = matmul_with(a, &omega, pool);
+    let q = mgs_orthonormalize(&y);
+    // Project: B = Qᵀ·A is [sketch, n]; its SVD lifts back through Q.
+    let b = matmul_tn_with(&q, a, pool);
+    let fb = svd_with(&b, pool).truncate(r);
+    let u = matmul_with(&q, &fb.u, pool);
+    Svd { u, s: fb.s, vt: fb.vt }
+}
+
+/// Modified Gram–Schmidt with re-orthogonalization, serial f64, fixed
+/// column order. Columns that collapse below tolerance become exact zero
+/// columns (deterministic handling of rank-deficient sketches).
+fn mgs_orthonormalize(y: &Mat) -> Mat {
+    let (m, l) = (y.rows, y.cols);
+    // Column-major f64 working copy.
+    let mut cols: Vec<f64> = vec![0.0; m * l];
+    for i in 0..m {
+        let row = y.row(i);
+        for j in 0..l {
+            cols[j * m + i] = row[j] as f64;
+        }
+    }
+    let scale = cols.iter().fold(0.0f64, |acc, &v| acc.max(v.abs())).max(1.0);
+    let tol = 1e-12 * scale;
+    for j in 0..l {
+        // Two MGS passes against the already-fixed columns.
+        for _pass in 0..2 {
+            for k in 0..j {
+                let dot: f64 = (0..m).map(|i| cols[k * m + i] * cols[j * m + i]).sum();
+                for i in 0..m {
+                    cols[j * m + i] -= dot * cols[k * m + i];
+                }
+            }
+        }
+        let norm: f64 = (0..m).map(|i| cols[j * m + i] * cols[j * m + i]).sum::<f64>().sqrt();
+        if norm > tol {
+            for i in 0..m {
+                cols[j * m + i] /= norm;
+            }
+        } else {
+            for i in 0..m {
+                cols[j * m + i] = 0.0;
+            }
+        }
+    }
+    let mut q = Mat::zeros(m, l);
+    for i in 0..m {
+        let row = q.row_mut(i);
+        for j in 0..l {
+            row[j] = cols[j * m + i] as f32;
+        }
+    }
+    q
+}
+
+/// One-sided Jacobi on a tall (`m >= n`) matrix. Fixed cyclic pair order;
+/// dots and norms are serial f64; the two-column rotation update is
+/// element-wise and may be chunked across the pool without changing bits.
+fn jacobi_tall(a: &Mat, pool: &Pool, block: usize) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    // G starts as A (column-major f64); V starts as I (column-major f64).
+    let mut g: Vec<f64> = vec![0.0; m * n];
+    for i in 0..m {
+        let row = a.row(i);
+        for j in 0..n {
+            g[j * m + i] = row[j] as f64;
+        }
+    }
+    let mut v: Vec<f64> = vec![0.0; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+
+    let grain = if block == 0 { chunk(m, pool.threads()) } else { block };
+    for _sweep in 0..MAX_SWEEPS {
+        let mut rotated = false;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                // Serial fixed-order reductions: αₚ, α_q, γ.
+                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let gp = g[p * m + i];
+                    let gq = g[q * m + i];
+                    alpha += gp * gp;
+                    beta += gq * gq;
+                    gamma += gp * gq;
+                }
+                if gamma == 0.0 || gamma.abs() <= JACOBI_TOL * (alpha * beta).sqrt() {
+                    continue;
+                }
+                rotated = true;
+                let tau = (beta - alpha) / (2.0 * gamma);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_pair(&mut g, m, (p, q), (c, s), pool, grain);
+                // V is n×n — small next to G; rotate serially.
+                rotate_serial(&mut v, n, p, q, c, s);
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Singular values = column norms of G, sorted descending (stable on
+    // the original index, so ties order deterministically).
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| g[j * m + i] * g[j * m + i]).sum::<f64>().sqrt())
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).unwrap().then(x.cmp(&y)));
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = vec![0.0f32; n];
+    let mut vt = Mat::zeros(n, n);
+    for (slot, &j) in order.iter().enumerate() {
+        let norm = norms[j];
+        s[slot] = norm as f32;
+        if norm > 0.0 {
+            for i in 0..m {
+                *u.at_mut(i, slot) = (g[j * m + i] / norm) as f32;
+            }
+        }
+        for i in 0..n {
+            *vt.at_mut(slot, i) = v[j * n + i] as f32;
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Apply the rotation to columns `p`, `q` of the column-major `[m, _]`
+/// buffer. Element `i`'s update touches only element `i` of each column,
+/// so pool chunking cannot change any result bit.
+fn rotate_pair(
+    g: &mut [f64],
+    m: usize,
+    pq: (usize, usize),
+    rot: (f64, f64),
+    pool: &Pool,
+    grain: usize,
+) {
+    let (p, q) = pq;
+    let (c, s) = rot;
+    debug_assert!(p < q);
+    let (left, right) = g.split_at_mut(q * m);
+    let gp = &mut left[p * m..(p + 1) * m];
+    let gq = &mut right[..m];
+    if pool.threads() > 1 && m >= 64 {
+        let bp = SendPtr::new(gp.as_mut_ptr());
+        let bq = SendPtr::new(gq.as_mut_ptr());
+        pool.run(m, grain, |i0, i1| {
+            for i in i0..i1 {
+                // Sound: chunks are disjoint index ranges of both columns.
+                unsafe {
+                    let a = *bp.0.add(i);
+                    let b = *bq.0.add(i);
+                    *bp.0.add(i) = c * a - s * b;
+                    *bq.0.add(i) = s * a + c * b;
+                }
+            }
+        });
+    } else {
+        for i in 0..m {
+            let a = gp[i];
+            let b = gq[i];
+            gp[i] = c * a - s * b;
+            gq[i] = s * a + c * b;
+        }
+    }
+}
+
+fn rotate_serial(v: &mut [f64], m: usize, p: usize, q: usize, c: f64, s: f64) {
+    let (left, right) = v.split_at_mut(q * m);
+    let vp = &mut left[p * m..(p + 1) * m];
+    let vq = &mut right[..m];
+    for i in 0..m {
+        let a = vp[i];
+        let b = vq[i];
+        vp[i] = c * a - s * b;
+        vq[i] = s * a + c * b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn recon_err(a: &Mat, f: &Svd) -> f64 {
+        a.sub(&f.reconstruct()).frob()
+    }
+
+    #[test]
+    fn full_factorization_reconstructs() {
+        let mut rng = Rng::new(7);
+        for (m, n) in [(9usize, 9usize), (17, 5), (5, 17)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let f = svd_with(&a, &Pool::serial());
+            assert_eq!(f.rank(), m.min(n));
+            assert!(recon_err(&a, &f) < 1e-3, "{m}x{n}: err {}", recon_err(&a, &f));
+            for w in f.s.windows(2) {
+                assert!(w[0] >= w[1], "singular values must be sorted: {:?}", f.s);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_matches_full_prefix() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(20, 12, 1.0, &mut rng);
+        let full = svd_with(&a, &Pool::serial());
+        let trunc = svd_with(&a, &Pool::serial()).truncate(4);
+        assert_eq!(trunc.s, full.s[..4].to_vec());
+        assert_eq!(trunc.u.cols, 4);
+        assert_eq!(trunc.vt.rows, 4);
+    }
+
+    #[test]
+    fn randomized_path_captures_dominant_subspace() {
+        // A rank-3 matrix plus tiny noise, big enough to take the
+        // range-finder path: rank-8 recovery must be near-exact.
+        let mut rng = Rng::new(13);
+        let u = Mat::randn(200, 3, 1.0, &mut rng);
+        let v = Mat::randn(3, 150, 1.0, &mut rng);
+        let mut a = matmul_with(&u, &v, &Pool::serial());
+        for x in a.data.iter_mut() {
+            *x += 1e-5 * rng.normal_f32();
+        }
+        let f = svd_rank_with(&a, 8, 99, &Pool::serial());
+        assert_eq!(f.rank(), 8);
+        let rel = recon_err(&a, &f) / a.frob();
+        assert!(rel < 1e-3, "relative error {rel}");
+    }
+
+    #[test]
+    fn zero_matrix_and_rank_zero() {
+        let z = Mat::zeros(6, 4);
+        let f = svd_with(&z, &Pool::serial());
+        assert!(f.s.iter().all(|&s| s == 0.0));
+        assert!(f.u.data.iter().all(|&x| x == 0.0));
+        let r0 = svd_rank_with(&z, 0, 1, &Pool::serial());
+        assert_eq!(r0.rank(), 0);
+        assert_eq!((r0.u.rows, r0.u.cols), (6, 0));
+        assert_eq!((r0.vt.rows, r0.vt.cols), (0, 4));
+    }
+}

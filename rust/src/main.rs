@@ -45,7 +45,7 @@ fn main() {
 const GEN_DATA_FLAGS: &[&str] = &["threads", "out", "tokens"];
 const QUANTIZE_FLAGS: &[&str] = &[
     "threads", "model", "method", "bits", "group", "qep", "calib", "seed", "out", "artifacts",
-    "verbose",
+    "verbose", "lowrank-rank",
 ];
 const EVAL_FLAGS: &[&str] = &["threads", "model-file", "flavor", "tasks", "chunk", "artifacts"];
 /// `repro exp <id>` (run / shard-run). Plan flags + execution flags.
@@ -61,6 +61,7 @@ const EXP_RUN_FLAGS: &[&str] = &[
     "bits",
     "blocks",
     "seeds",
+    "ranks",
     "shard",
     "out",
     "results",
@@ -69,11 +70,11 @@ const EXP_RUN_FLAGS: &[&str] = &[
 ];
 /// `repro exp plan <id>`: plan flags only (nothing runs or renders).
 const EXP_PLAN_FLAGS: &[&str] =
-    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "shard"];
+    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard"];
 /// `repro exp status <id>`: plan flags + the record directory (+ an
 /// optional shard slice to report on).
 const EXP_STATUS_FLAGS: &[&str] =
-    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "shard", "out"];
+    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard", "out"];
 /// `repro exp cell <cell-id>`: the cell ID carries the whole plan.
 const EXP_CELL_FLAGS: &[&str] = &["threads", "artifacts", "out"];
 /// `repro exp merge <id>`: plan flags + collect/render flags (no --shard
@@ -85,6 +86,7 @@ const EXP_MERGE_FLAGS: &[&str] = &[
     "bits",
     "blocks",
     "seeds",
+    "ranks",
     "out",
     "results",
     "stable-timings",
@@ -142,12 +144,13 @@ repro — Quantization Error Propagation (QEP) reproduction
 USAGE:
   repro gen-data [--out artifacts/data] [--tokens 262144]
   repro quantize --model <tiny-s|tiny-m|tiny-l|path.qtz> --method <rtn|gptq|awq|quip>
-                 --bits <2|3|4|8> [--group N] [--qep <alpha>] [--calib <wiki|ptb|c4>]
-                 [--seed N] [--threads N] [--out out.qtz]
+                 --bits <2|3|4|8> [--group N] [--qep <alpha>] [--lowrank-rank R]
+                 [--calib <wiki|ptb|c4>] [--seed N] [--threads N] [--out out.qtz]
   repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks] [--chunk N]
-  repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|all>
-                 [--sizes s,m,l] [--fast] [--artifacts DIR] [--results DIR]
-                 [--shard i/N] [--out DIR] [--resume] [--stable-timings]
+  repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|lowrank|all>
+                 [--sizes s,m,l] [--fast] [--ranks 4,16] [--artifacts DIR]
+                 [--results DIR] [--shard i/N] [--out DIR] [--resume]
+                 [--stable-timings]
   repro exp plan  <id> [--fast] [--sizes ...] [--shard i/N]
   repro exp cell  <cell-id> --out DIR
   repro exp status <id> --out DIR [--shard i/N] [--fast] [--sizes ...]
@@ -158,6 +161,24 @@ USAGE:
 
 Unrecognized --flags are rejected with a usage error (a typo'd flag must
 never silently change what a sweep runs).
+
+LOW-RANK RECONSTRUCTION (LQER/QERA family):
+  --lowrank-rank R  (quantize) After quantizing each layer, approximate
+                  its quantization residual W − Q(W) with a rank-R
+                  adjunct U·V computed from a deterministic SVD. When a
+                  calibration Hessian is available the residual is
+                  whitened by its Cholesky factor first (QERA's analytic
+                  activation-weighted form); otherwise a plain SVD of
+                  the residual (LQER). R=0 (default) disables it. The
+                  adjunct is orthogonal to --qep: both can be on at
+                  once. With --out, the .qtz stores the on-grid base
+                  weights plus factored `lowrank.<layer>.{u,v}` tensor
+                  sections; eval and serving fold or fuse them back in
+                  (serving applies y += U·(V·x) after the quantized
+                  GEMM, bit-identical to dense correction).
+  --ranks a,b,... (exp lowrank) Non-zero adjunct ranks the sweep
+                  enumerates next to its rank-0 base/+qep reference
+                  rows (default 4,16; --fast: 2).
 
 SHARDING (distributed experiment sweeps):
   Every `exp` sweep first enumerates a stable, ordered manifest of cell
@@ -295,6 +316,12 @@ fn quantize(args: &Args) -> Result<()> {
     let flavor = Flavor::from_name(args.get_or("calib", "c4"))
         .ok_or_else(|| anyhow!("unknown calib flavor"))?;
     let seed = args.get_usize("seed", 0) as u64;
+    let lowrank_rank: usize = match args.get("lowrank-rank") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("--lowrank-rank expects a non-negative integer, got '{v}'"))?,
+    };
 
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
     let calib = env.calib_tokens(flavor, model.cfg.seq_len, seed);
@@ -304,6 +331,7 @@ fn quantize(args: &Args) -> Result<()> {
         quant,
         method,
         qep_alpha,
+        lowrank_rank,
         seed,
         verbose: args.has("verbose"),
         ..Default::default()
@@ -312,7 +340,15 @@ fn quantize(args: &Args) -> Result<()> {
     let out = Pipeline::new(cfg).run(&model, &calib)?;
     println!("{}", out.report.summary());
     if let Some(path) = args.get("out") {
-        out.model.save(path)?;
+        if out.adjuncts.is_empty() {
+            out.model.save(path)?;
+        } else {
+            // Store the on-grid base weights plus the factored adjuncts
+            // (not the effective sum): serving re-packs the base weights
+            // losslessly and applies U·(V·x) after the quantized GEMM.
+            let base = out.base_model.as_ref().expect("adjuncts imply a base model");
+            qep::qep::save_with_adjuncts(path, base, &out.adjuncts, lowrank_rank)?;
+        }
         println!("saved {path}");
     }
     let eval_tokens = env.eval_tokens(Flavor::Wiki);
@@ -321,9 +357,15 @@ fn quantize(args: &Args) -> Result<()> {
 }
 
 fn eval(args: &Args) -> Result<()> {
-    let model = Model::load(
+    // Low-rank adjunct sections, if present, are folded into the dense
+    // weights here: eval measures the effective model.
+    let (mut model, adjuncts) = qep::qep::load_with_adjuncts(
         args.get("model-file").ok_or_else(|| anyhow!("--model-file required"))?,
     )?;
+    if !adjuncts.is_empty() {
+        qep::qep::materialize_into_model(&mut model, &adjuncts)?;
+        println!("applied {} low-rank adjunct(s)", adjuncts.len());
+    }
     let flavor = Flavor::from_name(args.get_or("flavor", "wiki"))
         .ok_or_else(|| anyhow!("unknown flavor"))?;
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
@@ -409,7 +451,10 @@ fn serve_bench(args: &Args) -> Result<()> {
 /// Resolve `<id>` at `positional[pos]` into a sweep + its plan params.
 fn sweep_from(args: &Args, pos: usize) -> Result<(SweepId, PlanParams)> {
     let name = args.positional.get(pos).ok_or_else(|| {
-        anyhow!("missing experiment id (fig1..fig3, table1..table10, ablation-alpha, appendix, all)")
+        anyhow!(
+            "missing experiment id (fig1..fig3, table1..table10, ablation-alpha, appendix, \
+             lowrank, all)"
+        )
     })?;
     let sweep = SweepId::from_name(name)
         .ok_or_else(|| anyhow!("unknown experiment '{name}'"))?;

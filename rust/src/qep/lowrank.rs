@@ -1,0 +1,395 @@
+//! Low-rank quantization-error reconstruction (the LQER/QERA family).
+//!
+//! After a base quantizer produces `Q(W)`, the residual `R = W − Q(W)` is
+//! approximated by a rank-`r` term `U·V` chosen to minimize the
+//! *activation-weighted* error `‖(R − U·V)·X‖_F` — QERA's analytic
+//! solution. With `H = XᵀX = L·Lᵀ` (damped Cholesky, same `ρ =
+//! damp_rel·mean(diag H)` rule as the QEP correction), the optimum is the
+//! truncated SVD of `B = R·L` mapped back through `L⁻¹`:
+//!
+//! ```text
+//! B = R·L = U_r Σ_r V_rᵀ + …   ⇒   U = U_r,   V = Σ_r V_rᵀ L⁻¹
+//! ```
+//!
+//! so the stored adjunct satisfies `U·V ≈ R` in the metric the layer
+//! actually sees. Without calibration statistics the builder falls back
+//! to the plain truncated SVD of `R` (LQER's data-free variant).
+//!
+//! The adjunct is orthogonal to both the base quantizer *and* QEP's α
+//! correction: it is computed after quantization from whatever residual
+//! is left, so every `Method × ±QEP` cell gains a `±lowrank` twin.
+//!
+//! Serving applies the factors without materializing: `y += (x·Vᵀ)·Uᵀ`
+//! after the (quantized) GEMM, through the same pooled bit-identical
+//! kernels — see `serve::engine::LinearW`.
+
+use crate::io::TensorFile;
+use crate::linalg::{cholesky_in_place, matmul_nt_with, solve_lower_transpose, svd_rank_with};
+use crate::linalg::{Mat, Mat64};
+use crate::model::Model;
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// `.qtz` metadata key recording the adjunct rank (0 / absent = none).
+pub const LOWRANK_META_KEY: &str = "lowrank_rank";
+
+/// A rank-`r` reconstruction `U·V ≈ W − Q(W)` for one linear layer.
+///
+/// `u` is `[out, r]`, `v` is `[r, in]` — the same `[out, in]` orientation
+/// as the layer weight, so `x·(U·V)ᵀ = (x·Vᵀ)·Uᵀ`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LowRankAdjunct {
+    pub u: Mat,
+    pub v: Mat,
+}
+
+impl LowRankAdjunct {
+    pub fn rank(&self) -> usize {
+        self.v.rows
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.u.rows
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.v.cols
+    }
+
+    /// Dense `U·V` as `[out, in]`, accumulated serially in f64 (fixed
+    /// order — the materialized weight is part of the deterministic
+    /// surface shared by eval and the pipeline's propagation stream).
+    pub fn materialize(&self) -> Mat {
+        let (m, n, r) = (self.u.rows, self.v.cols, self.rank());
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let urow = self.u.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..r {
+                    acc += urow[t] as f64 * self.v.at(t, j) as f64;
+                }
+                orow[j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    /// `base + U·V` — the dense-corrected weight.
+    pub fn add_to(&self, base: &Mat) -> Mat {
+        assert_eq!((base.rows, base.cols), (self.u.rows, self.v.cols), "adjunct shape mismatch");
+        base.add(&self.materialize())
+    }
+
+    /// Fused apply: `y += (x·Vᵀ)·Uᵀ` on `pool`. Both GEMMs are the pooled
+    /// bit-identical kernels and the final add is element-wise in index
+    /// order, so the result is invariant to thread count.
+    pub fn apply_with(&self, x: &Mat, y: &mut Mat, pool: &Pool) {
+        if self.rank() == 0 {
+            return;
+        }
+        let t = matmul_nt_with(x, &self.v, pool);
+        let add = matmul_nt_with(&t, &self.u, pool);
+        y.add_assign(&add);
+    }
+}
+
+/// Build the rank-`rank` adjunct for one layer from its residual
+/// `R = W − Q(W)` and (optionally) the calibration Hessian `H = XᵀX`.
+///
+/// With a Hessian, the analytic QERA solution is used (damping follows
+/// the QEP correction's `ρ = (damp_rel·mean(diag H)).max(1e-10)` rule);
+/// without one — or if the damped factorization fails — the builder
+/// falls back to the plain truncated SVD of `R`. `seed` drives the
+/// randomized range-finder for large layers and is expected to be
+/// name-derived so shards and thread counts agree on Ω.
+pub fn adjunct_from_residual(
+    residual: &Mat,
+    hessian: Option<&Mat64>,
+    rank: usize,
+    damp_rel: f64,
+    seed: u64,
+    pool: &Pool,
+) -> LowRankAdjunct {
+    let (m, n) = (residual.rows, residual.cols);
+    let r = rank.min(m.min(n));
+    if r == 0 {
+        return LowRankAdjunct { u: Mat::zeros(m, 0), v: Mat::zeros(0, n) };
+    }
+    if let Some(h) = hessian {
+        assert_eq!((h.rows, h.cols), (n, n), "hessian must be [in, in]");
+        let mut l = h.clone();
+        let rho = (damp_rel * l.mean_diag()).max(1e-10);
+        l.add_diag(rho);
+        if cholesky_in_place(&mut l).is_ok() {
+            return analytic_adjunct(residual, &l, r, seed, pool);
+        }
+    }
+    plain_adjunct(residual, r, seed, pool)
+}
+
+/// QERA's analytic form: truncated SVD of `B = R·L`, mapped back through
+/// `L⁻¹` via triangular solves.
+fn analytic_adjunct(residual: &Mat, l: &Mat64, r: usize, seed: u64, pool: &Pool) -> LowRankAdjunct {
+    let (m, n) = (residual.rows, residual.cols);
+    // B = R·L in f64 (L is lower triangular: column j only sees k >= j).
+    let mut b = Mat::zeros(m, n);
+    for i in 0..m {
+        let rrow = residual.row(i);
+        let brow = b.row_mut(i);
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in j..n {
+                acc += rrow[k] as f64 * l.at(k, j);
+            }
+            brow[j] = acc as f32;
+        }
+    }
+    let f = svd_rank_with(&b, r, seed, pool);
+    // Row t of V is σ_t·v_tᵀ·L⁻¹, i.e. the solution z of Lᵀz = σ_t·v_t.
+    let mut v = Mat::zeros(r, n);
+    for t in 0..r {
+        let mut z: Vec<f64> = (0..n).map(|j| f.s[t] as f64 * f.vt.at(t, j) as f64).collect();
+        solve_lower_transpose(l, &mut z);
+        for (dst, src) in v.row_mut(t).iter_mut().zip(z.iter()) {
+            *dst = *src as f32;
+        }
+    }
+    LowRankAdjunct { u: f.u, v }
+}
+
+/// Data-free fallback: plain truncated SVD of the residual, with Σ folded
+/// into `V` so `U` keeps orthonormal columns.
+fn plain_adjunct(residual: &Mat, r: usize, seed: u64, pool: &Pool) -> LowRankAdjunct {
+    let f = svd_rank_with(residual, r, seed, pool);
+    let mut v = f.vt;
+    for t in 0..r {
+        let s = f.s[t];
+        for x in v.row_mut(t) {
+            *x *= s;
+        }
+    }
+    LowRankAdjunct { u: f.u, v }
+}
+
+// ---------------------------------------------------------------------------
+// `.qtz` artifact section.
+// ---------------------------------------------------------------------------
+
+/// Tensor names for a layer's adjunct factors inside the `.qtz` file.
+/// `layer` is the pipeline's canonical `blocks.{i}.{short}` name.
+pub fn adjunct_tensor_names(layer: &str) -> (String, String) {
+    (format!("lowrank.{layer}.u"), format!("lowrank.{layer}.v"))
+}
+
+/// Serialize `model` plus adjuncts into one tensor file: base tensors in
+/// the model's canonical order first, then adjunct factors in sorted
+/// layer order — a fixed insertion order, so the bytes are a pure
+/// function of the contents (blob offsets depend on insertion order).
+pub fn to_tensor_file_with_adjuncts(
+    model: &Model,
+    adjuncts: &BTreeMap<String, LowRankAdjunct>,
+    rank: usize,
+) -> TensorFile {
+    let mut tf = model.to_tensor_file();
+    tf.meta.set(LOWRANK_META_KEY, Json::Num(rank as f64));
+    for (layer, adj) in adjuncts {
+        let (un, vn) = adjunct_tensor_names(layer);
+        tf.put_mat(&un, &adj.u);
+        tf.put_mat(&vn, &adj.v);
+    }
+    tf
+}
+
+/// Save `model` (base/grid weights) plus its adjunct section.
+pub fn save_with_adjuncts<P: AsRef<Path>>(
+    path: P,
+    model: &Model,
+    adjuncts: &BTreeMap<String, LowRankAdjunct>,
+    rank: usize,
+) -> Result<()> {
+    to_tensor_file_with_adjuncts(model, adjuncts, rank).save(path)
+}
+
+/// Extract the adjunct section of a tensor file (empty map when absent —
+/// plain model files load unchanged).
+pub fn adjuncts_from_tensor_file(tf: &TensorFile) -> Result<BTreeMap<String, LowRankAdjunct>> {
+    let mut out = BTreeMap::new();
+    let names: Vec<String> = tf.names().into_iter().map(|s| s.to_string()).collect();
+    for name in &names {
+        let Some(rest) = name.strip_prefix("lowrank.") else { continue };
+        let Some(layer) = rest.strip_suffix(".u") else { continue };
+        let (un, vn) = adjunct_tensor_names(layer);
+        let u = tf.get_mat(&un)?;
+        let v = tf
+            .get_mat(&vn)
+            .with_context(|| format!("adjunct '{layer}' has a U factor but no V"))?;
+        if u.cols != v.rows {
+            bail!(
+                "adjunct '{layer}': U is [{},{}] but V is [{},{}]",
+                u.rows,
+                u.cols,
+                v.rows,
+                v.cols
+            );
+        }
+        out.insert(layer.to_string(), LowRankAdjunct { u, v });
+    }
+    Ok(out)
+}
+
+/// Load a `.qtz` artifact together with its (possibly empty) adjunct map.
+pub fn load_with_adjuncts<P: AsRef<Path>>(
+    path: P,
+) -> Result<(Model, BTreeMap<String, LowRankAdjunct>)> {
+    let tf = TensorFile::load(path.as_ref())
+        .with_context(|| format!("loading model {}", path.as_ref().display()))?;
+    let model = Model::from_tensor_file(&tf)?;
+    let adjuncts = adjuncts_from_tensor_file(&tf)?;
+    Ok((model, adjuncts))
+}
+
+/// Fold every adjunct into its layer: `W ← W + U·V`. This is the dense
+/// materialization evaluation uses; serving keeps the factored form.
+pub fn materialize_into_model(
+    model: &mut Model,
+    adjuncts: &BTreeMap<String, LowRankAdjunct>,
+) -> Result<()> {
+    for (layer, adj) in adjuncts {
+        let Some(rest) = layer.strip_prefix("blocks.") else {
+            bail!("adjunct layer '{layer}' is not a block linear");
+        };
+        let Some((idx, short)) = rest.split_once('.') else {
+            bail!("adjunct layer '{layer}' is not a block linear");
+        };
+        let bi: usize = idx.parse().with_context(|| format!("adjunct layer '{layer}'"))?;
+        if bi >= model.blocks.len() {
+            bail!("adjunct layer '{layer}' out of range ({} blocks)", model.blocks.len());
+        }
+        let w = model.blocks[bi].linear_mut(short);
+        *w = adj.add_to(w);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_nt;
+    use crate::util::rng::Rng;
+
+    fn residual(m: usize, n: usize, seed: u64) -> Mat {
+        Mat::randn(m, n, 0.1, &mut Rng::new(seed))
+    }
+
+    fn hessian_of(x: &Mat) -> Mat64 {
+        let h32 = crate::linalg::matmul_tn(x, x);
+        let mut h = Mat64::zeros(x.cols, x.cols);
+        for (dst, src) in h.data.iter_mut().zip(h32.data.iter()) {
+            *dst = *src as f64;
+        }
+        h
+    }
+
+    #[test]
+    fn full_rank_reconstructs_residual() {
+        let r = residual(6, 9, 1);
+        let adj = adjunct_from_residual(&r, None, 9, 1.0, 7, &Pool::serial());
+        let err = r.sub(&adj.materialize()).frob() / r.frob();
+        assert!(err < 1e-3, "full-rank reconstruction error {err}");
+    }
+
+    #[test]
+    fn analytic_form_beats_plain_svd_in_weighted_norm() {
+        // Activations concentrated on a few directions: the Hessian-aware
+        // adjunct must win (or tie) in ‖(R − UV)·X‖.
+        let mut rng = Rng::new(5);
+        let (m, n, tokens, rank) = (12usize, 16usize, 200usize, 2usize);
+        let r = residual(m, n, 2);
+        let mut x = Mat::randn(tokens, n, 1.0, &mut rng);
+        for t in 0..tokens {
+            for (j, v) in x.row_mut(t).iter_mut().enumerate() {
+                *v *= if j < 3 { 10.0 } else { 0.1 };
+            }
+        }
+        let h = hessian_of(&x);
+        let weighted = adjunct_from_residual(&r, Some(&h), rank, 1e-6, 3, &Pool::serial());
+        let plain = adjunct_from_residual(&r, None, rank, 1e-6, 3, &Pool::serial());
+        let err = |adj: &LowRankAdjunct| {
+            let e = r.sub(&adj.materialize());
+            matmul_nt(&x, &e).frob()
+        };
+        let (we, pe) = (err(&weighted), err(&plain));
+        assert!(we <= pe * 1.0001, "weighted {we} !<= plain {pe}");
+    }
+
+    #[test]
+    fn apply_matches_materialized_product() {
+        let mut rng = Rng::new(9);
+        let r = residual(10, 14, 4);
+        let adj = adjunct_from_residual(&r, None, 3, 1.0, 11, &Pool::serial());
+        let x = Mat::randn(5, 14, 1.0, &mut rng);
+        let mut y = Mat::zeros(5, 10);
+        adj.apply_with(&x, &mut y, &Pool::serial());
+        let want = matmul_nt(&x, &adj.materialize());
+        let err = y.sub(&want).frob() / want.frob().max(1e-12);
+        assert!(err < 1e-4, "factored apply drifts from dense: {err}");
+    }
+
+    #[test]
+    fn rank_zero_is_a_no_op() {
+        let r = residual(4, 6, 8);
+        let adj = adjunct_from_residual(&r, None, 0, 1.0, 1, &Pool::serial());
+        assert_eq!(adj.rank(), 0);
+        assert_eq!(adj.materialize(), Mat::zeros(4, 6));
+        let x = Mat::randn(2, 6, 1.0, &mut Rng::new(1));
+        let mut y = Mat::from_vec(2, 4, vec![1.0; 8]);
+        let before = y.clone();
+        adj.apply_with(&x, &mut y, &Pool::serial());
+        assert_eq!(y, before);
+    }
+
+    #[test]
+    fn artifact_roundtrip_is_byte_exact() {
+        let mut cfg = crate::model::ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 8;
+        let model = Model::random(&cfg, 1);
+        let mut adjuncts = BTreeMap::new();
+        adjuncts.insert(
+            "blocks.0.attn.wq".to_string(),
+            adjunct_from_residual(&residual(16, 16, 3), None, 2, 1.0, 5, &Pool::serial()),
+        );
+        adjuncts.insert(
+            "blocks.1.mlp.down".to_string(),
+            adjunct_from_residual(&residual(16, 32, 4), None, 2, 1.0, 6, &Pool::serial()),
+        );
+        let bytes = to_tensor_file_with_adjuncts(&model, &adjuncts, 2).serialize();
+        let tf = TensorFile::deserialize(&bytes).unwrap();
+        let back_model = Model::from_tensor_file(&tf).unwrap();
+        let back_adj = adjuncts_from_tensor_file(&tf).unwrap();
+        assert_eq!(back_adj, adjuncts);
+        let again = to_tensor_file_with_adjuncts(&back_model, &back_adj, 2).serialize();
+        assert_eq!(bytes, again, "write→read→write must be byte-identical");
+    }
+
+    #[test]
+    fn materialize_into_model_adds_uv() {
+        let mut cfg = crate::model::ModelConfig::new("unit", 16, 2, 2, 32);
+        cfg.seq_len = 8;
+        let mut model = Model::random(&cfg, 2);
+        let base = model.blocks[0].wk.clone();
+        let adj = adjunct_from_residual(&residual(16, 16, 5), None, 2, 1.0, 7, &Pool::serial());
+        let mut adjuncts = BTreeMap::new();
+        adjuncts.insert("blocks.0.attn.wk".to_string(), adj.clone());
+        materialize_into_model(&mut model, &adjuncts).unwrap();
+        assert_eq!(model.blocks[0].wk, adj.add_to(&base));
+        // Bad layer names are loud.
+        let mut bad = BTreeMap::new();
+        bad.insert("blocks.9.attn.wk".to_string(), adj);
+        assert!(materialize_into_model(&mut model, &bad).is_err());
+    }
+}

@@ -17,9 +17,14 @@
 
 pub mod alpha;
 pub mod correction;
+pub mod lowrank;
 
 pub use alpha::AlphaPolicy;
 pub use correction::{
     corrected_weight, corrected_weight_with_h, correction_term, correction_term_with_h,
     CorrectionStats,
+};
+pub use lowrank::{
+    adjunct_from_residual, load_with_adjuncts, materialize_into_model, save_with_adjuncts,
+    LowRankAdjunct,
 };

@@ -23,39 +23,73 @@ use crate::model::config::ModelConfig;
 use crate::model::forward::check_token;
 use crate::model::ops::{attend_one, rmsnorm, swiglu};
 use crate::model::Model;
+use crate::qep::LowRankAdjunct;
 use crate::quant::{QuantConfig, QuantizedTensor};
 use crate::util::pool::Pool;
+use std::collections::BTreeMap;
 
 use super::kv::KvCache;
 
-/// One serving weight matrix: dense f32, or packed codes + per-group
-/// grids consumed in place by the fused kernel.
+/// The base storage of one serving weight matrix: dense f32, or packed
+/// codes + per-group grids consumed in place by the fused kernel.
 #[derive(Clone, Debug)]
-pub enum LinearW {
+pub enum WeightKind {
     Dense(Mat),
     Quant(QuantizedTensor),
 }
 
+/// One serving weight matrix plus its optional low-rank error adjunct
+/// (`W_eff = W + U·V`, kept factored — see `crate::qep::lowrank`).
+#[derive(Clone, Debug)]
+pub struct LinearW {
+    pub weight: WeightKind,
+    pub adjunct: Option<LowRankAdjunct>,
+}
+
 impl LinearW {
-    /// `x·Wᵀ` on `pool`. Both arms are bitwise-identical for every
-    /// thread count; the `Quant` arm is additionally bitwise-identical
-    /// to densifying first (`qgemm`'s contract).
-    fn apply(&self, x: &Mat, pool: &Pool) -> Mat {
-        match self {
-            LinearW::Dense(w) => matmul_nt_with(x, w, pool),
-            LinearW::Quant(q) => qgemm_nt_with(x, &q.view(), pool),
-        }
+    pub fn dense(w: Mat) -> LinearW {
+        LinearW { weight: WeightKind::Dense(w), adjunct: None }
     }
 
-    /// Dense twin: `Quant` weights are materialized via `dequantize()`.
-    /// Serving the twin produces bit-identical logits (and therefore
-    /// identical generations) to the packed path — the cross-check the
-    /// serving example runs end-to-end.
-    fn dequantized(&self) -> LinearW {
-        match self {
-            LinearW::Dense(w) => LinearW::Dense(w.clone()),
-            LinearW::Quant(q) => LinearW::Dense(q.dequantize()),
+    pub fn quant(q: QuantizedTensor) -> LinearW {
+        LinearW { weight: WeightKind::Quant(q), adjunct: None }
+    }
+
+    /// Attach a low-rank adjunct (`None` and rank-0 both mean "none").
+    pub fn with_adjunct(mut self, adjunct: Option<LowRankAdjunct>) -> LinearW {
+        self.adjunct = adjunct.filter(|a| a.rank() > 0);
+        self
+    }
+
+    /// `x·W_effᵀ` on `pool`: the base GEMM (dense or fused dequant×GEMM),
+    /// then the factored adjunct `y += (x·Vᵀ)·Uᵀ`. Every piece is
+    /// bitwise-identical for every thread count; the `Quant` arm is
+    /// additionally bitwise-identical to densifying first (`qgemm`'s
+    /// contract), and the adjunct path is shared verbatim with the dense
+    /// twin — so packed + adjunct ≡ dense-corrected twin, bit for bit.
+    fn apply(&self, x: &Mat, pool: &Pool) -> Mat {
+        let mut y = match &self.weight {
+            WeightKind::Dense(w) => matmul_nt_with(x, w, pool),
+            WeightKind::Quant(q) => qgemm_nt_with(x, &q.view(), pool),
+        };
+        if let Some(adj) = &self.adjunct {
+            adj.apply_with(x, &mut y, pool);
         }
+        y
+    }
+
+    /// Dense twin: `Quant` weights are materialized via `dequantize()`;
+    /// the adjunct (if any) is carried over *in factored form*, so the
+    /// twin runs the identical adjunct code path. Serving the twin
+    /// produces bit-identical logits (and therefore identical
+    /// generations) to the packed path — the cross-check the serving
+    /// example runs end-to-end.
+    fn dequantized(&self) -> LinearW {
+        let weight = match &self.weight {
+            WeightKind::Dense(w) => WeightKind::Dense(w.clone()),
+            WeightKind::Quant(q) => WeightKind::Dense(q.dequantize()),
+        };
+        LinearW { weight, adjunct: self.adjunct.clone() }
     }
 }
 
@@ -88,7 +122,7 @@ pub struct ServeModel {
 impl ServeModel {
     /// Dense f32 serving weights (the baseline engine).
     pub fn from_model(m: &Model) -> ServeModel {
-        Self::build(m, |w| LinearW::Dense(w.clone()))
+        Self::build(m, |_, _, w| LinearW::dense(w.clone()))
     }
 
     /// Pack every block linear onto `cfg`'s grid (RTN) for the fused
@@ -96,10 +130,26 @@ impl ServeModel {
     /// weights already sit on grid points, so packing is lossless in
     /// practice — or to a raw model for a pure-RTN serving baseline.
     pub fn quantized(m: &Model, cfg: &QuantConfig) -> ServeModel {
-        Self::build(m, |w| LinearW::Quant(QuantizedTensor::from_mat(w, cfg)))
+        Self::build(m, |_, _, w| LinearW::quant(QuantizedTensor::from_mat(w, cfg)))
     }
 
-    fn build(m: &Model, mk: impl Fn(&Mat) -> LinearW) -> ServeModel {
+    /// Pack every block linear onto `cfg`'s grid and attach each layer's
+    /// low-rank adjunct (keys are canonical `blocks.{i}.{short}` names,
+    /// exactly as `qep::load_with_adjuncts` returns them). `m` must hold
+    /// the *on-grid base* weights — the adjunct is applied at serve time,
+    /// not folded in.
+    pub fn quantized_with_adjuncts(
+        m: &Model,
+        cfg: &QuantConfig,
+        adjuncts: &BTreeMap<String, LowRankAdjunct>,
+    ) -> ServeModel {
+        Self::build(m, |bi, short, w| {
+            let adj = adjuncts.get(&format!("blocks.{bi}.{short}")).cloned();
+            LinearW::quant(QuantizedTensor::from_mat(w, cfg)).with_adjunct(adj)
+        })
+    }
+
+    fn build(m: &Model, mk: impl Fn(usize, &str, &Mat) -> LinearW) -> ServeModel {
         ServeModel {
             cfg: m.cfg.clone(),
             embed: m.embed.clone(),
@@ -107,16 +157,17 @@ impl ServeModel {
             blocks: m
                 .blocks
                 .iter()
-                .map(|b| ServeBlock {
+                .enumerate()
+                .map(|(bi, b)| ServeBlock {
                     attn_norm: b.attn_norm.clone(),
-                    wq: mk(&b.wq),
-                    wk: mk(&b.wk),
-                    wv: mk(&b.wv),
-                    wo: mk(&b.wo),
+                    wq: mk(bi, "attn.wq", &b.wq),
+                    wk: mk(bi, "attn.wk", &b.wk),
+                    wv: mk(bi, "attn.wv", &b.wv),
+                    wo: mk(bi, "attn.wo", &b.wo),
                     mlp_norm: b.mlp_norm.clone(),
-                    gate: mk(&b.gate),
-                    up: mk(&b.up),
-                    down: mk(&b.down),
+                    gate: mk(bi, "mlp.gate", &b.gate),
+                    up: mk(bi, "mlp.up", &b.up),
+                    down: mk(bi, "mlp.down", &b.down),
                 })
                 .collect(),
             final_norm: m.final_norm.clone(),
@@ -324,6 +375,35 @@ mod tests {
         let d2 = dm.decode_step_batch(&mut [&mut dc], &[next], &pool);
         assert_eq!(q2, d2);
         let _ = cfg;
+    }
+
+    #[test]
+    fn adjunct_carrying_engine_matches_dense_corrected_twin() {
+        let (_cfg, m) = small();
+        let mut adjuncts = BTreeMap::new();
+        adjuncts.insert(
+            "blocks.0.attn.wq".to_string(),
+            crate::qep::adjunct_from_residual(
+                &Mat::randn(16, 16, 0.05, &mut Rng::new(4)),
+                None,
+                2,
+                1.0,
+                9,
+                &Pool::serial(),
+            ),
+        );
+        let qm = ServeModel::quantized_with_adjuncts(&m, &QuantConfig::int_group(4, 8), &adjuncts);
+        assert!(qm.blocks[0].wq.adjunct.is_some());
+        assert!(qm.blocks[0].wk.adjunct.is_none());
+        let dm = qm.dequantized();
+        let pool = Pool::new(3);
+        let toks = tokens(6, 5);
+        let mut qc = qm.new_cache();
+        let mut dc = dm.new_cache();
+        assert_eq!(qm.prefill(&mut qc, &toks, &pool), dm.prefill(&mut dc, &toks, &pool));
+        let q2 = qm.decode_step_batch(&mut [&mut qc], &[7], &pool);
+        let d2 = dm.decode_step_batch(&mut [&mut dc], &[7], &pool);
+        assert_eq!(q2, d2);
     }
 
     #[test]

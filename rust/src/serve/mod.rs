@@ -16,7 +16,7 @@ pub mod engine;
 pub mod kv;
 pub mod sched;
 
-pub use engine::{LinearW, ServeBlock, ServeModel};
+pub use engine::{LinearW, ServeBlock, ServeModel, WeightKind};
 pub use kv::KvCache;
 pub use sched::{Completion, FinishReason, Scheduler, ServeConfig};
 

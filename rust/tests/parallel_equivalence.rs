@@ -129,6 +129,41 @@ fn qtz_files_are_byte_identical_across_thread_counts() {
     assert_eq!(b1, b4, ".qtz bytes differ between threads=1 and threads=4");
 }
 
+#[test]
+fn lowrank_qtz_files_are_byte_identical_across_thread_counts() {
+    // The adjunct-carrying artifact (base weights + lowrank.* sections)
+    // inherits the byte-identity contract: the SVD seeds derive from
+    // layer names and the Jacobi/range-finder kernels fix their
+    // reduction orders, so threads only trade wall-clock.
+    let (model, tokens) = setup();
+    let run_lr = |threads: usize| {
+        let cfg = PipelineConfig {
+            quant: QuantConfig::int(3),
+            method: Method::Gptq,
+            qep_alpha: Some(0.5),
+            lowrank_rank: 2,
+            seed: 42,
+            threads,
+            ..Default::default()
+        };
+        Pipeline::new(cfg).run(&model, &tokens).unwrap()
+    };
+    let a = run_lr(1);
+    let b = run_lr(4);
+    assert_models_bit_identical(&a.model, &b.model, "lowrank effective model");
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("qep_lowrank_equiv_t1.qtz");
+    let p4 = dir.join("qep_lowrank_equiv_t4.qtz");
+    qep::qep::save_with_adjuncts(&p1, a.base_model.as_ref().unwrap(), &a.adjuncts, 2).unwrap();
+    qep::qep::save_with_adjuncts(&p4, b.base_model.as_ref().unwrap(), &b.adjuncts, 2).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p4).ok();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, "low-rank .qtz bytes differ between threads=1 and threads=4");
+}
+
 fn random_spd(n: usize, rng: &mut Rng) -> Mat64 {
     // A = B·Bᵀ + n·I — well conditioned SPD, built in f64.
     let mut b = Mat64::zeros(n, n);

@@ -167,6 +167,66 @@ fn mid_batch_retirement_does_not_disturb_survivors() {
     assert_eq!(done[1].finish, solo_short.finish);
 }
 
+/// The adjunct-carrying quantized engine (fused qgemm + factored
+/// `y += (x·Vᵀ)·Uᵀ` apply) must match its dequantized dense-corrected
+/// twin — same dense grid weights, same factored adjunct — to the bit,
+/// at every prefix length and through full scheduler generations.
+#[test]
+fn adjunct_serving_matches_its_dense_corrected_twin_at_every_prefix_length() {
+    let (cfg, m) = small();
+    let pool = Pool::new(3);
+    // Adjuncts on a subset of layers; layers without one must serve
+    // exactly as before.
+    let mk = |rows: usize, cols: usize, seed: u64, svd_seed: u64| {
+        qep::qep::adjunct_from_residual(
+            &Mat::randn(rows, cols, 0.05, &mut Rng::new(seed)),
+            None,
+            2,
+            1.0,
+            svd_seed,
+            &Pool::serial(),
+        )
+    };
+    let mut adjuncts = std::collections::BTreeMap::new();
+    adjuncts.insert("blocks.0.attn.wq".to_string(), mk(16, 16, 71, 1));
+    adjuncts.insert("blocks.1.mlp.down".to_string(), mk(16, 32, 72, 2));
+    let qcfg = QuantConfig::int_group(4, 8);
+    let qm = ServeModel::quantized_with_adjuncts(&m, &qcfg, &adjuncts);
+    let dm = qm.dequantized();
+    let toks = tokens(cfg.seq_len, 73);
+    for prefix in 1..cfg.seq_len {
+        let mut qc = qm.new_cache();
+        let mut dc = dm.new_cache();
+        let qpre = qm.prefill(&mut qc, &toks[..prefix], &pool);
+        let dpre = dm.prefill(&mut dc, &toks[..prefix], &pool);
+        for t in 0..prefix {
+            assert_eq!(qpre.row(t), dpre.row(t), "prefill prefix={prefix} t={t}");
+        }
+        let qstep = qm.decode_step_batch(&mut [&mut qc], &[toks[prefix]], &pool);
+        let dstep = dm.decode_step_batch(&mut [&mut dc], &[toks[prefix]], &pool);
+        assert_eq!(qstep.row(0), dstep.row(0), "decode_step_batch prefix={prefix}");
+    }
+    // Full generations through the continuous-batching scheduler agree.
+    let prompts = [tokens(2, 81), tokens(4, 82)];
+    let run = |model: ServeModel| {
+        let mut s = Scheduler::new(
+            model,
+            ServeConfig { max_batch: 2, max_new_tokens: 4 },
+            Pool::serial(),
+        );
+        for p in &prompts {
+            s.submit(p).unwrap();
+        }
+        s.run()
+            .into_iter()
+            .map(|c| (c.id, c.tokens, c.finish))
+            .collect::<Vec<_>>()
+    };
+    let qm2 = ServeModel::quantized_with_adjuncts(&m, &qcfg, &adjuncts);
+    let dm2 = qm2.dequantized();
+    assert_eq!(run(qm2), run(dm2));
+}
+
 /// A model rigged so its first sampled token is a chosen special: zeroed
 /// blocks pass the embedding straight through, and the tied head then
 /// scores the boosted embedding row highest.

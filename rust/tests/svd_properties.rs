@@ -1,0 +1,204 @@
+//! Property-test suite gating the deterministic SVD kernel
+//! (`qep::linalg::svd`) — the numerical workhorse behind the low-rank
+//! quantization-error adjuncts (LQER/QERA).
+//!
+//! Properties under test:
+//! * factor orthogonality: `UᵀU = I` and `Vᵀ·V = I` to tolerance on the
+//!   non-null directions;
+//! * singular values are non-negative and sorted non-increasing;
+//! * truncated reconstruction error is monotone non-increasing in rank;
+//! * degenerate shapes behave: rank-deficient inputs produce (near-)zero
+//!   trailing singular values with zero factor columns, `1×n` / `n×1` /
+//!   zero matrices factor exactly;
+//! * **bit-identity**: both engines (full Jacobi and the seeded
+//!   randomized range-finder) return byte-for-byte identical factors for
+//!   every thread count and every rotation block size — the repo-wide
+//!   determinism contract the `.qtz` adjunct sections inherit.
+
+use qep::linalg::{matmul, svd_rank_with, svd_with, svd_with_block, Mat, Svd};
+use qep::util::pool::Pool;
+use qep::util::rng::Rng;
+
+fn randn(m: usize, n: usize, seed: u64) -> Mat {
+    Mat::randn(m, n, 1.0, &mut Rng::new(seed))
+}
+
+/// Max |G − I| entry of the Gram matrix of `u`'s columns, restricted to
+/// columns with a non-zero singular value (zero triplets are zero
+/// vectors by contract, checked separately).
+fn u_gram_deviation(f: &Svd) -> f64 {
+    let r = f.rank();
+    let mut worst = 0.0f64;
+    for a in 0..r {
+        for b in 0..r {
+            if f.s[a] == 0.0 || f.s[b] == 0.0 {
+                continue;
+            }
+            let dot: f64 = (0..f.u.rows)
+                .map(|i| f.u.at(i, a) as f64 * f.u.at(i, b) as f64)
+                .sum();
+            let want = if a == b { 1.0 } else { 0.0 };
+            worst = worst.max((dot - want).abs());
+        }
+    }
+    worst
+}
+
+/// Same for `vt`'s rows.
+fn v_gram_deviation(f: &Svd) -> f64 {
+    let r = f.rank();
+    let mut worst = 0.0f64;
+    for a in 0..r {
+        for b in 0..r {
+            if f.s[a] == 0.0 || f.s[b] == 0.0 {
+                continue;
+            }
+            let dot: f64 = f
+                .vt
+                .row(a)
+                .iter()
+                .zip(f.vt.row(b))
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            let want = if a == b { 1.0 } else { 0.0 };
+            worst = worst.max((dot - want).abs());
+        }
+    }
+    worst
+}
+
+#[test]
+fn factors_are_orthonormal_and_values_sorted() {
+    for (m, n, seed) in [(24usize, 24usize, 1u64), (40, 17, 2), (17, 40, 3)] {
+        let a = randn(m, n, seed);
+        let f = svd_with(&a, &Pool::serial());
+        assert_eq!(f.rank(), m.min(n));
+        assert!(u_gram_deviation(&f) < 1e-4, "{m}x{n}: UᵀU deviates");
+        assert!(v_gram_deviation(&f) < 1e-4, "{m}x{n}: V rows deviate");
+        for &s in &f.s {
+            assert!(s >= 0.0, "negative singular value in {:?}", f.s);
+        }
+        for w in f.s.windows(2) {
+            assert!(w[0] >= w[1], "unsorted singular values: {:?}", f.s);
+        }
+    }
+}
+
+#[test]
+fn reconstruction_error_is_monotone_in_rank() {
+    let a = randn(30, 18, 9);
+    let full = svd_with(&a, &Pool::serial());
+    let mut prev = f64::INFINITY;
+    for r in 0..=18 {
+        let err = a.sub(&full.clone().truncate(r).reconstruct()).frob();
+        assert!(
+            err <= prev + 1e-4 * a.frob(),
+            "rank {r}: error {err} rose above rank {}'s {prev}",
+            r.max(1) - 1
+        );
+        prev = err;
+    }
+    // Full rank reconstructs the matrix (f32 storage tolerance).
+    assert!(prev < 1e-3 * a.frob(), "full-rank residual {prev}");
+}
+
+#[test]
+fn rank_deficient_inputs_have_zero_tail() {
+    // A = U·V with inner dimension 3: exactly rank 3.
+    let a = matmul(&randn(30, 3, 4), &randn(3, 20, 5));
+    let f = svd_with(&a, &Pool::serial());
+    assert_eq!(f.rank(), 20);
+    for t in 3..20 {
+        assert!(
+            (f.s[t] as f64) < 1e-4 * f.s[0] as f64,
+            "trailing value s[{t}]={} should be ~0 (s[0]={})",
+            f.s[t],
+            f.s[0]
+        );
+    }
+    // Exactly-zero triplets come with exactly-zero U columns.
+    for t in 0..20 {
+        if f.s[t] == 0.0 {
+            assert!((0..30).all(|i| f.u.at(i, t) == 0.0), "non-zero null column {t}");
+        }
+    }
+    assert!(a.sub(&f.reconstruct()).frob() < 1e-3 * a.frob());
+}
+
+#[test]
+fn degenerate_shapes_factor_exactly() {
+    // 1×n: a single row is rank 1 with s[0] = its norm.
+    let row = randn(1, 13, 6);
+    let f = svd_with(&row, &Pool::serial());
+    assert_eq!(f.rank(), 1);
+    assert!((f.s[0] as f64 - row.frob()).abs() < 1e-4 * row.frob());
+    assert!(row.sub(&f.reconstruct()).frob() < 1e-4 * row.frob());
+
+    // n×1: a single column.
+    let col = randn(13, 1, 7);
+    let f = svd_with(&col, &Pool::serial());
+    assert_eq!(f.rank(), 1);
+    assert!((f.s[0] as f64 - col.frob()).abs() < 1e-4 * col.frob());
+    assert!(col.sub(&f.reconstruct()).frob() < 1e-4 * col.frob());
+
+    // Zero matrix: all-zero triplets, and rank-0 requests yield empty
+    // factors of the right shape.
+    let z = Mat::zeros(7, 5);
+    let f = svd_with(&z, &Pool::serial());
+    assert!(f.s.iter().all(|&s| s == 0.0));
+    assert!(f.u.data.iter().all(|&x| x == 0.0));
+    assert!(f.vt.data.iter().all(|&x| x == 0.0));
+    let r0 = svd_rank_with(&randn(7, 5, 8), 0, 1, &Pool::serial());
+    assert_eq!(r0.rank(), 0);
+    assert_eq!((r0.u.rows, r0.u.cols), (7, 0));
+    assert_eq!((r0.vt.rows, r0.vt.cols), (0, 5));
+}
+
+#[test]
+fn jacobi_is_bit_identical_across_threads_and_block_sizes() {
+    // m >= 64 so the pooled rotation path actually engages for
+    // multi-thread pools; tall and wide (transpose path) both covered.
+    for (m, n) in [(96usize, 40usize), (40, 96)] {
+        let a = randn(m, n, 10);
+        let reference = svd_with(&a, &Pool::serial());
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            for block in [0usize, 7, 16, 33, 96] {
+                let f = svd_with_block(&a, &pool, block);
+                assert_eq!(
+                    f, reference,
+                    "{m}x{n}: threads={threads} block={block} changed bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_engine_is_bit_identical_across_thread_counts() {
+    // min(m, n) = 120 > 96 and sketch 6+8 = 14 (≪ 60), so this takes the
+    // seeded range-finder, whose GEMMs run on the pool.
+    let a = randn(220, 120, 11);
+    let reference = svd_rank_with(&a, 6, 42, &Pool::serial());
+    assert_eq!(reference.rank(), 6);
+    for threads in [1usize, 2, 8] {
+        let f = svd_rank_with(&a, 6, 42, &Pool::new(threads));
+        assert_eq!(f, reference, "threads={threads} changed randomized-SVD bits");
+    }
+    // Different seeds may sketch differently, but the same seed is a
+    // pure function: repeat calls are identical too.
+    assert_eq!(svd_rank_with(&a, 6, 42, &Pool::serial()), reference);
+}
+
+#[test]
+fn truncated_engines_agree_with_the_full_factorization_prefix() {
+    // Small problems route the rank path straight to Jacobi: the result
+    // must be exactly the truncated full factorization.
+    let a = randn(26, 19, 12);
+    let full = svd_with(&a, &Pool::serial());
+    for r in [1usize, 4, 19, 50] {
+        let t = svd_rank_with(&a, r, 77, &Pool::serial());
+        let want = full.clone().truncate(r.min(19));
+        assert_eq!(t, want, "rank {r} disagrees with the full prefix");
+    }
+}

@@ -3,6 +3,8 @@
 //! denominator for the §Perf optimization log.
 //!
 //! Run: `cargo bench --bench pipeline_e2e`
+//! (CI smoke-runs it via `BENCH_SMOKE=1 cargo test --benches` and
+//! schema-gates the BENCH_pipeline.json it writes.)
 
 use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::eval::perplexity;
@@ -11,20 +13,41 @@ use qep::model::Size;
 use qep::quant::{Method, QuantConfig};
 use qep::text::Flavor;
 use qep::util::bench::smoke;
+use qep::util::json::Json;
 use qep::util::{fmt_duration, Stopwatch};
 
+/// One machine-readable cycle for `BENCH_pipeline.json`. `mean_s` is the
+/// end-to-end wall time (the shared key every BENCH_*.json gate checks);
+/// the quantize/eval split and the perplexity ride along.
+fn entry(label: &str, method: &str, qep: bool, quant_s: f64, eval_s: f64, ppl: f64) -> Json {
+    let mut r = Json::obj();
+    r.set("name", Json::Str(label.to_string()));
+    r.set("method", Json::Str(method.to_string()));
+    r.set("qep", Json::Bool(qep));
+    r.set("quantize_s", Json::Num(quant_s));
+    r.set("eval_s", Json::Num(eval_s));
+    r.set("mean_s", Json::Num(quant_s + eval_s));
+    r.set("ppl", Json::Num(ppl));
+    r
+}
+
 fn main() {
+    let smoke = smoke();
     let mut env = ExpEnv::new("artifacts");
     let model = env.model(Size::TinyS);
     let calib = env.calib_tokens(Flavor::C4, model.cfg.seq_len, 0);
     let eval = env.eval_tokens(Flavor::Wiki);
+    let mut results = Vec::new();
 
     println!("# end-to-end pipeline (tiny-s, INT3, 24 calib segments, 16k eval tokens)\n");
-    println!("{:<22} {:>12} {:>12} {:>12} {:>10}", "config", "quantize", "eval ppl", "total", "ppl");
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>10}",
+        "config", "quantize", "eval ppl", "total", "ppl"
+    );
     // Smoke mode (CI's `cargo test --benches`): one method proves the
     // harness runs end to end; the full matrix is for real bench sessions.
     let all_methods = Method::all();
-    let methods: &[Method] = if smoke() { &all_methods[..1] } else { &all_methods };
+    let methods: &[Method] = if smoke { &all_methods[..1] } else { &all_methods };
     for method in methods.iter().copied() {
         for qep in [None, Some(0.5)] {
             let t_total = Stopwatch::start();
@@ -39,6 +62,7 @@ fn main() {
             let t_q = t_total.seconds();
             let t_eval = Stopwatch::start();
             let ppl = perplexity(&out.model, &eval);
+            let t_e = t_eval.seconds();
             let label = format!(
                 "{} {}",
                 method.name(),
@@ -48,10 +72,39 @@ fn main() {
                 "{:<22} {:>12} {:>12} {:>12} {:>10.3}",
                 label,
                 fmt_duration(t_q),
-                fmt_duration(t_eval.seconds()),
+                fmt_duration(t_e),
                 fmt_duration(t_total.seconds()),
                 ppl
             );
+            results.push(entry(&label, method.name(), qep.is_some(), t_q, t_e, ppl));
         }
     }
+
+    // Trajectory point (same contract as the other BENCH_*.json files):
+    // CI gates on the schema, and smoke numbers are flagged so downstream
+    // tooling never treats them as measurements.
+    let mut doc = Json::obj();
+    doc.set("schema_version", Json::Num(1.0));
+    doc.set("bench", Json::Str("pipeline_e2e".into()));
+    doc.set("smoke", Json::Bool(smoke));
+    doc.set("results", Json::Arr(results));
+    let text = doc.dump();
+    std::fs::write("BENCH_pipeline.json", &text).expect("write BENCH_pipeline.json");
+
+    // Self-validate: re-parse and check the keys CI's gate relies on, so
+    // a schema break fails here first (exit code, not just a log line).
+    let back = Json::parse(&text).expect("BENCH_pipeline.json must re-parse");
+    for key in ["schema_version", "bench", "smoke", "results"] {
+        assert!(back.get(key).is_some(), "BENCH_pipeline.json missing key '{key}'");
+    }
+    let entries = back.get("results").and_then(|r| r.as_arr()).expect("results must be an array");
+    assert!(!entries.is_empty(), "results must be non-empty");
+    for e in entries {
+        let t = e.get("mean_s").and_then(Json::as_f64).expect("mean_s must be a number");
+        assert!(t.is_finite() && t > 0.0, "mean_s must be positive, got {t}");
+        let p = e.get("ppl").and_then(Json::as_f64).expect("ppl must be a number");
+        assert!(p.is_finite() && p > 0.0, "ppl must be positive, got {p}");
+    }
+    println!("\nwrote BENCH_pipeline.json ({} bytes, schema ok)", text.len());
+    qep::util::pool::shutdown();
 }

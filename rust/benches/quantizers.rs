@@ -3,25 +3,48 @@
 //! the QEP correction itself. Breaks Table 3's totals down by component.
 //!
 //! Run: `cargo bench --bench quantizers`
+//! (CI smoke-runs it via `BENCH_SMOKE=1 cargo test --benches` and
+//! schema-gates the BENCH_quantizers.json it writes.)
 
 use qep::linalg::Mat;
 use qep::qep::corrected_weight;
 use qep::quant::{quantizer_for, LayerCtx, Method, QuantConfig};
 use qep::util::bench::{bench, fmt_time, smoke, BenchConfig};
+use qep::util::json::Json;
 use qep::util::rng::Rng;
 
+/// One machine-readable component timing for `BENCH_quantizers.json`.
+fn entry(name: &str, component: &str, layer: &str, mean_s: f64) -> Json {
+    let mut r = Json::obj();
+    r.set("name", Json::Str(name.to_string()));
+    r.set("component", Json::Str(component.to_string()));
+    r.set("layer", Json::Str(layer.to_string()));
+    r.set("mean_s", Json::Num(mean_s));
+    r
+}
+
 fn main() {
-    let cfg = if smoke() {
+    let smoke = smoke();
+    let cfg = if smoke {
         BenchConfig::from_env()
     } else {
         BenchConfig { measure_time: 2.0, ..Default::default() }
     };
     let mut rng = Rng::new(0);
     let m_tokens = 1024;
+    let mut results = Vec::new();
 
     println!("# quantizer cost per layer (INT3, {m_tokens} calibration tokens)\n");
 
-    for (n, d, label) in [(256usize, 256usize, "attn 256x256"), (512, 256, "mlp.up 512x256"), (256, 512, "mlp.down 256x512")] {
+    let all_shapes: &[(usize, usize, &str)] = &[
+        (256, 256, "attn 256x256"),
+        (512, 256, "mlp.up 512x256"),
+        (256, 512, "mlp.down 256x512"),
+    ];
+    // Smoke mode proves the harness + schema end to end on one shape;
+    // the full matrix is for real bench sessions.
+    let shapes = if smoke { &all_shapes[..1] } else { all_shapes };
+    for &(n, d, label) in shapes {
         let x = Mat::randn(m_tokens, d, 1.0, &mut rng);
         let ctx = LayerCtx::from_activations(&x, 0, label);
         let w = Mat::randn(n, d, 0.05, &mut rng);
@@ -34,6 +57,7 @@ fn main() {
                 q.quantize(&w, &qc, &ctx).unwrap()
             });
             println!("  {:<8} {:>10}/layer", method.name(), fmt_time(r.mean_s));
+            results.push(entry(&r.name, method.name(), label, r.mean_s));
         }
 
         // QEP correction on matching streams.
@@ -46,11 +70,40 @@ fn main() {
             corrected_weight(&w, &x, &x_hat, 0.5, 1.0).unwrap()
         });
         println!("  {:<8} {:>10}/layer  (α=0.5 correction)", "QEP", fmt_time(r.mean_s));
+        results.push(entry(&r.name, "qep-correction", label, r.mean_s));
 
         let r = bench(&format!("hessian-build {label}"), cfg, || {
             LayerCtx::from_activations(&x, 0, label)
         });
         println!("  {:<8} {:>10}/layer  (XᵀX + stats)", "Hessian", fmt_time(r.mean_s));
+        results.push(entry(&r.name, "hessian-build", label, r.mean_s));
         println!();
     }
+
+    // Trajectory point (same contract as BENCH_serve.json /
+    // BENCH_linalg.json): CI gates on the schema, and smoke numbers are
+    // flagged so downstream tooling never treats them as measurements.
+    let mut doc = Json::obj();
+    doc.set("schema_version", Json::Num(1.0));
+    doc.set("bench", Json::Str("quantizers".into()));
+    doc.set("smoke", Json::Bool(smoke));
+    doc.set("results", Json::Arr(results));
+    let text = doc.dump();
+    std::fs::write("BENCH_quantizers.json", &text).expect("write BENCH_quantizers.json");
+
+    // Self-validate: re-parse and check the keys CI's gate relies on, so
+    // a schema break fails here first (exit code, not just a log line).
+    let back = Json::parse(&text).expect("BENCH_quantizers.json must re-parse");
+    for key in ["schema_version", "bench", "smoke", "results"] {
+        assert!(back.get(key).is_some(), "BENCH_quantizers.json missing key '{key}'");
+    }
+    let entries = back.get("results").and_then(|r| r.as_arr()).expect("results must be an array");
+    assert!(!entries.is_empty(), "results must be non-empty");
+    for e in entries {
+        let t = e.get("mean_s").and_then(Json::as_f64).expect("mean_s must be a number");
+        assert!(t.is_finite() && t > 0.0, "mean_s must be positive, got {t}");
+        assert!(e.get("component").and_then(Json::as_str).is_some(), "component must be a string");
+    }
+    println!("\nwrote BENCH_quantizers.json ({} bytes, schema ok)", text.len());
+    qep::util::pool::shutdown();
 }

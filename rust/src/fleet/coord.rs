@@ -1,0 +1,633 @@
+//! The fleet coordinator: live lease-based dispatch of plan cells.
+//!
+//! [`CoordState`] is the deterministic heart — a pure state machine over
+//! an explicit millisecond clock (every mutating call takes `now_ms`),
+//! so the fault-injection tests drive lease expiry, reassignment, and
+//! duplicate rejection with a fake clock instead of real sleeps. The TCP
+//! server ([`serve`]) is a thin shell: thread-per-connection handlers
+//! translate wire frames into state-machine calls under one mutex.
+//!
+//! ## Why the record file stays byte-identical to a local run
+//!
+//! The coordinator owns the single durable record file (the same
+//! `<sweep>.shard-1-of-1.jsonl` an unsharded `repro exp <id> --out DIR`
+//! run writes) and is the only writer. Three properties make its bytes
+//! independent of worker count, assignment interleaving, and kill
+//! schedule:
+//!
+//! 1. **Records are scheduling-free.** A cell's metrics derive from its
+//!    identity (name-derived seeds), never from which worker ran it or
+//!    when; `--stable-timings` zeroes the one wall-clock field at write
+//!    time. Two honest executions of the same cell produce identical
+//!    record lines.
+//! 2. **First accepted completion wins.** A cell becomes `done` the
+//!    moment its first completion is accepted — even one arriving from a
+//!    lease that already expired (the work is real; rejecting it to
+//!    favor an in-flight reassignment would only discard progress).
+//!    Every later completion for that cell is rejected as a duplicate,
+//!    so exactly one record per cell ever reaches the file.
+//! 3. **Appends are manifest-ordered.** Accepted records stage into an
+//!    in-order flush buffer and reach the fsynced [`RecordAppender`]
+//!    only when every earlier to-do cell has flushed — the file is at
+//!    all times a manifest-order prefix, exactly like the local durable
+//!    path. A killed coordinator therefore leaves a file `--resume` can
+//!    validate and extend without reordering anything.
+
+use crate::exp::plan::{self, PlanCell};
+use crate::fleet::wire::{self, Msg, WireError};
+use crate::io::results::{CellRecord, RecordAppender};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Coordinator tuning knobs.
+pub struct FleetOpts {
+    /// A lease not renewed (heartbeat/completion) within this window is
+    /// expired and its cell requeued.
+    pub lease_ms: u64,
+    /// Zero shard-local wall-clock fields at write time
+    /// (`--stable-timings`), for byte-comparable record files.
+    pub stable_timings: bool,
+    /// Abort the sweep after one cell reports this many worker-side
+    /// failures — a deterministic cell error would otherwise requeue
+    /// forever.
+    pub max_cell_failures: u32,
+}
+
+impl Default for FleetOpts {
+    fn default() -> FleetOpts {
+        FleetOpts { lease_ms: 30_000, stable_timings: false, max_cell_failures: 3 }
+    }
+}
+
+/// One outstanding assignment.
+struct Lease {
+    cell: usize,
+    worker: u64,
+    expires_ms: u64,
+}
+
+/// Reply to a work request.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Assignment {
+    /// Run this cell under this lease.
+    Cell { lease: u64, id: String },
+    /// Every remaining cell is leased elsewhere — ask again shortly.
+    Wait,
+    /// The sweep is complete.
+    Finished,
+}
+
+/// Verdict on a completion.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// First completion for the cell: staged for durable append.
+    Accepted,
+    /// The cell already completed (typically: its lease expired, it was
+    /// reassigned, and the other execution finished first). The record
+    /// is dropped — first accepted completion wins.
+    Duplicate,
+    /// The completion is malformed (unknown cell, or a cell that does
+    /// not match the named lease) and was dropped.
+    Rejected(String),
+}
+
+/// Live progress counters (what `exp status --connect` renders).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetStatus {
+    pub total: usize,
+    pub done: usize,
+    /// Cells currently out on an unexpired lease.
+    pub leased: usize,
+    /// Cells neither done nor leased.
+    pub pending: usize,
+    /// Workers registered and not yet disconnected.
+    pub workers: usize,
+}
+
+impl FleetStatus {
+    pub fn render(&self) -> String {
+        format!(
+            "[fleet] {}/{} cell(s) done, {} leased, {} unassigned, {} worker(s) connected",
+            self.done, self.total, self.leased, self.pending, self.workers
+        )
+    }
+}
+
+/// Manifest-order flush buffer over the durable appender: an accepted
+/// record is staged at its rank among the to-do cells and written only
+/// once every lower rank has been written — the private `Flush` analog
+/// of `exp::common::run_cells_durable`, rebuilt here because the fleet
+/// accepts records from the network rather than a local pool.
+struct InOrderSink {
+    app: RecordAppender,
+    stable: bool,
+    /// Manifest index → flush rank (position among this run's to-do
+    /// cells; resumed-over cells have no rank — they are already on
+    /// disk, before every rank-0.. byte this run appends).
+    rank: HashMap<usize, usize>,
+    next: usize,
+    staged: BTreeMap<usize, CellRecord>,
+}
+
+impl InOrderSink {
+    fn stage(&mut self, idx: usize, mut rec: CellRecord) -> Result<()> {
+        if self.stable {
+            rec.stabilize();
+        }
+        let rank = *self.rank.get(&idx).expect("staged cell is in the to-do rank map");
+        self.staged.insert(rank, rec);
+        while let Some(rec) = self.staged.remove(&self.next) {
+            self.app.append(&rec)?;
+            self.next += 1;
+        }
+        Ok(())
+    }
+}
+
+/// The coordinator state machine. All methods are synchronous and take
+/// the current time explicitly; the TCP server calls them under a mutex
+/// with a monotonic clock, tests with any clock they like.
+pub struct CoordState {
+    /// Full manifest, in order (`ids[i]` is cell index `i`).
+    ids: Vec<String>,
+    index: HashMap<String, usize>,
+    /// Cells available for assignment, lowest manifest index first.
+    pending: BTreeSet<usize>,
+    /// Cells completed (this run or resumed-over from a prior run).
+    done: HashSet<usize>,
+    leases: HashMap<u64, Lease>,
+    /// The currently-active lease per leased cell.
+    lease_of_cell: HashMap<usize, u64>,
+    workers: HashSet<u64>,
+    next_lease: u64,
+    next_worker: u64,
+    failures: HashMap<usize, u32>,
+    opts: FleetOpts,
+    sink: InOrderSink,
+}
+
+impl CoordState {
+    /// Build over a manifest, a resume skip set (cell IDs already durable
+    /// in the record file — validated by the caller via the standard
+    /// `--resume` path), and the open appender for the record file.
+    pub fn new(
+        cells: &[PlanCell],
+        skip: &HashSet<String>,
+        sink: RecordAppender,
+        opts: FleetOpts,
+    ) -> Result<CoordState> {
+        let index = plan::index_manifest(cells)?;
+        let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+        let mut done = HashSet::new();
+        let mut pending = BTreeSet::new();
+        let mut rank = HashMap::new();
+        for (i, id) in ids.iter().enumerate() {
+            if skip.contains(id) {
+                done.insert(i);
+            } else {
+                rank.insert(i, rank.len());
+                pending.insert(i);
+            }
+        }
+        let stable = opts.stable_timings;
+        Ok(CoordState {
+            ids,
+            index,
+            pending,
+            done,
+            leases: HashMap::new(),
+            lease_of_cell: HashMap::new(),
+            workers: HashSet::new(),
+            next_lease: 0,
+            next_worker: 0,
+            failures: HashMap::new(),
+            opts,
+            sink: InOrderSink { app: sink, stable, rank, next: 0, staged: BTreeMap::new() },
+        })
+    }
+
+    pub fn finished(&self) -> bool {
+        self.done.len() == self.ids.len()
+    }
+
+    /// Register a connection as a worker; IDs are never reused.
+    pub fn register(&mut self) -> u64 {
+        self.next_worker += 1;
+        self.workers.insert(self.next_worker);
+        self.next_worker
+    }
+
+    /// Expire every lease whose deadline has passed, requeueing cells
+    /// that are not already done. Returns the requeued cell IDs (lowest
+    /// manifest index first) for logging.
+    pub fn expire(&mut self, now_ms: u64) -> Vec<String> {
+        let mut dead: Vec<u64> =
+            self.leases.iter().filter(|(_, l)| l.expires_ms <= now_ms).map(|(&n, _)| n).collect();
+        dead.sort_unstable();
+        let mut requeued = Vec::new();
+        for lease in dead {
+            if let Some(cell) = self.release(lease) {
+                if !self.done.contains(&cell) {
+                    self.pending.insert(cell);
+                    requeued.push(self.ids[cell].clone());
+                }
+            }
+        }
+        requeued.sort();
+        requeued
+    }
+
+    /// Hand out the lowest-index pending cell under a fresh lease.
+    pub fn request(&mut self, worker: u64, now_ms: u64) -> Assignment {
+        self.expire(now_ms);
+        match self.pending.iter().next().copied() {
+            Some(cell) => {
+                self.pending.remove(&cell);
+                self.next_lease += 1;
+                let lease = self.next_lease;
+                self.leases
+                    .insert(lease, Lease { cell, worker, expires_ms: now_ms + self.opts.lease_ms });
+                self.lease_of_cell.insert(cell, lease);
+                Assignment::Cell { lease, id: self.ids[cell].clone() }
+            }
+            None if self.finished() => Assignment::Finished,
+            None => Assignment::Wait,
+        }
+    }
+
+    /// Renew a lease. Returns `false` when the lease is unknown or
+    /// already expired — the worker learns its work was reassigned when
+    /// its eventual completion comes back `Duplicate` (or `Accepted`, if
+    /// it still wins the race).
+    pub fn heartbeat(&mut self, lease: u64, now_ms: u64) -> bool {
+        self.expire(now_ms);
+        match self.leases.get_mut(&lease) {
+            Some(l) => {
+                l.expires_ms = now_ms + self.opts.lease_ms;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Accept or reject a completed cell. The only `Err` is a durable-
+    /// append failure — fatal to the whole sweep (the record file can no
+    /// longer make progress). Malformed completions are `Verdict::
+    /// Rejected`; repeats of a done cell are `Verdict::Duplicate`.
+    pub fn complete(&mut self, lease: u64, rec: CellRecord, _now_ms: u64) -> Result<Verdict> {
+        let Some(&idx) = self.index.get(&rec.id) else {
+            return Ok(Verdict::Rejected(format!(
+                "completion names cell '{}', which is not in this manifest",
+                rec.id
+            )));
+        };
+        if let Some(l) = self.leases.get(&lease) {
+            if l.cell != idx {
+                return Ok(Verdict::Rejected(format!(
+                    "lease {lease} is for cell '{}' but the completion names '{}'",
+                    self.ids[l.cell], rec.id
+                )));
+            }
+        }
+        // A completion under an expired (now unknown) lease is still
+        // honored below: the computation is identity-derived, so the
+        // record is exactly what the reassigned execution would produce.
+        self.release(lease);
+        if self.done.contains(&idx) {
+            return Ok(Verdict::Duplicate);
+        }
+        self.pending.remove(&idx);
+        self.done.insert(idx);
+        self.sink
+            .stage(idx, rec)
+            .with_context(|| format!("durably appending record for '{}'", self.ids[idx]))?;
+        Ok(Verdict::Accepted)
+    }
+
+    /// A worker reported a cell error: requeue it, or abort the sweep
+    /// once the same cell has failed `max_cell_failures` times (a
+    /// deterministic error would requeue forever).
+    pub fn fail(&mut self, lease: u64, error: &str, _now_ms: u64) -> Result<()> {
+        let Some(cell) = self.release(lease) else {
+            return Ok(()); // expired lease; the cell is already requeued
+        };
+        if self.done.contains(&cell) {
+            return Ok(());
+        }
+        let n = self.failures.entry(cell).or_insert(0);
+        *n += 1;
+        if *n >= self.opts.max_cell_failures {
+            bail!(
+                "cell '{}' failed {} time(s), last error: {error} — aborting the sweep \
+                 (a deterministic cell error cannot be retried away)",
+                self.ids[cell],
+                n
+            );
+        }
+        eprintln!(
+            "[serve] cell '{}' failed (attempt {}): {error} — requeued",
+            self.ids[cell], n
+        );
+        self.pending.insert(cell);
+        Ok(())
+    }
+
+    /// A worker's connection ended: drop its registration and requeue
+    /// every cell it still holds a live lease on.
+    pub fn worker_gone(&mut self, worker: u64) -> Vec<String> {
+        self.workers.remove(&worker);
+        let mut held: Vec<u64> = self
+            .leases
+            .iter()
+            .filter(|(_, l)| l.worker == worker)
+            .map(|(&n, _)| n)
+            .collect();
+        held.sort_unstable();
+        let mut requeued = Vec::new();
+        for lease in held {
+            if let Some(cell) = self.release(lease) {
+                if !self.done.contains(&cell) {
+                    self.pending.insert(cell);
+                    requeued.push(self.ids[cell].clone());
+                }
+            }
+        }
+        requeued.sort();
+        requeued
+    }
+
+    pub fn status(&self) -> FleetStatus {
+        let leased =
+            self.leases.values().filter(|l| !self.done.contains(&l.cell)).count();
+        FleetStatus {
+            total: self.ids.len(),
+            done: self.done.len(),
+            leased,
+            pending: self.pending.len(),
+            workers: self.workers.len(),
+        }
+    }
+
+    /// Drop a lease (if known), returning its cell. Clears the
+    /// cell→lease mapping only when this lease is still the active one.
+    fn release(&mut self, lease: u64) -> Option<usize> {
+        let l = self.leases.remove(&lease)?;
+        if self.lease_of_cell.get(&l.cell) == Some(&lease) {
+            self.lease_of_cell.remove(&l.cell);
+        }
+        Some(l.cell)
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP shell
+// ---------------------------------------------------------------------
+
+struct Shared {
+    state: Mutex<CoordState>,
+    /// First unrecoverable error (append failure, cell out of retries):
+    /// the accept loop aborts the sweep with it.
+    fatal: Mutex<Option<String>>,
+    conns: AtomicUsize,
+    lease_ms: u64,
+    start: Instant,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    fn state(&self) -> MutexGuard<'_, CoordState> {
+        // A poisoning panic cannot corrupt CoordState invariants (no
+        // method leaves it half-updated across an unwind point we
+        // create), so keep serving rather than deadlocking the sweep.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn set_fatal(&self, msg: String) {
+        let mut f = self.fatal.lock().unwrap_or_else(|e| e.into_inner());
+        f.get_or_insert(msg);
+    }
+
+    fn take_fatal(&self) -> Option<String> {
+        self.fatal.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+/// Heartbeat cadence handed to workers: several beats per lease window,
+/// so one delayed packet never expires a healthy worker.
+pub fn heartbeat_interval_ms(lease_ms: u64) -> u64 {
+    (lease_ms / 4).max(10)
+}
+
+/// Run the coordinator over an already-bound listener until every cell
+/// is durably recorded (returns `Ok`) or the sweep hits an
+/// unrecoverable error. Workers that die mid-cell — missed heartbeats
+/// or dropped connections — have their cells requeued automatically.
+pub fn serve(listener: TcpListener, state: CoordState, lease_ms: u64) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("setting the fleet listener non-blocking")?;
+    let shared = Arc::new(Shared {
+        state: Mutex::new(state),
+        fatal: Mutex::new(None),
+        conns: AtomicUsize::new(0),
+        lease_ms,
+        start: Instant::now(),
+    });
+    loop {
+        if let Some(msg) = shared.take_fatal() {
+            bail!("{msg}");
+        }
+        {
+            let mut st = shared.state();
+            for id in st.expire(shared.now_ms()) {
+                eprintln!("[serve] lease expired on '{id}' — requeued");
+            }
+            if st.finished() {
+                break;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    handle_conn(stream, &sh);
+                    sh.conns.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accepting a fleet connection"),
+        }
+    }
+    // Linger briefly so connected workers can pick up NoWork{done} and
+    // exit cleanly; stragglers only ever see a closed socket.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while shared.conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    Ok(())
+}
+
+/// Why a connection handler stopped reading.
+enum ConnEnd {
+    /// Peer closed cleanly between frames.
+    Closed,
+    /// Peer silent longer than the lease window, or died mid-frame.
+    Dead(String),
+    /// Peer broke the protocol (bad magic/version/payload...).
+    Protocol(String),
+}
+
+fn handle_conn(stream: TcpStream, sh: &Shared) {
+    stream.set_nodelay(true).ok();
+    // A healthy peer is never silent for a full lease window (waiting
+    // workers re-request, busy workers heartbeat), so a read timeout
+    // doubles as liveness detection for half-dead connections.
+    stream
+        .set_read_timeout(Some(Duration::from_millis(sh.lease_ms.max(100))))
+        .ok();
+    let mut worker: Option<u64> = None;
+    let end = conn_loop(&stream, sh, &mut worker);
+    if let Some(w) = worker {
+        let requeued = sh.state().worker_gone(w);
+        for id in &requeued {
+            eprintln!("[serve] worker {w} gone — requeued '{id}'");
+        }
+    }
+    match end {
+        ConnEnd::Closed => {}
+        ConnEnd::Dead(why) => eprintln!("[serve] connection lost: {why}"),
+        ConnEnd::Protocol(why) => {
+            eprintln!("[serve] protocol error from peer: {why}");
+            let mut s = &stream;
+            wire::write_msg(&mut s, &Msg::ProtocolError { detail: why }).ok();
+        }
+    }
+}
+
+fn conn_loop(mut stream: &TcpStream, sh: &Shared, worker: &mut Option<u64>) -> ConnEnd {
+    loop {
+        let msg = match wire::read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(WireError::Closed) => return ConnEnd::Closed,
+            Err(WireError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return ConnEnd::Dead(format!(
+                    "peer silent for a full lease window ({} ms)",
+                    sh.lease_ms
+                ));
+            }
+            Err(e @ (WireError::Io(_) | WireError::Truncated { .. })) => {
+                return ConnEnd::Dead(e.to_string())
+            }
+            Err(e) => return ConnEnd::Protocol(e.to_string()),
+        };
+        let reply = match msg {
+            Msg::Hello => {
+                if worker.is_some() {
+                    return ConnEnd::Protocol("second Hello on one connection".to_string());
+                }
+                let w = sh.state().register();
+                *worker = Some(w);
+                Some(Msg::Welcome { worker: w, heartbeat_ms: heartbeat_interval_ms(sh.lease_ms) })
+            }
+            Msg::Request { worker: w } => {
+                if *worker != Some(w) {
+                    return ConnEnd::Protocol(format!(
+                        "request names worker {w} but this connection registered as {:?}",
+                        worker
+                    ));
+                }
+                match sh.state().request(w, sh.now_ms()) {
+                    Assignment::Cell { lease, id } => Some(Msg::Assign { lease, cell: id }),
+                    Assignment::Wait => Some(Msg::NoWork { done: false }),
+                    Assignment::Finished => Some(Msg::NoWork { done: true }),
+                }
+            }
+            Msg::Heartbeat { lease } => {
+                // One-way: renew (or silently ignore an expired lease —
+                // the worker finds out at completion time).
+                sh.state().heartbeat(lease, sh.now_ms());
+                None
+            }
+            Msg::Complete { lease, record } => Some(handle_complete(sh, lease, &record)),
+            Msg::Failed { lease, error } => {
+                match sh.state().fail(lease, &error, sh.now_ms()) {
+                    Ok(()) => Some(Msg::CompleteAck {
+                        accepted: false,
+                        reason: "cell requeued for retry".to_string(),
+                    }),
+                    Err(e) => {
+                        sh.set_fatal(format!("{e:#}"));
+                        return ConnEnd::Protocol(format!("{e:#}"));
+                    }
+                }
+            }
+            Msg::StatusReq => {
+                let s = sh.state().status();
+                Some(Msg::Status {
+                    total: s.total as u64,
+                    done: s.done as u64,
+                    leased: s.leased as u64,
+                    pending: s.pending as u64,
+                    workers: s.workers as u64,
+                })
+            }
+            other => {
+                return ConnEnd::Protocol(format!(
+                    "unexpected {other:?} frame from a fleet peer"
+                ))
+            }
+        };
+        if let Some(reply) = reply {
+            if let Err(e) = wire::write_msg(&mut stream, &reply) {
+                return ConnEnd::Dead(format!("reply failed: {e}"));
+            }
+        }
+    }
+}
+
+fn handle_complete(sh: &Shared, lease: u64, record: &str) -> Msg {
+    let rec = crate::util::json::Json::parse(record)
+        .map_err(|e| anyhow!("completion payload is not JSON: {e}"))
+        .and_then(|j| CellRecord::from_json(&j));
+    let rec = match rec {
+        Ok(r) => r,
+        Err(e) => {
+            return Msg::CompleteAck { accepted: false, reason: format!("bad record: {e:#}") }
+        }
+    };
+    let id = rec.id.clone();
+    match sh.state().complete(lease, rec, sh.now_ms()) {
+        Ok(Verdict::Accepted) => {
+            eprintln!("[serve] cell done: {id}");
+            Msg::CompleteAck { accepted: true, reason: String::new() }
+        }
+        Ok(Verdict::Duplicate) => Msg::CompleteAck {
+            accepted: false,
+            reason: format!(
+                "duplicate completion for '{id}' — the cell was reassigned and already \
+                 recorded (first accepted completion wins)"
+            ),
+        },
+        Ok(Verdict::Rejected(why)) => Msg::CompleteAck { accepted: false, reason: why },
+        Err(e) => {
+            // Durable-append failure: the sweep cannot make progress.
+            sh.set_fatal(format!("{e:#}"));
+            Msg::CompleteAck { accepted: false, reason: format!("fatal: {e:#}") }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Fleet sweeps: a live TCP coordinator/worker pair for distributed
+//! experiment runs (`repro exp serve <id>` / `repro exp work`).
+//!
+//! The shared-filesystem shard runner (`repro exp --shard i/N`) splits a
+//! sweep *statically*: each process owns a fixed manifest slice, and a
+//! dead shard stays dead until a human resumes it. The fleet promotes
+//! that workflow into a self-supervising service over `std::net`:
+//!
+//! * [`wire`] — a length-prefixed, versioned frame protocol whose
+//!   failure modes (garbage, truncation, version skew, oversized
+//!   frames) are all named errors, never hangs or panics;
+//! * [`coord`] — the coordinator: a fake-clock-testable lease/heartbeat
+//!   state machine dispatching [`crate::exp::plan::PlanCell`] IDs,
+//!   requeueing cells from dead workers, rejecting late duplicate
+//!   completions (first accepted completion wins), and appending
+//!   records in manifest order through the fsynced
+//!   [`crate::io::results::RecordAppender`] durability path;
+//! * [`worker`] — the worker: a `run_plan_cell` loop with a heartbeat
+//!   side-thread, producing records bit-identical to a local run's.
+//!
+//! The determinism contract extends the sharded one: **any worker
+//! count, assignment interleaving, or kill schedule merges to
+//! byte-identical record files and renders versus an unsharded local
+//! run** (with `--stable-timings`; `tests/cli_fleet.rs` and the CI
+//! `fleet-kill-resume` job enforce it cross-process, SIGKILLs included).
+
+pub mod coord;
+pub mod wire;
+pub mod worker;

@@ -1,0 +1,338 @@
+//! Length-prefixed, versioned wire protocol for fleet sweeps.
+//!
+//! Every frame on the coordinator⇄worker TCP connection is:
+//!
+//! ```text
+//! +------+---------+---------+----------------+
+//! | QFLT | version | length  | JSON payload   |
+//! | 4 B  | u16 BE  | u32 BE  | `length` bytes |
+//! +------+---------+---------+----------------+
+//! ```
+//!
+//! The fixed magic makes a connection from anything that is not a fleet
+//! peer (a port scanner, an HTTP client, a different tool) fail
+//! immediately with [`WireError::BadMagic`] instead of stalling on a
+//! bogus length. The version field rides on **every frame**, not just a
+//! handshake, so a mid-stream mix-up (or a proxy splicing connections)
+//! still surfaces as [`WireError::VersionMismatch`]. The length prefix is
+//! capped at [`MAX_FRAME_LEN`]; anything larger is rejected before a
+//! single payload byte is read ([`WireError::Oversized`]) — a garbage
+//! length can therefore never trigger a giant allocation. A peer dying
+//! mid-frame yields [`WireError::Truncated`]; a clean close between
+//! frames yields [`WireError::Closed`], which connection loops treat as
+//! normal termination rather than an error.
+//!
+//! Payloads are single JSON objects (via [`crate::util::json`]) with a
+//! `"t"` type tag — see [`Msg`]. JSON keeps the protocol debuggable
+//! (`CellRecord` already serializes as JSON for the durable record files,
+//! so a `complete` frame embeds the exact line the coordinator will
+//! append) and costs nothing measurable next to running a plan cell.
+
+use crate::util::json::Json;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame magic: first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"QFLT";
+
+/// Protocol version spoken by this build. Bump on any wire-visible
+/// change; peers with a different version refuse each other loudly.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on the payload length prefix. Real frames are tiny (a cell
+/// id, a heartbeat, one JSONL record line); 4 MiB leaves room for any
+/// conceivable record while making a garbage length unmistakable.
+pub const MAX_FRAME_LEN: u32 = 4 << 20;
+
+/// Everything that can go wrong reading or decoding a frame. Each
+/// variant is a *named*, matchable failure mode — the protocol tests
+/// assert on variants, not message strings.
+#[derive(Debug)]
+pub enum WireError {
+    /// The first four bytes were not [`MAGIC`]: the peer is not speaking
+    /// the fleet protocol (or the stream lost sync).
+    BadMagic([u8; 4]),
+    /// The frame's version field differs from ours.
+    VersionMismatch { ours: u16, theirs: u16 },
+    /// The length prefix exceeds [`MAX_FRAME_LEN`].
+    Oversized(u32),
+    /// The stream ended mid-frame (peer died while writing).
+    Truncated { wanted: usize, got: usize },
+    /// The stream closed cleanly between frames (normal peer exit).
+    Closed,
+    /// The payload was not valid JSON or not a known message shape.
+    BadPayload(String),
+    /// An underlying socket error (reset, timeout, ...).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic(b) => {
+                write!(f, "bad frame magic {b:02x?} (peer is not speaking the fleet protocol)")
+            }
+            WireError::VersionMismatch { ours, theirs } => write!(
+                f,
+                "protocol version mismatch: we speak v{ours}, peer sent v{theirs}"
+            ),
+            WireError::Oversized(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_FRAME_LEN}-byte cap")
+            }
+            WireError::Truncated { wanted, got } => {
+                write!(f, "stream ended mid-frame ({got}/{wanted} bytes)")
+            }
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::BadPayload(e) => write!(f, "bad frame payload: {e}"),
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// One protocol message. The worker speaks first (`Hello`) and then
+/// drives a strict request→reply loop; the only unsolicited frames are
+/// worker→coordinator `Heartbeat`s, which are one-way (no ack) so they
+/// can be fired from a side thread without desynchronizing the reply
+/// stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: first frame on every connection.
+    Hello,
+    /// Coordinator → worker: handshake reply. `heartbeat_ms` is the
+    /// cadence the worker must beat at to keep leases alive.
+    Welcome { worker: u64, heartbeat_ms: u64 },
+    /// Worker → coordinator: give me a cell.
+    Request { worker: u64 },
+    /// Coordinator → worker: run this cell under this lease.
+    Assign { lease: u64, cell: String },
+    /// Coordinator → worker: nothing to hand out. `done: true` means the
+    /// sweep is complete (worker exits); `false` means every remaining
+    /// cell is leased elsewhere (worker waits and re-requests).
+    NoWork { done: bool },
+    /// Worker → coordinator (one-way): still working under this lease.
+    Heartbeat { lease: u64 },
+    /// Worker → coordinator: the cell ran; `record` is the exact
+    /// [`crate::io::results::CellRecord`] JSON the coordinator should
+    /// persist.
+    Complete { lease: u64, record: String },
+    /// Coordinator → worker: completion verdict. `accepted: false` with a
+    /// reason means the record was dropped (e.g. the cell was reassigned
+    /// after a lease expiry and already finished elsewhere — first
+    /// durable write wins).
+    CompleteAck { accepted: bool, reason: String },
+    /// Worker → coordinator: the cell errored; release it for retry.
+    Failed { lease: u64, error: String },
+    /// Status client → coordinator: report progress.
+    StatusReq,
+    /// Coordinator → status client: live counters.
+    Status { total: u64, done: u64, leased: u64, pending: u64, workers: u64 },
+    /// Coordinator → peer: the peer broke protocol; connection will
+    /// close. Best-effort (the peer may not even parse it).
+    ProtocolError { detail: String },
+}
+
+impl Msg {
+    fn tag(&self) -> &'static str {
+        match self {
+            Msg::Hello => "hello",
+            Msg::Welcome { .. } => "welcome",
+            Msg::Request { .. } => "request",
+            Msg::Assign { .. } => "assign",
+            Msg::NoWork { .. } => "no_work",
+            Msg::Heartbeat { .. } => "heartbeat",
+            Msg::Complete { .. } => "complete",
+            Msg::CompleteAck { .. } => "complete_ack",
+            Msg::Failed { .. } => "failed",
+            Msg::StatusReq => "status_req",
+            Msg::Status { .. } => "status",
+            Msg::ProtocolError { .. } => "protocol_error",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("t", Json::Str(self.tag().to_string()));
+        match self {
+            Msg::Hello | Msg::StatusReq => {}
+            Msg::Welcome { worker, heartbeat_ms } => {
+                o.set("worker", num(*worker)).set("heartbeat_ms", num(*heartbeat_ms));
+            }
+            Msg::Request { worker } => {
+                o.set("worker", num(*worker));
+            }
+            Msg::Assign { lease, cell } => {
+                o.set("lease", num(*lease)).set("cell", Json::Str(cell.clone()));
+            }
+            Msg::NoWork { done } => {
+                o.set("done", Json::Bool(*done));
+            }
+            Msg::Heartbeat { lease } => {
+                o.set("lease", num(*lease));
+            }
+            Msg::Complete { lease, record } => {
+                o.set("lease", num(*lease)).set("record", Json::Str(record.clone()));
+            }
+            Msg::CompleteAck { accepted, reason } => {
+                o.set("accepted", Json::Bool(*accepted))
+                    .set("reason", Json::Str(reason.clone()));
+            }
+            Msg::Failed { lease, error } => {
+                o.set("lease", num(*lease)).set("error", Json::Str(error.clone()));
+            }
+            Msg::Status { total, done, leased, pending, workers } => {
+                o.set("total", num(*total))
+                    .set("done", num(*done))
+                    .set("leased", num(*leased))
+                    .set("pending", num(*pending))
+                    .set("workers", num(*workers));
+            }
+            Msg::ProtocolError { detail } => {
+                o.set("detail", Json::Str(detail.clone()));
+            }
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg, WireError> {
+        let tag = j
+            .get("t")
+            .and_then(Json::as_str)
+            .ok_or_else(|| WireError::BadPayload("missing 't' type tag".to_string()))?;
+        let u = |key: &str| -> Result<u64, WireError> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .map(|n| n as u64)
+                .ok_or_else(|| WireError::BadPayload(format!("'{tag}' missing '{key}'")))
+        };
+        let s = |key: &str| -> Result<String, WireError> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| WireError::BadPayload(format!("'{tag}' missing '{key}'")))
+        };
+        let b = |key: &str| -> Result<bool, WireError> {
+            match j.get(key) {
+                Some(Json::Bool(v)) => Ok(*v),
+                _ => Err(WireError::BadPayload(format!("'{tag}' missing '{key}'"))),
+            }
+        };
+        Ok(match tag {
+            "hello" => Msg::Hello,
+            "welcome" => Msg::Welcome { worker: u("worker")?, heartbeat_ms: u("heartbeat_ms")? },
+            "request" => Msg::Request { worker: u("worker")? },
+            "assign" => Msg::Assign { lease: u("lease")?, cell: s("cell")? },
+            "no_work" => Msg::NoWork { done: b("done")? },
+            "heartbeat" => Msg::Heartbeat { lease: u("lease")? },
+            "complete" => Msg::Complete { lease: u("lease")?, record: s("record")? },
+            "complete_ack" => Msg::CompleteAck { accepted: b("accepted")?, reason: s("reason")? },
+            "failed" => Msg::Failed { lease: u("lease")?, error: s("error")? },
+            "status_req" => Msg::StatusReq,
+            "status" => Msg::Status {
+                total: u("total")?,
+                done: u("done")?,
+                leased: u("leased")?,
+                pending: u("pending")?,
+                workers: u("workers")?,
+            },
+            "protocol_error" => Msg::ProtocolError { detail: s("detail")? },
+            other => {
+                return Err(WireError::BadPayload(format!("unknown message type '{other}'")))
+            }
+        })
+    }
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Encode one frame (header + payload) into a byte vector. Split out
+/// from [`write_msg`] so tests can inspect and corrupt exact bytes.
+pub fn encode_frame(msg: &Msg) -> Vec<u8> {
+    encode_frame_versioned(VERSION, msg.to_json().dump().as_bytes())
+}
+
+/// Encode a frame with an explicit version and raw payload — the
+/// building block for version-mismatch and garbage-payload tests.
+pub fn encode_frame_versioned(version: u16, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(10 + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&version.to_be_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one message as a single frame (one `write_all` of the complete
+/// frame, so a concurrently-heartbeating writer thread never interleaves
+/// bytes mid-frame as long as writes are mutex-serialized).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<(), WireError> {
+    w.write_all(&encode_frame(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes. Distinguishes the three stream-end
+/// shapes: clean close at a frame boundary ([`WireError::Closed`], only
+/// when `at_boundary` and zero bytes arrived), death mid-frame
+/// ([`WireError::Truncated`]), and socket errors ([`WireError::Io`]).
+fn read_exact_frame<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    at_boundary: bool,
+) -> Result<(), WireError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if at_boundary && got == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Truncated { wanted: buf.len(), got }
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read and decode one frame. Every failure mode is a named
+/// [`WireError`]; this function never blocks forever on a malformed
+/// header (the length cap bounds the largest read) and never panics on
+/// garbage input.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, WireError> {
+    let mut magic = [0u8; 4];
+    read_exact_frame(r, &mut magic, true)?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let mut ver = [0u8; 2];
+    read_exact_frame(r, &mut ver, false)?;
+    let theirs = u16::from_be_bytes(ver);
+    if theirs != VERSION {
+        return Err(WireError::VersionMismatch { ours: VERSION, theirs });
+    }
+    let mut len = [0u8; 4];
+    read_exact_frame(r, &mut len, false)?;
+    let len = u32::from_be_bytes(len);
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_frame(r, &mut payload, false)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| WireError::BadPayload(format!("payload not UTF-8: {e}")))?;
+    let j = Json::parse(text).map_err(WireError::BadPayload)?;
+    Msg::from_json(&j)
+}

@@ -1,0 +1,180 @@
+//! The fleet worker: a `run_plan_cell` loop driven by coordinator
+//! assignments instead of a pre-computed shard slice.
+//!
+//! The worker is stateless on disk — it never writes records. It
+//! connects, says `Hello`, then loops request→run→complete until the
+//! coordinator answers `NoWork{done: true}`. While a cell runs, a side
+//! thread fires one-way `Heartbeat` frames at the coordinator-announced
+//! cadence so a slow-but-alive worker keeps its lease; frame writes go
+//! through one mutex so heartbeat and completion frames never interleave
+//! bytes. Records are produced with `(shard, n_shards) = (0, 1)` — the
+//! same bookkeeping an unsharded local run writes — which is half of the
+//! fleet's byte-identity contract (the coordinator's manifest-order
+//! append is the other half).
+
+use crate::exp::common::{run_plan_cell, ExpData, ExpEnv};
+use crate::exp::plan::PlanCell;
+use crate::fleet::wire::{self, Msg, WireError};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct WorkerCfg {
+    /// Coordinator address (`host:port`).
+    pub connect: String,
+    /// Model artifact directory (random-weights fallback as usual).
+    pub artifacts: String,
+    /// Keep retrying the initial connect for this long — lets workers
+    /// launch before (or while) the coordinator binds its socket.
+    pub connect_timeout: Duration,
+}
+
+/// Serialize whole frames onto the shared socket: the heartbeat thread
+/// and the main loop both write through this.
+struct Tx {
+    stream: Mutex<TcpStream>,
+}
+
+impl Tx {
+    fn send(&self, msg: &Msg) -> Result<(), WireError> {
+        let guard = self.stream.lock().unwrap_or_else(|e| e.into_inner());
+        let mut s = &*guard;
+        wire::write_msg(&mut s, msg)
+    }
+}
+
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e)
+                        .with_context(|| format!("connecting to fleet coordinator at {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Run one worker to sweep completion. Returns the number of cells this
+/// worker completed and had accepted.
+pub fn run_worker(cfg: &WorkerCfg) -> Result<usize> {
+    let stream = connect_retry(&cfg.connect, cfg.connect_timeout)?;
+    stream.set_nodelay(true).ok();
+    let mut reader = stream.try_clone().context("cloning the fleet socket")?;
+    let tx = Arc::new(Tx { stream: Mutex::new(stream) });
+
+    tx.send(&Msg::Hello).map_err(wire_err)?;
+    let (worker, heartbeat_ms) = match wire::read_msg(&mut reader).map_err(wire_err)? {
+        Msg::Welcome { worker, heartbeat_ms } => (worker, heartbeat_ms.max(1)),
+        Msg::ProtocolError { detail } => bail!("coordinator rejected the handshake: {detail}"),
+        other => bail!("expected Welcome from the coordinator, got {other:?}"),
+    };
+    eprintln!("[work] registered as worker {worker} with {}", cfg.connect);
+
+    let mut env = ExpEnv::new(&cfg.artifacts);
+    let mut snapshots: HashMap<String, ExpData> = HashMap::new();
+    let mut completed = 0usize;
+    loop {
+        tx.send(&Msg::Request { worker }).map_err(wire_err)?;
+        match wire::read_msg(&mut reader).map_err(wire_err)? {
+            Msg::Assign { lease, cell } => {
+                let pc = PlanCell::parse(&cell).ok_or_else(|| {
+                    anyhow!("coordinator assigned unparseable cell id '{cell}'")
+                })?;
+                let size = pc.size();
+                let data = snapshots
+                    .entry(size.name().to_string())
+                    .or_insert_with(|| env.snapshot(&[size]));
+                let outcome = run_leased_cell(&tx, lease, heartbeat_ms, data, &pc);
+                let reply = match outcome {
+                    Ok(rec) => {
+                        Msg::Complete { lease, record: rec.to_json().dump() }
+                    }
+                    Err(e) => Msg::Failed { lease, error: format!("{e:#}") },
+                };
+                let ran_ok = matches!(reply, Msg::Complete { .. });
+                tx.send(&reply).map_err(wire_err)?;
+                match wire::read_msg(&mut reader).map_err(wire_err)? {
+                    Msg::CompleteAck { accepted: true, .. } => {
+                        completed += 1;
+                        eprintln!("[work] cell done: {cell}");
+                    }
+                    Msg::CompleteAck { accepted: false, reason } => {
+                        if ran_ok {
+                            eprintln!("[work] completion for '{cell}' not recorded: {reason}");
+                        } else {
+                            eprintln!("[work] cell '{cell}' failed here: {reason}");
+                        }
+                    }
+                    Msg::ProtocolError { detail } => {
+                        bail!("coordinator aborted the connection: {detail}")
+                    }
+                    other => bail!("expected CompleteAck, got {other:?}"),
+                }
+            }
+            Msg::NoWork { done: true } => break,
+            Msg::NoWork { done: false } => {
+                // Everything left is leased elsewhere; poll again soon
+                // (also keeps the connection visibly alive).
+                std::thread::sleep(Duration::from_millis(heartbeat_ms));
+            }
+            Msg::ProtocolError { detail } => bail!("coordinator aborted: {detail}"),
+            other => bail!("unexpected {other:?} from the coordinator"),
+        }
+    }
+    if env.used_fallback {
+        eprintln!(
+            "[work] NOTE: ran with RANDOM weights (artifacts missing). Results are \
+             structural only."
+        );
+    }
+    Ok(completed)
+}
+
+/// Run one cell with a heartbeat side-thread keeping its lease alive.
+fn run_leased_cell(
+    tx: &Arc<Tx>,
+    lease: u64,
+    heartbeat_ms: u64,
+    data: &ExpData,
+    pc: &PlanCell,
+) -> Result<crate::io::results::CellRecord> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat = {
+        let tx = Arc::clone(tx);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(heartbeat_ms));
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Send errors are left to the main loop's next read.
+                if tx.send(&Msg::Heartbeat { lease }).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+    let result = run_plan_cell(data, pc, 0, 1);
+    stop.store(true, Ordering::Relaxed);
+    beat.join().ok();
+    result
+}
+
+fn wire_err(e: WireError) -> anyhow::Error {
+    match e {
+        WireError::Closed => anyhow!(
+            "coordinator closed the connection (killed mid-sweep? restart it over the same \
+             --out dir with --resume, then relaunch workers)"
+        ),
+        other => anyhow!("fleet protocol failure: {other}"),
+    }
+}

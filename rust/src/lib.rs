@@ -47,7 +47,8 @@
 //! ([`coordinator`]), GPTQ row sweeps, batched perplexity/task evaluation
 //! ([`eval`]), sharded experiment sweeps ([`exp`] — staged
 //! enumerate→run→render, distributable across processes/machines via
-//! `repro exp --shard i/N` + `repro exp merge`), and the batched serving
+//! `repro exp --shard i/N` + `repro exp merge`, or live-dispatched over
+//! TCP by the fleet coordinator in [`fleet`]), and the batched serving
 //! engine ([`serve`] — KV-cached continuous batching whose quantized
 //! linears run the fused dequantize×GEMM kernels in [`linalg::qgemm`]).
 //! The invariant every one of these upholds — and that new code MUST
@@ -82,6 +83,7 @@
 pub mod coordinator;
 pub mod eval;
 pub mod exp;
+pub mod fleet;
 pub mod io;
 pub mod linalg;
 pub mod model;

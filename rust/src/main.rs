@@ -72,9 +72,35 @@ const EXP_RUN_FLAGS: &[&str] = &[
 const EXP_PLAN_FLAGS: &[&str] =
     &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard"];
 /// `repro exp status <id>`: plan flags + the record directory (+ an
-/// optional shard slice to report on).
-const EXP_STATUS_FLAGS: &[&str] =
-    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard", "out"];
+/// optional shard slice to report on). `--connect` instead asks a live
+/// fleet coordinator; `--watch` re-polls either source until done.
+const EXP_STATUS_FLAGS: &[&str] = &[
+    "threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard", "out", "connect",
+    "watch",
+];
+/// `repro exp serve <id>`: the fleet coordinator — run flags minus
+/// `--shard` (the fleet assigns cells dynamically) plus the listen
+/// socket and lease tuning. No `--artifacts`: the coordinator never
+/// runs a cell, it only dispatches, persists, and renders.
+const EXP_SERVE_FLAGS: &[&str] = &[
+    "threads",
+    "sizes",
+    "fast",
+    "bits",
+    "blocks",
+    "seeds",
+    "ranks",
+    "out",
+    "results",
+    "stable-timings",
+    "resume",
+    "listen",
+    "lease-ms",
+];
+/// `repro exp work`: the fleet worker — everything about the plan comes
+/// over the wire, so only the coordinator address and local execution
+/// knobs are accepted.
+const EXP_WORK_FLAGS: &[&str] = &["threads", "connect", "artifacts"];
 /// `repro exp cell <cell-id>`: the cell ID carries the whole plan.
 const EXP_CELL_FLAGS: &[&str] = &["threads", "artifacts", "out"];
 /// `repro exp merge <id>`: plan flags + collect/render flags (no --shard
@@ -153,8 +179,12 @@ USAGE:
                  [--stable-timings]
   repro exp plan  <id> [--fast] [--sizes ...] [--shard i/N]
   repro exp cell  <cell-id> --out DIR
-  repro exp status <id> --out DIR [--shard i/N] [--fast] [--sizes ...]
+  repro exp status <id> --out DIR [--shard i/N] [--fast] [--sizes ...] [--watch]
+  repro exp status --connect <addr|fleet.addr> [--watch]
   repro exp merge <id> --out DIR [--results DIR] [--stable-timings] [--fast] [--sizes ...]
+  repro exp serve <id> --out DIR [--listen 127.0.0.1:0] [--lease-ms 30000]
+                 [--resume] [--stable-timings] [--results DIR] [--fast] [--sizes ...]
+  repro exp work  --connect <addr|fleet.addr> [--artifacts DIR] [--threads N]
   repro serve-bench [--model <tiny-s|tiny-m|tiny-l|path.qtz>] [--sessions 4] [--gen 32]
                  [--prompt-len 16] [--bits 4] [--group 32] [--seed 0] [--threads N]
   repro info
@@ -236,6 +266,49 @@ SHARDING (distributed experiment sweeps):
                   3's timing cells as a fixed placeholder, and records
                   written with --out carry zeroed timing fields so two
                   runs of the same cells are byte-identical files.
+
+FLEET (live TCP dispatch — sharding without pre-splitting):
+  Where --shard fixes each process's slice up front, the fleet assigns
+  cells dynamically: a coordinator owns the sweep's single record file
+  and hands out one cell at a time to however many workers connect,
+  from one terminal to a cluster:
+
+    repro exp serve all --fast --out fleet/            # coordinator
+    repro exp work --connect fleet/fleet.addr          # worker(s), any count
+    repro exp status --connect fleet/fleet.addr --watch
+
+  exp serve       Listen for workers (default --listen 127.0.0.1:0; the
+                  bound address is printed and written to
+                  --out/fleet.addr), dispatch cells, append each
+                  accepted record durably (fsynced, manifest order) to
+                  --out/<sweep>.shard-1-of-1.jsonl — the same file an
+                  unsharded `--out` run writes — and render when every
+                  cell is recorded. Workers that miss a heartbeat for a
+                  full lease (--lease-ms, default 30000) or drop their
+                  connection have their cells requeued automatically; a
+                  cell that was requeued and finishes twice keeps only
+                  the first accepted record (first durable write wins —
+                  records derive from cell identity, so both copies are
+                  bit-identical and the file stays deterministic).
+                  --resume continues a killed coordinator (or local
+                  unsharded run) over the same --out dir, dispatching
+                  only the missing cells. Record files and renders are
+                  byte-identical to a local run for every worker count
+                  and kill schedule (with --stable-timings; CI's
+                  fleet-kill-resume gate SIGKILLs a worker AND the
+                  coordinator and diffs against a local run).
+  exp work        Connect to a coordinator (host:port, or the path of
+                  its fleet.addr file), run assigned cells, send each
+                  record back over the socket. Heartbeats keep the lease
+                  alive while a slow cell runs; a worker that dies is
+                  simply reassigned. Workers never write records — the
+                  coordinator is the only writer.
+  exp status --connect
+                  Ask a live coordinator for progress (done/leased/
+                  unassigned cells, connected workers); --watch re-polls
+                  every second until the sweep finishes. Without
+                  --connect, `exp status <id> --out DIR [--watch]` reads
+                  the record directory as before.
 
 SERVING:
   serve-bench    Batched KV-cache serving throughput on this machine:
@@ -476,7 +549,9 @@ fn experiment(args: &Args) -> Result<()> {
     let sub = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: repro exp <id|plan|cell|status|merge> (see `repro help`)"))?
+        .ok_or_else(|| {
+            anyhow!("usage: repro exp <id|plan|cell|status|merge|serve|work> (see `repro help`)")
+        })?
         .as_str();
     match sub {
         "plan" => {
@@ -494,6 +569,14 @@ fn experiment(args: &Args) -> Result<()> {
         "merge" => {
             check_flags(args, EXP_MERGE_FLAGS)?;
             exp_merge(args)
+        }
+        "serve" => {
+            check_flags(args, EXP_SERVE_FLAGS)?;
+            exp_serve(args)
+        }
+        "work" => {
+            check_flags(args, EXP_WORK_FLAGS)?;
+            exp_work(args)
         }
         _ => {
             check_flags(args, EXP_RUN_FLAGS)?;
@@ -559,6 +642,12 @@ fn exp_cell(args: &Args) -> Result<()> {
 /// a merge or resume fail. Purely informational: problems are printed,
 /// never exit codes; `exp merge` stays the gate.
 fn exp_status(args: &Args) -> Result<()> {
+    let watch = args.has("watch");
+    if let Some(target) = args.get("connect") {
+        // Live mode: the coordinator defines the plan, so no sweep id or
+        // record directory is needed here.
+        return fleet_status(target, watch);
+    }
     let (sweep, params) = sweep_from(args, 2)?;
     let dir = args
         .require("out", "the directory holding the record files to inspect")
@@ -570,9 +659,154 @@ fn exp_status(args: &Args) -> Result<()> {
         cells = spec.filter(&cells);
         label = format!("'{}' shard {}/{}", sweep.name(), spec.index, spec.count);
     }
-    let scan = exp::common::scan_record_dir(Path::new(dir))?;
-    let report = exp::common::status_report(&cells, &scan);
-    print!("{}", report.render(&label));
+    loop {
+        let scan = exp::common::scan_record_dir(Path::new(dir))?;
+        let report = exp::common::status_report(&cells, &scan);
+        print!("{}", report.render(&label));
+        if !watch || report.done == report.total {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(WATCH_POLL_MS));
+    }
+}
+
+/// Poll cadence for `exp status --watch` (both dir and fleet modes).
+const WATCH_POLL_MS: u64 = 1000;
+
+/// Resolve a `--connect` value: a literal `host:port`, or a path to the
+/// `fleet.addr` file the coordinator writes next to its records (handy
+/// for scripts that never have to parse the bound port themselves).
+fn resolve_addr(target: &str) -> Result<String> {
+    let p = Path::new(target);
+    if p.is_file() {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading coordinator address file {target}"))?;
+        return Ok(text.trim().to_string());
+    }
+    Ok(target.to_string())
+}
+
+/// `repro exp status --connect ADDR [--watch]`: live progress straight
+/// from a running coordinator's state machine (includes leases and
+/// connected workers, which no record directory can show).
+fn fleet_status(target: &str, watch: bool) -> Result<()> {
+    use qep::fleet::wire::{self, Msg};
+    let addr = resolve_addr(target)?;
+    let mut seen_one = false;
+    loop {
+        let stream = match std::net::TcpStream::connect(&addr) {
+            Ok(s) => s,
+            Err(_) if watch && seen_one => {
+                // The coordinator renders and exits the moment the last
+                // cell lands — a vanished socket after successful polls
+                // is completion, not failure.
+                println!("[fleet] coordinator at {addr} is gone (sweep finished or aborted)");
+                return Ok(());
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to coordinator at {addr}"))
+            }
+        };
+        let mut s = &stream;
+        wire::write_msg(&mut s, &Msg::StatusReq).map_err(|e| anyhow!("{e}"))?;
+        match wire::read_msg(&mut s).map_err(|e| anyhow!("{e}"))? {
+            Msg::Status { total, done, leased, pending, workers } => {
+                let st = qep::fleet::coord::FleetStatus {
+                    total: total as usize,
+                    done: done as usize,
+                    leased: leased as usize,
+                    pending: pending as usize,
+                    workers: workers as usize,
+                };
+                println!("{}", st.render());
+                if !watch || done == total {
+                    return Ok(());
+                }
+                seen_one = true;
+            }
+            other => bail!("expected a Status reply, got {other:?}"),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(WATCH_POLL_MS));
+    }
+}
+
+/// `repro exp serve <id> --out DIR`: the fleet coordinator. Owns the
+/// sweep's single record file (`<sweep>.shard-1-of-1.jsonl`, exactly
+/// what an unsharded `--out` run writes), hands cells to `repro exp
+/// work` workers over TCP, requeues cells from dead workers, and
+/// renders once every cell is durably recorded. `--resume` continues an
+/// interrupted coordinator (its own or a local unsharded run's) over
+/// the same directory, dispatching only the missing cells.
+fn exp_serve(args: &Args) -> Result<()> {
+    let (sweep, params) = sweep_from(args, 2)?;
+    let out_dir = args
+        .require("out", "the directory the fleet's record file goes to")
+        .map_err(|e| anyhow!("{e}"))?;
+    let resume = args.has("resume");
+    let stable = args.has("stable-timings");
+    let lease_ms = args.get_usize("lease-ms", 30_000).max(20) as u64;
+    let cells = plan::manifest(sweep, &params)?;
+    let (skip, path) = prepare_records(
+        Path::new(out_dir),
+        &results::shard_filename(sweep.name(), 1, 1),
+        &cells,
+        &cells,
+        resume,
+        true,
+    )?;
+    let opts = qep::fleet::coord::FleetOpts {
+        lease_ms,
+        stable_timings: stable,
+        ..Default::default()
+    };
+    let appender = results::RecordAppender::open(&path)?;
+    let state = qep::fleet::coord::CoordState::new(&cells, &skip, appender, opts)?;
+    let listener = std::net::TcpListener::bind(args.get_or("listen", "127.0.0.1:0"))
+        .with_context(|| format!("binding {}", args.get_or("listen", "127.0.0.1:0")))?;
+    let addr = listener.local_addr()?;
+    // Advertise the bound address (ports from `:0` are OS-assigned) in a
+    // non-.jsonl file the record scanners ignore; removed on exit.
+    let addr_file = Path::new(out_dir).join("fleet.addr");
+    std::fs::write(&addr_file, format!("{addr}\n"))
+        .with_context(|| format!("writing {}", addr_file.display()))?;
+    println!(
+        "[serve] '{}': {} cell(s), {} already recorded; listening on {addr} \
+         (workers: repro exp work --connect {addr})",
+        sweep.name(),
+        cells.len(),
+        skip.len(),
+    );
+    let served = qep::fleet::coord::serve(listener, state, lease_ms);
+    std::fs::remove_file(&addr_file).ok();
+    served?;
+    let rcfg = render_cfg(args);
+    let fallback = render_from_dir(sweep, &params, Path::new(out_dir), &rcfg)?;
+    println!(
+        "[serve] sweep '{}' complete: {} record(s) in {}, rendered into {}/",
+        sweep.name(),
+        cells.len(),
+        path.display(),
+        rcfg.results_dir
+    );
+    if fallback {
+        eprintln!("{FALLBACK_NOTE}");
+    }
+    Ok(())
+}
+
+/// `repro exp work --connect ADDR`: one fleet worker. Runs cells the
+/// coordinator assigns until the sweep completes.
+fn exp_work(args: &Args) -> Result<()> {
+    let target = args
+        .require("connect", "the coordinator's host:port (or its fleet.addr file)")
+        .map_err(|e| anyhow!("{e}"))?;
+    let cfg = qep::fleet::worker::WorkerCfg {
+        connect: resolve_addr(target)?,
+        artifacts: args.get_or("artifacts", "artifacts").to_string(),
+        connect_timeout: std::time::Duration::from_secs(10),
+    };
+    let completed = qep::fleet::worker::run_worker(&cfg)?;
+    println!("[work] sweep complete: this worker ran {completed} cell(s)");
     Ok(())
 }
 

@@ -1,0 +1,243 @@
+//! The fleet headline gate, across real processes: a live coordinator
+//! (`repro exp serve`) feeding three real worker processes (`repro exp
+//! work`) over localhost TCP, with one worker SIGKILLed mid-sweep, must
+//! produce a record file AND rendered tables **byte-identical** to an
+//! uninterrupted unsharded `repro exp` run (`--stable-timings`). Also
+//! drives `exp status --connect` against the live coordinator, the
+//! non-empty-dir guard, and a no-worker `--resume` pass over the
+//! finished directory. CI's fleet-kill-resume job runs the harsher
+//! variant (kills the coordinator too); this is the local, always-on
+//! counterpart.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Output, Stdio};
+use std::time::{Duration, Instant};
+
+const SWEEP: &str = "ablation-alpha"; // 5 fast RTN-only cells under --fast
+const RECORD_FILE: &str = "ablation-alpha.shard-1-of-1.jsonl";
+const DEADLINE: Duration = Duration::from_secs(300);
+
+fn repro(args: &[&str], cwd: &Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .current_dir(cwd)
+        .output()
+        .expect("repro binary runs")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qep_cli_fleet_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .map(|e| {
+            let p = e.unwrap().path();
+            (p.file_name().unwrap().to_string_lossy().into_owned(), std::fs::read(&p).unwrap())
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+fn assert_dirs_equal(want: &Path, got: &Path, what: &str) {
+    let (w, g) = (dir_bytes(want), dir_bytes(got));
+    assert_eq!(
+        w.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        g.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        "{what}: file sets differ"
+    );
+    for ((name, a), (_, b)) in w.iter().zip(g.iter()) {
+        assert_eq!(a, b, "{what}: '{name}' differs");
+    }
+}
+
+/// Wait for a child with the shared deadline instead of blocking forever
+/// (a hung fleet must fail the test, not the CI job's timeout).
+fn wait_with_deadline(child: &mut Child, what: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status;
+        }
+        assert!(Instant::now() < deadline, "{what} did not exit within the deadline");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn fleet_with_sigkilled_worker_matches_unsharded_run_byte_for_byte() {
+    let work = tmp("e2e");
+    let ref_out = work.join("ref_out");
+    let fleet_out = work.join("fleet_out");
+    let res_ref = work.join("res_ref");
+    let res_fleet = work.join("res_fleet");
+    let res_resume = work.join("res_resume");
+    let s = |p: &PathBuf| p.to_str().unwrap().to_string();
+
+    // --- Reference leg: uninterrupted unsharded durable run, records +
+    // renders.
+    let out = repro(
+        &[
+            "exp", SWEEP, "--fast", "--stable-timings", "--out", &s(&ref_out), "--results",
+            &s(&res_ref),
+        ],
+        &work,
+    );
+    assert!(out.status.success(), "unsharded reference: {}", stderr_of(&out));
+    let ref_bytes = std::fs::read(ref_out.join(RECORD_FILE)).unwrap();
+
+    // --- Fleet leg: coordinator in the background. A short lease bounds
+    // how long a half-dead connection could stall dispatch (SIGKILLed
+    // workers are requeued instantly on connection drop anyway).
+    let mut coord = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "exp", "serve", SWEEP, "--fast", "--stable-timings", "--out", &s(&fleet_out),
+            "--results", &s(&res_fleet), "--lease-ms", "2000",
+        ])
+        .current_dir(&work)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn coordinator");
+
+    // The coordinator advertises its OS-assigned port in fleet.addr.
+    let addr_file = fleet_out.join("fleet.addr");
+    let deadline = Instant::now() + DEADLINE;
+    while !addr_file.is_file() {
+        assert!(
+            coord.try_wait().expect("try_wait").is_none(),
+            "coordinator exited before advertising its address"
+        );
+        assert!(Instant::now() < deadline, "no fleet.addr within the deadline");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let addr_arg = s(&addr_file);
+
+    // Live status straight off the state machine, before any worker
+    // connects: everything pending, nobody registered.
+    let out = repro(&["exp", "status", "--connect", &addr_arg], &work);
+    assert!(out.status.success(), "status --connect: {}", stderr_of(&out));
+    let st = stdout_of(&out);
+    assert!(st.contains("[fleet] 0/"), "fresh coordinator must report 0 done: {st}");
+    assert!(st.contains("0 worker(s) connected"), "{st}");
+
+    // --- Three real workers. Byte-identity must hold for any worker
+    // count and any thread count, so give them a different --threads
+    // than the reference run used.
+    let mut workers: Vec<Child> = (0..3)
+        .map(|i| {
+            Command::new(env!("CARGO_BIN_EXE_repro"))
+                .args(["exp", "work", "--connect", &addr_arg, "--threads", "2"])
+                .current_dir(&work)
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawn worker {i}: {e}"))
+        })
+        .collect();
+
+    // SIGKILL worker 0 the moment the first record durably lands — no
+    // cleanup handlers run, the coordinator sees only a dropped
+    // connection and must requeue that worker's cells.
+    let record_path = fleet_out.join(RECORD_FILE);
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        let first_record_landed =
+            std::fs::read(&record_path).map(|b| b.contains(&b'\n')).unwrap_or(false);
+        let coord_exited = coord.try_wait().expect("try_wait").is_some();
+        if first_record_landed || coord_exited {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no record landed within the deadline");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    workers[0].kill().ok();
+    workers[0].wait().expect("wait for killed worker");
+
+    // --- Run to completion: the coordinator exits once every cell is
+    // durably recorded and rendered; the surviving workers exit cleanly
+    // on NoWork{done}.
+    let coord_status = wait_with_deadline(&mut coord, "coordinator");
+    for (i, w) in workers.iter_mut().enumerate().skip(1) {
+        let st = wait_with_deadline(w, "worker");
+        assert!(st.success(), "surviving worker {i} exited with {st}");
+    }
+    let coord_out = coord.wait_with_output().expect("coordinator output");
+    assert!(
+        coord_status.success(),
+        "coordinator failed: {}",
+        String::from_utf8_lossy(&coord_out.stderr)
+    );
+    assert!(
+        !addr_file.exists(),
+        "fleet.addr must be removed once the coordinator exits"
+    );
+
+    // --- The headline asserts: record file AND renders byte-identical
+    // to the uninterrupted unsharded run, SIGKILL and all.
+    assert_eq!(
+        std::fs::read(&record_path).unwrap(),
+        ref_bytes,
+        "fleet record file differs from the uninterrupted unsharded run"
+    );
+    assert_dirs_equal(&res_ref, &res_fleet, "fleet renders vs uninterrupted unsharded");
+
+    // --- Guard: a fresh serve into the now-populated dir must refuse,
+    // pointing at --resume (same contract as local --out runs).
+    let out = repro(
+        &["exp", "serve", SWEEP, "--fast", "--stable-timings", "--out", &s(&fleet_out)],
+        &work,
+    );
+    assert!(!out.status.success(), "fresh serve into non-empty dir must fail");
+    assert!(stderr_of(&out).contains("--resume"), "{}", stderr_of(&out));
+
+    // --- Coordinator restart over the finished dir: nothing to
+    // dispatch, so it needs no workers, exits immediately, and renders
+    // the same bytes again.
+    let out = repro(
+        &[
+            "exp", "serve", SWEEP, "--fast", "--stable-timings", "--out", &s(&fleet_out),
+            "--resume", "--results", &s(&res_resume),
+        ],
+        &work,
+    );
+    assert!(out.status.success(), "serve --resume over finished dir: {}", stderr_of(&out));
+    assert_eq!(
+        std::fs::read(&record_path).unwrap(),
+        ref_bytes,
+        "no-op resume must not change the record file"
+    );
+    assert_dirs_equal(&res_ref, &res_resume, "resumed-coordinator renders vs reference");
+
+    std::fs::remove_dir_all(&work).ok();
+}
+
+/// A worker pointed at a dead address fails fast with a useful error —
+/// no silent hang (the connect loop gives up after its timeout).
+#[test]
+fn worker_fails_loudly_when_no_coordinator_listens() {
+    let work = tmp("noconn");
+    // Reserve a port, then close it so nothing listens there.
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let out = repro(&["exp", "work", "--connect", &addr], &work);
+    assert!(!out.status.success(), "worker must fail with nothing listening");
+    let err = stderr_of(&out);
+    assert!(err.contains(&addr) || err.contains("connect"), "unhelpful error: {err}");
+    std::fs::remove_dir_all(&work).ok();
+}

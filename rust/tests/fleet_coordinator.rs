@@ -1,0 +1,452 @@
+//! In-process fault-injection suite for the fleet coordinator state
+//! machine (`qep::fleet::coord::CoordState`). The state machine takes
+//! its clock as an explicit argument, so every fault here — a worker
+//! dying mid-cell, a late duplicate completion racing a reassignment, a
+//! coordinator killed and restarted over its record directory — is
+//! driven deterministically, no sleeps, no sockets. The invariant under
+//! every schedule: **exactly-once cell coverage** (`verify_coverage`
+//! accepts the record file) and a record file byte-identical to an
+//! uninterrupted local run's.
+
+use qep::exp::common::{
+    run_cells_durable, run_plan_cell, scan_record_dir, validate_resume, DurableRun,
+};
+use qep::exp::plan::{manifest, verify_coverage, PlanCell, PlanParams, SweepId};
+use qep::exp::ExpData;
+use qep::fleet::coord::{Assignment, CoordState, FleetOpts, Verdict};
+use qep::io::results::{read_records, shard_filename, CellRecord, RecordAppender};
+use qep::model::{Model, ModelConfig, Size};
+use qep::text::{Corpus, Flavor};
+use qep::util::pool::Pool;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+fn fresh_data() -> ExpData {
+    let mut cfg = ModelConfig::new("tiny-s", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 3);
+    let mut models = HashMap::new();
+    models.insert(Size::TinyS.name().to_string(), model);
+    let mut corpora = HashMap::new();
+    for f in Flavor::all() {
+        corpora.insert(f, Corpus::generate(f, 24 * 1024, 0));
+    }
+    ExpData::from_parts(models, corpora)
+}
+
+fn tiny_params() -> PlanParams {
+    let mut p = PlanParams::for_sizes(&[Size::TinyS]);
+    p.fig3_bits = vec![3];
+    p.fig3_seeds = 2;
+    p.appendix_settings = vec![qep::quant::QuantConfig::int(3)];
+    p
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qep_fleet_coord_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const SWEEP: SweepId = SweepId::AblationAlpha;
+
+fn cells() -> Vec<PlanCell> {
+    manifest(SWEEP, &tiny_params()).unwrap()
+}
+
+/// A synthetic record for state-machine-only tests (the coordinator
+/// never inspects metrics, only identity).
+fn rec(id: &str) -> CellRecord {
+    CellRecord::new(id.to_string(), 0, 1)
+}
+
+fn opts(lease_ms: u64) -> FleetOpts {
+    FleetOpts { lease_ms, stable_timings: true, ..Default::default() }
+}
+
+fn state_in(dir: &std::path::Path, lease_ms: u64, skip: &HashSet<String>) -> CoordState {
+    let path = dir.join(shard_filename(SWEEP.name(), 1, 1));
+    CoordState::new(&cells(), skip, RecordAppender::open(&path).unwrap(), opts(lease_ms)).unwrap()
+}
+
+fn assigned(a: Assignment) -> (u64, String) {
+    match a {
+        Assignment::Cell { lease, id } => (lease, id),
+        other => panic!("expected an assignment, got {other:?}"),
+    }
+}
+
+/// Worker dies mid-cell: its lease expires, the cell is reassigned to a
+/// live worker, and the dead worker's eventual late completion is
+/// rejected as a duplicate — the file keeps exactly one record.
+#[test]
+fn lease_expiry_reassigns_and_late_duplicate_is_rejected() {
+    let dir = tmp_dir("expiry");
+    let mut st = state_in(&dir, 100, &HashSet::new());
+    let w1 = st.register();
+    let w2 = st.register();
+
+    let (lease1, id1) = assigned(st.request(w1, 0));
+    // w1 goes silent (no heartbeat). Past the lease window the cell is
+    // requeued...
+    let requeued = st.expire(150);
+    assert_eq!(requeued, vec![id1.clone()]);
+    // ...and handed to w2 under a fresh lease.
+    let (lease2, id2) = assigned(st.request(w2, 150));
+    assert_eq!(id2, id1);
+    assert_ne!(lease2, lease1);
+
+    // w2 finishes first: accepted.
+    assert!(matches!(st.complete(lease2, rec(&id1), 200).unwrap(), Verdict::Accepted));
+    // w1 limps back with the same cell under the expired lease: rejected
+    // deterministically (first accepted completion won).
+    assert!(matches!(st.complete(lease1, rec(&id1), 210).unwrap(), Verdict::Duplicate));
+
+    let path = dir.join(shard_filename(SWEEP.name(), 1, 1));
+    assert_eq!(
+        read_records(&path).unwrap().iter().filter(|r| r.id == id1).count(),
+        1,
+        "exactly one record for the contested cell"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The mirror race: the presumed-dead worker's completion arrives
+/// *before* the reassigned execution finishes. First accepted completion
+/// wins — the expired-lease completion is honored, the reassigned
+/// worker's later one is the duplicate.
+#[test]
+fn expired_lease_completion_wins_when_it_arrives_first() {
+    let dir = tmp_dir("race");
+    let mut st = state_in(&dir, 100, &HashSet::new());
+    let w1 = st.register();
+    let w2 = st.register();
+
+    let (lease1, id1) = assigned(st.request(w1, 0));
+    let (lease2, id2) = assigned(st.request(w2, 150)); // implicit expiry inside request()
+    assert_eq!(id2, id1, "expiry inside request() requeued the cell");
+
+    assert!(matches!(st.complete(lease1, rec(&id1), 160).unwrap(), Verdict::Accepted));
+    assert!(matches!(st.complete(lease2, rec(&id1), 170).unwrap(), Verdict::Duplicate));
+
+    let path = dir.join(shard_filename(SWEEP.name(), 1, 1));
+    assert_eq!(read_records(&path).unwrap().len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A slow-but-alive worker keeps its lease by heartbeating: the cell is
+/// never reassigned, other workers wait, and the eventual completion is
+/// accepted.
+#[test]
+fn heartbeats_keep_a_slow_worker_leased() {
+    let dir = tmp_dir("heartbeat");
+    let mut st = state_in(&dir, 100, &HashSet::new());
+    let w1 = st.register();
+    let w2 = st.register();
+
+    // w1 takes every cell (serially slow, but alive).
+    let mut held = Vec::new();
+    loop {
+        match st.request(w1, 0) {
+            Assignment::Cell { lease, id } => held.push((lease, id)),
+            Assignment::Wait | Assignment::Finished => break,
+        }
+    }
+    assert!(!held.is_empty());
+
+    // Well past the original deadline, heartbeats keep renewing...
+    for t in [80u64, 160, 240, 320] {
+        for (lease, _) in &held {
+            assert!(st.heartbeat(*lease, t), "lease {lease} lost at t={t}");
+        }
+        // ...so w2 finds nothing to steal.
+        assert_eq!(st.request(w2, t), Assignment::Wait);
+    }
+
+    // The slow completions are all accepted, long after lease_ms.
+    for (lease, id) in &held {
+        assert!(matches!(st.complete(*lease, rec(id), 400).unwrap(), Verdict::Accepted));
+    }
+    assert!(st.finished());
+    assert_eq!(st.request(w2, 410), Assignment::Finished);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A dropped connection releases the worker's leases immediately — no
+/// waiting out the lease window.
+#[test]
+fn worker_disconnect_requeues_its_cells_immediately() {
+    let dir = tmp_dir("disconnect");
+    let mut st = state_in(&dir, 60_000, &HashSet::new()); // huge lease: expiry can't help
+    let w1 = st.register();
+    let w2 = st.register();
+
+    let (_l1, id1) = assigned(st.request(w1, 0));
+    let (_l2, id2) = assigned(st.request(w1, 0));
+    assert_ne!(id1, id2);
+
+    let mut requeued = st.worker_gone(w1);
+    requeued.sort();
+    let mut want = vec![id1.clone(), id2.clone()];
+    want.sort();
+    assert_eq!(requeued, want);
+
+    // Both cells immediately available again, manifest order first.
+    let (_, got1) = assigned(st.request(w2, 1));
+    let (_, got2) = assigned(st.request(w2, 1));
+    assert_eq!(got1, id1);
+    assert_eq!(got2, id2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker-side cell error requeues the cell for another attempt, but a
+/// deterministically-failing cell aborts the sweep after max failures
+/// instead of spinning forever.
+#[test]
+fn failing_cell_retries_then_aborts_the_sweep() {
+    let dir = tmp_dir("failures");
+    let mut st = state_in(&dir, 100, &HashSet::new());
+    let w = st.register();
+
+    let (lease, id) = assigned(st.request(w, 0));
+    st.fail(lease, "boom", 1).unwrap();
+    let (lease, id_again) = assigned(st.request(w, 2));
+    assert_eq!(id_again, id, "failed cell requeued first (lowest manifest index)");
+    st.fail(lease, "boom", 3).unwrap();
+    let (lease, _) = assigned(st.request(w, 4));
+    let err = st.fail(lease, "boom", 5).unwrap_err().to_string();
+    assert!(err.contains(&id) && err.contains("aborting"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The tentpole invariant, in-process: real cell executions dispatched
+/// through an adversarial schedule — two workers, a mid-cell death with
+/// reassignment, late duplicates, out-of-order completions — produce a
+/// record file **byte-identical** to an uninterrupted local
+/// `run_cells_durable` run, and `verify_coverage` accepts it.
+#[test]
+fn adversarial_schedule_is_byte_identical_to_local_run() {
+    let params = tiny_params();
+    let all = cells();
+    assert!(all.len() >= 4, "need cells to shuffle");
+    let pool = Pool::new(2);
+
+    // Reference: uninterrupted local durable run, stable timings.
+    let ref_dir = tmp_dir("adv_ref");
+    let ref_path = ref_dir.join(shard_filename(SWEEP.name(), 1, 1));
+    let empty = HashSet::new();
+    run_cells_durable(
+        &fresh_data(),
+        &all,
+        &pool,
+        0,
+        1,
+        DurableRun {
+            skip: &empty,
+            sink: RecordAppender::open(&ref_path).unwrap(),
+            stable_timings: true,
+        },
+    )
+    .unwrap();
+    let want_bytes = std::fs::read(&ref_path).unwrap();
+
+    // Fleet leg: workers actually run their cells (fresh snapshot per
+    // worker, like real processes), but the schedule is hostile.
+    let data_w1 = fresh_data();
+    let data_w2 = fresh_data();
+    let run = |data: &ExpData, id: &str| {
+        let pc = PlanCell::parse(id).unwrap();
+        run_plan_cell(data, &pc, 0, 1).unwrap()
+    };
+
+    let fleet_dir = tmp_dir("adv_fleet");
+    let mut st = state_in(&fleet_dir, 100, &HashSet::new());
+    let w1 = st.register();
+    let w2 = st.register();
+
+    // w1 takes the first two cells, dies holding both (one via expiry,
+    // one via disconnect); w2 takes over everything, completing in
+    // arrival order, interleaved with w1's zombie duplicates.
+    let (l1a, c1a) = assigned(st.request(w1, 0));
+    let (l1b, c1b) = assigned(st.request(w1, 0));
+    let mut want = vec![c1a.clone(), c1b.clone()];
+    want.sort();
+    assert_eq!(st.expire(150), want);
+    st.worker_gone(w1);
+
+    // w2 drains the queue; completions land out of manifest order
+    // (stash then complete in reverse) to exercise the in-order sink.
+    let mut stash: Vec<(u64, String, CellRecord)> = Vec::new();
+    loop {
+        match st.request(w2, 200) {
+            Assignment::Cell { lease, id } => {
+                let r = run(&data_w2, &id);
+                stash.push((lease, id, r));
+            }
+            Assignment::Wait | Assignment::Finished => break,
+        }
+    }
+    assert_eq!(stash.len(), all.len());
+    // Heartbeats keep every stashed lease alive while w2 "works".
+    for t in [260u64, 340] {
+        for (lease, _, _) in &stash {
+            assert!(st.heartbeat(*lease, t));
+        }
+    }
+    for (lease, id, r) in stash.into_iter().rev() {
+        assert!(matches!(st.complete(lease, r, 350).unwrap(), Verdict::Accepted), "{id}");
+    }
+    // Zombie w1 now reports its two original cells: both rejected.
+    assert!(matches!(st.complete(l1a, run(&data_w1, &c1a), 400).unwrap(), Verdict::Duplicate));
+    assert!(matches!(st.complete(l1b, run(&data_w1, &c1b), 401).unwrap(), Verdict::Duplicate));
+    assert!(st.finished());
+
+    // Byte identity + exactly-once coverage.
+    let fleet_path = fleet_dir.join(shard_filename(SWEEP.name(), 1, 1));
+    assert_eq!(
+        std::fs::read(&fleet_path).unwrap(),
+        want_bytes,
+        "fleet record file differs from the uninterrupted local run"
+    );
+    verify_coverage(&all, read_records(&fleet_path).unwrap()).unwrap();
+    for d in [ref_dir, fleet_dir] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
+
+/// Coordinator killed mid-sweep: a restart over the same `--out` dir
+/// (the standard scan → validate → skip pipeline) dispatches only the
+/// missing cells, and the finished file is byte-identical to never
+/// having died. Exactly-once coverage holds across the restart.
+#[test]
+fn coordinator_restart_resumes_only_missing_cells() {
+    let all = cells();
+    let pool = Pool::new(2);
+
+    // Reference bytes from an uninterrupted local run.
+    let ref_dir = tmp_dir("restart_ref");
+    let ref_path = ref_dir.join(shard_filename(SWEEP.name(), 1, 1));
+    let empty = HashSet::new();
+    run_cells_durable(
+        &fresh_data(),
+        &all,
+        &pool,
+        0,
+        1,
+        DurableRun {
+            skip: &empty,
+            sink: RecordAppender::open(&ref_path).unwrap(),
+            stable_timings: true,
+        },
+    )
+    .unwrap();
+    let want_bytes = std::fs::read(&ref_path).unwrap();
+
+    // Incarnation 1: completes two cells, then the process "dies" (state
+    // dropped; the record file stays).
+    let dir = tmp_dir("restart");
+    let data = fresh_data();
+    let done_ids: Vec<String>;
+    {
+        let mut st = state_in(&dir, 100, &HashSet::new());
+        let w = st.register();
+        let (la, ca) = assigned(st.request(w, 0));
+        let (lb, cb) = assigned(st.request(w, 0));
+        let ra = run_plan_cell(&data, &PlanCell::parse(&ca).unwrap(), 0, 1).unwrap();
+        let rb = run_plan_cell(&data, &PlanCell::parse(&cb).unwrap(), 0, 1).unwrap();
+        assert!(matches!(st.complete(la, ra, 10).unwrap(), Verdict::Accepted));
+        assert!(matches!(st.complete(lb, rb, 11).unwrap(), Verdict::Accepted));
+        done_ids = vec![ca, cb];
+        assert!(!st.finished());
+    }
+
+    // Restart: the standard resume pipeline recovers the skip set.
+    let scan = scan_record_dir(&dir).unwrap();
+    assert_eq!(scan.records.len(), 2);
+    let skip = validate_resume(&all, &scan).unwrap();
+    assert_eq!(skip.len(), 2);
+    for id in &done_ids {
+        assert!(skip.contains(id));
+    }
+
+    // Incarnation 2 dispatches ONLY the missing cells...
+    let mut st = state_in(&dir, 100, &skip);
+    let w = st.register();
+    let mut dispatched = Vec::new();
+    loop {
+        match st.request(w, 0) {
+            Assignment::Cell { lease, id } => dispatched.push((lease, id)),
+            Assignment::Wait | Assignment::Finished => break,
+        }
+    }
+    assert_eq!(dispatched.len(), all.len() - 2, "only missing cells dispatched");
+    for (_, id) in &dispatched {
+        assert!(!skip.contains(id), "resumed coordinator re-dispatched finished cell {id}");
+    }
+    // ...and completing them finishes the sweep with identical bytes.
+    for (lease, id) in dispatched {
+        let r = run_plan_cell(&data, &PlanCell::parse(&id).unwrap(), 0, 1).unwrap();
+        assert!(matches!(st.complete(lease, r, 50).unwrap(), Verdict::Accepted));
+    }
+    assert!(st.finished());
+
+    let path = dir.join(shard_filename(SWEEP.name(), 1, 1));
+    assert_eq!(std::fs::read(&path).unwrap(), want_bytes);
+    verify_coverage(&all, read_records(&path).unwrap()).unwrap();
+    for d in [ref_dir, dir] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
+
+/// Completions that name the wrong cell for their lease, or a cell not
+/// in the manifest, are rejected (not crashes, not writes).
+#[test]
+fn malformed_completions_are_rejected_without_writing() {
+    let dir = tmp_dir("malformed");
+    let mut st = state_in(&dir, 100, &HashSet::new());
+    let w = st.register();
+    let (lease, id) = assigned(st.request(w, 0));
+
+    match st.complete(lease, rec("not-a-cell/at-all"), 1).unwrap() {
+        Verdict::Rejected(why) => assert!(why.contains("not in this manifest"), "{why}"),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    let other_id = cells()
+        .iter()
+        .map(|c| c.id())
+        .find(|i| *i != id)
+        .expect("sweep has >1 cell");
+    match st.complete(lease, rec(&other_id), 2).unwrap() {
+        Verdict::Rejected(why) => assert!(why.contains("lease"), "{why}"),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    // The honest completion still lands afterwards.
+    assert!(matches!(st.complete(lease, rec(&id), 3).unwrap(), Verdict::Accepted));
+    let path = dir.join(shard_filename(SWEEP.name(), 1, 1));
+    assert_eq!(read_records(&path).unwrap().len(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Live status counters track the fault lifecycle.
+#[test]
+fn status_counters_track_the_lifecycle() {
+    let dir = tmp_dir("status");
+    let mut st = state_in(&dir, 100, &HashSet::new());
+    let total = cells().len();
+    let s = st.status();
+    assert_eq!((s.total, s.done, s.leased, s.pending, s.workers), (total, 0, 0, total, 0));
+
+    let w1 = st.register();
+    let (lease, id) = assigned(st.request(w1, 0));
+    let s = st.status();
+    assert_eq!((s.leased, s.pending, s.workers), (1, total - 1, 1));
+
+    assert!(matches!(st.complete(lease, rec(&id), 10).unwrap(), Verdict::Accepted));
+    let s = st.status();
+    assert_eq!((s.done, s.leased), (1, 0));
+
+    st.worker_gone(w1);
+    assert_eq!(st.status().workers, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}

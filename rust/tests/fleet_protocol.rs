@@ -1,0 +1,184 @@
+//! Wire-format property tests for the fleet protocol
+//! (`qep::fleet::wire`): every message type round-trips through a real
+//! byte stream, and every malformed input — torn frames, garbage bytes,
+//! oversized length prefixes, version skew, junk payloads — fails
+//! loudly with the *named* error variant, never a hang or a panic.
+
+use qep::fleet::wire::{
+    encode_frame, encode_frame_versioned, read_msg, write_msg, Msg, WireError, MAGIC,
+    MAX_FRAME_LEN, VERSION,
+};
+use std::io::Cursor;
+
+/// One instance of every message variant, with awkward payload content
+/// (quotes, newlines, unicode) to stress the JSON layer.
+fn all_messages() -> Vec<Msg> {
+    vec![
+        Msg::Hello,
+        Msg::Welcome { worker: 7, heartbeat_ms: 2500 },
+        Msg::Request { worker: 7 },
+        Msg::Assign { lease: 41, cell: "table12/INT3/GPTQ/+qep/tiny-s".to_string() },
+        Msg::NoWork { done: false },
+        Msg::NoWork { done: true },
+        Msg::Heartbeat { lease: 41 },
+        Msg::Complete {
+            lease: 41,
+            record: "{\"id\":\"table12/INT3/GPTQ/+qep/tiny-s\",\"ppl\":{\"wiki\":6.25}}"
+                .to_string(),
+        },
+        Msg::CompleteAck { accepted: true, reason: String::new() },
+        Msg::CompleteAck { accepted: false, reason: "late \"duplicate\"\nrejected".to_string() },
+        Msg::Failed { lease: 9, error: "cell exploded: α≠0.5\ttab".to_string() },
+        Msg::StatusReq,
+        Msg::Status { total: 17, done: 5, leased: 3, pending: 9, workers: 4 },
+        Msg::ProtocolError { detail: "bad frame".to_string() },
+    ]
+}
+
+#[test]
+fn every_message_round_trips() {
+    for msg in all_messages() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let mut cur = Cursor::new(buf);
+        let back = read_msg(&mut cur).unwrap();
+        assert_eq!(back, msg);
+        // The stream is fully consumed: a second read sees a clean close.
+        assert!(matches!(read_msg(&mut cur), Err(WireError::Closed)), "{msg:?}");
+    }
+}
+
+#[test]
+fn back_to_back_frames_read_in_order() {
+    let msgs = all_messages();
+    let mut buf = Vec::new();
+    for m in &msgs {
+        write_msg(&mut buf, m).unwrap();
+    }
+    let mut cur = Cursor::new(buf);
+    for want in &msgs {
+        assert_eq!(&read_msg(&mut cur).unwrap(), want);
+    }
+    assert!(matches!(read_msg(&mut cur), Err(WireError::Closed)));
+}
+
+/// Killing the peer at *any* byte boundary inside a frame must surface
+/// as `Truncated` (mid-frame) — only the zero-byte case is a clean
+/// `Closed`. This sweeps every prefix of a real frame.
+#[test]
+fn every_truncation_point_fails_loudly() {
+    let frame = encode_frame(&Msg::Assign { lease: 3, cell: "fig3/INT3/tiny-s/base/s0".into() });
+    for cut in 0..frame.len() {
+        let mut cur = Cursor::new(frame[..cut].to_vec());
+        match read_msg(&mut cur) {
+            Err(WireError::Closed) => assert_eq!(cut, 0, "Closed only at a frame boundary"),
+            Err(WireError::Truncated { wanted, got }) => {
+                assert!(cut > 0);
+                assert!(got < wanted, "cut at {cut}: got {got} wanted {wanted}");
+            }
+            other => panic!("cut at {cut}: expected Truncated/Closed, got {other:?}"),
+        }
+    }
+    // The uncut frame still parses (the sweep above proves failures are
+    // about truncation, not the frame itself).
+    assert!(read_msg(&mut Cursor::new(frame)).is_ok());
+}
+
+#[test]
+fn garbage_bytes_are_rejected_as_bad_magic() {
+    for garbage in [
+        b"GET / HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+        b"\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00".to_vec(),
+        b"QFLX\x00\x01\x00\x00\x00\x02{}".to_vec(), // one magic byte off
+        vec![0xff; 64],
+    ] {
+        match read_msg(&mut Cursor::new(garbage)) {
+            Err(WireError::BadMagic(b)) => assert_ne!(b, MAGIC),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn version_mismatch_is_detected_before_the_payload() {
+    // A *valid* frame from a future protocol version: payload is even
+    // well-formed JSON, but the version gate must fire first.
+    let frame = encode_frame_versioned(VERSION + 1, b"{\"t\":\"hello\"}");
+    match read_msg(&mut Cursor::new(frame)) {
+        Err(WireError::VersionMismatch { ours, theirs }) => {
+            assert_eq!(ours, VERSION);
+            assert_eq!(theirs, VERSION + 1);
+        }
+        other => panic!("expected VersionMismatch, got {other:?}"),
+    }
+    // Version 0 (e.g. zeroed bytes after the magic) as well.
+    let frame = encode_frame_versioned(0, b"{}");
+    assert!(matches!(
+        read_msg(&mut Cursor::new(frame)),
+        Err(WireError::VersionMismatch { theirs: 0, .. })
+    ));
+}
+
+/// A hostile or corrupt length prefix may not trigger a giant
+/// allocation or a blocking read — it must be rejected from the header
+/// alone.
+#[test]
+fn oversized_length_prefix_is_rejected_without_reading_the_body() {
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&MAGIC);
+    frame.extend_from_slice(&VERSION.to_be_bytes());
+    frame.extend_from_slice(&(MAX_FRAME_LEN + 1).to_be_bytes());
+    // No body at all: if the implementation tried to read it, it would
+    // report Truncated; the cap must fire first.
+    match read_msg(&mut Cursor::new(frame)) {
+        Err(WireError::Oversized(n)) => assert_eq!(n, MAX_FRAME_LEN + 1),
+        other => panic!("expected Oversized, got {other:?}"),
+    }
+    // u32::MAX — the classic garbage value.
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&MAGIC);
+    frame.extend_from_slice(&VERSION.to_be_bytes());
+    frame.extend_from_slice(&u32::MAX.to_be_bytes());
+    assert!(matches!(read_msg(&mut Cursor::new(frame)), Err(WireError::Oversized(_))));
+}
+
+#[test]
+fn junk_payloads_are_named_payload_errors() {
+    for payload in [
+        &b"not json at all"[..],
+        &b"{\"t\":\"no_such_message\"}"[..],
+        &b"{\"missing\":\"type tag\"}"[..],
+        &b"{\"t\":\"assign\",\"lease\":1}"[..], // missing 'cell'
+        &b"{\"t\":\"welcome\",\"worker\":true}"[..], // wrong field type
+        &b"\xff\xfe\x00"[..],                   // not UTF-8
+    ] {
+        match read_msg(&mut Cursor::new(encode_frame_versioned(VERSION, payload))) {
+            Err(WireError::BadPayload(_)) => {}
+            other => panic!("payload {payload:?}: expected BadPayload, got {other:?}"),
+        }
+    }
+}
+
+/// Frame corruption *after* a valid frame doesn't poison the valid one —
+/// readers consume exactly one frame's bytes per call.
+#[test]
+fn valid_frame_then_garbage_reads_the_valid_frame_first() {
+    let mut buf = encode_frame(&Msg::NoWork { done: true });
+    buf.extend_from_slice(b"trailing garbage");
+    let mut cur = Cursor::new(buf);
+    assert_eq!(read_msg(&mut cur).unwrap(), Msg::NoWork { done: true });
+    assert!(matches!(read_msg(&mut cur), Err(WireError::BadMagic(_))));
+}
+
+#[test]
+fn errors_render_useful_messages() {
+    // The Display impls are what workers print on a dead coordinator —
+    // keep the key facts (versions, sizes) in them.
+    let e = WireError::VersionMismatch { ours: 1, theirs: 9 };
+    let s = e.to_string();
+    assert!(s.contains("v1") && s.contains("v9"), "{s}");
+    let s = WireError::Oversized(MAX_FRAME_LEN + 7).to_string();
+    assert!(s.contains(&(MAX_FRAME_LEN + 7).to_string()), "{s}");
+    let s = WireError::Truncated { wanted: 10, got: 3 }.to_string();
+    assert!(s.contains("3/10"), "{s}");
+}

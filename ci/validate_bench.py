@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Validate one BENCH_*.json trajectory point.
+
+Shared gate for the CI bench-smoke matrix. Every `harness = false` bench
+binary self-validates its own JSON on write and exits nonzero on a schema
+break; CI re-validates the file here, independently, so a silently-skipped
+write still fails the job. The per-bench schema checks live in one place —
+adding a bench means adding one check function and one matrix row.
+
+Usage: validate_bench.py path/to/BENCH_<name>.json
+"""
+
+import json
+import sys
+
+
+def common(doc, bench, extra_keys=()):
+    for key in ("schema_version", "bench", "smoke", "results") + tuple(extra_keys):
+        assert key in doc, f"missing key: {key}"
+    assert doc["schema_version"] == 1, doc["schema_version"]
+    assert doc["bench"] == bench, (doc["bench"], bench)
+    return doc["results"]
+
+
+def check_serve(doc):
+    rs = common(doc, "serve_throughput", ("model", "speedup_single_stream"))
+    assert len(rs) >= 4, rs
+    assert any(r["quantized"] for r in rs)
+    assert any(not r["quantized"] for r in rs)
+    for r in rs:
+        assert r["tok_s"] > 0, r
+    sp = doc["speedup_single_stream"]
+    assert sp > 0, sp
+    # The >=1.5x single-stream regression gate applies only to real
+    # (non-smoke) trajectory points -- smoke numbers are meaningless.
+    if not doc["smoke"]:
+        assert sp >= 1.5, f"single-stream speedup regressed: {sp:.2f}x < 1.5x"
+    return f"{len(rs)} points, speedup {sp:.2f}x"
+
+
+def check_linalg(doc):
+    rs = common(doc, "linalg_hotpath")
+    assert len(rs) >= 4, rs
+    engines = {r["engine"] for r in rs}
+    assert {"jacobi", "randomized"} <= engines, engines
+    for r in rs:
+        assert r["mean_s"] > 0, r
+        assert r["threads"] >= 1, r
+    return f"{len(rs)} points, engines {sorted(engines)}"
+
+
+def check_quantizers(doc):
+    rs = common(doc, "quantizers")
+    assert len(rs) >= 3, rs
+    components = {r["component"] for r in rs}
+    assert {"qep-correction", "hessian-build"} <= components, components
+    for r in rs:
+        assert r["mean_s"] > 0, r
+        assert r["layer"], r
+    return f"{len(rs)} points, components {sorted(components)}"
+
+
+def check_pipeline(doc):
+    rs = common(doc, "pipeline_e2e")
+    assert len(rs) >= 2, rs
+    assert any(r["qep"] for r in rs) and any(not r["qep"] for r in rs), rs
+    for r in rs:
+        assert r["mean_s"] > 0, r
+        assert r["quantize_s"] > 0 and r["eval_s"] > 0, r
+        assert r["ppl"] > 0, r
+    return f"{len(rs)} cycles"
+
+
+CHECKS = {
+    "serve_throughput": check_serve,
+    "linalg_hotpath": check_linalg,
+    "quantizers": check_quantizers,
+    "pipeline_e2e": check_pipeline,
+}
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit(f"usage: {sys.argv[0]} BENCH_<name>.json")
+    path = sys.argv[1]
+    with open(path) as f:
+        doc = json.load(f)
+    bench = doc.get("bench")
+    assert bench in CHECKS, f"unknown bench {bench!r} in {path} (known: {sorted(CHECKS)})"
+    detail = CHECKS[bench](doc)
+    print(f"{path} ok: {detail} (smoke={doc['smoke']})")
+
+
+if __name__ == "__main__":
+    main()

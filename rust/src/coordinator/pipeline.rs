@@ -18,8 +18,9 @@
 use super::report::{LayerReport, PipelineReport};
 use crate::linalg::Mat;
 use crate::model::ops::{causal_attention, linear, rmsnorm, swiglu};
-use crate::model::{Forward, Model};
+use crate::model::{BlockWeights, Forward, Model};
 use crate::qep::{adjunct_from_residual, AlphaPolicy, CorrectionStats, LowRankAdjunct};
+use crate::quant::budget::{self, Allocation, BudgetSpec};
 use crate::quant::{quantizer_for, LayerCtx, Method, QuantConfig, Quantizer};
 use crate::util::pool::Pool;
 use crate::util::Stopwatch;
@@ -55,6 +56,12 @@ pub struct PipelineConfig {
     /// the adjunct. Orthogonal to `qep_alpha` — every method × ±QEP cell
     /// gains a `±lowrank` twin.
     pub lowrank_rank: usize,
+    /// Mixed-precision bit budget (`quant::budget`): when set, a
+    /// full-precision scoring pre-pass allocates per-layer bit widths
+    /// under this average-bits-per-weight ceiling and `quant.bits` is
+    /// ignored (the group setting still applies to every layer). The
+    /// allocation is recorded in [`PipelineOutput::allocation`].
+    pub bit_budget: Option<BudgetSpec>,
     pub seed: u64,
     pub verbose: bool,
     /// Worker threads for this pipeline's per-layer fan-out (0 = the
@@ -77,6 +84,7 @@ impl Default for PipelineConfig {
             damp_rel: 1.0,
             max_blocks: None,
             lowrank_rank: 0,
+            bit_budget: None,
             seed: 0,
             verbose: false,
             threads: 0,
@@ -94,6 +102,9 @@ impl PipelineConfig {
         );
         if self.lowrank_rank > 0 {
             label.push_str(&format!(" +LR{}", self.lowrank_rank));
+        }
+        if let Some(spec) = &self.bit_budget {
+            label.push_str(&format!(" B{}/{}", spec.budget.render(), spec.alloc.name()));
         }
         label
     }
@@ -120,6 +131,11 @@ pub struct PipelineOutput {
     /// Per-layer low-rank factors, keyed by canonical layer name
     /// (`blocks.{i}.{short}`). Empty unless `lowrank_rank > 0`.
     pub adjuncts: BTreeMap<String, LowRankAdjunct>,
+    /// The mixed-precision bit allocation, present iff
+    /// `PipelineConfig.bit_budget` was set. `main` records it in the
+    /// `.qtz` meta so eval and serving materialize the same per-layer
+    /// grids.
+    pub allocation: Option<Allocation>,
     pub report: PipelineReport,
 }
 
@@ -152,16 +168,33 @@ impl Pipeline {
         let mut adjuncts: BTreeMap<String, LowRankAdjunct> = BTreeMap::new();
         let mut base_weights: Vec<(usize, String, Mat)> = Vec::new();
 
-        let prop = Stopwatch::start();
-        let mut x_full = f.embed(model, calib_tokens);
-        let mut x_hat = x_full.clone();
-        report.propagation_s += prop.seconds();
-
         let n_blocks = self
             .cfg
             .max_blocks
             .unwrap_or(model.cfg.n_layers)
             .min(model.cfg.n_layers);
+
+        // Mixed precision: a dedicated full-precision pre-pass scores every
+        // quantizable linear *before* quantization starts (the allocation
+        // is global, so no layer may be touched until all are scored). The
+        // whole pre-pass is serial and name-keyed — bit-identical for every
+        // thread count.
+        let alloc_timer = Stopwatch::start();
+        let allocation = match &self.cfg.bit_budget {
+            Some(spec) => Some(self.allocate_bits(model, calib_tokens, &f, n_blocks, *spec)?),
+            None => None,
+        };
+        if allocation.is_some() {
+            report.allocation_s = alloc_timer.seconds();
+            if self.cfg.verbose {
+                eprintln!("[pipeline] {}", allocation.as_ref().unwrap().summary());
+            }
+        }
+
+        let prop = Stopwatch::start();
+        let mut x_full = f.embed(model, calib_tokens);
+        let mut x_hat = x_full.clone();
+        report.propagation_s += prop.seconds();
 
         for bi in 0..n_blocks {
             // Full-precision stream: capture per-linear inputs in one pass.
@@ -178,7 +211,15 @@ impl Pipeline {
             // other's quantized weights, so they fan out across the pool;
             // applying in canonical order keeps the run deterministic.
             let outs = self.pool.par_map(ATTN_QKV.len(), |i| {
-                self.compute_layer(&qmodel, bi, ATTN_QKV[i], &cap.attn_in, &attn_in_hat, policy.as_ref())
+                self.compute_layer(
+                    &qmodel,
+                    bi,
+                    ATTN_QKV[i],
+                    &cap.attn_in,
+                    &attn_in_hat,
+                    policy.as_ref(),
+                    Self::layer_bits(allocation.as_ref(), bi, ATTN_QKV[i]),
+                )
             });
             for (short, out) in ATTN_QKV.iter().zip(outs) {
                 let (w_hat, adj, layer_report) = out?;
@@ -194,8 +235,15 @@ impl Pipeline {
             );
             let ctx_hat = causal_attention(&q, &k, &v, model.cfg.n_heads, model.cfg.seq_len);
             report.propagation_s += prop.seconds();
-            let (w_hat, adj, layer_report) =
-                self.compute_layer(&qmodel, bi, "attn.wo", &cap.attn_ctx, &ctx_hat, policy.as_ref())?;
+            let (w_hat, adj, layer_report) = self.compute_layer(
+                &qmodel,
+                bi,
+                "attn.wo",
+                &cap.attn_ctx,
+                &ctx_hat,
+                policy.as_ref(),
+                Self::layer_bits(allocation.as_ref(), bi, "attn.wo"),
+            )?;
             Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, "attn.wo", w_hat, adj);
             report.layers.push(layer_report);
 
@@ -207,7 +255,15 @@ impl Pipeline {
             report.propagation_s += prop.seconds();
             // gate/up share captured inputs, exactly like wq/wk/wv.
             let outs = self.pool.par_map(MLP_GATE_UP.len(), |i| {
-                self.compute_layer(&qmodel, bi, MLP_GATE_UP[i], &cap.mlp_in, &mlp_in_hat, policy.as_ref())
+                self.compute_layer(
+                    &qmodel,
+                    bi,
+                    MLP_GATE_UP[i],
+                    &cap.mlp_in,
+                    &mlp_in_hat,
+                    policy.as_ref(),
+                    Self::layer_bits(allocation.as_ref(), bi, MLP_GATE_UP[i]),
+                )
             });
             for (short, out) in MLP_GATE_UP.iter().zip(outs) {
                 let (w_hat, adj, layer_report) = out?;
@@ -218,8 +274,15 @@ impl Pipeline {
             let b = &qmodel.blocks[bi];
             let act_hat = swiglu(&linear(&mlp_in_hat, &b.gate), &linear(&mlp_in_hat, &b.up));
             report.propagation_s += prop.seconds();
-            let (w_hat, adj, layer_report) =
-                self.compute_layer(&qmodel, bi, "mlp.down", &cap.mlp_act, &act_hat, policy.as_ref())?;
+            let (w_hat, adj, layer_report) = self.compute_layer(
+                &qmodel,
+                bi,
+                "mlp.down",
+                &cap.mlp_act,
+                &act_hat,
+                policy.as_ref(),
+                Self::layer_bits(allocation.as_ref(), bi, "mlp.down"),
+            )?;
             Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, "mlp.down", w_hat, adj);
             report.layers.push(layer_report);
 
@@ -247,7 +310,60 @@ impl Pipeline {
             }
             Some(base)
         };
-        Ok(PipelineOutput { model: qmodel, base_model, adjuncts, report })
+        Ok(PipelineOutput { model: qmodel, base_model, adjuncts, allocation, report })
+    }
+
+    /// The allocated width for one linear (`None` ⇒ uniform
+    /// `cfg.quant.bits`). Every scored layer is present in the map, so a
+    /// miss can only mean "no budget was requested".
+    fn layer_bits(allocation: Option<&Allocation>, block: usize, short: &str) -> Option<u32> {
+        allocation.and_then(|a| a.bits_for(&format!("blocks.{block}.{short}")))
+    }
+
+    /// The mixed-precision scoring pre-pass: one full-precision forward
+    /// pass over the calibration stream, capturing each linear's input
+    /// activations, reducing them to Hessian diagonals `diag(XᵀX)` (column
+    /// sums of squares, serial accumulation), and scoring the RTN snap
+    /// error at the candidate widths {⌊B⌋, ⌊B⌋+1}. The fractional surplus
+    /// only ever buys one-bit upgrades, so the allocation elementwise
+    /// dominates the uniform-⌊B⌋ baseline (see `quant::budget`).
+    fn allocate_bits(
+        &self,
+        model: &Model,
+        calib_tokens: &[u32],
+        f: &Forward,
+        n_blocks: usize,
+        spec: BudgetSpec,
+    ) -> Result<Allocation> {
+        budget::check_feasible(spec.budget)?;
+        let floor = spec.budget.floor_bits();
+        let hi = (floor + 1).min(budget::MAX_BITS);
+        let mut costs = Vec::new();
+        let mut x = f.embed(model, calib_tokens);
+        for bi in 0..n_blocks {
+            let (x_next, cap) = f.block(&model.blocks[bi], &x);
+            for short in BlockWeights::LINEAR_NAMES {
+                let acts = cap.input_for(short);
+                let mut diag = vec![0.0f64; acts.cols];
+                for t in 0..acts.rows {
+                    let row = acts.row(t);
+                    for (d, v) in diag.iter_mut().zip(row.iter()) {
+                        *d += *v as f64 * *v as f64;
+                    }
+                }
+                let w = model.blocks[bi].linear(short);
+                costs.push(budget::layer_cost(
+                    &format!("blocks.{bi}.{short}"),
+                    w,
+                    &diag,
+                    &self.cfg.quant,
+                    floor,
+                    hi,
+                ));
+            }
+            x = x_next;
+        }
+        budget::allocate(&costs, spec.budget, spec.alloc)
     }
 
     /// Install one quantized linear into the streaming model. The adjunct
@@ -289,9 +405,16 @@ impl Pipeline {
         x_full_cap: &Mat,
         x_hat_cap: &Mat,
         policy: Option<&AlphaPolicy>,
+        bits_override: Option<u32>,
     ) -> Result<(Mat, Option<LowRankAdjunct>, LayerReport)> {
         let name = format!("blocks.{block}.{short}");
         let w = qmodel.blocks[block].linear(short).clone();
+        // Mixed precision swaps in the allocated width; the group setting
+        // is shared by every layer.
+        let qcfg = match bits_override {
+            Some(bits) => QuantConfig { bits, group: self.cfg.quant.group },
+            None => self.cfg.quant,
+        };
 
         // 1. Calibration statistics on the method's activation stream.
         //    QEP always calibrates on X̂ (Eq. 5); base methods follow their
@@ -326,7 +449,7 @@ impl Pipeline {
 
         // 3. Base method.
         let qt = Stopwatch::start();
-        let w_hat = self.quantizer.quantize(&w_target, &self.cfg.quant, &ctx)?;
+        let w_hat = self.quantizer.quantize(&w_target, &qcfg, &ctx)?;
         let quant_s = qt.seconds();
 
         // 4. Low-rank reconstruction of whatever residual the grid left
@@ -351,7 +474,7 @@ impl Pipeline {
         Ok((
             w_hat,
             adjunct,
-            LayerReport { name, recon_error, correction, hessian_s, quant_s, alpha },
+            LayerReport { name, bits: qcfg.bits, recon_error, correction, hessian_s, quant_s, alpha },
         ))
     }
 }
@@ -504,6 +627,73 @@ mod tests {
         );
         assert!(plain.adjuncts.is_empty());
         assert!(plain.base_model.is_none());
+    }
+
+    #[test]
+    fn bit_budget_allocates_within_one_bit_of_the_floor() {
+        let (model, tokens) = setup();
+        let spec = BudgetSpec {
+            budget: budget::BitBudget::parse("2.5").unwrap(),
+            alloc: budget::Alloc::Dp,
+        };
+        let out = run(
+            &model,
+            &tokens,
+            PipelineConfig { bit_budget: Some(spec), ..Default::default() },
+        );
+        let alloc = out.allocation.as_ref().unwrap();
+        assert_eq!(alloc.bits.len(), 2 * 7);
+        assert!(alloc.bits.values().all(|&b| b == 2 || b == 3), "{alloc:?}");
+        assert!(alloc.bits.values().any(|&b| b == 3), "surplus unspent: {alloc:?}");
+        assert!(alloc.avg_bits <= 2.5, "{}", alloc.avg_bits);
+        // The report records the allocated width per layer.
+        for l in &out.report.layers {
+            assert_eq!(alloc.bits[&l.name], l.bits, "{}", l.name);
+        }
+        assert!(out.report.allocation_s > 0.0);
+    }
+
+    #[test]
+    fn integral_budget_reduces_to_the_uniform_run() {
+        let (model, tokens) = setup();
+        let spec = BudgetSpec {
+            budget: budget::BitBudget::parse("3.0").unwrap(),
+            alloc: budget::Alloc::Dp,
+        };
+        // quant.bits is deliberately wrong (7): the budget must override it.
+        let budgeted = run(
+            &model,
+            &tokens,
+            PipelineConfig {
+                quant: QuantConfig::int(7),
+                method: Method::Gptq,
+                bit_budget: Some(spec),
+                ..Default::default()
+            },
+        );
+        let uniform = run(
+            &model,
+            &tokens,
+            PipelineConfig { quant: QuantConfig::int(3), method: Method::Gptq, ..Default::default() },
+        );
+        for bi in 0..2 {
+            assert_eq!(budgeted.model.blocks[bi].wq, uniform.model.blocks[bi].wq);
+            assert_eq!(budgeted.model.blocks[bi].down, uniform.model.blocks[bi].down);
+        }
+        assert_eq!(budgeted.allocation.as_ref().unwrap().avg_bits, 3.0);
+    }
+
+    #[test]
+    fn infeasible_budget_fails_loudly_before_quantizing() {
+        let (model, tokens) = setup();
+        let spec = BudgetSpec {
+            budget: budget::BitBudget::parse("1.5").unwrap(),
+            alloc: budget::Alloc::Greedy,
+        };
+        let err = Pipeline::new(PipelineConfig { bit_budget: Some(spec), ..Default::default() })
+            .run(&model, &tokens)
+            .unwrap_err();
+        assert!(format!("{err}").contains("feasible range"), "{err}");
     }
 
     #[test]

@@ -6,6 +6,10 @@ use crate::qep::CorrectionStats;
 #[derive(Clone, Debug)]
 pub struct LayerReport {
     pub name: String,
+    /// Bit width this layer was quantized at (equals the uniform
+    /// `QuantConfig.bits` unless a mixed-precision budget allocated a
+    /// per-layer width).
+    pub bits: u32,
     /// Layer-wise objective value ‖(W_target − Ŵ)X̂‖² after quantization.
     pub recon_error: f64,
     /// QEP correction diagnostics (zeroed when QEP is off or α=0).
@@ -23,6 +27,9 @@ pub struct PipelineReport {
     pub layers: Vec<LayerReport>,
     /// Seconds propagating the two calibration streams (forward passes).
     pub propagation_s: f64,
+    /// Seconds in the mixed-precision scoring pre-pass + allocator
+    /// (0 when no bit budget was requested).
+    pub allocation_s: f64,
     pub total_s: f64,
 }
 
@@ -92,6 +99,7 @@ mod tests {
         for i in 0..3 {
             r.layers.push(LayerReport {
                 name: format!("l{i}"),
+                bits: 3,
                 recon_error: 1.0,
                 correction: CorrectionStats { rel_correction: 0.1, rel_upstream_err: 0.0, seconds: 0.5 },
                 hessian_s: 0.25,

@@ -16,7 +16,7 @@ use crate::eval::{delta_per_block, perplexity, TaskFamily, TaskSet};
 use crate::io::results::{read_records_tolerant, CellRecord, RecordAppender, TornTail};
 use crate::model::{Model, Size};
 use crate::qep::AlphaPolicy;
-use crate::quant::{Method, QuantConfig};
+use crate::quant::{BudgetSpec, Method, QuantConfig};
 use crate::runtime::ArtifactRegistry;
 use crate::text::{Corpus, Flavor};
 use crate::util::pool::{self, Pool};
@@ -262,6 +262,11 @@ pub struct Cell {
     /// part of [`Cell::derived_seed`], so `±lowrank` twins share their
     /// calibration stream.
     pub lowrank_rank: usize,
+    /// Mixed-precision bit budget (`quant::budget`); `None` = uniform
+    /// `quant.bits`. Also a compared axis — deliberately NOT part of
+    /// [`Cell::derived_seed`], so allocated cells share their calibration
+    /// stream with their uniform-bits twins.
+    pub budget: Option<BudgetSpec>,
 }
 
 impl Cell {
@@ -274,6 +279,7 @@ impl Cell {
             seed: 0,
             calib_flavor: default_calib(method),
             lowrank_rank: 0,
+            budget: None,
         }
     }
 
@@ -307,6 +313,7 @@ impl Cell {
             damp_rel: 1.0,
             max_blocks: None,
             lowrank_rank: self.lowrank_rank,
+            bit_budget: self.budget,
             seed: self.derived_seed(),
             verbose: false,
             threads: 0,
@@ -340,6 +347,9 @@ impl Cell {
         );
         if self.lowrank_rank > 0 {
             label.push_str(&format!(" +LR{}", self.lowrank_rank));
+        }
+        if let Some(spec) = &self.budget {
+            label.push_str(&format!(" B{}/{}", spec.budget.render(), spec.alloc.name()));
         }
         label
     }
@@ -642,6 +652,7 @@ pub fn render_sweep(
         SweepId::Fig3 => super::fig3::render(params, recs, rcfg),
         SweepId::Appendix => super::tables::render_appendix(params, recs, rcfg),
         SweepId::Lowrank => super::tables::render_lowrank(params, recs, rcfg),
+        SweepId::Budget => super::tables::render_budget(params, recs, rcfg),
         SweepId::All => {
             for part in SweepId::all_parts() {
                 render_sweep(part, params, recs, rcfg)?;
@@ -939,6 +950,12 @@ mod tests {
         let mut lr = a.clone();
         lr.lowrank_rank = 8;
         assert_eq!(a.derived_seed(), lr.derived_seed(), "±lowrank must share calibration");
+        let mut bg = a.clone();
+        bg.budget = Some(BudgetSpec {
+            budget: crate::quant::BitBudget::parse("2.5").unwrap(),
+            alloc: crate::quant::Alloc::Dp,
+        });
+        assert_eq!(a.derived_seed(), bg.derived_seed(), "±budget must share calibration");
         // Data identity and replicates must split streams.
         let mut c = a.clone();
         c.calib_flavor = Flavor::Wiki;
@@ -984,9 +1001,15 @@ mod tests {
     fn cell_labels_are_informative() {
         let cell = Cell::new(Size::TinyS, Method::Gptq, QuantConfig::int(3), true);
         assert_eq!(cell.label(), "tiny-s INT3 GPTQ +QEP");
-        let mut lr = cell;
+        let mut lr = cell.clone();
         lr.lowrank_rank = 4;
         assert_eq!(lr.label(), "tiny-s INT3 GPTQ +QEP +LR4");
+        let mut bg = cell;
+        bg.budget = Some(BudgetSpec {
+            budget: crate::quant::BitBudget::parse("2.5").unwrap(),
+            alloc: crate::quant::Alloc::Dp,
+        });
+        assert_eq!(bg.label(), "tiny-s INT3 GPTQ +QEP B2.5/dp");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use super::common::Cell;
 use crate::eval::TaskFamily;
 use crate::io::results::CellRecord;
 use crate::model::Size;
-use crate::quant::{Method, QuantConfig};
+use crate::quant::{Alloc, BitBudget, BudgetSpec, Method, QuantConfig};
 use crate::text::Flavor;
 use crate::util::cli::Args;
 use anyhow::{anyhow, bail, Result};
@@ -41,6 +41,7 @@ pub enum SweepId {
     Fig3,
     Appendix,
     Lowrank,
+    Budget,
     All,
 }
 
@@ -57,6 +58,7 @@ impl SweepId {
             SweepId::Fig3 => "fig3",
             SweepId::Appendix => "appendix",
             SweepId::Lowrank => "lowrank",
+            SweepId::Budget => "budget",
             SweepId::All => "all",
         }
     }
@@ -75,13 +77,14 @@ impl SweepId {
                 Some(SweepId::Appendix)
             }
             "lowrank" | "lqer" | "qera" => Some(SweepId::Lowrank),
+            "budget" | "mixed" | "mixed-precision" => Some(SweepId::Budget),
             "all" => Some(SweepId::All),
             _ => None,
         }
     }
 
     /// The concrete sweeps `all` expands to, in execution order.
-    pub fn all_parts() -> [SweepId; 7] {
+    pub fn all_parts() -> [SweepId; 8] {
         [
             SweepId::Table12,
             SweepId::Table3,
@@ -90,6 +93,7 @@ impl SweepId {
             SweepId::Fig3,
             SweepId::Appendix,
             SweepId::Lowrank,
+            SweepId::Budget,
         ]
     }
 
@@ -107,7 +111,7 @@ pub fn wants(sweep: SweepId) -> (Vec<Flavor>, Vec<TaskFamily>) {
     match sweep {
         SweepId::Table12 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
         SweepId::Appendix => (Flavor::all().to_vec(), TaskFamily::all().to_vec()),
-        SweepId::Table4 | SweepId::AblationAlpha | SweepId::Lowrank => {
+        SweepId::Table4 | SweepId::AblationAlpha | SweepId::Lowrank | SweepId::Budget => {
             (vec![Flavor::Wiki], vec![])
         }
         SweepId::Fig3 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
@@ -133,6 +137,32 @@ pub fn ablation_alphas() -> [f32; 5] {
 /// The methods of the low-rank reconstruction sweep (LQER/QERA family).
 pub fn lowrank_methods() -> [Method; 2] {
     [Method::Rtn, Method::Gptq]
+}
+
+/// The methods of the mixed-precision budget sweep.
+pub fn budget_methods() -> [Method; 2] {
+    [Method::Rtn, Method::Gptq]
+}
+
+/// The variant segment of an allocated budget cell ID: the allocator
+/// name, `+qep`-suffixed when QEP is on (`dp`, `dp+qep`, `greedy`, …).
+/// Uniform-floor baseline rows use the separate `budget/uni/...` ID form
+/// (see [`PlanCell::id`]), never a variant.
+pub fn budget_variant_name(alloc: Alloc, qep: bool) -> String {
+    if qep {
+        format!("{}+qep", alloc.name())
+    } else {
+        alloc.name().to_string()
+    }
+}
+
+/// Inverse of [`budget_variant_name`]: `(alloc, qep)`.
+fn parse_budget_variant(s: &str) -> Option<(Alloc, bool)> {
+    let (name, qep) = match s.strip_suffix("+qep") {
+        Some(n) => (n, true),
+        None => (s, false),
+    };
+    Alloc::from_name(name).map(|a| (a, qep))
 }
 
 /// The variant segment of a lowrank cell ID: `base`, `+qep`, `+lr{r}`,
@@ -189,6 +219,11 @@ pub struct PlanParams {
     /// — is always enumerated in addition, as the `base`/`+qep` rows).
     pub lowrank_ranks: Vec<usize>,
     pub lowrank_settings: Vec<QuantConfig>,
+    /// Average-bits budgets of the mixed-precision sweep. Uniform
+    /// `INT⌊B⌋` baselines are enumerated alongside (deduped across
+    /// budgets sharing a floor) so every budget row reads against a
+    /// same-calibration uniform reference.
+    pub budgets: Vec<BitBudget>,
 }
 
 impl PlanParams {
@@ -208,6 +243,11 @@ impl PlanParams {
             appendix_settings: QuantConfig::appendix_settings(),
             lowrank_ranks: vec![4, 16],
             lowrank_settings: vec![QuantConfig::int(3), QuantConfig::int(2)],
+            budgets: vec![
+                BitBudget::from_decibits(25),
+                BitBudget::from_decibits(30),
+                BitBudget::from_decibits(35),
+            ],
         }
     }
 
@@ -271,6 +311,24 @@ impl PlanParams {
         if fast {
             p.lowrank_ranks = vec![2];
             p.lowrank_settings = vec![QuantConfig::int(3)];
+            p.budgets = vec![BitBudget::from_decibits(25)];
+        }
+        if let Some(spec) = args.get("budgets") {
+            // Strict like --sizes/--ranks: every token must be a valid
+            // in-range budget, and duplicates are rejected (they would
+            // enumerate duplicate cell IDs).
+            let mut budgets = Vec::new();
+            for tok in spec.split(',') {
+                let b = BitBudget::parse(tok).ok_or_else(|| {
+                    anyhow!("--budgets expects averages like 2.5,3.0 (one decimal), got '{tok}'")
+                })?;
+                crate::quant::budget::check_feasible(b)?;
+                if budgets.contains(&b) {
+                    bail!("--budgets lists {} twice", b.render());
+                }
+                budgets.push(b);
+            }
+            p.budgets = budgets;
         }
         if let Some(spec) = args.get("ranks") {
             // Same strictness as --sizes: every token must be a positive
@@ -387,6 +445,26 @@ impl PlanCell {
                 variant_name(c.qep, c.lowrank_rank),
                 c.size.name()
             ),
+            // Allocated budget cells carry the budget in the ID (the cell
+            // stores it); uniform floor baselines are budget-free cells
+            // shared across every budget with the same ⌊B⌋, so their ID
+            // names the grid, not a budget.
+            (SweepId::Budget, CellTask::Quant(c)) => match c.budget {
+                Some(spec) => format!(
+                    "budget/{}/{}/{}/{}",
+                    spec.budget.render(),
+                    c.method.name(),
+                    budget_variant_name(spec.alloc, c.qep),
+                    c.size.name()
+                ),
+                None => format!(
+                    "budget/uni/{}/{}/{}/{}",
+                    c.quant.label(),
+                    c.method.name(),
+                    qep_str(c.qep),
+                    c.size.name()
+                ),
+            },
             (sweep, task) => unreachable!("no ID form for {sweep:?} / {task:?}"),
         }
     }
@@ -463,6 +541,32 @@ impl PlanCell {
                 );
                 cell.lowrank_rank = rank;
                 Some(PlanCell { sweep: SweepId::Lowrank, task: CellTask::Quant(cell) })
+            }
+            ["budget", "uni", q, m, e, s] => {
+                let cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::from_label(q)?,
+                    parse_qep(e)?,
+                );
+                Some(PlanCell { sweep: SweepId::Budget, task: CellTask::Quant(cell) })
+            }
+            ["budget", b, m, v, s] => {
+                // Strict budget syntax (`parse_strict`): "2.5" round-trips,
+                // "2.50"/"3" do not — `parse ∘ id` must stay the identity.
+                // Out-of-range budgets can never be manifest cells (the
+                // planner feasibility-checks them), so they don't parse.
+                let budget = BitBudget::parse_strict(b)?;
+                crate::quant::budget::check_feasible(budget).ok()?;
+                let (alloc, qep) = parse_budget_variant(v)?;
+                let mut cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::int(budget.floor_bits()),
+                    qep,
+                );
+                cell.budget = Some(BudgetSpec { budget, alloc });
+                Some(PlanCell { sweep: SweepId::Budget, task: CellTask::Quant(cell) })
             }
             _ => None,
         }
@@ -591,6 +695,45 @@ pub fn manifest(sweep: SweepId, params: &PlanParams) -> Result<Vec<PlanCell>> {
                                     task: CellTask::Quant(cell),
                                 });
                             }
+                        }
+                    }
+                }
+            }
+        }
+        SweepId::Budget => {
+            // Uniform ⌊B⌋ baselines first (deduped across budgets that
+            // share a floor — 3.0 and 3.5 both read against INT3), then
+            // the allocated cells, budget-major. The render pairs each
+            // budget with its floor baseline at lookup time.
+            let mut floors: Vec<u32> = Vec::new();
+            for b in &params.budgets {
+                let f = b.floor_bits();
+                if !floors.contains(&f) {
+                    floors.push(f);
+                }
+            }
+            for &f in &floors {
+                for m in budget_methods() {
+                    for qep in [false, true] {
+                        for &s in &params.sizes {
+                            cells.push(PlanCell {
+                                sweep: SweepId::Budget,
+                                task: CellTask::Quant(Cell::new(s, m, QuantConfig::int(f), qep)),
+                            });
+                        }
+                    }
+                }
+            }
+            for &b in &params.budgets {
+                for m in budget_methods() {
+                    for qep in [false, true] {
+                        for &s in &params.sizes {
+                            let mut cell = Cell::new(s, m, QuantConfig::int(b.floor_bits()), qep);
+                            cell.budget = Some(BudgetSpec { budget: b, alloc: Alloc::Dp });
+                            cells.push(PlanCell {
+                                sweep: SweepId::Budget,
+                                task: CellTask::Quant(cell),
+                            });
                         }
                     }
                 }

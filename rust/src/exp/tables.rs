@@ -19,7 +19,7 @@ use super::common::{self, persist_to, run_jobs, Cell, ExpData, ExpEnv, RenderCfg
 use super::plan::{self, CellTask, PlanCell, PlanParams, RecordMap, SweepId};
 use crate::eval::{perplexity, TaskFamily};
 use crate::model::Size;
-use crate::quant::{Method, QuantConfig};
+use crate::quant::{Alloc, BudgetSpec, Method, QuantConfig};
 use crate::text::Flavor;
 use crate::util::pool::Pool;
 use crate::util::stats;
@@ -475,6 +475,59 @@ pub fn render_lowrank(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -
     }
     println!("{}", t.render());
     persist_to(&rcfg.results_dir, "lowrank", &t)
+}
+
+/// Render the mixed-precision budget sweep from records: wiki PPL for
+/// `budgets × methods × ±QEP`, each allocated (DP) row next to the
+/// uniform `INT⌊B⌋` baseline at the same calibration stream. The
+/// allocated config elementwise-dominates its uniform floor (every
+/// layer gets ≥ ⌊B⌋ bits), so its PPL column should read ≤ the `uni`
+/// row above it — the table makes that check visual.
+pub fn render_budget(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
+    let mut hdr = vec!["Budget".to_string(), "Method".to_string(), "Variant".to_string()];
+    hdr.extend(params.sizes.iter().map(|s| s.name().to_string()));
+    let mut t = Table::new(
+        "Mixed-precision budgets: wiki PPL, uniform ⌊B⌋ baseline vs DP allocation",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (bi, &b) in params.budgets.iter().enumerate() {
+        if bi > 0 {
+            t.rule();
+        }
+        let floor = QuantConfig::int(b.floor_bits());
+        for m in plan::budget_methods() {
+            for qep in [false, true] {
+                let qep_suffix = if qep { " +qep" } else { "" };
+                // Uniform floor baseline (shared across budgets with the
+                // same ⌊B⌋ — same record, re-read per budget group).
+                let mut row =
+                    vec![b.render(), m.name().to_string(), format!("uni {}{qep_suffix}", floor.label())];
+                for &s in &params.sizes {
+                    let pc = PlanCell {
+                        sweep: SweepId::Budget,
+                        task: CellTask::Quant(Cell::new(s, m, floor, qep)),
+                    };
+                    row.push(fmt_ppl(recs.get(&pc)?.ppl_for("wiki")));
+                }
+                t.row(row);
+                // The allocated cell at the full budget.
+                let mut row = vec![
+                    b.render(),
+                    m.name().to_string(),
+                    plan::budget_variant_name(Alloc::Dp, qep),
+                ];
+                for &s in &params.sizes {
+                    let mut cell = Cell::new(s, m, floor, qep);
+                    cell.budget = Some(BudgetSpec { budget: b, alloc: Alloc::Dp });
+                    let pc = PlanCell { sweep: SweepId::Budget, task: CellTask::Quant(cell) };
+                    row.push(fmt_ppl(recs.get(&pc)?.ppl_for("wiki")));
+                }
+                t.row(row);
+            }
+        }
+    }
+    println!("{}", t.render());
+    persist_to(&rcfg.results_dir, "budget", &t)
 }
 
 /// Table 1 (+ Fig. 1 data) and Table 2: single-process convenience

@@ -45,7 +45,7 @@ fn main() {
 const GEN_DATA_FLAGS: &[&str] = &["threads", "out", "tokens"];
 const QUANTIZE_FLAGS: &[&str] = &[
     "threads", "model", "method", "bits", "group", "qep", "calib", "seed", "out", "artifacts",
-    "verbose", "lowrank-rank",
+    "verbose", "lowrank-rank", "bit-budget", "alloc",
 ];
 const EVAL_FLAGS: &[&str] = &["threads", "model-file", "flavor", "tasks", "chunk", "artifacts"];
 /// `repro exp <id>` (run / shard-run). Plan flags + execution flags.
@@ -62,6 +62,7 @@ const EXP_RUN_FLAGS: &[&str] = &[
     "blocks",
     "seeds",
     "ranks",
+    "budgets",
     "shard",
     "out",
     "results",
@@ -70,13 +71,13 @@ const EXP_RUN_FLAGS: &[&str] = &[
 ];
 /// `repro exp plan <id>`: plan flags only (nothing runs or renders).
 const EXP_PLAN_FLAGS: &[&str] =
-    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard"];
+    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "budgets", "shard"];
 /// `repro exp status <id>`: plan flags + the record directory (+ an
 /// optional shard slice to report on). `--connect` instead asks a live
 /// fleet coordinator; `--watch` re-polls either source until done.
 const EXP_STATUS_FLAGS: &[&str] = &[
-    "threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "shard", "out", "connect",
-    "watch",
+    "threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "budgets", "shard", "out",
+    "connect", "watch",
 ];
 /// `repro exp serve <id>`: the fleet coordinator — run flags minus
 /// `--shard` (the fleet assigns cells dynamically) plus the listen
@@ -90,6 +91,7 @@ const EXP_SERVE_FLAGS: &[&str] = &[
     "blocks",
     "seeds",
     "ranks",
+    "budgets",
     "out",
     "results",
     "stable-timings",
@@ -113,6 +115,7 @@ const EXP_MERGE_FLAGS: &[&str] = &[
     "blocks",
     "seeds",
     "ranks",
+    "budgets",
     "out",
     "results",
     "stable-timings",
@@ -170,11 +173,13 @@ repro — Quantization Error Propagation (QEP) reproduction
 USAGE:
   repro gen-data [--out artifacts/data] [--tokens 262144]
   repro quantize --model <tiny-s|tiny-m|tiny-l|path.qtz> --method <rtn|gptq|awq|quip>
-                 --bits <2|3|4|8> [--group N] [--qep <alpha>] [--lowrank-rank R]
+                 [--bits <2|3|4|8> | --bit-budget B [--alloc dp|greedy]] [--group N]
+                 [--qep <alpha>] [--lowrank-rank R]
                  [--calib <wiki|ptb|c4>] [--seed N] [--threads N] [--out out.qtz]
   repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks] [--chunk N]
-  repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|lowrank|all>
-                 [--sizes s,m,l] [--fast] [--ranks 4,16] [--artifacts DIR]
+  repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|lowrank|budget|all>
+                 [--sizes s,m,l] [--fast] [--ranks 4,16] [--budgets 2.5,3.0,3.5]
+                 [--artifacts DIR]
                  [--results DIR] [--shard i/N] [--out DIR] [--resume]
                  [--stable-timings]
   repro exp plan  <id> [--fast] [--sizes ...] [--shard i/N]
@@ -209,6 +214,37 @@ LOW-RANK RECONSTRUCTION (LQER/QERA family):
   --ranks a,b,... (exp lowrank) Non-zero adjunct ranks the sweep
                   enumerates next to its rank-0 base/+qep reference
                   rows (default 4,16; --fast: 2).
+
+BUDGET (Hessian-guided mixed-precision bit allocation):
+  --bit-budget B  (quantize) Instead of one uniform --bits width, give
+                  the model a global *average* bits-per-weight budget
+                  (e.g. 2.5) and let a sensitivity-guided allocator
+                  assign each layer its own width. A calibration
+                  pre-pass scores every layer's quantization error at
+                  the candidate widths, weighted by its Hessian
+                  diagonal diag(XᵀX); every layer gets at least ⌊B⌋
+                  bits and the fractional surplus buys one-bit
+                  upgrades for the most sensitive layers, so the
+                  allocated model dominates the uniform ⌊B⌋ grid
+                  layer-by-layer. Feasible range: 2.0–8.0 (the INT2..
+                  INT8 grids). Mutually exclusive with --bits. The
+                  allocation (budget, allocator, per-layer bit map) is
+                  stored in the .qtz meta; `repro eval` and serving
+                  materialize the same per-layer grids. Composes with
+                  --qep and --lowrank-rank.
+  --alloc dp|greedy  (quantize, with --bit-budget) Allocator choice:
+                  'dp' (default) is an exact knapsack over upgrade
+                  units; 'greedy' upgrades by best marginal gain per
+                  weight. Both are deterministic (ties break to the
+                  lowest layer index) and bit-identical across
+                  --threads values; they agree whenever all layers
+                  hold the same number of weights.
+  --budgets a,b,... (exp budget) Budgets the mixed-precision sweep
+                  enumerates (default 2.5,3.0,3.5; --fast: 2.5), each
+                  as DP-allocated cells next to a uniform INT⌊B⌋
+                  baseline sharing the same calibration stream — the
+                  rendered table reads allocated vs uniform PPL at the
+                  same budget.
 
 SHARDING (distributed experiment sweeps):
   Every `exp` sweep first enumerates a stable, ordered manifest of cell
@@ -380,6 +416,40 @@ fn quantize(args: &Args) -> Result<()> {
     let model = load_model(args, "model")?;
     let method = Method::from_name(args.get_or("method", "rtn"))
         .ok_or_else(|| anyhow!("unknown method"))?;
+    // --bits and --bit-budget are mutually exclusive by design: a budget
+    // allocates every layer's width itself, so an explicit uniform width
+    // next to it can only be a contradiction — error loudly instead of
+    // silently ignoring one of them.
+    let bit_budget = match args.get("bit-budget") {
+        None => None,
+        Some(v) => {
+            if args.get("bits").is_some() {
+                bail!(
+                    "--bits and --bit-budget are mutually exclusive: a bit budget assigns \
+                     per-layer widths itself (drop --bits, or drop --bit-budget for a \
+                     uniform grid)"
+                );
+            }
+            let b = qep::quant::BitBudget::parse(v).ok_or_else(|| {
+                anyhow!(
+                    "--bit-budget expects an average bits-per-weight like 2.5 or 3 \
+                     (at most one decimal), got '{v}'"
+                )
+            })?;
+            qep::quant::budget::check_feasible(b)?;
+            Some(b)
+        }
+    };
+    let alloc = match args.get("alloc") {
+        None => qep::quant::Alloc::default(),
+        Some(v) => {
+            if bit_budget.is_none() {
+                bail!("--alloc only applies with --bit-budget");
+            }
+            qep::quant::Alloc::from_name(v)
+                .ok_or_else(|| anyhow!("--alloc expects 'dp' or 'greedy', got '{v}'"))?
+        }
+    };
     let bits = args.get_usize("bits", 4) as u32;
     let quant = match args.get("group") {
         Some(g) => QuantConfig::int_group(bits, g.parse()?),
@@ -407,21 +477,32 @@ fn quantize(args: &Args) -> Result<()> {
         lowrank_rank,
         seed,
         verbose: args.has("verbose"),
+        bit_budget: bit_budget.map(|budget| qep::quant::BudgetSpec { budget, alloc }),
         ..Default::default()
     };
     println!("quantizing {} with {}", model.cfg.name, cfg.label());
     let out = Pipeline::new(cfg).run(&model, &calib)?;
     println!("{}", out.report.summary());
+    if let Some(a) = &out.allocation {
+        println!("{}", a.summary());
+    }
     if let Some(path) = args.get("out") {
-        if out.adjuncts.is_empty() {
-            out.model.save(path)?;
+        // The allocation (budget, allocator, per-layer bit map) rides in
+        // the .qtz meta so eval and serving materialize the same
+        // per-layer grids this run quantized on.
+        let mut tf = if out.adjuncts.is_empty() {
+            out.model.to_tensor_file()
         } else {
             // Store the on-grid base weights plus the factored adjuncts
             // (not the effective sum): serving re-packs the base weights
             // losslessly and applies U·(V·x) after the quantized GEMM.
             let base = out.base_model.as_ref().expect("adjuncts imply a base model");
-            qep::qep::save_with_adjuncts(path, base, &out.adjuncts, lowrank_rank)?;
+            qep::qep::to_tensor_file_with_adjuncts(base, &out.adjuncts, lowrank_rank)
+        };
+        if let Some(a) = &out.allocation {
+            qep::quant::budget::write_allocation_meta(&mut tf.meta, a);
         }
+        tf.save(path)?;
         println!("saved {path}");
     }
     let eval_tokens = env.eval_tokens(Flavor::Wiki);
@@ -432,12 +513,16 @@ fn quantize(args: &Args) -> Result<()> {
 fn eval(args: &Args) -> Result<()> {
     // Low-rank adjunct sections, if present, are folded into the dense
     // weights here: eval measures the effective model.
-    let (mut model, adjuncts) = qep::qep::load_with_adjuncts(
-        args.get("model-file").ok_or_else(|| anyhow!("--model-file required"))?,
-    )?;
+    let mf = args.get("model-file").ok_or_else(|| anyhow!("--model-file required"))?;
+    let tf = qep::io::TensorFile::load(mf).with_context(|| format!("loading model {mf}"))?;
+    let mut model = Model::from_tensor_file(&tf)?;
+    let adjuncts = qep::qep::adjuncts_from_tensor_file(&tf)?;
     if !adjuncts.is_empty() {
         qep::qep::materialize_into_model(&mut model, &adjuncts)?;
         println!("applied {} low-rank adjunct(s)", adjuncts.len());
+    }
+    if let Some(a) = qep::quant::budget::read_allocation_meta(&tf.meta) {
+        println!("mixed-precision: {}", a.summary());
     }
     let flavor = Flavor::from_name(args.get_or("flavor", "wiki"))
         .ok_or_else(|| anyhow!("unknown flavor"))?;
@@ -469,11 +554,16 @@ fn serve_bench(args: &Args) -> Result<()> {
     use qep::util::Stopwatch;
 
     let spec = args.get_or("model", "tiny-s");
-    let model = if let Some(size) = Size::from_name(spec) {
+    // A .qtz written by `quantize --bit-budget` carries its per-layer bit
+    // allocation in the meta; serving honors it so the packed engine runs
+    // the exact grids the pipeline allocated.
+    let (model, allocation) = if let Some(size) = Size::from_name(spec) {
         let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
-        env.model(size)
+        (env.model(size), None)
     } else {
-        Model::load(spec)?
+        let tf = qep::io::TensorFile::load(spec).with_context(|| format!("loading model {spec}"))?;
+        let alloc = qep::quant::budget::read_allocation_meta(&tf.meta);
+        (Model::from_tensor_file(&tf)?, alloc)
     };
     let sessions = args.get_usize("sessions", 4).max(1);
     let gen = args.get_usize("gen", 32).max(1);
@@ -516,7 +606,17 @@ fn serve_bench(args: &Args) -> Result<()> {
         model.cfg.name, model.cfg.dim, model.cfg.n_layers, model.cfg.seq_len, sessions, prompt_len
     );
     let f32_tok_s = run(ServeModel::from_model(&model), "dense f32")?;
-    let q_tok_s = run(ServeModel::quantized(&model, &qcfg), &format!("int{bits}g{group}"))?;
+    let (qm, qlabel) = match &allocation {
+        Some(a) => {
+            println!("serving per-layer grids: {}", a.summary());
+            (
+                ServeModel::quantized_per_layer(&model, &qcfg, &a.bits),
+                format!("mixed B{}g{group}", a.budget.render()),
+            )
+        }
+        None => (ServeModel::quantized(&model, &qcfg), format!("int{bits}g{group}")),
+    };
+    let q_tok_s = run(qm, &qlabel)?;
     println!("speedup (quantized vs f32): {:.2}×", q_tok_s / f32_tok_s.max(1e-9));
     Ok(())
 }
@@ -526,7 +626,7 @@ fn sweep_from(args: &Args, pos: usize) -> Result<(SweepId, PlanParams)> {
     let name = args.positional.get(pos).ok_or_else(|| {
         anyhow!(
             "missing experiment id (fig1..fig3, table1..table10, ablation-alpha, appendix, \
-             lowrank, all)"
+             lowrank, budget, all)"
         )
     })?;
     let sweep = SweepId::from_name(name)

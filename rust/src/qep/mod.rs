@@ -25,6 +25,6 @@ pub use correction::{
     CorrectionStats,
 };
 pub use lowrank::{
-    adjunct_from_residual, load_with_adjuncts, materialize_into_model, save_with_adjuncts,
-    LowRankAdjunct,
+    adjunct_from_residual, adjuncts_from_tensor_file, load_with_adjuncts,
+    materialize_into_model, save_with_adjuncts, to_tensor_file_with_adjuncts, LowRankAdjunct,
 };

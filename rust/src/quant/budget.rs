@@ -1,0 +1,579 @@
+//! Hessian-guided mixed-precision bit allocation (ROADMAP item 3).
+//!
+//! All layers getting the same width wastes budget: QEP's own analysis
+//! shows layers differ sharply in how much quantization error they inject
+//! downstream. This module scores each quantizable linear with a
+//! trace-weighted proxy — the diagonal of its calibration Hessian
+//! `diag(XᵀX)` times the squared RTN snap error at each candidate width —
+//! and then assigns per-layer bit widths under a global
+//! average-bits-per-weight budget.
+//!
+//! Determinism contract: scoring iterates rows/groups/columns in fixed
+//! order with serial f64 accumulation, and both allocators are pure
+//! serial functions of the cost table with documented tie-breaks (ties go
+//! to the lowest layer index), so a given model + calibration stream maps
+//! to exactly one allocation regardless of thread count, shard split, or
+//! allocator invocation site.
+//!
+//! Budget semantics: the budget is a *ceiling* on average bits per
+//! weight. Every layer is guaranteed at least `⌊B⌋` bits (the uniform
+//! floor), and the fractional surplus `(B − ⌊B⌋)·Σ nₗ` is distributed as
+//! whole-bit upgrades. An integral budget (e.g. 3.0) therefore reduces to
+//! exactly the uniform grid, and any fractional budget elementwise
+//! dominates the uniform-floor baseline.
+
+use crate::linalg::Mat;
+use crate::quant::grid::{GroupGrid, QuantConfig};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Narrowest / widest grid the allocator will assign (INT2..INT8 — the
+/// same range the paper's grids span).
+pub const MIN_BITS: u32 = 2;
+pub const MAX_BITS: u32 = 8;
+
+/// `.qtz` meta key holding the budget as its canonical string ("2.5").
+pub const BUDGET_META_KEY: &str = "bit_budget";
+/// `.qtz` meta key holding the allocator name ("dp" / "greedy").
+pub const BUDGET_ALLOC_META_KEY: &str = "bit_alloc";
+/// `.qtz` meta key holding the achieved average bits per weight.
+pub const BUDGET_AVG_META_KEY: &str = "bit_alloc_avg_bits";
+/// `.qtz` meta key holding the per-layer bit map (object: name → bits).
+pub const LAYER_BITS_META_KEY: &str = "layer_bits";
+
+/// A global average-bits-per-weight budget, stored in tenths of a bit
+/// ("deci-bits") so capacity arithmetic and cell IDs stay exactly
+/// integral: `BitBudget(25)` is 2.5 average bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BitBudget(u32);
+
+impl BitBudget {
+    pub fn from_decibits(d: u32) -> BitBudget {
+        BitBudget(d)
+    }
+
+    pub fn decibits(self) -> u32 {
+        self.0
+    }
+
+    pub fn avg_bits(self) -> f64 {
+        self.0 as f64 / 10.0
+    }
+
+    /// The uniform floor: every layer gets at least this many bits.
+    pub fn floor_bits(self) -> u32 {
+        self.0 / 10
+    }
+
+    /// Deci-bits of surplus above the uniform floor (0..=9).
+    pub fn frac_decibits(self) -> u32 {
+        self.0 % 10
+    }
+
+    /// Canonical rendering with exactly one decimal: "2.5", "3.0".
+    pub fn render(self) -> String {
+        format!("{}.{}", self.0 / 10, self.0 % 10)
+    }
+
+    /// Parse "3" or "3.5" (one fractional digit, no leading zeros). The
+    /// integer shorthand canonicalizes: `parse("3").render() == "3.0"`.
+    pub fn parse(s: &str) -> Option<BitBudget> {
+        let (int, frac) = match s.split_once('.') {
+            Some((i, f)) => (i, f),
+            None => (s, "0"),
+        };
+        let digits = |t: &str| !t.is_empty() && t.bytes().all(|b| b.is_ascii_digit());
+        if !digits(int) || !digits(frac) || int.len() > 2 || frac.len() != 1 {
+            return None;
+        }
+        if int.len() > 1 && int.starts_with('0') {
+            return None;
+        }
+        Some(BitBudget(int.parse::<u32>().ok()? * 10 + frac.parse::<u32>().ok()?))
+    }
+
+    /// Strict variant for plan-cell IDs: only the canonical "d.d" form
+    /// parses, so parse∘render is the identity.
+    pub fn parse_strict(s: &str) -> Option<BitBudget> {
+        BitBudget::parse(s).filter(|b| b.render() == s)
+    }
+}
+
+/// Which allocator assigns the surplus bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Alloc {
+    /// Repeatedly upgrade the layer with the best marginal error
+    /// reduction per upgraded weight. Optimal when all layers hold the
+    /// same number of weights; a cheap approximation otherwise.
+    Greedy,
+    /// Exact knapsack over upgrade units (weight counts divided by their
+    /// gcd), minimizing total proxy error under the budget.
+    #[default]
+    Dp,
+}
+
+impl Alloc {
+    pub fn name(self) -> &'static str {
+        match self {
+            Alloc::Greedy => "greedy",
+            Alloc::Dp => "dp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Alloc> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Some(Alloc::Greedy),
+            "dp" => Some(Alloc::Dp),
+            _ => None,
+        }
+    }
+}
+
+/// Budget + allocator choice, as carried by `PipelineConfig.bit_budget`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BudgetSpec {
+    pub budget: BitBudget,
+    pub alloc: Alloc,
+}
+
+/// One layer's scoring table: `err[k]` is the proxy error when the layer
+/// is quantized at `floor + k` bits (k = 0 is the uniform floor). The
+/// curve is convex in practice — marginal gains shrink with each bit.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    /// Number of weights nₗ (rows × cols) — the cost of a one-bit upgrade.
+    pub weights: usize,
+    pub err: Vec<f64>,
+}
+
+/// Score one linear: Hessian-diagonal-weighted squared RTN snap error at
+/// each candidate width `floor..=max_bits`. `diag[j]` is the j-th
+/// diagonal of the layer's calibration Hessian `XᵀX` (column sums of
+/// squared activations); the proxy is `Σⱼ diag[j] · Σᵢ (W[i,j] −
+/// snap_b(W)[i,j])²` — the layer-wise objective `‖(W−Ŵ)X‖²` with the
+/// off-diagonal Hessian terms dropped. RTN snapping makes the score
+/// method-independent: it ranks layers, not quantizers.
+pub fn layer_cost(
+    name: &str,
+    w: &Mat,
+    diag: &[f64],
+    base: &QuantConfig,
+    floor_bits: u32,
+    max_bits: u32,
+) -> LayerCost {
+    assert_eq!(diag.len(), w.cols, "diag(XᵀX) length must match layer columns");
+    let mut err = Vec::with_capacity((max_bits - floor_bits + 1) as usize);
+    for bits in floor_bits..=max_bits {
+        let cfg = QuantConfig { bits, group: base.group };
+        let glen = cfg.group_len(w.cols);
+        let ngroups = w.cols.div_ceil(glen);
+        let mut e = 0.0f64;
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for gi in 0..ngroups {
+                let c0 = gi * glen;
+                let c1 = (c0 + glen).min(w.cols);
+                let grid = GroupGrid::fit(&row[c0..c1], bits);
+                for c in c0..c1 {
+                    let d = (grid.snap(row[c]) - row[c]) as f64;
+                    e += diag[c] * d * d;
+                }
+            }
+        }
+        err.push(e);
+    }
+    LayerCost { name: name.to_string(), weights: w.rows * w.cols, err }
+}
+
+/// The result of an allocation: per-layer bit widths plus bookkeeping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    pub budget: BitBudget,
+    pub alloc: Alloc,
+    /// Canonical layer name (`blocks.{i}.{short}`) → assigned bits.
+    pub bits: BTreeMap<String, u32>,
+    /// Achieved average bits per weight (≤ the budget by construction).
+    pub avg_bits: f64,
+}
+
+impl Allocation {
+    pub fn bits_for(&self, name: &str) -> Option<u32> {
+        self.bits.get(name).copied()
+    }
+
+    /// Human summary, e.g. "budget 2.5 (dp), avg 2.50: 7×INT2 + 7×INT3".
+    pub fn summary(&self) -> String {
+        let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
+        for &b in self.bits.values() {
+            *counts.entry(b).or_insert(0) += 1;
+        }
+        let mix = counts
+            .iter()
+            .map(|(b, n)| format!("{n}×INT{b}"))
+            .collect::<Vec<_>>()
+            .join(" + ");
+        format!(
+            "budget {} ({}), avg {:.2}: {}",
+            self.budget.render(),
+            self.alloc.name(),
+            self.avg_bits,
+            mix
+        )
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Error for a budget outside the representable grid range.
+fn infeasible(budget: BitBudget) -> anyhow::Error {
+    anyhow!(
+        "bit budget {} is infeasible: the feasible range is [{}.0, {}.0] average bits per weight \
+         (grids span INT{MIN_BITS}..INT{MAX_BITS})",
+        budget.render(),
+        MIN_BITS,
+        MAX_BITS
+    )
+}
+
+/// Cheap feasibility gate (run it before any expensive scoring pre-pass):
+/// the budget must lie in `[MIN_BITS, MAX_BITS]` average bits per weight.
+pub fn check_feasible(budget: BitBudget) -> Result<()> {
+    let d = budget.decibits();
+    if d < MIN_BITS * 10 || d > MAX_BITS * 10 {
+        return Err(infeasible(budget));
+    }
+    Ok(())
+}
+
+/// Assign per-layer bit widths under `budget` average bits per weight.
+///
+/// Every layer receives at least `⌊budget⌋` bits; the fractional surplus
+/// is spent as whole-bit upgrades (layer ℓ may climb as far as
+/// `⌊budget⌋ + len(errₗ) − 1` bits). Ties break toward the lowest layer
+/// index — the computation is serial and bit-identical everywhere.
+pub fn allocate(costs: &[LayerCost], budget: BitBudget, alloc: Alloc) -> Result<Allocation> {
+    check_feasible(budget)?;
+    if costs.is_empty() {
+        return Err(anyhow!("bit budget allocation needs at least one layer"));
+    }
+    for c in costs {
+        if c.weights == 0 || c.err.is_empty() {
+            return Err(anyhow!("layer '{}' has no weights or no cost curve", c.name));
+        }
+    }
+    let floor = budget.floor_bits();
+    let n = costs.len();
+    // Capacity in units of gcd(nₗ)/10 bit-weights: one-bit upgrades cost
+    // 10·nₗ/g units, the surplus is frac·Σnₗ/g units — all exactly integral.
+    let g = costs.iter().fold(0usize, |acc, c| gcd(acc, c.weights));
+    let total: usize = costs.iter().map(|c| c.weights).sum();
+    let capacity = budget.frac_decibits() as usize * (total / g);
+    let step: Vec<usize> = costs.iter().map(|c| 10 * (c.weights / g)).collect();
+    let max_ups: Vec<usize> = costs
+        .iter()
+        .map(|c| (c.err.len() - 1).min((MAX_BITS - floor) as usize))
+        .collect();
+
+    let ups = match alloc {
+        Alloc::Greedy => greedy(costs, &step, &max_ups, capacity),
+        Alloc::Dp => dp(costs, &step, &max_ups, capacity),
+    };
+
+    let mut bits = BTreeMap::new();
+    let mut spent_bits = 0usize;
+    for (i, c) in costs.iter().enumerate() {
+        let b = floor + ups[i] as u32;
+        spent_bits += b as usize * c.weights;
+        bits.insert(c.name.clone(), b);
+    }
+    Ok(Allocation {
+        budget,
+        alloc,
+        bits,
+        avg_bits: spent_bits as f64 / total as f64,
+    })
+}
+
+/// Greedy marginal-gain allocator: repeatedly upgrade the layer whose
+/// next bit buys the largest proxy-error reduction per upgraded weight.
+/// Zero-gain upgrades are skipped (bits stay minimal); ties on the rate
+/// keep the lowest layer index.
+fn greedy(costs: &[LayerCost], step: &[usize], max_ups: &[usize], capacity: usize) -> Vec<usize> {
+    let mut ups = vec![0usize; costs.len()];
+    let mut cap = capacity;
+    loop {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, c) in costs.iter().enumerate() {
+            let k = ups[i];
+            if k >= max_ups[i] || step[i] > cap {
+                continue;
+            }
+            let gain = c.err[k] - c.err[k + 1];
+            if gain <= 0.0 {
+                continue;
+            }
+            let rate = gain / step[i] as f64;
+            if best.is_none_or(|(r, _)| rate > r) {
+                best = Some((rate, i));
+            }
+        }
+        match best {
+            Some((_, i)) => {
+                ups[i] += 1;
+                cap -= step[i];
+            }
+            None => break,
+        }
+    }
+    ups
+}
+
+/// Exact allocator: minimize total proxy error subject to the upgrade
+/// capacity — a bounded knapsack solved by dynamic programming over
+/// layers × remaining capacity. The table is built backward and
+/// reconstructed forward preferring the *largest* upgrade count on exact
+/// value ties, which routes tied upgrades to the lowest layer index
+/// (matching the greedy tie-break).
+fn dp(costs: &[LayerCost], step: &[usize], max_ups: &[usize], capacity: usize) -> Vec<usize> {
+    let n = costs.len();
+    let w = capacity + 1;
+    // dp[i][c] = min Σ err over layers i..n with c capacity units left.
+    let mut table = vec![0.0f64; (n + 1) * w];
+    for i in (0..n).rev() {
+        for c in 0..w {
+            let mut best = f64::INFINITY;
+            for k in 0..=max_ups[i] {
+                let kc = k * step[i];
+                if kc > c {
+                    break;
+                }
+                let v = costs[i].err[k] + table[(i + 1) * w + (c - kc)];
+                if v < best {
+                    best = v;
+                }
+            }
+            table[i * w + c] = best;
+        }
+    }
+    let mut ups = vec![0usize; n];
+    let mut cap = capacity;
+    for i in 0..n {
+        let target = table[i * w + cap];
+        let mut chosen = 0usize;
+        for k in 0..=max_ups[i] {
+            let kc = k * step[i];
+            if kc > cap {
+                break;
+            }
+            if costs[i].err[k] + table[(i + 1) * w + (cap - kc)] == target {
+                chosen = k;
+            }
+        }
+        ups[i] = chosen;
+        cap -= chosen * step[i];
+    }
+    ups
+}
+
+/// Record an allocation in `.qtz` meta. Old readers ignore the extra
+/// keys; `read_allocation_meta` restores it byte-identically (BTreeMap
+/// ordering makes the serialized header deterministic).
+pub fn write_allocation_meta(meta: &mut Json, alloc: &Allocation) {
+    meta.set(BUDGET_META_KEY, Json::Str(alloc.budget.render()))
+        .set(BUDGET_ALLOC_META_KEY, Json::Str(alloc.alloc.name().to_string()))
+        .set(BUDGET_AVG_META_KEY, Json::Num(alloc.avg_bits));
+    let mut layers = Json::obj();
+    for (name, &bits) in &alloc.bits {
+        layers.set(name, Json::Num(bits as f64));
+    }
+    meta.set(LAYER_BITS_META_KEY, layers);
+}
+
+/// Read an allocation back from `.qtz` meta; `None` when the artifact
+/// was produced without a bit budget.
+pub fn read_allocation_meta(meta: &Json) -> Option<Allocation> {
+    let budget = BitBudget::parse_strict(meta.get(BUDGET_META_KEY)?.as_str()?)?;
+    let alloc = Alloc::from_name(meta.get(BUDGET_ALLOC_META_KEY)?.as_str()?)?;
+    let avg_bits = meta.get(BUDGET_AVG_META_KEY)?.as_f64()?;
+    let mut bits = BTreeMap::new();
+    match meta.get(LAYER_BITS_META_KEY)? {
+        Json::Obj(m) => {
+            for (name, v) in m {
+                bits.insert(name.clone(), v.as_f64()? as u32);
+            }
+        }
+        _ => return None,
+    }
+    Some(Allocation { budget, alloc, bits, avg_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cost(name: &str, weights: usize, err: &[f64]) -> LayerCost {
+        LayerCost { name: name.to_string(), weights, err: err.to_vec() }
+    }
+
+    #[test]
+    fn budget_parse_render_identity() {
+        for (s, d) in [("2.5", 25), ("3.0", 30), ("3.5", 35), ("8.0", 80)] {
+            let b = BitBudget::parse_strict(s).unwrap();
+            assert_eq!(b.decibits(), d);
+            assert_eq!(b.render(), s);
+        }
+        // Integer shorthand canonicalizes (CLI convenience) …
+        assert_eq!(BitBudget::parse("3").unwrap().render(), "3.0");
+        // … but the strict form used by plan IDs rejects it.
+        for bad in ["3", "03.0", "3.", ".5", "3.50", "2,5", "", "x.y", "3.0x"] {
+            assert_eq!(BitBudget::parse_strict(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn integral_budget_is_uniform_floor() {
+        let costs = [cost("a", 64, &[4.0, 1.0, 0.5]), cost("b", 64, &[9.0, 2.0, 1.0])];
+        for alloc in [Alloc::Greedy, Alloc::Dp] {
+            let a = allocate(&costs, BitBudget::from_decibits(30), alloc).unwrap();
+            assert!(a.bits.values().all(|&b| b == 3), "{a:?}");
+            assert_eq!(a.avg_bits, 3.0);
+        }
+    }
+
+    #[test]
+    fn surplus_goes_to_the_most_sensitive_layer() {
+        // Layer b's first upgrade gains 7, layer a's gains 3: with surplus
+        // for exactly one upgrade, b gets it.
+        let costs = [cost("a", 64, &[4.0, 1.0]), cost("b", 64, &[9.0, 2.0])];
+        for alloc in [Alloc::Greedy, Alloc::Dp] {
+            let a = allocate(&costs, BitBudget::from_decibits(35), alloc).unwrap();
+            assert_eq!(a.bits["a"], 3, "{alloc:?}");
+            assert_eq!(a.bits["b"], 4, "{alloc:?}");
+            assert_eq!(a.avg_bits, 3.5);
+        }
+    }
+
+    #[test]
+    fn ties_break_to_the_lowest_layer_index() {
+        let costs = [cost("a", 64, &[4.0, 1.0]), cost("b", 64, &[4.0, 1.0])];
+        for alloc in [Alloc::Greedy, Alloc::Dp] {
+            let a = allocate(&costs, BitBudget::from_decibits(25), alloc).unwrap();
+            assert_eq!(a.bits["a"], 3, "{alloc:?}");
+            assert_eq!(a.bits["b"], 2, "{alloc:?}");
+        }
+    }
+
+    #[test]
+    fn unequal_layer_sizes_stay_exactly_on_budget() {
+        // 256 + 512 weights, budget 2.5 ⇒ surplus 384 bit-weights: only
+        // the 256-weight layer fits (upgrading the 512 one would cost 512).
+        let costs = [cost("small", 256, &[1.0, 0.9]), cost("big", 512, &[100.0, 1.0])];
+        let a = allocate(&costs, BitBudget::from_decibits(25), Alloc::Dp).unwrap();
+        assert_eq!(a.bits["small"], 3);
+        assert_eq!(a.bits["big"], 2);
+        assert!(a.avg_bits <= 2.5);
+    }
+
+    #[test]
+    fn infeasible_budgets_name_the_range() {
+        let costs = [cost("a", 64, &[4.0, 1.0])];
+        for d in [15, 19, 81, 90] {
+            let e = allocate(&costs, BitBudget::from_decibits(d), Alloc::Dp).unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains("feasible range"), "{msg}");
+            assert!(msg.contains("[2.0, 8.0]"), "{msg}");
+        }
+        assert!(allocate(&[], BitBudget::from_decibits(30), Alloc::Dp).is_err());
+    }
+
+    #[test]
+    fn single_layer_cannot_split_a_fraction() {
+        // One layer can't average 2.5 bits with integral widths: it stays
+        // at the floor and the surplus goes unspent (budget is a ceiling).
+        let costs = [cost("only", 128, &[4.0, 1.0])];
+        for alloc in [Alloc::Greedy, Alloc::Dp] {
+            let a = allocate(&costs, BitBudget::from_decibits(25), alloc).unwrap();
+            assert_eq!(a.bits["only"], 2, "{alloc:?}");
+            assert_eq!(a.avg_bits, 2.0);
+        }
+    }
+
+    #[test]
+    fn greedy_matches_dp_on_convex_equal_size_curves() {
+        // Convex (decreasing marginal gains), equal layer sizes — the
+        // regime where greedy is provably optimal.
+        let mut rng = Rng::new(7);
+        for trial in 0..20 {
+            let costs: Vec<LayerCost> = (0..6)
+                .map(|i| {
+                    let mut e = 16.0 * (1.0 + rng.normal_f32().abs()) as f64;
+                    let err: Vec<f64> = (0..5)
+                        .map(|_| {
+                            let cur = e;
+                            e *= 0.2 + 0.3 * rng.normal_f32().abs().min(1.0) as f64;
+                            cur
+                        })
+                        .collect();
+                    cost(&format!("l{i}"), 64, &err)
+                })
+                .collect();
+            for d in [25, 33, 38] {
+                let ga = allocate(&costs, BitBudget::from_decibits(d), Alloc::Greedy).unwrap();
+                let da = allocate(&costs, BitBudget::from_decibits(d), Alloc::Dp).unwrap();
+                assert_eq!(ga.bits, da.bits, "trial {trial} budget {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn upgrades_cap_at_max_bits() {
+        let costs = [cost("a", 64, &[4.0, 2.0, 1.0]), cost("b", 64, &[4.0, 2.0, 1.0])];
+        let a = allocate(&costs, BitBudget::from_decibits(80), Alloc::Dp).unwrap();
+        assert!(a.bits.values().all(|&b| b == 8), "{a:?}");
+    }
+
+    #[test]
+    fn layer_cost_is_monotone_and_hessian_weighted() {
+        let mut rng = Rng::new(11);
+        let w = Mat::randn(8, 16, 1.0, &mut rng);
+        let diag = vec![1.0f64; 16];
+        let c = layer_cost("t", &w, &diag, &QuantConfig::int(2), 2, 5);
+        assert_eq!(c.err.len(), 4);
+        assert_eq!(c.weights, 8 * 16);
+        for k in 1..c.err.len() {
+            assert!(c.err[k] <= c.err[k - 1], "{:?}", c.err);
+        }
+        // Doubling every Hessian diagonal doubles the proxy exactly.
+        let diag2 = vec![2.0f64; 16];
+        let c2 = layer_cost("t", &w, &diag2, &QuantConfig::int(2), 2, 5);
+        for (a, b) in c.err.iter().zip(c2.err.iter()) {
+            assert!((b - 2.0 * a).abs() < 1e-9 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn allocation_meta_roundtrip() {
+        let costs = [cost("blocks.0.attn.wq", 256, &[4.0, 1.0]), cost("blocks.0.mlp.up", 512, &[9.0, 2.0])];
+        let a = allocate(&costs, BitBudget::from_decibits(25), Alloc::Dp).unwrap();
+        let mut meta = Json::obj();
+        write_allocation_meta(&mut meta, &a);
+        let text = meta.dump();
+        let back = read_allocation_meta(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+        // Writing the read-back allocation again is byte-identical.
+        let mut meta2 = Json::obj();
+        write_allocation_meta(&mut meta2, &back);
+        assert_eq!(meta2.dump(), text);
+        // Plain meta without budget keys reads as None.
+        assert_eq!(read_allocation_meta(&Json::obj()), None);
+    }
+}

@@ -5,11 +5,13 @@
 //! these methods run, exactly as in the paper.
 
 pub mod awq;
+pub mod budget;
 pub mod gptq;
 pub mod grid;
 pub mod quip;
 pub mod rtn;
 
+pub use budget::{Alloc, Allocation, BitBudget, BudgetSpec};
 pub use grid::{GroupGrid, QuantConfig, QuantizedTensor};
 
 use crate::linalg::{Mat, Mat64};

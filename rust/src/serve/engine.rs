@@ -149,6 +149,27 @@ impl ServeModel {
         })
     }
 
+    /// Pack each block linear onto its *own* grid: `bits` maps canonical
+    /// layer names (`blocks.{i}.{short}`, exactly the `layer_bits` table
+    /// a mixed-precision `.qtz` carries in its meta) to that layer's bit
+    /// width; layers absent from the map fall back to `cfg.bits`. The
+    /// group length comes from `cfg` everywhere. Packing is per-tensor,
+    /// so mixed widths across layers need no engine changes — each fused
+    /// dequant×GEMM reads its own tensor's grid.
+    pub fn quantized_per_layer(
+        m: &Model,
+        cfg: &QuantConfig,
+        bits: &BTreeMap<String, u32>,
+    ) -> ServeModel {
+        Self::build(m, |bi, short, w| {
+            let lcfg = match bits.get(&format!("blocks.{bi}.{short}")) {
+                Some(&b) => QuantConfig { bits: b, group: cfg.group },
+                None => *cfg,
+            };
+            LinearW::quant(QuantizedTensor::from_mat(w, &lcfg))
+        })
+    }
+
     fn build(m: &Model, mk: impl Fn(usize, &str, &Mat) -> LinearW) -> ServeModel {
         ServeModel {
             cfg: m.cfg.clone(),

@@ -1,0 +1,249 @@
+//! Integration gates for the Hessian-guided mixed-precision budget
+//! allocator (`quant::budget`). The contract under test:
+//!
+//! - on convex cost curves the greedy marginal-gain allocator and the
+//!   exact DP allocator pick the SAME per-layer widths (greedy is
+//!   optimal there), and both dominate the uniform floor on the proxy;
+//! - infeasible budgets fail loudly, naming the feasible range;
+//! - edge budgets (exact grid bounds, single layer, exact ties) resolve
+//!   deterministically with the documented lowest-layer-index tie-break;
+//! - the allocation a pipeline produces is bit-identical for every
+//!   thread count, and the `.qtz` allocation meta round-trips through
+//!   save/load byte-identically.
+
+use qep::coordinator::{Pipeline, PipelineConfig, PipelineOutput};
+use qep::linalg::Mat;
+use qep::model::{Model, ModelConfig};
+use qep::quant::budget::{
+    allocate, check_feasible, layer_cost, read_allocation_meta, write_allocation_meta, LayerCost,
+};
+use qep::quant::{Alloc, BitBudget, BudgetSpec, Method, QuantConfig};
+use qep::util::rng::Rng;
+
+/// Strictly decreasing, strictly convex curve: each one-bit upgrade
+/// buys a strictly smaller gain than the previous one.
+fn convex_curve(rng: &mut Rng, len: usize) -> Vec<f64> {
+    let mut gains = Vec::with_capacity(len - 1);
+    let mut g = rng.range_f64(1.0, 5.0);
+    for _ in 0..len - 1 {
+        gains.push(g);
+        g *= rng.range_f64(0.3, 0.8);
+    }
+    let mut err = vec![gains.iter().sum::<f64>() + rng.range_f64(0.0, 1.0)];
+    for g in gains {
+        let last = *err.last().unwrap();
+        err.push(last - g);
+    }
+    err
+}
+
+fn budget(s: &str) -> BitBudget {
+    BitBudget::parse(s).unwrap()
+}
+
+#[test]
+fn greedy_and_dp_agree_on_convex_curves() {
+    let mut rng = Rng::new(11);
+    for trial in 0..20 {
+        let n = 2 + rng.below(6);
+        let weights = 64 * (1 + rng.below(4));
+        let costs: Vec<LayerCost> = (0..n)
+            .map(|i| LayerCost {
+                name: format!("blocks.{i}.wq"),
+                weights,
+                err: convex_curve(&mut rng, 5),
+            })
+            .collect();
+        for b in ["2.5", "3.5", "4.2", "5.9"] {
+            let greedy = allocate(&costs, budget(b), Alloc::Greedy).unwrap();
+            let dp = allocate(&costs, budget(b), Alloc::Dp).unwrap();
+            assert_eq!(
+                greedy.bits, dp.bits,
+                "trial {trial} budget {b}: greedy and DP disagree on a convex instance"
+            );
+            assert_eq!(greedy.avg_bits, dp.avg_bits, "trial {trial} budget {b}");
+            // Budget respected, floor guaranteed, allocated proxy error
+            // dominates the uniform floor.
+            let bb = budget(b);
+            let floor = bb.floor_bits();
+            assert!(dp.avg_bits <= bb.decibits() as f64 / 10.0 + 1e-12);
+            let mut total_alloc = 0.0;
+            let mut total_floor = 0.0;
+            for c in &costs {
+                let assigned = dp.bits[&c.name];
+                assert!(assigned >= floor, "layer below the floor");
+                total_alloc += c.err[(assigned - floor) as usize];
+                total_floor += c.err[0];
+            }
+            assert!(
+                total_alloc <= total_floor + 1e-12,
+                "trial {trial} budget {b}: allocation worse than uniform floor"
+            );
+        }
+    }
+}
+
+#[test]
+fn infeasible_budgets_name_the_feasible_range() {
+    for s in ["1.9", "0.5", "8.1", "9.0"] {
+        let err = check_feasible(budget(s)).unwrap_err().to_string();
+        assert!(
+            err.contains("feasible range is [2.0, 8.0]"),
+            "budget {s}: error must name the feasible range, got: {err}"
+        );
+        // allocate() runs the same gate before any work.
+        let costs =
+            vec![LayerCost { name: "blocks.0.wq".into(), weights: 64, err: vec![2.0, 1.0] }];
+        assert!(allocate(&costs, budget(s), Alloc::Dp).is_err());
+    }
+    for s in ["2.0", "2.5", "8.0"] {
+        check_feasible(budget(s)).unwrap();
+    }
+}
+
+#[test]
+fn grid_bound_budgets_pin_every_layer() {
+    let costs: Vec<LayerCost> = (0..3)
+        .map(|i| LayerCost {
+            name: format!("blocks.{i}.wq"),
+            weights: 32,
+            err: vec![4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625],
+        })
+        .collect();
+    for alloc in [Alloc::Greedy, Alloc::Dp] {
+        // Integral budget: zero fractional surplus, everyone at the floor.
+        let a = allocate(&costs, budget("2.0"), alloc).unwrap();
+        assert!(a.bits.values().all(|&b| b == 2), "{}", a.summary());
+        assert_eq!(a.avg_bits, 2.0);
+        // Top of the grid: the floor IS the ceiling.
+        let a = allocate(&costs, budget("8.0"), alloc).unwrap();
+        assert!(a.bits.values().all(|&b| b == 8), "{}", a.summary());
+        assert_eq!(a.avg_bits, 8.0);
+    }
+}
+
+#[test]
+fn single_layer_fractional_budget_stays_at_the_floor() {
+    // One layer cannot split a fractional surplus: a whole-bit upgrade
+    // would overshoot the average, so the layer keeps ⌊B⌋ bits.
+    let costs = vec![LayerCost {
+        name: "blocks.0.wq".into(),
+        weights: 256,
+        err: vec![3.0, 1.0, 0.1],
+    }];
+    for alloc in [Alloc::Greedy, Alloc::Dp] {
+        let a = allocate(&costs, budget("2.5"), alloc).unwrap();
+        assert_eq!(a.bits["blocks.0.wq"], 2, "{}", a.summary());
+        assert_eq!(a.avg_bits, 2.0);
+    }
+}
+
+#[test]
+fn exact_ties_upgrade_the_lowest_layer_index() {
+    // Two bit-identical layers, capacity for exactly one upgrade. The
+    // winner is the lower INDEX in the cost slice — not the
+    // lexicographically smaller name.
+    let curve = vec![10.0, 4.0, 1.0];
+    let costs = vec![
+        LayerCost { name: "z.late".into(), weights: 128, err: curve.clone() },
+        LayerCost { name: "a.early".into(), weights: 128, err: curve },
+    ];
+    for alloc in [Alloc::Greedy, Alloc::Dp] {
+        let a = allocate(&costs, budget("2.5"), alloc).unwrap();
+        assert_eq!(a.bits["z.late"], 3, "{:?}: index 0 must win the tie", alloc);
+        assert_eq!(a.bits["a.early"], 2, "{:?}", alloc);
+        assert_eq!(a.avg_bits, 2.5);
+    }
+}
+
+#[test]
+fn layer_cost_curves_are_monotone_in_bits() {
+    // More bits never increase the Hessian-weighted snap error — the
+    // convexity the allocators exploit starts with monotonicity.
+    let mut rng = Rng::new(5);
+    let w = Mat::randn(8, 32, 1.0, &mut rng);
+    let diag: Vec<f64> = (0..32).map(|_| rng.range_f64(0.1, 4.0)).collect();
+    let c = layer_cost("blocks.0.wq", &w, &diag, &QuantConfig::int(2), 2, 8);
+    assert_eq!(c.weights, 8 * 32);
+    assert_eq!(c.err.len(), 7);
+    for k in 1..c.err.len() {
+        assert!(
+            c.err[k] <= c.err[k - 1],
+            "err must be non-increasing: err[{k}]={} > err[{}]={}",
+            c.err[k],
+            k - 1,
+            c.err[k - 1]
+        );
+    }
+    assert!(c.err[0] > 0.0, "INT2 snap error should be strictly positive on random weights");
+}
+
+fn tiny_budget_run(alloc: Alloc, threads: usize) -> PipelineOutput {
+    let mut mcfg = ModelConfig::new("unit", 16, 2, 2, 32);
+    mcfg.seq_len = 8;
+    let model = Model::random(&mcfg, 1);
+    let mut rng = Rng::new(2);
+    let tokens: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+    let cfg = PipelineConfig {
+        quant: QuantConfig::int(7), // superseded by the budget's floor
+        method: Method::Rtn,
+        bit_budget: Some(BudgetSpec { budget: BitBudget::from_decibits(25), alloc }),
+        seed: 42,
+        threads,
+        ..Default::default()
+    };
+    Pipeline::new(cfg).run(&model, &tokens).unwrap()
+}
+
+#[test]
+fn pipeline_allocation_is_bit_identical_across_thread_counts() {
+    for alloc in [Alloc::Greedy, Alloc::Dp] {
+        let want = tiny_budget_run(alloc, 1);
+        let wa = want.allocation.as_ref().unwrap();
+        // Floor guarantee: budget 2.5 means every layer is INT2 or INT3.
+        assert!(wa.bits.values().all(|&b| b == 2 || b == 3), "{}", wa.summary());
+        assert!(wa.avg_bits >= 2.0 && wa.avg_bits <= 2.5, "{}", wa.summary());
+        for threads in [2usize, 8] {
+            let got = tiny_budget_run(alloc, threads);
+            assert_eq!(
+                want.allocation, got.allocation,
+                "{alloc:?}: allocation differs at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn qtz_allocation_meta_round_trips_byte_identically() {
+    let out = tiny_budget_run(Alloc::Dp, 4);
+    let alloc = out.allocation.clone().unwrap();
+    let dir = std::env::temp_dir();
+
+    // Same model + same allocation → same bytes, twice over.
+    let write = |name: &str| -> Vec<u8> {
+        let mut tf = out.model.to_tensor_file();
+        write_allocation_meta(&mut tf.meta, &alloc);
+        let p = dir.join(name);
+        tf.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        bytes
+    };
+    let b1 = write("qep_budget_meta_roundtrip_1.qtz");
+    let b2 = write("qep_budget_meta_roundtrip_2.qtz");
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b2, "allocation meta serialization is not deterministic");
+
+    // Load-side: the meta restores the exact allocation.
+    let p = dir.join("qep_budget_meta_roundtrip_3.qtz");
+    let mut tf = out.model.to_tensor_file();
+    write_allocation_meta(&mut tf.meta, &alloc);
+    tf.save(&p).unwrap();
+    let loaded = qep::io::TensorFile::load(&p).unwrap();
+    std::fs::remove_file(&p).ok();
+    let got = read_allocation_meta(&loaded.meta).expect("meta must parse back");
+    assert_eq!(got, alloc);
+
+    // A plain model file carries no allocation.
+    assert!(read_allocation_meta(&out.model.to_tensor_file().meta).is_none());
+}

@@ -17,7 +17,7 @@ use qep::io::results::CellRecord;
 use qep::model::Size;
 use qep::util::cli::Args;
 
-fn all_sweeps() -> [SweepId; 9] {
+fn all_sweeps() -> [SweepId; 10] {
     [
         SweepId::Table12,
         SweepId::Table3,
@@ -27,6 +27,7 @@ fn all_sweeps() -> [SweepId; 9] {
         SweepId::Fig3,
         SweepId::Appendix,
         SweepId::Lowrank,
+        SweepId::Budget,
         SweepId::All,
     ]
 }
@@ -88,6 +89,14 @@ fn garbage_ids_do_not_parse() {
         "lowrank/INT3/RTN/+lr02/tiny-s",        // leading zero breaks id∘parse
         "lowrank/INT3/RTN/+lr-4/tiny-s",        // negative rank
         "table12/INT3/GPTQ/+lr2/tiny-s",        // rank variants are lowrank-only
+        "budget/2.50/GPTQ/dp/tiny-s",           // non-canonical budget ("2.5")
+        "budget/3/GPTQ/dp/tiny-s",              // missing decimal breaks id∘parse
+        "budget/2.5/GPTQ/rtn/tiny-s",           // unknown allocator
+        "budget/2.5/GPTQ/dp+lr2/tiny-s",        // rank variants are lowrank-only
+        "budget/2.5/GPTQ/base/tiny-s",          // uniform rows use budget/uni/...
+        "budget/uni/INT3/GPTQ/dp/tiny-s",       // uniform rows carry base/+qep
+        "budget/1.5/GPTQ/dp/tiny-s",            // below the feasible range
+        "budget/8.5/GPTQ/dp/tiny-s",            // above the feasible range
     ] {
         assert!(PlanCell::parse(bad).is_none(), "'{bad}' should not parse");
     }
@@ -281,6 +290,58 @@ fn lowrank_plan_flags_and_variants() {
 }
 
 #[test]
+fn budget_plan_flags_and_cells() {
+    use qep::quant::BitBudget;
+    // Defaults: budgets {2.5, 3.0, 3.5}; --fast shrinks to {2.5}.
+    let p = PlanParams::for_sizes(&[Size::TinyS]);
+    assert_eq!(
+        p.budgets,
+        vec![
+            BitBudget::from_decibits(25),
+            BitBudget::from_decibits(30),
+            BitBudget::from_decibits(35)
+        ]
+    );
+    let a = parse_args(&["exp", "budget", "--fast"]);
+    let p = PlanParams::from_args(SweepId::Budget, &a).unwrap();
+    assert_eq!(p.budgets, vec![BitBudget::from_decibits(25)]);
+    // Fast manifest: uniform INT2 baselines (2 methods × ±qep) plus the
+    // 2.5 DP cells (2 methods × ±qep) on one size.
+    let cells = manifest(SweepId::Budget, &p).unwrap();
+    assert_eq!(cells.len(), 8);
+    let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+    assert!(ids.contains(&"budget/uni/INT2/RTN/base/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"budget/uni/INT2/GPTQ/+qep/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"budget/2.5/RTN/dp/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"budget/2.5/GPTQ/dp+qep/tiny-s".to_string()), "{ids:?}");
+    // Full defaults: floors {2, 3} dedupe the uniform baselines (3.0 and
+    // 3.5 share INT3): 2×2×2 uniform + 3×2×2 allocated.
+    let p = PlanParams::for_sizes(&[Size::TinyS]);
+    let cells = manifest(SweepId::Budget, &p).unwrap();
+    assert_eq!(cells.len(), 20);
+    // --budgets overrides, strictly: out-of-range, malformed, and
+    // duplicate values are hard errors (duplicates would enumerate
+    // duplicate cell IDs).
+    let a = parse_args(&["exp", "budget", "--budgets", "2.5,4.0"]);
+    let p = PlanParams::from_args(SweepId::Budget, &a).unwrap();
+    assert_eq!(
+        p.budgets,
+        vec![BitBudget::from_decibits(25), BitBudget::from_decibits(40)]
+    );
+    for bad in ["1.5", "8.5", "abc", "2.55", "2.5,2.5", "2.5,,3.0", ""] {
+        let a = parse_args(&["exp", "budget", "--budgets", bad]);
+        assert!(
+            PlanParams::from_args(SweepId::Budget, &a).is_err(),
+            "--budgets {bad} should be rejected"
+        );
+    }
+    // Variant rendering.
+    assert_eq!(plan::budget_variant_name(qep::quant::Alloc::Dp, false), "dp");
+    assert_eq!(plan::budget_variant_name(qep::quant::Alloc::Dp, true), "dp+qep");
+    assert_eq!(plan::budget_variant_name(qep::quant::Alloc::Greedy, true), "greedy+qep");
+}
+
+#[test]
 fn sweep_names_resolve_with_aliases() {
     for (alias, want) in [
         ("fig1", SweepId::Table12),
@@ -296,6 +357,8 @@ fn sweep_names_resolve_with_aliases() {
         ("lowrank", SweepId::Lowrank),
         ("lqer", SweepId::Lowrank),
         ("qera", SweepId::Lowrank),
+        ("budget", SweepId::Budget),
+        ("mixed-precision", SweepId::Budget),
         ("all", SweepId::All),
     ] {
         assert_eq!(SweepId::from_name(alias), Some(want), "{alias}");

@@ -14,16 +14,16 @@
 //! exact same work. This is what lets the repo claim the paper's
 //! "lightweight and scalable" axis without giving up reproducibility.
 
-use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::coordinator::{Pipeline, PipelineConfig, PipelineOutput};
 use qep::eval::perplexity_with;
 use qep::exp::tables::{format_acc_table, format_ppl_table, matrix, run_matrix_on, Wants};
-use qep::exp::ExpData;
+use qep::exp::{Cell, ExpData};
 use qep::linalg::{
     cholesky_in_place_with, cholesky_unblocked, spd_solve_with, upper_cholesky_of_inverse_with,
     Mat64,
 };
 use qep::model::{BlockWeights, Model, ModelConfig, Size};
-use qep::quant::{Method, QuantConfig};
+use qep::quant::{Alloc, BitBudget, BudgetSpec, Method, QuantConfig};
 use qep::text::{Corpus, Flavor};
 use qep::util::pool::Pool;
 use qep::util::rng::Rng;
@@ -162,6 +162,95 @@ fn lowrank_qtz_files_are_byte_identical_across_thread_counts() {
     std::fs::remove_file(&p4).ok();
     assert!(!b1.is_empty());
     assert_eq!(b1, b4, "low-rank .qtz bytes differ between threads=1 and threads=4");
+}
+
+#[test]
+fn budget_allocation_and_qtz_meta_are_thread_invariant() {
+    // Mixed-precision budgets ride the same contract: the Hessian-diag
+    // scoring pre-pass and both allocators are serial over a canonical
+    // layer order, so the per-layer bit map, the quantized model, and the
+    // serialized .qtz bytes (allocation meta included) never depend on
+    // the pool width.
+    let (model, tokens) = setup();
+    let run_b = |threads: usize| -> PipelineOutput {
+        let cfg = PipelineConfig {
+            quant: QuantConfig::int(7), // superseded by the budget's floor
+            method: Method::Gptq,
+            qep_alpha: Some(0.5),
+            bit_budget: Some(BudgetSpec {
+                budget: BitBudget::from_decibits(25),
+                alloc: Alloc::Dp,
+            }),
+            seed: 42,
+            threads,
+            ..Default::default()
+        };
+        Pipeline::new(cfg).run(&model, &tokens).unwrap()
+    };
+    let a = run_b(1);
+    let alloc_a = a.allocation.as_ref().expect("budget run must produce an allocation");
+    assert!(alloc_a.avg_bits >= 2.0 && alloc_a.avg_bits <= 2.5, "{}", alloc_a.summary());
+    let b = run_b(8);
+    for (threads, out) in [(2usize, run_b(2)), (8, b)] {
+        assert_eq!(
+            Some(alloc_a),
+            out.allocation.as_ref(),
+            "allocation differs at threads={threads}"
+        );
+        assert_models_bit_identical(&a.model, &out.model, &format!("budget threads={threads}"));
+
+        let dir = std::env::temp_dir();
+        let write_qtz = |out: &PipelineOutput, name: &str| -> Vec<u8> {
+            let mut tf = out.model.to_tensor_file();
+            qep::quant::budget::write_allocation_meta(&mut tf.meta, out.allocation.as_ref().unwrap());
+            let p = dir.join(name);
+            tf.save(&p).unwrap();
+            let bytes = std::fs::read(&p).unwrap();
+            std::fs::remove_file(&p).ok();
+            bytes
+        };
+        let b1 = write_qtz(&a, "qep_budget_equiv_a.qtz");
+        let bt = write_qtz(&out, "qep_budget_equiv_b.qtz");
+        assert!(!b1.is_empty());
+        assert_eq!(b1, bt, "budget .qtz bytes differ between threads=1 and threads={threads}");
+    }
+}
+
+#[test]
+fn budget_cells_are_thread_invariant() {
+    // An allocated budget cell through the full sweep machinery (cell →
+    // scoring pre-pass → pipeline → ppl) must match across pool widths,
+    // like every other cell — alongside its uniform-floor twin.
+    let mut cfg = ModelConfig::new("tiny-s", 16, 2, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 3);
+    let mut models = HashMap::new();
+    models.insert(Size::TinyS.name().to_string(), model);
+    let mut corpora = HashMap::new();
+    for f in Flavor::all() {
+        corpora.insert(f, Corpus::generate(f, 24 * 1024, 0));
+    }
+    let data = ExpData::from_parts(models, corpora);
+
+    let uniform = Cell::new(Size::TinyS, Method::Gptq, QuantConfig::int(2), true);
+    let mut allocated = uniform.clone();
+    allocated.budget = Some(BudgetSpec {
+        budget: BitBudget::from_decibits(25),
+        alloc: Alloc::Dp,
+    });
+    let cells = vec![uniform, allocated];
+    let wants = Wants { ppl: vec![Flavor::Wiki], tasks: vec![] };
+    let run = |threads: usize| -> Vec<u64> {
+        run_matrix_on(&data, &cells, &wants, &Pool::new(threads))
+            .unwrap()
+            .iter()
+            .map(|r| r.ppl[&Flavor::Wiki].to_bits())
+            .collect()
+    };
+    let want = run(1);
+    for threads in [2usize, 8] {
+        assert_eq!(run(threads), want, "budget cell ppl differs at threads={threads}");
+    }
 }
 
 fn random_spd(n: usize, rng: &mut Rng) -> Mat64 {

@@ -17,5 +17,5 @@
 pub mod pipeline;
 pub mod report;
 
-pub use pipeline::{Pipeline, PipelineConfig, PipelineOutput};
+pub use pipeline::{CBQ_WINDOW_META_KEY, Pipeline, PipelineConfig, PipelineOutput};
 pub use report::{LayerReport, PhaseTimings, PipelineReport};

@@ -8,6 +8,29 @@
 //! (`linalg::chol`). Nested calls degrade gracefully: work issued from
 //! inside a pool worker runs inline instead of oversubscribing.
 //!
+//! Calibration is **software-pipelined**: a producer stage walks the
+//! full-precision model over the calibration stream (`Forward::block` +
+//! `BlockCapture`) on its own thread while the consumer stage quantizes
+//! the current block, so block b+1's forward pass overlaps block b's
+//! Hessian/Cholesky work instead of sitting serially on the critical
+//! path. The hand-off point is fixed — one bounded channel slot, received
+//! at the top of each consumer iteration — and the producer runs the
+//! exact `Forward::block` chain the serial schedule would, so the
+//! captures (and therefore the outputs) are bit-identical for every
+//! thread count (see [`CapSource`]; `tests/parallel_equivalence.rs` is
+//! the gate). A `threads = 1` pipeline skips the producer thread and
+//! computes captures inline.
+//!
+//! Cross-block (CBQ-style) reconstruction: [`PipelineConfig::cbq_window`]
+//! groups blocks into tumbling windows of W blocks. After a window's
+//! layer-wise pass, every window layer is jointly re-reconstructed from
+//! the *original* weights against a local full-precision reference — the
+//! original window weights applied to the window's actual (drifted)
+//! quantized-stream entry — so compensation targets the error the window
+//! itself introduces (see [`Pipeline::refine_window`] for the math and
+//! the provable no-op cases that keep `cbq_window = 1` byte-identical to
+//! the layer-wise schedule).
+//!
 //! Pool lifecycle: [`Pipeline::new`] pre-starts the process-wide workers
 //! (`util::pool::prestart`) whenever it will actually dispatch in
 //! parallel, so the first layer's many small per-panel jobs don't pay the
@@ -18,7 +41,7 @@
 use super::report::{LayerReport, PipelineReport};
 use crate::linalg::Mat;
 use crate::model::ops::{causal_attention, linear, rmsnorm, swiglu};
-use crate::model::{BlockWeights, Forward, Model};
+use crate::model::{BlockCapture, BlockWeights, Forward, Model};
 use crate::qep::{adjunct_from_residual, AlphaPolicy, CorrectionStats, LowRankAdjunct};
 use crate::quant::budget::{self, Allocation, BudgetSpec};
 use crate::quant::{quantizer_for, LayerCtx, Method, QuantConfig, Quantizer};
@@ -26,6 +49,7 @@ use crate::util::pool::Pool;
 use crate::util::Stopwatch;
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::sync::mpsc;
 
 /// Linears that share one captured input stream and therefore quantize
 /// independently of each other: their Hessian builds, QEP corrections, and
@@ -33,6 +57,11 @@ use std::collections::BTreeMap;
 /// keeps reports deterministic).
 const ATTN_QKV: [&str; 3] = ["attn.wq", "attn.wk", "attn.wv"];
 const MLP_GATE_UP: [&str; 2] = ["mlp.gate", "mlp.up"];
+
+/// `.qtz` meta key recording the CBQ window a model was quantized with
+/// (only written when the window is > 1 — layer-wise artifacts stay
+/// byte-identical to pre-CBQ writers).
+pub const CBQ_WINDOW_META_KEY: &str = "cbq_window";
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -62,6 +91,14 @@ pub struct PipelineConfig {
     /// ignored (the group setting still applies to every layer). The
     /// allocation is recorded in [`PipelineOutput::allocation`].
     pub bit_budget: Option<BudgetSpec>,
+    /// CBQ-style cross-block window: blocks are grouped into tumbling
+    /// windows of this many blocks, and after each window's layer-wise
+    /// pass its layers are jointly re-reconstructed against the window's
+    /// local full-precision reference ([`Pipeline::refine_window`]).
+    /// `1` (the default) is exactly the layer-wise schedule — no window
+    /// ever refines — and values beyond the quantized block count clamp
+    /// loudly to one whole-model window.
+    pub cbq_window: usize,
     pub seed: u64,
     pub verbose: bool,
     /// Worker threads for this pipeline's per-layer fan-out (0 = the
@@ -85,6 +122,7 @@ impl Default for PipelineConfig {
             max_blocks: None,
             lowrank_rank: 0,
             bit_budget: None,
+            cbq_window: 1,
             seed: 0,
             verbose: false,
             threads: 0,
@@ -105,6 +143,9 @@ impl PipelineConfig {
         }
         if let Some(spec) = &self.bit_budget {
             label.push_str(&format!(" B{}/{}", spec.budget.render(), spec.alloc.name()));
+        }
+        if self.cbq_window > 1 {
+            label.push_str(&format!(" W{}", self.cbq_window));
         }
         label
     }
@@ -139,6 +180,58 @@ pub struct PipelineOutput {
     pub report: PipelineReport,
 }
 
+/// Where the consumer stage gets its per-block full-precision captures:
+/// computed inline (the serial schedule) or received from the producer
+/// thread (the pipelined schedule). Both deliver bit-identical captures —
+/// the producer runs the exact `Forward::block` chain over the same
+/// full-precision stream the inline path walks — so the choice only
+/// affects wall-clock, never bytes. The `recv` at the top of each
+/// consumer iteration is the fixed hand-off point of the determinism
+/// contract.
+enum CapSource<'a> {
+    Inline { f: &'a Forward<'a>, model: &'a Model, x: Mat },
+    Piped(mpsc::Receiver<(BlockCapture, f64)>),
+}
+
+impl CapSource<'_> {
+    /// Block `bi`'s capture plus the seconds its forward pass took (the
+    /// producer measures its own wall-clock; timings are informational
+    /// and never part of the deterministic surface).
+    fn next(&mut self, bi: usize) -> (BlockCapture, f64) {
+        match self {
+            CapSource::Inline { f, model, x } => {
+                let sw = Stopwatch::start();
+                let (nx, cap) = f.block(&model.blocks[bi], x);
+                let secs = sw.seconds();
+                *x = nx;
+                (cap, secs)
+            }
+            CapSource::Piped(rx) => {
+                rx.recv().expect("calibration producer delivers one capture per block")
+            }
+        }
+    }
+}
+
+/// The mutable quantized-stream state a pipeline run threads through its
+/// pass-1 block loop and CBQ window refinements.
+struct RunState {
+    qmodel: Model,
+    adjuncts: BTreeMap<String, LowRankAdjunct>,
+    base_weights: Vec<(usize, String, Mat)>,
+    report: PipelineReport,
+}
+
+/// One CBQ window's saved state: the block index it starts at, the
+/// quantized-stream activations entering it, and the frozen per-block
+/// captures of the pass-1 quantized stream (exactly the activations the
+/// layer-wise pass calibrated on — cloned, never recomputed).
+struct CbqWindow {
+    start: usize,
+    entry: Mat,
+    frozen: Vec<BlockCapture>,
+}
+
 pub struct Pipeline {
     cfg: PipelineConfig,
     quantizer: Box<dyn Quantizer + Send + Sync>,
@@ -163,16 +256,19 @@ impl Pipeline {
         let total = Stopwatch::start();
         let f = Forward::new(&model.cfg);
         let policy = self.cfg.policy();
-        let mut report = PipelineReport::default();
-        let mut qmodel = model.clone();
-        let mut adjuncts: BTreeMap<String, LowRankAdjunct> = BTreeMap::new();
-        let mut base_weights: Vec<(usize, String, Mat)> = Vec::new();
+        let mut st = RunState {
+            qmodel: model.clone(),
+            adjuncts: BTreeMap::new(),
+            base_weights: Vec::new(),
+            report: PipelineReport::default(),
+        };
 
         let n_blocks = self
             .cfg
             .max_blocks
             .unwrap_or(model.cfg.n_layers)
             .min(model.cfg.n_layers);
+        let window = self.effective_window(n_blocks);
 
         // Mixed precision: a dedicated full-precision pre-pass scores every
         // quantizable linear *before* quantization starts (the allocation
@@ -185,121 +281,198 @@ impl Pipeline {
             None => None,
         };
         if allocation.is_some() {
-            report.allocation_s = alloc_timer.seconds();
+            st.report.allocation_s = alloc_timer.seconds();
             if self.cfg.verbose {
                 eprintln!("[pipeline] {}", allocation.as_ref().unwrap().summary());
             }
         }
 
         let prop = Stopwatch::start();
-        let mut x_full = f.embed(model, calib_tokens);
+        let x_full = f.embed(model, calib_tokens);
         let mut x_hat = x_full.clone();
-        report.propagation_s += prop.seconds();
+        st.report.propagation_s += prop.seconds();
 
-        for bi in 0..n_blocks {
-            // Full-precision stream: capture per-linear inputs in one pass.
-            let prop = Stopwatch::start();
-            let (x_full_next, cap) = f.block(&model.blocks[bi], &x_full);
-            report.propagation_s += prop.seconds();
+        // The producer thread (pipelined schedule) borrows `model`/`f`
+        // for the scope's duration; the consumer below owns every mutable
+        // stream, so the stages never share mutable state and the only
+        // synchronization is the bounded capture channel.
+        std::thread::scope(|scope| -> Result<()> {
+            let mut caps = if self.pool.threads() > 1 && n_blocks > 0 {
+                // Producer stage: walk the full-precision stream one block
+                // ahead of the consumer. The bounded slot keeps it at most
+                // one capture ahead; a dropped receiver (consumer error)
+                // ends it early.
+                let (tx, rx) = mpsc::sync_channel(1);
+                let (fwd, blocks) = (&f, &model.blocks[..n_blocks]);
+                scope.spawn(move || {
+                    let mut x = x_full;
+                    for b in blocks {
+                        let sw = Stopwatch::start();
+                        let (nx, cap) = fwd.block(b, &x);
+                        let secs = sw.seconds();
+                        x = nx;
+                        if tx.send((cap, secs)).is_err() {
+                            return;
+                        }
+                    }
+                });
+                CapSource::Piped(rx)
+            } else {
+                CapSource::Inline { f: &f, model, x: x_full }
+            };
 
-            // Quantized stream, incrementally quantizing in execution order.
-            // -- attention ------------------------------------------------
-            let prop = Stopwatch::start();
-            let attn_in_hat = rmsnorm(&x_hat, &qmodel.blocks[bi].attn_norm);
-            report.propagation_s += prop.seconds();
-            // wq/wk/wv see the same captured inputs and never read each
-            // other's quantized weights, so they fan out across the pool;
-            // applying in canonical order keeps the run deterministic.
-            let outs = self.pool.par_map(ATTN_QKV.len(), |i| {
-                self.compute_layer(
-                    &qmodel,
-                    bi,
-                    ATTN_QKV[i],
-                    &cap.attn_in,
-                    &attn_in_hat,
-                    policy.as_ref(),
-                    Self::layer_bits(allocation.as_ref(), bi, ATTN_QKV[i]),
-                )
-            });
-            for (short, out) in ATTN_QKV.iter().zip(outs) {
-                let (w_hat, adj, layer_report) = out?;
-                Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, short, w_hat, adj);
-                report.layers.push(layer_report);
-            }
-            let prop = Stopwatch::start();
-            let b = &qmodel.blocks[bi];
-            let (q, k, v) = (
-                linear(&attn_in_hat, &b.wq),
-                linear(&attn_in_hat, &b.wk),
-                linear(&attn_in_hat, &b.wv),
-            );
-            let ctx_hat = causal_attention(&q, &k, &v, model.cfg.n_heads, model.cfg.seq_len);
-            report.propagation_s += prop.seconds();
-            let (w_hat, adj, layer_report) = self.compute_layer(
-                &qmodel,
-                bi,
-                "attn.wo",
-                &cap.attn_ctx,
-                &ctx_hat,
-                policy.as_ref(),
-                Self::layer_bits(allocation.as_ref(), bi, "attn.wo"),
-            )?;
-            Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, "attn.wo", w_hat, adj);
-            report.layers.push(layer_report);
+            // CBQ bookkeeping. Windows starting at block 0 are never
+            // recorded: there the quantized and full-precision streams
+            // share the model input, so the window's local reference
+            // equals the pass-1 captures and re-reconstruction is a
+            // provable bitwise no-op (this is also why `cbq_window`
+            // clamped to the whole model reproduces the layer-wise
+            // bytes exactly).
+            let mut win: Option<CbqWindow> = None;
+            for bi in 0..n_blocks {
+                if window > 1 && bi > 0 && bi % window == 0 {
+                    win = Some(CbqWindow {
+                        start: bi,
+                        entry: x_hat.clone(),
+                        frozen: Vec::new(),
+                    });
+                }
 
-            // -- MLP -------------------------------------------------------
-            let prop = Stopwatch::start();
-            let b = &qmodel.blocks[bi];
-            let x1_hat = x_hat.add(&linear(&ctx_hat, &b.wo));
-            let mlp_in_hat = rmsnorm(&x1_hat, &b.mlp_norm);
-            report.propagation_s += prop.seconds();
-            // gate/up share captured inputs, exactly like wq/wk/wv.
-            let outs = self.pool.par_map(MLP_GATE_UP.len(), |i| {
-                self.compute_layer(
-                    &qmodel,
-                    bi,
-                    MLP_GATE_UP[i],
-                    &cap.mlp_in,
-                    &mlp_in_hat,
-                    policy.as_ref(),
-                    Self::layer_bits(allocation.as_ref(), bi, MLP_GATE_UP[i]),
-                )
-            });
-            for (short, out) in MLP_GATE_UP.iter().zip(outs) {
-                let (w_hat, adj, layer_report) = out?;
-                Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, short, w_hat, adj);
-                report.layers.push(layer_report);
-            }
-            let prop = Stopwatch::start();
-            let b = &qmodel.blocks[bi];
-            let act_hat = swiglu(&linear(&mlp_in_hat, &b.gate), &linear(&mlp_in_hat, &b.up));
-            report.propagation_s += prop.seconds();
-            let (w_hat, adj, layer_report) = self.compute_layer(
-                &qmodel,
-                bi,
-                "mlp.down",
-                &cap.mlp_act,
-                &act_hat,
-                policy.as_ref(),
-                Self::layer_bits(allocation.as_ref(), bi, "mlp.down"),
-            )?;
-            Self::install(&mut qmodel, &mut adjuncts, &mut base_weights, bi, "mlp.down", w_hat, adj);
-            report.layers.push(layer_report);
+                // Full-precision stream: the fixed per-block hand-off.
+                let (cap, fwd_secs) = caps.next(bi);
+                st.report.propagation_s += fwd_secs;
 
-            let prop = Stopwatch::start();
-            let b = &qmodel.blocks[bi];
-            x_hat = x1_hat.add(&linear(&act_hat, &b.down));
-            x_full = x_full_next;
-            report.propagation_s += prop.seconds();
-
-            if self.cfg.verbose {
-                eprintln!(
-                    "[pipeline] block {bi}/{n_blocks} done ({})",
-                    self.cfg.label()
+                // Quantized stream, incrementally quantizing in execution
+                // order.
+                // -- attention ------------------------------------------
+                let prop = Stopwatch::start();
+                let attn_in_hat = rmsnorm(&x_hat, &st.qmodel.blocks[bi].attn_norm);
+                st.report.propagation_s += prop.seconds();
+                // wq/wk/wv see the same captured inputs and never read
+                // each other's quantized weights, so they fan out across
+                // the pool; applying in canonical order keeps the run
+                // deterministic.
+                let outs = self.pool.par_map(ATTN_QKV.len(), |i| {
+                    self.compute_layer(
+                        &st.qmodel,
+                        bi,
+                        ATTN_QKV[i],
+                        &cap.attn_in,
+                        &attn_in_hat,
+                        policy.as_ref(),
+                        Self::layer_bits(allocation.as_ref(), bi, ATTN_QKV[i]),
+                    )
+                });
+                for (short, out) in ATTN_QKV.iter().zip(outs) {
+                    let (w_hat, adj, layer_report) = out?;
+                    Self::install(&mut st, bi, short, w_hat, adj);
+                    st.report.layers.push(layer_report);
+                }
+                let prop = Stopwatch::start();
+                let b = &st.qmodel.blocks[bi];
+                let (q, k, v) = (
+                    linear(&attn_in_hat, &b.wq),
+                    linear(&attn_in_hat, &b.wk),
+                    linear(&attn_in_hat, &b.wv),
                 );
-            }
-        }
+                let ctx_hat = causal_attention(&q, &k, &v, model.cfg.n_heads, model.cfg.seq_len);
+                st.report.propagation_s += prop.seconds();
+                let (w_hat, adj, layer_report) = self.compute_layer(
+                    &st.qmodel,
+                    bi,
+                    "attn.wo",
+                    &cap.attn_ctx,
+                    &ctx_hat,
+                    policy.as_ref(),
+                    Self::layer_bits(allocation.as_ref(), bi, "attn.wo"),
+                )?;
+                Self::install(&mut st, bi, "attn.wo", w_hat, adj);
+                st.report.layers.push(layer_report);
 
+                // -- MLP ------------------------------------------------
+                let prop = Stopwatch::start();
+                let b = &st.qmodel.blocks[bi];
+                let x1_hat = x_hat.add(&linear(&ctx_hat, &b.wo));
+                let mlp_in_hat = rmsnorm(&x1_hat, &b.mlp_norm);
+                st.report.propagation_s += prop.seconds();
+                // gate/up share captured inputs, exactly like wq/wk/wv.
+                let outs = self.pool.par_map(MLP_GATE_UP.len(), |i| {
+                    self.compute_layer(
+                        &st.qmodel,
+                        bi,
+                        MLP_GATE_UP[i],
+                        &cap.mlp_in,
+                        &mlp_in_hat,
+                        policy.as_ref(),
+                        Self::layer_bits(allocation.as_ref(), bi, MLP_GATE_UP[i]),
+                    )
+                });
+                for (short, out) in MLP_GATE_UP.iter().zip(outs) {
+                    let (w_hat, adj, layer_report) = out?;
+                    Self::install(&mut st, bi, short, w_hat, adj);
+                    st.report.layers.push(layer_report);
+                }
+                let prop = Stopwatch::start();
+                let b = &st.qmodel.blocks[bi];
+                let act_hat = swiglu(&linear(&mlp_in_hat, &b.gate), &linear(&mlp_in_hat, &b.up));
+                st.report.propagation_s += prop.seconds();
+                let (w_hat, adj, layer_report) = self.compute_layer(
+                    &st.qmodel,
+                    bi,
+                    "mlp.down",
+                    &cap.mlp_act,
+                    &act_hat,
+                    policy.as_ref(),
+                    Self::layer_bits(allocation.as_ref(), bi, "mlp.down"),
+                )?;
+                Self::install(&mut st, bi, "mlp.down", w_hat, adj);
+                st.report.layers.push(layer_report);
+
+                let prop = Stopwatch::start();
+                let b = &st.qmodel.blocks[bi];
+                x_hat = x1_hat.add(&linear(&act_hat, &b.down));
+                st.report.propagation_s += prop.seconds();
+
+                // Freeze this block's pass-1 quantized-stream captures for
+                // the window's joint pass (moves — the locals are dead).
+                if let Some(w) = win.as_mut() {
+                    w.frozen.push(BlockCapture {
+                        attn_in: attn_in_hat,
+                        attn_ctx: ctx_hat,
+                        mlp_in: mlp_in_hat,
+                        mlp_act: act_hat,
+                    });
+                }
+
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[pipeline] block {}/{n_blocks} done ({})",
+                        bi + 1,
+                        self.cfg.label()
+                    );
+                }
+
+                if (bi + 1) % window == 0 || bi + 1 == n_blocks {
+                    if let Some(w) = win.take() {
+                        // A one-block tail has nothing to reconstruct
+                        // jointly; it keeps its layer-wise pass.
+                        if w.frozen.len() >= 2 {
+                            x_hat = self.refine_window(
+                                model,
+                                &f,
+                                &mut st,
+                                w,
+                                allocation.as_ref(),
+                                policy.as_ref(),
+                            )?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?;
+
+        let RunState { qmodel, adjuncts, base_weights, mut report } = st;
         report.total_s = total.seconds();
         let base_model = if base_weights.is_empty() {
             None
@@ -311,6 +484,124 @@ impl Pipeline {
             Some(base)
         };
         Ok(PipelineOutput { model: qmodel, base_model, adjuncts, allocation, report })
+    }
+
+    /// The effective CBQ window for a run over `n_blocks` blocks: `0`/`1`
+    /// mean layer-wise, and anything beyond the quantized block count
+    /// clamps — loudly, it is almost certainly a flag mistake — to one
+    /// whole-model window (which reproduces the layer-wise bytes; see
+    /// [`Pipeline::refine_window`]).
+    fn effective_window(&self, n_blocks: usize) -> usize {
+        let w = self.cfg.cbq_window.max(1);
+        if w > n_blocks && n_blocks > 0 {
+            eprintln!(
+                "[pipeline] cbq window {w} exceeds the {n_blocks} quantized block(s) — \
+                 clamping to {n_blocks}"
+            );
+            return n_blocks;
+        }
+        w
+    }
+
+    /// CBQ cross-block refinement of one window `[start, start+W)`.
+    ///
+    /// The layer-wise pass compensates each layer against the *global*
+    /// full-precision stream. The cross-block pass instead reconstructs
+    /// the whole window against its **local full-precision reference**:
+    /// the original (unquantized) window weights applied to the window's
+    /// actual quantized-stream entry `x̂_start`. Concretely:
+    ///
+    /// 1. propagate `x̂_start` through the original window weights,
+    ///    capturing per-linear reference activations `X_ref`;
+    /// 2. re-reconstruct every window layer from its original weights
+    ///    with `(X, X̂) = (X_ref, X̂_frozen)`, where `X̂_frozen` are the
+    ///    pass-1 quantized-stream captures — the same name-derived seeds
+    ///    and bit widths as pass 1, and every layer independent given
+    ///    those frozen streams, so all `W × 7` layers fan out in one
+    ///    pool dispatch (index-ordered: bit-identical for every thread
+    ///    count);
+    /// 3. re-propagate `x̂` through the refined window so the next window
+    ///    calibrates against the refined weights.
+    ///
+    /// QEP cells therefore compensate exactly the error the window itself
+    /// introduces (`δ = X_ref − X̂_frozen`; zero at the window's first
+    /// linear, genuinely informative at every later one), and AWQ
+    /// recalibrates its scales on the local reference. Base methods whose
+    /// objective never consults the full-precision stream (RTN, GPTQ,
+    /// QuIP — see `Method::base_uses_quantized_acts`) are *provably
+    /// invariant* under this refinement: their pass-2 inputs are
+    /// bit-identical to pass 1, which `tests/pipeline_integration.rs`
+    /// pins as a correctness anchor. Windows starting at block 0 are
+    /// skipped by the caller for the same reason — there `x̂_start`
+    /// equals the full-precision entry, making `X_ref` equal to the
+    /// pass-1 captures and the whole pass a bitwise no-op.
+    fn refine_window(
+        &self,
+        model: &Model,
+        f: &Forward,
+        st: &mut RunState,
+        win: CbqWindow,
+        allocation: Option<&Allocation>,
+        policy: Option<&AlphaPolicy>,
+    ) -> Result<Mat> {
+        let CbqWindow { start, entry, frozen } = win;
+        let n = frozen.len();
+
+        // 1. Local full-precision reference over the original weights.
+        let prop = Stopwatch::start();
+        let mut ref_caps = Vec::with_capacity(n);
+        let mut xr = entry.clone();
+        for b in &model.blocks[start..start + n] {
+            let (nx, cap) = f.block(b, &xr);
+            ref_caps.push(cap);
+            xr = nx;
+        }
+        st.report.propagation_s += prop.seconds();
+
+        // 2. Joint re-reconstruction, every window layer from the
+        //    original weights against (reference, frozen) streams.
+        let jobs: Vec<(usize, &str)> = (0..n)
+            .flat_map(|k| BlockWeights::LINEAR_NAMES.iter().map(move |&short| (k, short)))
+            .collect();
+        let outs = self.pool.par_map(jobs.len(), |i| {
+            let (k, short) = jobs[i];
+            self.compute_layer(
+                model,
+                start + k,
+                short,
+                ref_caps[k].input_for(short),
+                frozen[k].input_for(short),
+                policy,
+                Self::layer_bits(allocation, start + k, short),
+            )
+        });
+        for (&(k, short), out) in jobs.iter().zip(outs) {
+            let (w_hat, adj, layer_report) = out?;
+            Self::install(st, start + k, short, w_hat, adj);
+            let slot = st
+                .report
+                .layers
+                .iter_mut()
+                .find(|l| l.name == layer_report.name)
+                .expect("pass 1 reported every window layer");
+            *slot = layer_report;
+        }
+
+        // 3. Re-propagate the quantized stream through the refined window.
+        let prop = Stopwatch::start();
+        let mut xh = entry;
+        for b in &st.qmodel.blocks[start..start + n] {
+            xh = f.block(b, &xh).0;
+        }
+        st.report.propagation_s += prop.seconds();
+        if self.cfg.verbose {
+            eprintln!(
+                "[pipeline] cbq window blocks {}..{} jointly re-reconstructed",
+                start + 1,
+                start + n
+            );
+        }
+        Ok(xh)
     }
 
     /// The allocated width for one linear (`None` ⇒ uniform
@@ -369,11 +660,11 @@ impl Pipeline {
     /// Install one quantized linear into the streaming model. The adjunct
     /// (if any) is folded into the propagated weight so downstream layers
     /// calibrate against the corrected stream; the on-grid base weight and
-    /// the factors themselves are kept aside for the artifact.
+    /// the factors themselves are kept aside for the artifact. An upsert:
+    /// a CBQ refinement pass re-installs layers the layer-wise pass
+    /// already produced, replacing their base weights in place.
     fn install(
-        qmodel: &mut Model,
-        adjuncts: &mut BTreeMap<String, LowRankAdjunct>,
-        base_weights: &mut Vec<(usize, String, Mat)>,
+        st: &mut RunState,
         block: usize,
         short: &str,
         w_hat: Mat,
@@ -383,11 +674,14 @@ impl Pipeline {
             Some(adj) => {
                 let name = format!("blocks.{block}.{short}");
                 let w_eff = adj.add_to(&w_hat);
-                base_weights.push((block, short.to_string(), w_hat));
-                adjuncts.insert(name, adj);
-                *qmodel.blocks[block].linear_mut(short) = w_eff;
+                match st.base_weights.iter_mut().find(|(b, s, _)| *b == block && s == short) {
+                    Some(slot) => slot.2 = w_hat,
+                    None => st.base_weights.push((block, short.to_string(), w_hat)),
+                }
+                st.adjuncts.insert(name, adj);
+                *st.qmodel.blocks[block].linear_mut(short) = w_eff;
             }
-            None => *qmodel.blocks[block].linear_mut(short) = w_hat,
+            None => *st.qmodel.blocks[block].linear_mut(short) = w_hat,
         }
     }
 
@@ -396,7 +690,9 @@ impl Pipeline {
     /// work the pool fans out, so it must not touch shared state. It reads
     /// only the layer's own weights and the captured activation streams;
     /// the per-layer seed derives from the layer *name*, keeping results
-    /// independent of scheduling order.
+    /// independent of scheduling order. (The CBQ refinement pass calls
+    /// this with the *original* model and its window-local streams — same
+    /// unit of work, different calibration target.)
     fn compute_layer(
         &self,
         qmodel: &Model,
@@ -708,5 +1004,55 @@ mod tests {
         assert!(out.report.hessian_s() > 0.0);
         assert!(out.report.quant_s() > 0.0);
         assert!(out.report.propagation_s > 0.0);
+    }
+
+    #[test]
+    fn cbq_window_labels_and_default() {
+        let cfg = PipelineConfig::default();
+        assert_eq!(cfg.cbq_window, 1);
+        assert!(!cfg.label().contains(" W"), "{}", cfg.label());
+        let cfg = PipelineConfig { cbq_window: 3, ..Default::default() };
+        assert!(cfg.label().ends_with(" W3"), "{}", cfg.label());
+    }
+
+    #[test]
+    fn cbq_refines_qep_windows_past_the_first() {
+        // 4 blocks, window 2: window [0,2) is a provable no-op (the
+        // quantized and full-precision streams share the model input),
+        // window [2,4) genuinely re-reconstructs against its local
+        // full-precision reference.
+        let mut cfg = ModelConfig::new("unit", 16, 4, 2, 32);
+        cfg.seq_len = 8;
+        let model = Model::random(&cfg, 1);
+        let mut rng = Rng::new(2);
+        let tokens: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+        let go = |w: usize| {
+            run(
+                &model,
+                &tokens,
+                PipelineConfig {
+                    quant: QuantConfig::int(3),
+                    qep_alpha: Some(0.5),
+                    cbq_window: w,
+                    ..Default::default()
+                },
+            )
+        };
+        let lw = go(1);
+        let cbq = go(2);
+        // First window: byte-identical to the layer-wise schedule.
+        assert_eq!(lw.model.blocks[0].wq, cbq.model.blocks[0].wq);
+        assert_eq!(lw.model.blocks[1].down, cbq.model.blocks[1].down);
+        // Second window: the joint pass moved the QEP cells.
+        assert!(
+            lw.model.blocks[2].wo.sub(&cbq.model.blocks[2].wo).frob() > 0.0
+                || lw.model.blocks[2].down.sub(&cbq.model.blocks[2].down).frob() > 0.0,
+            "cbq window [2,4) left every +QEP layer untouched"
+        );
+        // The report still holds exactly one entry per layer, in pass-1
+        // order, with refined stats swapped in place.
+        assert_eq!(cbq.report.layers.len(), 4 * 7);
+        assert_eq!(cbq.report.layers[0].name, "blocks.0.attn.wq");
+        assert_eq!(cbq.report.layers[2 * 7].name, "blocks.2.attn.wq");
     }
 }

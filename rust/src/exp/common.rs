@@ -267,6 +267,11 @@ pub struct Cell {
     /// [`Cell::derived_seed`], so allocated cells share their calibration
     /// stream with their uniform-bits twins.
     pub budget: Option<BudgetSpec>,
+    /// CBQ cross-block window (`1` = layer-wise). A compared axis like
+    /// method/bits/±QEP: deliberately NOT part of [`Cell::derived_seed`],
+    /// so every window size shares its calibration stream with the
+    /// layer-wise baseline.
+    pub cbq_window: usize,
 }
 
 impl Cell {
@@ -280,6 +285,7 @@ impl Cell {
             calib_flavor: default_calib(method),
             lowrank_rank: 0,
             budget: None,
+            cbq_window: 1,
         }
     }
 
@@ -314,6 +320,7 @@ impl Cell {
             max_blocks: None,
             lowrank_rank: self.lowrank_rank,
             bit_budget: self.budget,
+            cbq_window: self.cbq_window,
             seed: self.derived_seed(),
             verbose: false,
             threads: 0,
@@ -350,6 +357,9 @@ impl Cell {
         }
         if let Some(spec) = &self.budget {
             label.push_str(&format!(" B{}/{}", spec.budget.render(), spec.alloc.name()));
+        }
+        if self.cbq_window > 1 {
+            label.push_str(&format!(" W{}", self.cbq_window));
         }
         label
     }
@@ -653,6 +663,7 @@ pub fn render_sweep(
         SweepId::Appendix => super::tables::render_appendix(params, recs, rcfg),
         SweepId::Lowrank => super::tables::render_lowrank(params, recs, rcfg),
         SweepId::Budget => super::tables::render_budget(params, recs, rcfg),
+        SweepId::Cbq => super::tables::render_cbq(params, recs, rcfg),
         SweepId::All => {
             for part in SweepId::all_parts() {
                 render_sweep(part, params, recs, rcfg)?;
@@ -956,6 +967,9 @@ mod tests {
             alloc: crate::quant::Alloc::Dp,
         });
         assert_eq!(a.derived_seed(), bg.derived_seed(), "±budget must share calibration");
+        let mut cw = a.clone();
+        cw.cbq_window = 3;
+        assert_eq!(a.derived_seed(), cw.derived_seed(), "cbq windows must share calibration");
         // Data identity and replicates must split streams.
         let mut c = a.clone();
         c.calib_flavor = Flavor::Wiki;
@@ -1004,12 +1018,15 @@ mod tests {
         let mut lr = cell.clone();
         lr.lowrank_rank = 4;
         assert_eq!(lr.label(), "tiny-s INT3 GPTQ +QEP +LR4");
-        let mut bg = cell;
+        let mut bg = cell.clone();
         bg.budget = Some(BudgetSpec {
             budget: crate::quant::BitBudget::parse("2.5").unwrap(),
             alloc: crate::quant::Alloc::Dp,
         });
         assert_eq!(bg.label(), "tiny-s INT3 GPTQ +QEP B2.5/dp");
+        let mut cw = cell;
+        cw.cbq_window = 2;
+        assert_eq!(cw.label(), "tiny-s INT3 GPTQ +QEP W2");
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub enum SweepId {
     Appendix,
     Lowrank,
     Budget,
+    Cbq,
     All,
 }
 
@@ -59,6 +60,7 @@ impl SweepId {
             SweepId::Appendix => "appendix",
             SweepId::Lowrank => "lowrank",
             SweepId::Budget => "budget",
+            SweepId::Cbq => "cbq",
             SweepId::All => "all",
         }
     }
@@ -78,13 +80,14 @@ impl SweepId {
             }
             "lowrank" | "lqer" | "qera" => Some(SweepId::Lowrank),
             "budget" | "mixed" | "mixed-precision" => Some(SweepId::Budget),
+            "cbq" | "cross-block" => Some(SweepId::Cbq),
             "all" => Some(SweepId::All),
             _ => None,
         }
     }
 
     /// The concrete sweeps `all` expands to, in execution order.
-    pub fn all_parts() -> [SweepId; 8] {
+    pub fn all_parts() -> [SweepId; 9] {
         [
             SweepId::Table12,
             SweepId::Table3,
@@ -94,6 +97,7 @@ impl SweepId {
             SweepId::Appendix,
             SweepId::Lowrank,
             SweepId::Budget,
+            SweepId::Cbq,
         ]
     }
 
@@ -111,9 +115,11 @@ pub fn wants(sweep: SweepId) -> (Vec<Flavor>, Vec<TaskFamily>) {
     match sweep {
         SweepId::Table12 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
         SweepId::Appendix => (Flavor::all().to_vec(), TaskFamily::all().to_vec()),
-        SweepId::Table4 | SweepId::AblationAlpha | SweepId::Lowrank | SweepId::Budget => {
-            (vec![Flavor::Wiki], vec![])
-        }
+        SweepId::Table4
+        | SweepId::AblationAlpha
+        | SweepId::Lowrank
+        | SweepId::Budget
+        | SweepId::Cbq => (vec![Flavor::Wiki], vec![]),
         SweepId::Fig3 => (vec![Flavor::Wiki], TaskFamily::all().to_vec()),
         SweepId::Table3 | SweepId::Fig2 | SweepId::All => (vec![], vec![]),
     }
@@ -142,6 +148,32 @@ pub fn lowrank_methods() -> [Method; 2] {
 /// The methods of the mixed-precision budget sweep.
 pub fn budget_methods() -> [Method; 2] {
     [Method::Rtn, Method::Gptq]
+}
+
+/// The methods of the cross-block (CBQ) sweep: one whose base objective
+/// is provably invariant under window refinement (GPTQ calibrates on the
+/// quantized stream, so its `base` rows are flat across windows — an
+/// in-table correctness anchor) and one that genuinely recalibrates on
+/// the window's local full-precision reference (AWQ).
+pub fn cbq_methods() -> [Method; 2] {
+    [Method::Gptq, Method::Awq]
+}
+
+/// The window segment of a cbq cell ID: `w{W}`. Window 1 — the
+/// layer-wise baseline row — is enumerated and rendered like any other.
+pub fn window_name(window: usize) -> String {
+    format!("w{window}")
+}
+
+/// Inverse of [`window_name`]. Strict — rejects `w0`, empty digits, and
+/// leading zeros so `parse ∘ id` stays the identity.
+fn parse_window(s: &str) -> Option<usize> {
+    let digits = s.strip_prefix('w')?;
+    let window: usize = digits.parse().ok()?;
+    if window == 0 || digits != window.to_string() {
+        return None;
+    }
+    Some(window)
 }
 
 /// The variant segment of an allocated budget cell ID: the allocator
@@ -224,6 +256,10 @@ pub struct PlanParams {
     /// budgets sharing a floor) so every budget row reads against a
     /// same-calibration uniform reference.
     pub budgets: Vec<BitBudget>,
+    /// Cross-block window sizes of the cbq sweep. Window 1 is the
+    /// layer-wise baseline row every wider window is read against, so
+    /// the defaults always include it.
+    pub cbq_windows: Vec<usize>,
 }
 
 impl PlanParams {
@@ -248,6 +284,7 @@ impl PlanParams {
                 BitBudget::from_decibits(30),
                 BitBudget::from_decibits(35),
             ],
+            cbq_windows: vec![1, 2, 3],
         }
     }
 
@@ -312,6 +349,7 @@ impl PlanParams {
             p.lowrank_ranks = vec![2];
             p.lowrank_settings = vec![QuantConfig::int(3)];
             p.budgets = vec![BitBudget::from_decibits(25)];
+            p.cbq_windows = vec![1, 2];
         }
         if let Some(spec) = args.get("budgets") {
             // Strict like --sizes/--ranks: every token must be a valid
@@ -329,6 +367,23 @@ impl PlanParams {
                 budgets.push(b);
             }
             p.budgets = budgets;
+        }
+        if let Some(spec) = args.get("windows") {
+            // Strict like --budgets: every token must be a positive
+            // integer, and duplicates are rejected (they would enumerate
+            // duplicate cell IDs).
+            let mut windows = Vec::new();
+            for tok in spec.split(',') {
+                let w: usize = match tok.parse() {
+                    Ok(w) if w > 0 => w,
+                    _ => bail!("--windows expects positive integers like 1,2,4, got '{tok}'"),
+                };
+                if windows.contains(&w) {
+                    bail!("--windows lists {w} twice");
+                }
+                windows.push(w);
+            }
+            p.cbq_windows = windows;
         }
         if let Some(spec) = args.get("ranks") {
             // Same strictness as --sizes: every token must be a positive
@@ -465,6 +520,14 @@ impl PlanCell {
                     c.size.name()
                 ),
             },
+            (SweepId::Cbq, CellTask::Quant(c)) => format!(
+                "cbq/{}/{}/{}/{}/{}",
+                c.quant.label(),
+                c.method.name(),
+                window_name(c.cbq_window),
+                qep_str(c.qep),
+                c.size.name()
+            ),
             (sweep, task) => unreachable!("no ID form for {sweep:?} / {task:?}"),
         }
     }
@@ -541,6 +604,16 @@ impl PlanCell {
                 );
                 cell.lowrank_rank = rank;
                 Some(PlanCell { sweep: SweepId::Lowrank, task: CellTask::Quant(cell) })
+            }
+            ["cbq", q, m, w, e, s] => {
+                let mut cell = Cell::new(
+                    Size::from_name(s)?,
+                    Method::from_name(m)?,
+                    QuantConfig::from_label(q)?,
+                    parse_qep(e)?,
+                );
+                cell.cbq_window = parse_window(w)?;
+                Some(PlanCell { sweep: SweepId::Cbq, task: CellTask::Quant(cell) })
             }
             ["budget", "uni", q, m, e, s] => {
                 let cell = Cell::new(
@@ -732,6 +805,27 @@ pub fn manifest(sweep: SweepId, params: &PlanParams) -> Result<Vec<PlanCell>> {
                             cell.budget = Some(BudgetSpec { budget: b, alloc: Alloc::Dp });
                             cells.push(PlanCell {
                                 sweep: SweepId::Budget,
+                                task: CellTask::Quant(cell),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        SweepId::Cbq => {
+            // method × ±QEP × window × sizes, window-minor so every
+            // method's window column reads off adjacent manifest rows.
+            // One quant setting (INT3, carried in the ID for forward
+            // compatibility); window 1 is the layer-wise baseline row.
+            let q = QuantConfig::int(3);
+            for m in cbq_methods() {
+                for qep in [false, true] {
+                    for &w in &params.cbq_windows {
+                        for &s in &params.sizes {
+                            let mut cell = Cell::new(s, m, q, qep);
+                            cell.cbq_window = w;
+                            cells.push(PlanCell {
+                                sweep: SweepId::Cbq,
                                 task: CellTask::Quant(cell),
                             });
                         }

@@ -530,6 +530,46 @@ pub fn render_budget(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) ->
     persist_to(&rcfg.results_dir, "budget", &t)
 }
 
+/// Render the CBQ cross-block sweep from records: wiki PPL for
+/// `methods × ±QEP × windows` at INT3. Window `w1` is the layer-wise
+/// baseline row. Base GPTQ never reads the full-precision reference
+/// stream, so windowed refinement is a bitwise no-op for it and its
+/// rows must match the `w1` row exactly — an in-table correctness
+/// anchor — while AWQ and every +qep variant genuinely recalibrate
+/// against the window's re-propagated reference.
+pub fn render_cbq(params: &PlanParams, recs: &RecordMap, rcfg: &RenderCfg) -> Result<()> {
+    let q = QuantConfig::int(3);
+    let mut hdr = vec!["Method".to_string(), "QEP".to_string(), "Window".to_string()];
+    hdr.extend(params.sizes.iter().map(|s| s.name().to_string()));
+    let mut t = Table::new(
+        "CBQ cross-block reconstruction: wiki PPL by window size (INT3)",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (mi, m) in plan::cbq_methods().into_iter().enumerate() {
+        if mi > 0 {
+            t.rule();
+        }
+        for qep in [false, true] {
+            for &w in &params.cbq_windows {
+                let mut row = vec![
+                    m.name().to_string(),
+                    if qep { "yes" } else { "no" }.to_string(),
+                    plan::window_name(w),
+                ];
+                for &s in &params.sizes {
+                    let mut cell = Cell::new(s, m, q, qep);
+                    cell.cbq_window = w;
+                    let pc = PlanCell { sweep: SweepId::Cbq, task: CellTask::Quant(cell) };
+                    row.push(fmt_ppl(recs.get(&pc)?.ppl_for("wiki")));
+                }
+                t.row(row);
+            }
+        }
+    }
+    println!("{}", t.render());
+    persist_to(&rcfg.results_dir, "cbq", &t)
+}
+
 /// Table 1 (+ Fig. 1 data) and Table 2: single-process convenience
 /// driver (enumerate → run → render in one call).
 pub fn table1_and_2(env: &mut ExpEnv, sizes: &[Size]) -> Result<()> {

@@ -425,6 +425,16 @@ pub fn heartbeat_interval_ms(lease_ms: u64) -> u64 {
     (lease_ms / 4).max(10)
 }
 
+/// Socket read timeout: a fraction of the lease, strictly above the
+/// heartbeat interval, so a healthy worker's beats (due every
+/// quarter-lease) always land with margin — instead of the read
+/// blocking for the full lease window and racing heartbeat delivery
+/// against lease expiry. Floored at 100 ms so tiny test leases don't
+/// turn every frame gap into a spurious disconnect.
+pub fn read_timeout_ms(lease_ms: u64) -> u64 {
+    (lease_ms / 3).max(100)
+}
+
 /// Run the coordinator over an already-bound listener until every cell
 /// is durably recorded (returns `Ok`) or the sweep hits an
 /// unrecoverable error. Workers that die mid-cell — missed heartbeats
@@ -489,11 +499,13 @@ enum ConnEnd {
 
 fn handle_conn(stream: TcpStream, sh: &Shared) {
     stream.set_nodelay(true).ok();
-    // A healthy peer is never silent for a full lease window (waiting
-    // workers re-request, busy workers heartbeat), so a read timeout
-    // doubles as liveness detection for half-dead connections.
+    // A healthy peer is never silent for more than a heartbeat interval
+    // (waiting workers re-request, busy workers heartbeat every
+    // quarter-lease), so a read timeout just above that cadence doubles
+    // as liveness detection for half-dead connections without ever
+    // holding the socket for a full lease window.
     stream
-        .set_read_timeout(Some(Duration::from_millis(sh.lease_ms.max(100))))
+        .set_read_timeout(Some(Duration::from_millis(read_timeout_ms(sh.lease_ms))))
         .ok();
     let mut worker: Option<u64> = None;
     let end = conn_loop(&stream, sh, &mut worker);
@@ -526,8 +538,8 @@ fn conn_loop(mut stream: &TcpStream, sh: &Shared, worker: &mut Option<u64>) -> C
                 ) =>
             {
                 return ConnEnd::Dead(format!(
-                    "peer silent for a full lease window ({} ms)",
-                    sh.lease_ms
+                    "peer silent past the read timeout ({} ms)",
+                    read_timeout_ms(sh.lease_ms)
                 ));
             }
             Err(e @ (WireError::Io(_) | WireError::Truncated { .. })) => {

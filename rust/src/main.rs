@@ -15,7 +15,7 @@
 //! ```
 
 use anyhow::{anyhow, bail, Context, Result};
-use qep::coordinator::{Pipeline, PipelineConfig};
+use qep::coordinator::{CBQ_WINDOW_META_KEY, Pipeline, PipelineConfig};
 use qep::eval::{perplexity, TaskFamily, TaskSet};
 use qep::exp::{self, plan, ExpEnv, PlanCell, PlanParams, RenderCfg, ShardSpec, SweepId};
 use qep::io::results;
@@ -45,7 +45,7 @@ fn main() {
 const GEN_DATA_FLAGS: &[&str] = &["threads", "out", "tokens"];
 const QUANTIZE_FLAGS: &[&str] = &[
     "threads", "model", "method", "bits", "group", "qep", "calib", "seed", "out", "artifacts",
-    "verbose", "lowrank-rank", "bit-budget", "alloc",
+    "verbose", "lowrank-rank", "bit-budget", "alloc", "cbq-window",
 ];
 const EVAL_FLAGS: &[&str] = &["threads", "model-file", "flavor", "tasks", "chunk", "artifacts"];
 /// `repro exp <id>` (run / shard-run). Plan flags + execution flags.
@@ -63,6 +63,7 @@ const EXP_RUN_FLAGS: &[&str] = &[
     "seeds",
     "ranks",
     "budgets",
+    "windows",
     "shard",
     "out",
     "results",
@@ -70,14 +71,15 @@ const EXP_RUN_FLAGS: &[&str] = &[
     "resume",
 ];
 /// `repro exp plan <id>`: plan flags only (nothing runs or renders).
-const EXP_PLAN_FLAGS: &[&str] =
-    &["threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "budgets", "shard"];
+const EXP_PLAN_FLAGS: &[&str] = &[
+    "threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "budgets", "windows", "shard",
+];
 /// `repro exp status <id>`: plan flags + the record directory (+ an
 /// optional shard slice to report on). `--connect` instead asks a live
 /// fleet coordinator; `--watch` re-polls either source until done.
 const EXP_STATUS_FLAGS: &[&str] = &[
-    "threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "budgets", "shard", "out",
-    "connect", "watch",
+    "threads", "sizes", "fast", "bits", "blocks", "seeds", "ranks", "budgets", "windows", "shard",
+    "out", "connect", "watch",
 ];
 /// `repro exp serve <id>`: the fleet coordinator — run flags minus
 /// `--shard` (the fleet assigns cells dynamically) plus the listen
@@ -92,6 +94,7 @@ const EXP_SERVE_FLAGS: &[&str] = &[
     "seeds",
     "ranks",
     "budgets",
+    "windows",
     "out",
     "results",
     "stable-timings",
@@ -116,6 +119,7 @@ const EXP_MERGE_FLAGS: &[&str] = &[
     "seeds",
     "ranks",
     "budgets",
+    "windows",
     "out",
     "results",
     "stable-timings",
@@ -174,12 +178,12 @@ USAGE:
   repro gen-data [--out artifacts/data] [--tokens 262144]
   repro quantize --model <tiny-s|tiny-m|tiny-l|path.qtz> --method <rtn|gptq|awq|quip>
                  [--bits <2|3|4|8> | --bit-budget B [--alloc dp|greedy]] [--group N]
-                 [--qep <alpha>] [--lowrank-rank R]
+                 [--qep <alpha>] [--lowrank-rank R] [--cbq-window W]
                  [--calib <wiki|ptb|c4>] [--seed N] [--threads N] [--out out.qtz]
   repro eval     --model-file <path.qtz> [--flavor wiki] [--tasks] [--chunk N]
-  repro exp      <fig1|fig2|fig3|table1..table10|ablation-alpha|appendix|lowrank|budget|all>
+  repro exp      <fig1..fig3|table1..table10|ablation-alpha|appendix|lowrank|budget|cbq|all>
                  [--sizes s,m,l] [--fast] [--ranks 4,16] [--budgets 2.5,3.0,3.5]
-                 [--artifacts DIR]
+                 [--windows 1,2,3] [--artifacts DIR]
                  [--results DIR] [--shard i/N] [--out DIR] [--resume]
                  [--stable-timings]
   repro exp plan  <id> [--fast] [--sizes ...] [--shard i/N]
@@ -245,6 +249,27 @@ BUDGET (Hessian-guided mixed-precision bit allocation):
                   baseline sharing the same calibration stream — the
                   rendered table reads allocated vs uniform PPL at the
                   same budget.
+
+CBQ (cross-block reconstruction):
+  --cbq-window W  (quantize) Reconstruct jointly over tumbling windows
+                  of W transformer blocks instead of strictly one layer
+                  at a time: every window past the first gets its
+                  layer-wise pass first, then all of its linears are
+                  re-reconstructed together against the full-precision
+                  reference re-propagated from the window's quantized
+                  entry activations — CBQ's cross-block error
+                  compensation on top of QEP's per-layer correction.
+                  W=1 (default) is exactly the layer-wise schedule;
+                  windows larger than the quantized block count clamp
+                  loudly to one whole-model window (which provably
+                  reproduces the layer-wise bytes). Composes with
+                  --qep, --lowrank-rank and --bit-budget; written to
+                  the .qtz meta (`cbq_window`) when W > 1. Output stays
+                  bit-identical for every --threads value.
+  --windows a,b,... (exp cbq) Window sizes the cross-block sweep
+                  enumerates (default 1,2,3; --fast: 1,2); w1 renders
+                  as the layer-wise baseline row next to each windowed
+                  variant.
 
 SHARDING (distributed experiment sweeps):
   Every `exp` sweep first enumerates a stable, ordered manifest of cell
@@ -465,6 +490,13 @@ fn quantize(args: &Args) -> Result<()> {
             .parse()
             .map_err(|_| anyhow!("--lowrank-rank expects a non-negative integer, got '{v}'"))?,
     };
+    let cbq_window: usize = match args.get("cbq-window") {
+        None => 1,
+        Some(v) => match v.parse() {
+            Ok(w) if w >= 1 => w,
+            _ => bail!("--cbq-window expects a positive integer (1 = layer-wise), got '{v}'"),
+        },
+    };
 
     let mut env = ExpEnv::new(args.get_or("artifacts", "artifacts"));
     let calib = env.calib_tokens(flavor, model.cfg.seq_len, seed);
@@ -475,6 +507,7 @@ fn quantize(args: &Args) -> Result<()> {
         method,
         qep_alpha,
         lowrank_rank,
+        cbq_window,
         seed,
         verbose: args.has("verbose"),
         bit_budget: bit_budget.map(|budget| qep::quant::BudgetSpec { budget, alloc }),
@@ -502,6 +535,9 @@ fn quantize(args: &Args) -> Result<()> {
         if let Some(a) = &out.allocation {
             qep::quant::budget::write_allocation_meta(&mut tf.meta, a);
         }
+        if cbq_window > 1 {
+            tf.meta.set(CBQ_WINDOW_META_KEY, qep::util::json::Json::Num(cbq_window as f64));
+        }
         tf.save(path)?;
         println!("saved {path}");
     }
@@ -521,8 +557,11 @@ fn eval(args: &Args) -> Result<()> {
         qep::qep::materialize_into_model(&mut model, &adjuncts)?;
         println!("applied {} low-rank adjunct(s)", adjuncts.len());
     }
-    if let Some(a) = qep::quant::budget::read_allocation_meta(&tf.meta) {
+    if let Some(a) = qep::quant::budget::read_allocation_meta(&tf.meta)? {
         println!("mixed-precision: {}", a.summary());
+    }
+    if let Some(w) = tf.meta.get(CBQ_WINDOW_META_KEY).and_then(|v| v.as_f64()) {
+        println!("cbq window: {w}");
     }
     let flavor = Flavor::from_name(args.get_or("flavor", "wiki"))
         .ok_or_else(|| anyhow!("unknown flavor"))?;
@@ -562,7 +601,7 @@ fn serve_bench(args: &Args) -> Result<()> {
         (env.model(size), None)
     } else {
         let tf = qep::io::TensorFile::load(spec).with_context(|| format!("loading model {spec}"))?;
-        let alloc = qep::quant::budget::read_allocation_meta(&tf.meta);
+        let alloc = qep::quant::budget::read_allocation_meta(&tf.meta)?;
         (Model::from_tensor_file(&tf)?, alloc)
     };
     let sessions = args.get_usize("sessions", 4).max(1);
@@ -626,7 +665,7 @@ fn sweep_from(args: &Args, pos: usize) -> Result<(SweepId, PlanParams)> {
     let name = args.positional.get(pos).ok_or_else(|| {
         anyhow!(
             "missing experiment id (fig1..fig3, table1..table10, ablation-alpha, appendix, \
-             lowrank, budget, all)"
+             lowrank, budget, cbq, all)"
         )
     })?;
     let sweep = SweepId::from_name(name)

@@ -74,7 +74,12 @@ impl<'a> Forward<'a> {
         x
     }
 
-    /// One block, returning output and captured per-linear inputs.
+    /// One block, returning output and captured per-linear inputs. This
+    /// is the unit of the pipeline's producer stage: the calibration
+    /// producer walks `block` one block ahead of the quantizing consumer
+    /// (`coordinator::pipeline`), so it must stay a pure function of
+    /// `(b, x)` — no internal state, no scheduling-dependent reductions —
+    /// for the pipelined run to be byte-identical to the serial one.
     pub fn block(&self, b: &BlockWeights, x: &Mat) -> (Mat, BlockCapture) {
         let c = self.cfg;
         let attn_in = rmsnorm(x, &b.attn_norm);

@@ -25,7 +25,7 @@
 use crate::linalg::Mat;
 use crate::quant::grid::{GroupGrid, QuantConfig};
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 /// Narrowest / widest grid the allocator will assign (INT2..INT8 — the
@@ -397,22 +397,50 @@ pub fn write_allocation_meta(meta: &mut Json, alloc: &Allocation) {
     meta.set(LAYER_BITS_META_KEY, layers);
 }
 
-/// Read an allocation back from `.qtz` meta; `None` when the artifact
-/// was produced without a bit budget.
-pub fn read_allocation_meta(meta: &Json) -> Option<Allocation> {
-    let budget = BitBudget::parse_strict(meta.get(BUDGET_META_KEY)?.as_str()?)?;
-    let alloc = Alloc::from_name(meta.get(BUDGET_ALLOC_META_KEY)?.as_str()?)?;
-    let avg_bits = meta.get(BUDGET_AVG_META_KEY)?.as_f64()?;
+/// Read an allocation back from `.qtz` meta. `Ok(None)` when the
+/// artifact was produced without a bit budget (no budget key at all);
+/// a loud error when the budget keys are present but malformed. The
+/// per-layer widths in particular are validated as integers in
+/// `MIN_BITS..=MAX_BITS` — an `as u32` cast here would silently
+/// truncate a hand-edited fractional width and wrap a negative or huge
+/// one into a grid the pipeline never quantized on.
+pub fn read_allocation_meta(meta: &Json) -> Result<Option<Allocation>> {
+    let budget_raw = match meta.get(BUDGET_META_KEY) {
+        None => return Ok(None),
+        Some(v) => v,
+    };
+    let budget = budget_raw
+        .as_str()
+        .and_then(BitBudget::parse_strict)
+        .ok_or_else(|| anyhow!("invalid '{BUDGET_META_KEY}' in .qtz meta (want e.g. \"2.5\")"))?;
+    let alloc = meta
+        .get(BUDGET_ALLOC_META_KEY)
+        .and_then(|v| v.as_str())
+        .and_then(Alloc::from_name)
+        .ok_or_else(|| anyhow!("invalid or missing '{BUDGET_ALLOC_META_KEY}' in .qtz meta"))?;
+    let avg_bits = meta
+        .get(BUDGET_AVG_META_KEY)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("invalid or missing '{BUDGET_AVG_META_KEY}' in .qtz meta"))?;
     let mut bits = BTreeMap::new();
-    match meta.get(LAYER_BITS_META_KEY)? {
-        Json::Obj(m) => {
+    match meta.get(LAYER_BITS_META_KEY) {
+        Some(Json::Obj(m)) => {
             for (name, v) in m {
-                bits.insert(name.clone(), v.as_f64()? as u32);
+                let raw = v.as_f64().ok_or_else(|| {
+                    anyhow!("layer '{name}' has a non-numeric bit width in .qtz meta")
+                })?;
+                if raw.fract() != 0.0 || raw < MIN_BITS as f64 || raw > MAX_BITS as f64 {
+                    bail!(
+                        "layer '{name}' has invalid bit width {raw} in .qtz meta \
+                         (supported: integers {MIN_BITS}..={MAX_BITS})"
+                    );
+                }
+                bits.insert(name.clone(), raw as u32);
             }
         }
-        _ => return None,
+        _ => bail!("'{LAYER_BITS_META_KEY}' missing or not an object in .qtz meta"),
     }
-    Some(Allocation { budget, alloc, bits, avg_bits })
+    Ok(Some(Allocation { budget, alloc, bits, avg_bits }))
 }
 
 #[cfg(test)]
@@ -567,13 +595,33 @@ mod tests {
         let mut meta = Json::obj();
         write_allocation_meta(&mut meta, &a);
         let text = meta.dump();
-        let back = read_allocation_meta(&Json::parse(&text).unwrap()).unwrap();
+        let back = read_allocation_meta(&Json::parse(&text).unwrap()).unwrap().unwrap();
         assert_eq!(back, a);
         // Writing the read-back allocation again is byte-identical.
         let mut meta2 = Json::obj();
         write_allocation_meta(&mut meta2, &back);
         assert_eq!(meta2.dump(), text);
-        // Plain meta without budget keys reads as None.
-        assert_eq!(read_allocation_meta(&Json::obj()), None);
+        // Plain meta without budget keys reads as None (not an error).
+        assert!(read_allocation_meta(&Json::obj()).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_layer_bits_error_loudly_naming_the_layer() {
+        let costs = [cost("blocks.0.attn.wq", 256, &[4.0, 1.0])];
+        let a = allocate(&costs, BitBudget::from_decibits(30), Alloc::Dp).unwrap();
+        let mut meta = Json::obj();
+        write_allocation_meta(&mut meta, &a);
+        // Hand-edit the layer's width to values no grid represents:
+        // fractional (an `as u32` would truncate), negative or huge
+        // (would wrap), and integers outside INT2..INT8.
+        for bad in [2.5, -3.0, 1.0, 9.0, 1e12, f64::NAN] {
+            let mut m = meta.clone();
+            let mut layers = Json::obj();
+            layers.set("blocks.0.attn.wq", Json::Num(bad));
+            m.set(LAYER_BITS_META_KEY, layers);
+            let msg = format!("{}", read_allocation_meta(&m).unwrap_err());
+            assert!(msg.contains("blocks.0.attn.wq"), "{bad}: {msg}");
+            assert!(msg.contains("2..=8"), "{bad}: {msg}");
+        }
     }
 }

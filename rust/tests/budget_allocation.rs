@@ -241,9 +241,9 @@ fn qtz_allocation_meta_round_trips_byte_identically() {
     tf.save(&p).unwrap();
     let loaded = qep::io::TensorFile::load(&p).unwrap();
     std::fs::remove_file(&p).ok();
-    let got = read_allocation_meta(&loaded.meta).expect("meta must parse back");
+    let got = read_allocation_meta(&loaded.meta).unwrap().expect("meta must parse back");
     assert_eq!(got, alloc);
 
     // A plain model file carries no allocation.
-    assert!(read_allocation_meta(&out.model.to_tensor_file().meta).is_none());
+    assert!(read_allocation_meta(&out.model.to_tensor_file().meta).unwrap().is_none());
 }

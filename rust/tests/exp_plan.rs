@@ -17,7 +17,7 @@ use qep::io::results::CellRecord;
 use qep::model::Size;
 use qep::util::cli::Args;
 
-fn all_sweeps() -> [SweepId; 10] {
+fn all_sweeps() -> [SweepId; 11] {
     [
         SweepId::Table12,
         SweepId::Table3,
@@ -28,6 +28,7 @@ fn all_sweeps() -> [SweepId; 10] {
         SweepId::Appendix,
         SweepId::Lowrank,
         SweepId::Budget,
+        SweepId::Cbq,
         SweepId::All,
     ]
 }
@@ -97,6 +98,11 @@ fn garbage_ids_do_not_parse() {
         "budget/uni/INT3/GPTQ/dp/tiny-s",       // uniform rows carry base/+qep
         "budget/1.5/GPTQ/dp/tiny-s",            // below the feasible range
         "budget/8.5/GPTQ/dp/tiny-s",            // above the feasible range
+        "cbq/INT3/GPTQ/w0/+qep/tiny-s",         // window 0 is never planned
+        "cbq/INT3/GPTQ/w02/+qep/tiny-s",        // leading zero breaks id∘parse
+        "cbq/INT3/GPTQ/2/+qep/tiny-s",          // window missing 'w' prefix
+        "cbq/INT3/GPTQ/w-2/+qep/tiny-s",        // negative window
+        "table12/INT3/GPTQ/w2/+qep/tiny-s",     // window segments are cbq-only
     ] {
         assert!(PlanCell::parse(bad).is_none(), "'{bad}' should not parse");
     }
@@ -342,6 +348,40 @@ fn budget_plan_flags_and_cells() {
 }
 
 #[test]
+fn cbq_plan_flags_and_cells() {
+    // Defaults: windows {1, 2, 3}; --fast shrinks to {1, 2}.
+    let p = PlanParams::for_sizes(&[Size::TinyS]);
+    assert_eq!(p.cbq_windows, vec![1, 2, 3]);
+    let a = parse_args(&["exp", "cbq", "--fast"]);
+    let p = PlanParams::from_args(SweepId::Cbq, &a).unwrap();
+    assert_eq!(p.cbq_windows, vec![1, 2]);
+    // Fast manifest: 2 methods × ±qep × 2 windows × 1 size. Window 1 —
+    // the layer-wise baseline row — is enumerated like any other.
+    let cells = manifest(SweepId::Cbq, &p).unwrap();
+    assert_eq!(cells.len(), 8);
+    let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+    assert!(ids.contains(&"cbq/INT3/GPTQ/w1/base/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"cbq/INT3/GPTQ/w2/+qep/tiny-s".to_string()), "{ids:?}");
+    assert!(ids.contains(&"cbq/INT3/AWQ/w2/base/tiny-s".to_string()), "{ids:?}");
+    // --windows overrides, strictly: zero, malformed, and duplicate
+    // values are hard errors (duplicates would enumerate duplicate
+    // cell IDs).
+    let a = parse_args(&["exp", "cbq", "--windows", "1,4"]);
+    let p = PlanParams::from_args(SweepId::Cbq, &a).unwrap();
+    assert_eq!(p.cbq_windows, vec![1, 4]);
+    for bad in ["0", "1,0", "x", "1,,2", "-2", "2,2", ""] {
+        let a = parse_args(&["exp", "cbq", "--windows", bad]);
+        assert!(
+            PlanParams::from_args(SweepId::Cbq, &a).is_err(),
+            "--windows {bad} should be rejected"
+        );
+    }
+    // Window segment rendering.
+    assert_eq!(plan::window_name(1), "w1");
+    assert_eq!(plan::window_name(12), "w12");
+}
+
+#[test]
 fn sweep_names_resolve_with_aliases() {
     for (alias, want) in [
         ("fig1", SweepId::Table12),
@@ -359,6 +399,8 @@ fn sweep_names_resolve_with_aliases() {
         ("qera", SweepId::Lowrank),
         ("budget", SweepId::Budget),
         ("mixed-precision", SweepId::Budget),
+        ("cbq", SweepId::Cbq),
+        ("cross-block", SweepId::Cbq),
         ("all", SweepId::All),
     ] {
         assert_eq!(SweepId::from_name(alias), Some(want), "{alias}");

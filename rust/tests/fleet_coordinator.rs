@@ -450,3 +450,22 @@ fn status_counters_track_the_lifecycle() {
     assert_eq!(st.status().workers, 0);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// The socket read timeout is decoupled from the lease: a worker's
+/// heartbeats (due every quarter-lease) must always land with margin
+/// before the read times out, and the coordinator must never hold a
+/// socket read for a full lease window — that race is exactly how a
+/// slow cell used to expire a healthy worker.
+#[test]
+fn read_timeout_gives_heartbeats_margin_for_every_lease() {
+    use qep::fleet::coord::{heartbeat_interval_ms, read_timeout_ms};
+    for lease in [40u64, 100, 300, 1_000, 30_000, 600_000] {
+        let hb = heartbeat_interval_ms(lease);
+        let rt = read_timeout_ms(lease);
+        assert!(rt > hb, "lease {lease}: read timeout {rt} ms ≤ heartbeat interval {hb} ms");
+        assert!(rt >= 100, "lease {lease}: read timeout {rt} ms below the 100 ms floor");
+        if lease >= 300 {
+            assert!(rt < lease, "lease {lease}: read timeout {rt} ms blocks a full lease");
+        }
+    }
+}

@@ -130,6 +130,49 @@ fn qtz_files_are_byte_identical_across_thread_counts() {
 }
 
 #[test]
+fn pipelined_calibration_and_cbq_windows_are_thread_count_invariant() {
+    // The software-pipelined calibration stage (threads > 1 runs the
+    // forward pass for block b+1 concurrently with block b's
+    // quantization) must keep .qtz bytes identical to the serial
+    // schedule, for every thread count and every CBQ window. A 4-block
+    // model makes window 2 genuinely refine (its second window starts
+    // past block 0) instead of degenerating to the layer-wise path.
+    let mut cfg = ModelConfig::new("unit", 16, 4, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 1);
+    let mut rng = Rng::new(2);
+    let tokens: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+    let run = |threads: usize, window: usize| -> Vec<u8> {
+        let cfg = PipelineConfig {
+            quant: QuantConfig::int(3),
+            method: Method::Gptq,
+            qep_alpha: Some(0.5),
+            cbq_window: window,
+            seed: 42,
+            threads,
+            ..Default::default()
+        };
+        let out = Pipeline::new(cfg).run(&model, &tokens).unwrap();
+        let p = std::env::temp_dir().join(format!("qep_cbq_equiv_t{threads}_w{window}.qtz"));
+        out.model.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        bytes
+    };
+    for window in [1usize, 2, 3] {
+        let serial = run(1, window);
+        assert!(!serial.is_empty());
+        for threads in [2usize, 8] {
+            assert_eq!(
+                run(threads, window),
+                serial,
+                "cbq window {window}: .qtz bytes differ between threads=1 and threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
 fn lowrank_qtz_files_are_byte_identical_across_thread_counts() {
     // The adjunct-carrying artifact (base weights + lowrank.* sections)
     // inherits the byte-identity contract: the SVD seeds derive from

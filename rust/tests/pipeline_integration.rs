@@ -5,7 +5,7 @@
 
 use qep::coordinator::{Pipeline, PipelineConfig};
 use qep::eval::{delta_per_block, perplexity};
-use qep::model::{Model, ModelConfig, Size};
+use qep::model::{BlockWeights, Model, ModelConfig, Size};
 use qep::quant::{Method, QuantConfig};
 use qep::runtime::ArtifactRegistry;
 use qep::text::{Corpus, Flavor};
@@ -214,6 +214,116 @@ fn all_methods_preserve_ppl_at_int8() {
             "{method:?} INT8 ppl {ppl} vs fp {base_ppl}"
         );
     }
+}
+
+/// A model with enough blocks for a CBQ window to start past block 0
+/// (windows anchored at the entry are provable no-ops), plus a small
+/// calibration stream.
+fn cbq_subject(n_blocks: usize) -> (Model, Vec<u32>) {
+    let mut cfg = ModelConfig::new("unit", 16, n_blocks, 2, 32);
+    cfg.seq_len = 8;
+    let model = Model::random(&cfg, 5);
+    let mut rng = Rng::new(6);
+    let calib: Vec<u32> = (0..8 * 16).map(|_| rng.below(256) as u32).collect();
+    (model, calib)
+}
+
+fn cbq_run(
+    model: &Model,
+    calib: &[u32],
+    method: Method,
+    qep_alpha: Option<f32>,
+    cbq_window: usize,
+    max_blocks: Option<usize>,
+) -> Model {
+    Pipeline::new(PipelineConfig {
+        quant: QuantConfig::int(3),
+        method,
+        qep_alpha,
+        cbq_window,
+        max_blocks,
+        ..Default::default()
+    })
+    .run(model, calib)
+    .unwrap()
+    .model
+}
+
+fn qtz_bytes(m: &Model, tag: &str) -> Vec<u8> {
+    let p = std::env::temp_dir().join(format!("qep_cbq_{tag}_{}.qtz", std::process::id()));
+    m.save(&p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::remove_file(&p).ok();
+    bytes
+}
+
+#[test]
+fn cbq_window_one_and_base_gptq_windows_match_layer_wise_bytes() {
+    let (model, calib) = cbq_subject(4);
+    // `cbq_window: 1` IS the pre-CBQ layer-wise pipeline, byte for byte.
+    let layer_wise = qtz_bytes(&cbq_run(&model, &calib, Method::Gptq, Some(0.5), 1, None), "lw");
+    let default_cfg = Pipeline::new(PipelineConfig {
+        quant: QuantConfig::int(3),
+        method: Method::Gptq,
+        qep_alpha: Some(0.5),
+        ..Default::default()
+    })
+    .run(&model, &calib)
+    .unwrap()
+    .model;
+    assert_eq!(layer_wise, qtz_bytes(&default_cfg, "default"));
+    // Base GPTQ never reads the full-precision reference stream, so the
+    // windowed refinement is a bitwise no-op for it at EVERY window — an
+    // anchor that pins the refinement pass to the pass-1 inputs.
+    let base_w1 = qtz_bytes(&cbq_run(&model, &calib, Method::Gptq, None, 1, None), "g1");
+    for w in [2usize, 3, 4] {
+        let got = qtz_bytes(&cbq_run(&model, &calib, Method::Gptq, None, w, None), "gw");
+        assert_eq!(got, base_w1, "base GPTQ must be invariant at cbq window {w}");
+    }
+}
+
+#[test]
+fn cbq_window_beyond_block_count_clamps_to_layer_wise_bytes() {
+    // Windows larger than the quantized block count clamp (loudly) to
+    // one whole-model window — which starts at block 0, where the
+    // quantized and full-precision entry streams coincide, so the
+    // result is provably the layer-wise bytes.
+    let (model, calib) = cbq_subject(4);
+    let w1 = qtz_bytes(&cbq_run(&model, &calib, Method::Gptq, Some(0.5), 1, None), "c1");
+    for w in [4usize, 10, 999] {
+        let got = qtz_bytes(&cbq_run(&model, &calib, Method::Gptq, Some(0.5), w, None), "cw");
+        assert_eq!(got, w1, "cbq window {w} on a 4-block model must clamp to layer-wise");
+    }
+}
+
+#[test]
+fn cbq_composes_with_max_blocks() {
+    // Quantizing a 6-block model with max_blocks=4: the window schedule
+    // sees 4 quantized blocks, refines the [2, 4) window, and leaves the
+    // full-precision suffix untouched.
+    let (model, calib) = cbq_subject(6);
+    let lw = cbq_run(&model, &calib, Method::Gptq, Some(0.5), 1, Some(4));
+    let cb = cbq_run(&model, &calib, Method::Gptq, Some(0.5), 2, Some(4));
+    // Blocks ahead of the refining window match the layer-wise run...
+    for b in [0usize, 1] {
+        for name in BlockWeights::LINEAR_NAMES {
+            assert_eq!(lw.blocks[b].linear(name), cb.blocks[b].linear(name), "block {b} {name}");
+        }
+    }
+    // ...the unquantized suffix is the original model in both runs...
+    for b in [4usize, 5] {
+        for name in BlockWeights::LINEAR_NAMES {
+            assert_eq!(cb.blocks[b].linear(name), model.blocks[b].linear(name), "block {b} {name}");
+        }
+    }
+    // ...and the [2, 4) window genuinely re-reconstructed (QEP's δ
+    // correction sees the window-local reference, not the global one).
+    let refined_differs = (2usize..4).any(|b| {
+        BlockWeights::LINEAR_NAMES
+            .iter()
+            .any(|name| lw.blocks[b].linear(name) != cb.blocks[b].linear(name))
+    });
+    assert!(refined_differs, "cbq window [2, 4) under max_blocks=4 never changed a weight");
 }
 
 #[test]
